@@ -1,0 +1,69 @@
+//! Quickstart: the TyphoonMLA public API in five minutes.
+//!
+//!   cargo run --release --offline --example quickstart
+//!
+//! Walks through (1) the Table-1 cost model, (2) the Eq. 1 fall-back
+//! threshold, (3) the kernel-selection policy, and (4) a small
+//! simulated serving run — no artifacts required.
+
+use typhoon_mla::config::hardware::ascend_npu;
+use typhoon_mla::config::model::deepseek_v3;
+use typhoon_mla::config::KernelKind;
+use typhoon_mla::coordinator::KernelPolicy;
+use typhoon_mla::costmodel::exec_time::attention_time;
+use typhoon_mla::costmodel::flops::{attention_cost, AttentionWorkload};
+use typhoon_mla::costmodel::threshold::batch_threshold;
+use typhoon_mla::simulator::{run_experiment, SimParams};
+use typhoon_mla::workload::datasets::mmlu;
+use typhoon_mla::workload::prompts::PROMPT_A;
+
+fn main() -> anyhow::Result<()> {
+    let model = deepseek_v3();
+    let hw = ascend_npu();
+
+    // 1. Table-1 cost model: one decode iteration, batch 256, 26k-token
+    //    shared prompt, 512-token suffixes.
+    let wl = AttentionWorkload::decode(256, PROMPT_A.tokens as u64, 512);
+    println!("== operation counts (DeepSeek-v3, B=256, Ls=26472, Ln=512) ==");
+    for kind in KernelKind::all() {
+        let c = attention_cost(&model, kind, &wl).attention_only();
+        let t = attention_time(&model, kind, &wl, &hw);
+        println!(
+            "  {:<8} {:>8.1} GMAC {:>9.1} MWords -> {:>7.3} ms/layer",
+            kind.as_str(),
+            c.macs as f64 / 1e9,
+            c.hbm_words as f64 / 1e6,
+            t * 1e3
+        );
+    }
+
+    // 2. Eq. 1: when does the naive stage pay off?
+    let b_theta = batch_threshold(&model, &hw, 1);
+    println!("\n== fall-back threshold ==\n  B_theta = {b_theta} (paper: 61)");
+
+    // 3. The policy in action.
+    let policy = KernelPolicy::from_cost_model(KernelKind::Typhoon, &model, &hw);
+    for b in [16usize, 61, 256] {
+        println!(
+            "  batch {b:>4} -> {}",
+            policy.select(b, PROMPT_A.tokens).as_str()
+        );
+    }
+
+    // 4. A small simulated serving run (MMLU questions over Prompt A).
+    println!("\n== simulated serving run (256 requests, batch 128) ==");
+    for kind in KernelKind::all() {
+        let mut p = SimParams::new(model.clone(), hw.clone(), kind, 128);
+        p.max_requests = Some(256);
+        let r = run_experiment(&p, &mmlu(), &PROMPT_A)?;
+        println!(
+            "  {:<8} {:>9.0} tok/s/layer ({} tokens, {} iterations)",
+            kind.as_str(),
+            r.throughput,
+            r.tokens,
+            r.iterations
+        );
+    }
+    println!("\nNext: `cargo run --release --bin figures -- all` regenerates every\npaper table/figure; `--example shared_prefix_serving` runs the real\nPJRT-backed tiny model end to end.");
+    Ok(())
+}

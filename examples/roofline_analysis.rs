@@ -1,0 +1,74 @@
+//! Roofline + threshold exploration (paper Appendix A.1 / Eq. 1)
+//! across models and hardware — the capacity-planning view a deployer
+//! would use to decide where TyphoonMLA pays off.
+//!
+//!   cargo run --release --offline --example roofline_analysis [--ls 4096]
+
+use typhoon_mla::config::hardware::{ascend_npu, gpu_h800, roofline_npu};
+use typhoon_mla::config::model::{deepseek_v3, kimi_k2};
+use typhoon_mla::config::KernelKind;
+use typhoon_mla::costmodel::roofline::{ridge_batch, roofline_point};
+use typhoon_mla::costmodel::threshold::{batch_threshold, batch_threshold_exact};
+use typhoon_mla::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[])?;
+    let l_ctx = args.get_usize("ls", 4096)? as u64;
+
+    println!("== roofline: query-token throughput vs batch (L={l_ctx}) ==");
+    let hw = roofline_npu();
+    for model in [deepseek_v3(), kimi_k2()] {
+        println!("\n-- {} on {} --", model.name, hw.name);
+        println!(
+            "{:>6} {:>16} {:>16} {:>8}",
+            "batch", "naive tok/s", "absorb tok/s", "ratio"
+        );
+        for b in [1u64, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
+            let n = roofline_point(&model, KernelKind::Naive, &hw, b, l_ctx);
+            let a = roofline_point(&model, KernelKind::Absorb, &hw, b, l_ctx);
+            println!(
+                "{:>6} {:>13.0} ({}) {:>13.0} ({}) {:>7.2}x",
+                b,
+                n.throughput,
+                if n.compute_bound { 'C' } else { 'M' },
+                a.throughput,
+                if a.compute_bound { 'C' } else { 'M' },
+                n.throughput / a.throughput
+            );
+        }
+        println!(
+            "ridge batches: naive {:.1}, absorb {:.2}",
+            ridge_batch(&model, KernelKind::Naive, &hw),
+            ridge_batch(&model, KernelKind::Absorb, &hw)
+        );
+    }
+
+    println!("\n== Eq. 1 fall-back thresholds across deployments ==");
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>12}",
+        "model", "hardware", "T (TOPS)", "M (TB/s)", "B_theta"
+    );
+    for model in [deepseek_v3(), kimi_k2()] {
+        for hw in [ascend_npu(), gpu_h800()] {
+            println!(
+                "{:<14} {:>12} {:>12.0} {:>12.1} {:>7} ({:.1})",
+                model.name,
+                hw.name,
+                hw.peak_ops / 1e12,
+                hw.hbm_bw / 1e12,
+                batch_threshold(&model, &hw, 1),
+                batch_threshold_exact(&model, &hw, 1),
+            );
+        }
+    }
+    println!("\nSpeculative decode (S_q > 1) divides the threshold:");
+    let model = deepseek_v3();
+    let hw = ascend_npu();
+    for sq in [1u64, 2, 4, 8] {
+        println!(
+            "  S_q = {sq}: B_theta = {}",
+            batch_threshold(&model, &hw, sq)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Tree-of-Thought decoding scenario (paper §2.2): many reasoning
+//! branches share a long common prefix.  Demonstrates
+//!  * radix-tree prefix reuse in the KV-cache manager (no duplicate
+//!    pages across branches, ~3% expansion overhead), and
+//!  * the throughput advantage TyphoonMLA extracts from branch-level
+//!    data reuse, via the cost-model simulator.
+//!
+//!   cargo run --release --offline --example tree_decode [--branches 64]
+
+use typhoon_mla::config::hardware::ascend_npu;
+use typhoon_mla::config::model::deepseek_v3;
+use typhoon_mla::config::KernelKind;
+use typhoon_mla::costmodel::exec_time::attention_time;
+use typhoon_mla::costmodel::flops::AttentionWorkload;
+use typhoon_mla::kvcache::KvCacheManager;
+use typhoon_mla::util::cli::Args;
+use typhoon_mla::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[])?;
+    let branches = args.get_usize("branches", 64)?;
+    let prefix_len = args.get_usize("prefix", 4096)?;
+    let branch_len = args.get_usize("branch-len", 256)?;
+
+    // ---- KV-cache view -----------------------------------------------------
+    let model = deepseek_v3();
+    let mut kv = KvCacheManager::new(model.clone(), 65536, 128);
+    let mut rng = Rng::new(7);
+    let prompt: Vec<u32> = (0..prefix_len).map(|_| rng.gen_range(0, 50000) as u32).collect();
+
+    let pid = kv.register_shared_prefix(&prompt)?;
+    let pages_after_prefix = kv.used_blocks();
+    kv.expand_shared_prefix(pid)?;
+    for b in 0..branches as u64 {
+        kv.add_sequence(b, pid, branch_len)?;
+    }
+    let pages_per_branch =
+        (kv.used_blocks() - pages_after_prefix) as f64 / branches as f64;
+    println!("== KV-cache: {branches} branches over a {prefix_len}-token prefix ==");
+    println!(
+        "  prefix pages: {pages_after_prefix} (shared once), per-branch pages: {pages_per_branch:.1}"
+    );
+    println!(
+        "  naive duplication would need {} pages; radix sharing uses {}",
+        pages_after_prefix * branches + (pages_per_branch as usize) * branches,
+        kv.used_blocks()
+    );
+    println!(
+        "  typhoon uncompressed copy: {:.1}x the currently-live latent bytes \
+         (amortizes to ~3% at production batch/seq scale — see `figures fig5`)",
+        kv.expansion_overhead()
+    );
+
+    // ---- throughput view ----------------------------------------------------
+    let hw = ascend_npu();
+    println!("\n== per-iteration attention time (DeepSeek-v3, Ascend) ==");
+    println!(
+        "{:>9} {:>12} {:>12} {:>12} {:>9}",
+        "branches", "naive ms", "absorb ms", "typhoon ms", "speedup"
+    );
+    for b in [1usize, 8, 32, 64, 128, 256, 512] {
+        let wl = AttentionWorkload::decode(b as u64, prefix_len as u64, branch_len as u64);
+        let n = attention_time(&model, KernelKind::Naive, &wl, &hw) * 1e3;
+        let a = attention_time(&model, KernelKind::Absorb, &wl, &hw) * 1e3;
+        let t = attention_time(&model, KernelKind::Typhoon, &wl, &hw) * 1e3;
+        // The policy would fall back below B_theta=61.
+        let t_eff = if b < 61 { a } else { t };
+        println!(
+            "{:>9} {:>12.3} {:>12.3} {:>12.3} {:>8.2}x",
+            b,
+            n,
+            a,
+            t_eff,
+            n.min(a) / t_eff
+        );
+    }
+    println!("\nBranch counts past B_theta=61 unlock the naive stage's data reuse;\nspeculative decoding (S_q>1 per branch) lowers the threshold further.");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time Python for TyphoonMLA: JAX model + Pallas kernels + AOT."""

@@ -1,0 +1,219 @@
+"""AOT compiler: lower the L2 graphs to HLO text + manifest for Rust.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per (function x config x shape-bucket):
+  * ``<name>.hlo.txt``  — HLO **text** (not a serialized HloModuleProto:
+    jax >= 0.5 emits 64-bit instruction ids that the xla crate's
+    xla_extension 0.5.1 rejects; the text parser reassigns ids).
+  * an entry in ``manifest.json`` describing parameter/result shapes so
+    the Rust runtime can marshal buffers without re-deriving them.
+Plus ``tiny_weights.npz`` — the tiny e2e transformer's weights, loaded
+by Rust via ``Literal::read_npz`` and passed as runtime parameters
+(keeping them out of the HLO keeps artifacts small and lets Rust swap
+checkpoints).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, SIM, TINY
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d):
+    return {np.dtype(np.float32): "f32", np.dtype(np.int32): "s32"}[np.dtype(d)]
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+
+    def emit(self, name, fn, in_specs, kind, **meta):
+        """Trace fn over in_specs, write HLO text, record manifest entry."""
+        # keep_unused: some graphs don't touch every weight (e.g. prefill
+        # never reads final_norm); the Rust side passes the full bundle.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        outputs = [
+            {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)}
+            for a in jax.tree_util.tree_leaves(out_avals)
+        ]
+        self.entries.append({
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                for s in in_specs
+            ],
+            "outputs": outputs,
+            **meta,
+        })
+        print(f"  wrote {fname} ({len(text)/1024:.0f} KiB)")
+
+
+# ---------------------------------------------------------------------------
+# Artifact families
+# ---------------------------------------------------------------------------
+
+
+def emit_attention(em: Emitter, cfg, variant, b, ls, ln):
+    """Pure attention-kernel artifact (the criterion bench surface)."""
+    h, dn, dr, dv, dl = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.kv_lora_rank
+    dqk = cfg.d_qk
+    fn = M.attention_only(cfg, variant)
+    common_q = [spec([b, h, dn]), spec([b, h, dr])]
+    tail = [spec([1], I32), spec([b, ln, dl]), spec([b, ln, dr]), spec([b], I32),
+            spec([h, dn, dl]), spec([h, dv, dl])]
+    if variant == "typhoon":
+        ins = common_q + [spec([ls, h, dqk]), spec([ls, h, dv])] + tail
+    elif variant == "absorb":
+        ins = common_q + [spec([ls, dl]), spec([ls, dr])] + tail
+    elif variant == "naive":
+        ins = common_q + [
+            spec([ls, h, dqk]), spec([ls, h, dv]), spec([1], I32),
+            spec([b, ln, h, dqk]), spec([b, ln, h, dv]), spec([b], I32)]
+    name = f"attn_{variant}_{cfg.name}_b{b}_s{ls}_n{ln}"
+    em.emit(name, fn, ins, "attention", variant=variant, config=cfg.name,
+            dims={"b": b, "ls": ls, "ln": ln})
+
+
+def emit_expand(em: Emitter, cfg, n):
+    """Latent->uncompressed expansion (cache-manager utility)."""
+    dl, dr, h, dv = cfg.kv_lora_rank, cfg.d_rope, cfg.n_heads, cfg.d_v
+    ins = [spec([n, dl]), spec([n, dr]), spec([h, cfg.d_nope, dl]), spec([h, dv, dl])]
+    em.emit(f"expand_{cfg.name}_n{n}", M.expand_fn, ins, "expand",
+            config=cfg.name, dims={"n": n})
+
+
+def emit_tiny_model(em: Emitter, cfg, b, ls, ln, lq):
+    """Tiny e2e transformer: prefill_shared, prefill_requests, decode_step
+    (one per variant).  Weights are runtime parameters in MlaWeights
+    field order, appended after the data arguments."""
+    lyr, h, dqk, dv, dl, dr = (cfg.n_layers, cfg.n_heads, cfg.d_qk, cfg.d_v,
+                               cfg.kv_lora_rank, cfg.d_rope)
+    wts0 = M.init_weights(cfg)
+    w_specs = [spec(w.shape, w.dtype) for w in wts0.astuple()]
+    w_names = M.MlaWeights.field_names()
+
+    def with_weights(fn):
+        def wrapped(*args):
+            data, wt = args[: len(args) - len(w_specs)], args[len(args) - len(w_specs):]
+            return fn(M.MlaWeights.fromtuple(wt), *data)
+        return wrapped
+
+    # prefill_shared(tokens [Ls], shared_len [1]) -> latent + expanded caches
+    em.emit(
+        f"prefill_shared_{cfg.name}_s{ls}",
+        with_weights(lambda w, tokens, sl: M.prefill_shared(cfg, w, tokens, sl[0])),
+        [spec([ls], I32), spec([1], I32)] + w_specs,
+        "prefill_shared", config=cfg.name, dims={"ls": ls},
+    )
+
+    # prefill_requests(tokens [B,Lq], q_lens [B], shared_len [1],
+    #                  shared_k [Lyr,Ls,H,Dqk], shared_v [Lyr,Ls,H,Dv])
+    em.emit(
+        f"prefill_req_{cfg.name}_b{b}_q{lq}_s{ls}",
+        with_weights(lambda w, tokens, qlens, sl, sk, sv: M.prefill_requests(
+            cfg, w, tokens, qlens, sl[0], sk, sv)),
+        [spec([b, lq], I32), spec([b], I32), spec([1], I32),
+         spec([lyr, ls, h, dqk]), spec([lyr, ls, h, dv])] + w_specs,
+        "prefill_requests", config=cfg.name, dims={"b": b, "lq": lq, "ls": ls},
+    )
+
+    # decode_step per variant.
+    for variant in ("typhoon", "absorb", "naive"):
+        if variant == "absorb":
+            sh = [spec([lyr, ls, dl]), spec([lyr, ls, dr])]
+        else:
+            sh = [spec([lyr, ls, h, dqk]), spec([lyr, ls, h, dv])]
+        em.emit(
+            f"model_{variant}_{cfg.name}_b{b}_s{ls}_n{ln}",
+            with_weights(lambda w, tokens, lens, sl, sa, sb, ckv, krope,
+                         _v=variant: M.decode_step(
+                             cfg, w, _v, tokens, lens, sl[0], sa, sb, ckv, krope)),
+            [spec([b], I32), spec([b], I32), spec([1], I32)] + sh
+            + [spec([lyr, b, ln, dl]), spec([lyr, b, ln, dr])] + w_specs,
+            "decode_step", variant=variant, config=cfg.name,
+            dims={"b": b, "ls": ls, "ln": ln},
+        )
+
+    # Weights npz (shared by all tiny-model artifacts).
+    npz_path = os.path.join(em.out_dir, f"{cfg.name}_weights.npz")
+    np.savez(npz_path, **{n: np.asarray(w) for n, w in zip(w_names, wts0.astuple())})
+    print(f"  wrote {os.path.basename(npz_path)}")
+    return w_names
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="default", choices=["default", "bench", "all"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out)
+
+    # Attention-kernel artifacts (sim config; real CPU-PJRT execution).
+    batches = [4, 16, 64, 128] if args.set == "default" else [4, 16, 64, 128, 256]
+    print(f"[aot] attention kernels (sim config), b in {batches}")
+    for b in batches:
+        for variant in ("typhoon", "absorb", "naive"):
+            emit_attention(em, SIM, variant, b=b, ls=1024, ln=256)
+    emit_expand(em, SIM, n=1024)
+    emit_expand(em, TINY, n=256)
+
+    # Tiny end-to-end transformer.
+    print("[aot] tiny e2e transformer")
+    w_names = emit_tiny_model(em, TINY, b=8, ls=256, ln=128, lq=64)
+
+    manifest = {
+        "version": 1,
+        "artifacts": em.entries,
+        "weights": {"tiny": {"file": "tiny_weights.npz", "names": w_names}},
+        "configs": {
+            name: {
+                "d_model": c.d_model, "n_heads": c.n_heads, "d_nope": c.d_nope,
+                "d_rope": c.d_rope, "d_v": c.d_v, "kv_lora_rank": c.kv_lora_rank,
+                "q_lora_rank": c.q_lora_rank, "n_layers": c.n_layers,
+                "d_ff": c.d_ff, "vocab_size": c.vocab_size,
+            }
+            for name, c in CONFIGS.items()
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json with {len(em.entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Model configurations for TyphoonMLA.
+
+Dimensions follow the paper's notation (Table 1):
+  H      number of attention heads
+  D_n    noPE head dim (per-head latent-decompressed key/query part)
+  D_r    RoPE head dim (shared across heads in the key path)
+  D_qk = D_n + D_r   full query/key head dim
+  D_v    value head dim
+  D_l    KV LoRA rank (latent dim of the compressed KV-cache)
+
+The DeepSeek-v3 column of Table 1 follows from these:
+  H*(D_qk+D_v)  = 128*320  = 40 Ki   (naive MAC/byte factor)
+  H*(2*D_l+D_r) = 128*1088 = 136 Ki  (absorb MAC factor)
+  D_l+D_r       = 576      = 0.5625 Ki (latent bytes/token)
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int          # H
+    d_nope: int           # D_n
+    d_rope: int           # D_r
+    d_v: int              # D_v
+    kv_lora_rank: int     # D_l
+    q_lora_rank: int
+    # Only used by the tiny end-to-end transformer:
+    n_layers: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    rope_theta: float = 10000.0
+
+    @property
+    def d_qk(self) -> int:
+        return self.d_nope + self.d_rope
+
+    # --- Table 1 cost factors (per token per query, in MAC / words) ---
+    def naive_factor(self) -> int:
+        """MACs per (query token x context token): H*(D_qk + D_v)."""
+        return self.n_heads * (self.d_qk + self.d_v)
+
+    def absorb_factor(self) -> int:
+        """MACs per (query token x context token): H*(2*D_l + D_r)."""
+        return self.n_heads * (2 * self.kv_lora_rank + self.d_rope)
+
+    def latent_words_per_token(self) -> int:
+        """HBM words per cached token in latent form: D_l + D_r."""
+        return self.kv_lora_rank + self.d_rope
+
+    def uncompressed_words_per_token(self) -> int:
+        """HBM words per cached token in uncompressed form: H*(D_qk + D_v)."""
+        return self.n_heads * (self.d_qk + self.d_v)
+
+
+# DeepSeek-v3 (DeepSeek-AI et al., 2024b) attention dims.
+DEEPSEEK_V3 = ModelConfig(
+    name="deepseek-v3",
+    d_model=7168,
+    n_heads=128,
+    d_nope=128,
+    d_rope=64,
+    d_v=128,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+)
+
+# Kimi K2 (Bai et al., 2025): same head geometry, half the heads.
+KIMI_K2 = ModelConfig(
+    name="kimi-k2",
+    d_model=7168,
+    n_heads=64,
+    d_nope=128,
+    d_rope=64,
+    d_v=128,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+)
+
+# Scaled-down geometry used for real CPU-PJRT execution (same aspect
+# ratios as DeepSeek-v3: D_n = D_l/4, D_r = D_l/8, H*D_v = d_model/ ...).
+SIM = ModelConfig(
+    name="sim",
+    d_model=512,
+    n_heads=8,
+    d_nope=64,
+    d_rope=32,
+    d_v=64,
+    kv_lora_rank=128,
+    q_lora_rank=192,
+)
+
+# Tiny end-to-end transformer (byte-level LM) for the serving example.
+TINY = ModelConfig(
+    name="tiny",
+    d_model=256,
+    n_heads=4,
+    d_nope=32,
+    d_rope=16,
+    d_v=32,
+    kv_lora_rank=64,
+    q_lora_rank=96,
+    n_layers=4,
+    d_ff=512,
+    vocab_size=256,
+)
+
+CONFIGS = {c.name: c for c in (DEEPSEEK_V3, KIMI_K2, SIM, TINY)}

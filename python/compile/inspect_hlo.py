@@ -1,0 +1,78 @@
+"""L2 performance inspection: static analysis of the AOT HLO artifacts.
+
+Parses the HLO text in ``artifacts/`` and reports the op-level facts
+the perf pass cares about (DESIGN.md §8 L2):
+
+* dot/convolution count — catches duplicated projections;
+* while-loop count — should come only from Pallas grid loops;
+* constant payload bytes — weights must be *parameters*, not baked-in
+  constants (keeps artifacts small and checkpoint-swappable);
+* fusion count — a coarse signal that XLA fused the elementwise chains.
+
+Run: ``cd python && python -m compile.inspect_hlo [--dir ../artifacts]``
+"""
+
+import argparse
+import json
+import os
+import re
+
+
+def analyze_hlo_text(text: str) -> dict:
+    """Count the interesting ops in one HLO module's text."""
+    # Strip large literal payloads for the constant-bytes estimate first.
+    const_bytes = 0
+    for m in re.finditer(r"constant\(\{", text):
+        # Find the matching payload crudely: scan to the closing brace
+        # run; payload size ~ its text length / 8 chars per f32.
+        start = m.end()
+        depth = 1
+        i = start
+        while depth and i < len(text):
+            if text[i] == "{":
+                depth += 1
+            elif text[i] == "}":
+                depth -= 1
+            i += 1
+        const_bytes += (i - start) // 8 * 4
+
+    counts = {
+        "dots": len(re.findall(r"= \S+ dot\(", text)),
+        "whiles": len(re.findall(r"= \S+ while\(", text)),
+        "fusions": len(re.findall(r"= \S+ fusion\(", text)),
+        "dynamic_update_slices": len(
+            re.findall(r"dynamic-update-slice", text)),
+        "parameters": len(re.findall(r"= \S+ parameter\(", text)),
+        "const_payload_bytes": const_bytes,
+        "bytes": len(text),
+    }
+    return counts
+
+
+def analyze_dir(d: str) -> dict:
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    out = {}
+    for art in manifest["artifacts"]:
+        path = os.path.join(d, art["file"])
+        out[art["name"]] = analyze_hlo_text(open(path).read())
+        out[art["name"]]["kind"] = art["kind"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="../artifacts")
+    args = ap.parse_args()
+    rows = analyze_dir(args.dir)
+    print(f"{'artifact':<44} {'dots':>5} {'while':>6} {'fus':>5} "
+          f"{'dus':>4} {'const KiB':>10} {'text KiB':>9}")
+    for name, c in sorted(rows.items()):
+        print(
+            f"{name:<44} {c['dots']:>5} {c['whiles']:>6} {c['fusions']:>5} "
+            f"{c['dynamic_update_slices']:>4} "
+            f"{c['const_payload_bytes']/1024:>10.1f} {c['bytes']/1024:>9.0f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

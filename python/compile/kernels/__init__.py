@@ -1,0 +1,2 @@
+"""Layer-1 Pallas kernels for TyphoonMLA (build-time only)."""
+from . import absorb, common, naive, ref, typhoon  # noqa: F401

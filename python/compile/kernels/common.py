@@ -1,0 +1,60 @@
+"""Shared helpers for the Pallas MLA decode kernels.
+
+All kernels in this package follow the flash-decoding contract: they
+return an *(output, lse)* pair, where ``lse = m + log(sum exp(s - m))``
+is the log-sum-exp of the (scaled, masked) attention scores.  Partial
+attention outputs over disjoint KV ranges compose exactly via
+:func:`combine_lse` — this is the paper's ``CombineLSE`` epilogue
+(Algorithm 1, line 8).
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Value used for masked-out score entries.  Finite (not -inf) so that a
+# fully-masked tile still produces well-defined exp() results; 1e30 is far
+# below any real score after scaling.
+NEG_INF = -1e30
+
+# Default KV-sequence tile.  128 matches both the paged-KV block size used
+# by the coordinator and the TPU lane count, so one tile is one page and
+# maps onto (8,128)-aligned MXU operands.
+DEFAULT_KV_TILE = 128
+
+
+def kv_tile_mask(t: jax.Array, tile: int, length: jax.Array) -> jax.Array:
+    """Boolean [tile] mask: True for global positions < length.
+
+    ``t`` is the KV-tile index of the current grid step; position ``i`` of
+    the tile corresponds to global KV index ``t*tile + i``.
+    """
+    pos = t * tile + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    return pos < length
+
+
+def masked_scores(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    """Apply a [T] validity mask to a [..., T] score tile."""
+    return jnp.where(mask[None, :], scores, NEG_INF)
+
+
+def combine_lse(o1, lse1, o2, lse2):
+    """Merge two normalized partial attention outputs via their LSEs.
+
+    With ``o_i = S_i / Z_i`` and ``lse_i = log Z_i`` over disjoint KV
+    ranges, the exact combined output is::
+
+        o = (Z1*o1 + Z2*o2) / (Z1 + Z2)
+          = sigmoid(lse1-lse2)*o1 + sigmoid(lse2-lse1)*o2
+
+    and the combined LSE is ``logaddexp(lse1, lse2)``.  Purely
+    element-wise: O(B*H*D_v) work, independent of KV length — the paper's
+    argument for why the epilogue cost is negligible.
+    """
+    w1 = jax.nn.sigmoid(lse1 - lse2)[..., None]
+    o = w1 * o1 + (1.0 - w1) * o2
+    lse = jnp.logaddexp(lse1, lse2)
+    return o, lse
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

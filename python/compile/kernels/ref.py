@@ -1,0 +1,97 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the direct, unfused formulation: materialize the full
+score matrix, mask, softmax, contract.  Slow and memory-hungry, but
+obviously correct — pytest compares every kernel against these.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import NEG_INF
+
+
+def _lse(scores, axis=-1):
+    return jax.scipy.special.logsumexp(scores, axis=axis)
+
+
+def _masked_softmax_attn(scores, v, mask):
+    """scores [..., L], v [..., L, D], mask [..., L] -> (o, lse)."""
+    scores = jnp.where(mask, scores, NEG_INF)
+    lse = _lse(scores)
+    p = jnp.exp(scores - lse[..., None])
+    o = jnp.einsum("...l,...ld->...d", p, v)
+    return o, lse
+
+
+def naive_shared_ref(q, k, v, length):
+    """q [B,H,Dqk], k [Ls,H,Dqk], v [Ls,H,Dv], length scalar -> (o, lse)."""
+    l_s = k.shape[0]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bhd,lhd->bhl", q, k) * scale
+    mask = (jnp.arange(l_s) < length)[None, None, :]
+    v_b = jnp.transpose(v, (1, 0, 2))[None]            # [1, H, Ls, Dv]
+    return _masked_softmax_attn(scores, v_b, mask)
+
+
+def naive_batched_ref(q, k, v, lengths):
+    """q [B,H,Dqk], k [B,Ln,H,Dqk], v [B,Ln,H,Dv], lengths [B]."""
+    l_n = k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bhd,blhd->bhl", q, k) * scale
+    mask = (jnp.arange(l_n)[None, :] < lengths[:, None])[:, None, :]
+    v_b = jnp.transpose(v, (0, 2, 1, 3))               # [B, H, Ln, Dv]
+    return _masked_softmax_attn(scores, v_b, mask)
+
+
+def absorb_batched_ref(q_lat, q_rope, ckv, krope, lengths, d_qk):
+    """q_lat [B,H,Dl], q_rope [B,H,Dr], ckv [B,Ln,Dl], krope [B,Ln,Dr]."""
+    l_n = ckv.shape[1]
+    scale = 1.0 / (d_qk ** 0.5)
+    scores = (
+        jnp.einsum("bhl,bnl->bhn", q_lat, ckv)
+        + jnp.einsum("bhr,bnr->bhn", q_rope, krope)
+    ) * scale
+    mask = (jnp.arange(l_n)[None, :] < lengths[:, None])[:, None, :]
+    return _masked_softmax_attn(scores, ckv[:, None], mask)
+
+
+def absorb_shared_ref(q_lat, q_rope, ckv, krope, length, d_qk):
+    """Shared latent cache: ckv [Ls,Dl], krope [Ls,Dr]."""
+    l_s = ckv.shape[0]
+    scale = 1.0 / (d_qk ** 0.5)
+    scores = (
+        jnp.einsum("bhl,nl->bhn", q_lat, ckv)
+        + jnp.einsum("bhr,nr->bhn", q_rope, krope)
+    ) * scale
+    mask = (jnp.arange(l_s) < length)[None, None, :]
+    return _masked_softmax_attn(scores, ckv[None, None], mask)
+
+
+def combine_lse_ref(o1, lse1, o2, lse2):
+    w1 = jax.nn.sigmoid(lse1 - lse2)[..., None]
+    return w1 * o1 + (1.0 - w1) * o2, jnp.logaddexp(lse1, lse2)
+
+
+def mla_attention_monolithic_ref(q_nope, q_rope, ckv_full, krope_full,
+                                 total_lengths, w_kvb1, w_kvb2):
+    """Ground-truth MLA attention over the full (shared ++ non-shared)
+    latent context, computed the naive way: decompress everything.
+
+    q_nope [B,H,Dn], q_rope [B,H,Dr], ckv_full [B,L,Dl],
+    krope_full [B,L,Dr], total_lengths [B],
+    w_kvb1 [H,Dn,Dl], w_kvb2 [H,Dv,Dl]  -> o [B,H,Dv].
+
+    Used to verify that typhoon == naive == absorb == this, i.e. the
+    mathematical-equivalence claim of the paper.
+    """
+    # Decompress: k_nope [B,L,H,Dn], v [B,L,H,Dv].
+    k_nope = jnp.einsum("bld,hnd->blhn", ckv_full, w_kvb1)
+    v = jnp.einsum("bld,hvd->blhv", ckv_full, w_kvb2)
+    l_total = ckv_full.shape[1]
+    b, h, d_r = q_rope.shape
+    k_rope = jnp.broadcast_to(krope_full[:, :, None, :], (b, l_total, h, d_r))
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o, _ = naive_batched_ref(q, k, v, total_lengths)
+    return o

@@ -1,0 +1,153 @@
+"""TyphoonMLA: the mixed naive-absorb decode attention kernel.
+
+This is Algorithm 1 of the paper.  Given
+
+* queries after the ``W_Qb`` projection, split into noPE/RoPE parts,
+* the **shared prefix** cache in *uncompressed* (naive) form, and
+* the **non-shared** suffix cache in *latent* (absorb) form,
+
+it computes the naive flash kernel over the shared prefix (Stage 1 —
+compute-efficient, stream reused across the whole batch), the absorb
+flash kernel over the non-shared suffix (Stage 2 — bandwidth-efficient),
+and merges the two partial softmax outputs exactly with the CombineLSE
+epilogue.  The result is bit-for-bit the same attention as a monolithic
+naive (or absorb) kernel over the concatenated context — no retraining,
+no approximation.
+
+The W_KVb1 (query absorption) and W_KVb2 (output up-projection) einsums
+are taken as inputs/outputs of this module so the L2 model owns them;
+their cost is reported separately in the paper's latency breakdown
+(Fig. 4) and in our benches.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .absorb import absorb_batched_attention
+from .common import DEFAULT_KV_TILE
+from .naive import naive_shared_attention
+
+
+def _combine_kernel(o1_ref, lse1_ref, o2_ref, lse2_ref, o_ref, lse_ref):
+    """CombineLSE epilogue: merge two normalized partials via their LSEs.
+
+    Element-wise over [B, H, D_v]; cost 2*B*H*D_v MACs + 2*B*H*D_v words,
+    independent of context length (paper §3.2).
+    """
+    lse1 = lse1_ref[...]
+    lse2 = lse2_ref[...]
+    w1 = jax.nn.sigmoid(lse1 - lse2)[..., None]        # Z1/(Z1+Z2)
+    o_ref[...] = (w1 * o1_ref[...] + (1.0 - w1) * o2_ref[...]).astype(o_ref.dtype)
+    lse_ref[...] = jnp.logaddexp(lse1, lse2)
+
+
+def combine_lse_kernel(o1, lse1, o2, lse2, *, interpret=True):
+    """Pallas CombineLSE over full [B, H, D_v] partials.
+
+    Single-block grid: the tensors are tiny (no KV dimension), so one
+    VMEM-resident element-wise pass is the whole epilogue.
+    """
+    b, h, d_v = o1.shape
+    o, lse = pl.pallas_call(
+        _combine_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d_v), o1.dtype),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(o1, lse1, o2, lse2)
+    return o, lse
+
+
+def typhoon_attention(
+    q_nope,        # [B, H, D_n]   queries, noPE part (pre-absorption)
+    q_rope,        # [B, H, D_r]   queries, post-RoPE part
+    shared_k,      # [L_s, H, D_qk]  uncompressed shared keys
+    shared_v,      # [L_s, H, D_v]   uncompressed shared values
+    shared_len,    # scalar int32
+    ckv,           # [B, L_n, D_l]   non-shared noPE latent cache
+    krope,         # [B, L_n, D_r]   non-shared RoPE key cache
+    lengths,       # [B] int32       non-shared valid lengths
+    w_kvb1,        # [H, D_n, D_l]   absorbed key up-projection
+    w_kvb2,        # [H, D_v, D_l]   absorbed value up-projection
+    *,
+    kv_tile=DEFAULT_KV_TILE,
+    b_tile=None,
+    interpret=True,
+):
+    """Algorithm 1 — TyphoonMLA decode attention.
+
+    Returns o [B, H, D_v]: exact MLA attention over the concatenated
+    (shared ++ non-shared) context.
+    """
+    d_qk = q_nope.shape[-1] + q_rope.shape[-1]
+
+    # Stage 1 (naive over the shared prefix): Q_K = [Q_N, Q_R].
+    q_k = jnp.concatenate([q_nope, q_rope], axis=-1)   # [B, H, D_qk]
+    o_n, lse_n = naive_shared_attention(
+        q_k, shared_k, shared_v, shared_len,
+        kv_tile=kv_tile, b_tile=b_tile, interpret=interpret)
+
+    # Stage 2 (absorb over the non-shared suffix): Q_A = Q_N W_KVb1.
+    q_lat = jnp.einsum("bhn,hnl->bhl", q_nope, w_kvb1)
+    o_a_lat, lse_a = absorb_batched_attention(
+        q_lat, q_rope, ckv, krope, lengths,
+        kv_tile=kv_tile, d_qk=d_qk, interpret=interpret)
+    # O_A = O_A_lat W_KVb2^T (output up-projection of the absorb branch).
+    o_a = jnp.einsum("bhl,hvl->bhv", o_a_lat, w_kvb2)
+
+    # CombineLSE epilogue.
+    o, _ = combine_lse_kernel(o_n, lse_n, o_a, lse_a, interpret=interpret)
+    return o
+
+
+def absorb_only_attention(
+    q_nope, q_rope, shared_ckv, shared_krope, shared_len,
+    ckv, krope, lengths, w_kvb1, w_kvb2,
+    *, kv_tile=DEFAULT_KV_TILE, interpret=True,
+):
+    """Absorb-only baseline (FlashMLA/CATLASS-analog) with the same
+    shared/non-shared split: both parts in latent form.
+
+    The TyphoonMLA fallback below the batch threshold B_theta executes
+    exactly this path.
+    """
+    from .absorb import absorb_shared_attention
+
+    d_qk = q_nope.shape[-1] + q_rope.shape[-1]
+    q_lat = jnp.einsum("bhn,hnl->bhl", q_nope, w_kvb1)
+    o_s_lat, lse_s = absorb_shared_attention(
+        q_lat, q_rope, shared_ckv, shared_krope, shared_len,
+        kv_tile=kv_tile, d_qk=d_qk, interpret=interpret)
+    o_n_lat, lse_n = absorb_batched_attention(
+        q_lat, q_rope, ckv, krope, lengths,
+        kv_tile=kv_tile, d_qk=d_qk, interpret=interpret)
+    o_lat, _ = combine_lse_kernel(o_s_lat, lse_s, o_n_lat, lse_n,
+                                  interpret=interpret)
+    return jnp.einsum("bhl,hvl->bhv", o_lat, w_kvb2)
+
+
+def naive_only_attention(
+    q_nope, q_rope, shared_k, shared_v, shared_len,
+    k_n, v_n, lengths,
+    *, kv_tile=DEFAULT_KV_TILE, b_tile=None, interpret=True,
+):
+    """Naive-only baseline (TorchNPU/FlashAttention-analog): both parts
+    uncompressed.  The non-shared part is per-request (k_n/v_n carry a
+    batch dim); the shared part is read once (prefix-aware naive, as in
+    the paper's Table 1 naive HBM row).
+    """
+    from .naive import naive_batched_attention
+
+    q_k = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o_s, lse_s = naive_shared_attention(
+        q_k, shared_k, shared_v, shared_len,
+        kv_tile=kv_tile, b_tile=b_tile, interpret=interpret)
+    o_n, lse_n = naive_batched_attention(
+        q_k, k_n, v_n, lengths, kv_tile=kv_tile, interpret=interpret)
+    o, _ = combine_lse_kernel(o_s, lse_s, o_n, lse_n, interpret=interpret)
+    return o

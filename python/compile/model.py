@@ -1,0 +1,379 @@
+"""Layer-2 JAX model: MLA projections + decode/prefill graphs.
+
+Build-time only: everything here is traced once by ``aot.py`` and
+shipped to the Rust runtime as HLO text.  The decode hot path calls the
+Layer-1 Pallas kernels; prefill (compute-bound, run once per prompt)
+uses the plain-jnp naive formulation, exactly as the paper prescribes
+("naive kernels are preferred in training and prefill").
+
+Weight layout: all per-layer weights are stacked on a leading layer
+axis so the AOT'd functions take a fixed, small parameter list that the
+Rust side loads from ``tiny_weights.npz``.
+"""
+
+import functools
+from dataclasses import dataclass, fields
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import typhoon as tk
+from .kernels.common import DEFAULT_KV_TILE
+
+# ---------------------------------------------------------------------------
+# Numerics building blocks
+# ---------------------------------------------------------------------------
+
+RMS_EPS = 1e-6
+
+
+def rms_norm(x, w):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + RMS_EPS) * w
+
+
+def rope(x, positions, theta=10000.0):
+    """Decoupled rotary embedding (rotate-half convention).
+
+    x: [..., D_r]; positions: broadcastable to x.shape[:-1].
+    """
+    d_r = x.shape[-1]
+    half = d_r // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MlaWeights:
+    """Stacked transformer weights (leading axis = layer)."""
+
+    embedding: jax.Array      # [V, d]
+    w_qa: jax.Array           # [L, d, q_lora]
+    q_norm: jax.Array         # [L, q_lora]
+    w_qb: jax.Array           # [L, q_lora, H*D_qk]
+    w_kva: jax.Array          # [L, d, D_l + D_r]
+    kv_norm: jax.Array        # [L, D_l]
+    w_kvb1: jax.Array         # [L, H, D_n, D_l]
+    w_kvb2: jax.Array         # [L, H, D_v, D_l]
+    w_o: jax.Array            # [L, H*D_v, d]
+    attn_norm: jax.Array      # [L, d]
+    mlp_norm: jax.Array       # [L, d]
+    w_gate: jax.Array         # [L, d, ff]
+    w_up: jax.Array           # [L, d, ff]
+    w_down: jax.Array         # [L, ff, d]
+    final_norm: jax.Array     # [d]
+
+    def astuple(self):
+        return tuple(getattr(self, f.name) for f in fields(self))
+
+    @classmethod
+    def field_names(cls):
+        return [f.name for f in fields(cls)]
+
+    @classmethod
+    def fromtuple(cls, t):
+        return cls(*t)
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> MlaWeights:
+    """Deterministic synthetic weights (scaled normal init)."""
+    rng = np.random.default_rng(seed)
+    L, d, H = cfg.n_layers, cfg.d_model, cfg.n_heads
+    dqk, dv, dl, dr = cfg.d_qk, cfg.d_v, cfg.kv_lora_rank, cfg.d_rope
+    dn, ql, ff, v = cfg.d_nope, cfg.q_lora_rank, cfg.d_ff, cfg.vocab_size
+
+    def w(*shape, scale=None):
+        scale = scale or (1.0 / np.sqrt(shape[-2] if len(shape) >= 2 else shape[-1]))
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    return MlaWeights(
+        embedding=w(v, d, scale=0.02),
+        w_qa=w(L, d, ql),
+        q_norm=jnp.ones((L, ql), jnp.float32),
+        w_qb=w(L, ql, H * dqk),
+        w_kva=w(L, d, dl + dr),
+        kv_norm=jnp.ones((L, dl), jnp.float32),
+        w_kvb1=w(L, H, dn, dl, scale=1.0 / np.sqrt(dn)),
+        w_kvb2=w(L, H, dv, dl, scale=1.0 / np.sqrt(dl)),
+        w_o=w(L, H * dv, d),
+        attn_norm=jnp.ones((L, d), jnp.float32),
+        mlp_norm=jnp.ones((L, d), jnp.float32),
+        w_gate=w(L, d, ff),
+        w_up=w(L, d, ff),
+        w_down=w(L, ff, d),
+        final_norm=jnp.ones((d,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-layer projection math (shared by decode and prefill)
+# ---------------------------------------------------------------------------
+
+
+def project_queries(cfg, wts: MlaWeights, i, x, positions):
+    """x [..., d] -> (q_nope [..., H, D_n], q_rope [..., H, D_r])."""
+    q = rms_norm(x @ wts.w_qa[i], wts.q_norm[i]) @ wts.w_qb[i]
+    q = q.reshape(*x.shape[:-1], cfg.n_heads, cfg.d_qk)
+    q_nope = q[..., : cfg.d_nope]
+    q_rope = rope(q[..., cfg.d_nope:], positions[..., None], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def project_kv_latent(cfg, wts: MlaWeights, i, x, positions):
+    """x [..., d] -> (ckv [..., D_l], krope [..., D_r]) cache entries."""
+    kv = x @ wts.w_kva[i]
+    ckv = rms_norm(kv[..., : cfg.kv_lora_rank], wts.kv_norm[i])
+    krope = rope(kv[..., cfg.kv_lora_rank:], positions, cfg.rope_theta)
+    return ckv, krope
+
+
+def expand_latent(cfg, wts: MlaWeights, i, ckv, krope):
+    """Latent -> uncompressed per-head K/V (the naive-form expansion).
+
+    ckv [..., D_l], krope [..., D_r] ->
+      k [..., H, D_qk], v [..., H, D_v].
+    """
+    k_nope = jnp.einsum("...d,hnd->...hn", ckv, wts.w_kvb1[i])
+    v = jnp.einsum("...d,hvd->...hv", ckv, wts.w_kvb2[i])
+    k_rope = jnp.broadcast_to(
+        krope[..., None, :], (*k_nope.shape[:-1], cfg.d_rope))
+    return jnp.concatenate([k_nope, k_rope], axis=-1), v
+
+
+def mlp(wts: MlaWeights, i, x):
+    return (jax.nn.silu(x @ wts.w_gate[i]) * (x @ wts.w_up[i])) @ wts.w_down[i]
+
+
+# ---------------------------------------------------------------------------
+# Decode step (the request-path graph, one token per sequence)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ModelConfig,
+    wts: MlaWeights,
+    variant: str,              # "typhoon" | "absorb" | "naive"
+    tokens,                    # [B] int32
+    lengths,                   # [B] int32 — non-shared tokens already cached
+    shared_len,                # scalar int32 — valid shared prefix length
+    shared_a,                  # typhoon/naive: K [Lyr,Ls,H,Dqk]; absorb: ckv [Lyr,Ls,Dl]
+    shared_b,                  # typhoon/naive: V [Lyr,Ls,H,Dv]; absorb: krope [Lyr,Ls,Dr]
+    ckv_cache,                 # [Lyr, B, Ln_max, D_l]
+    krope_cache,               # [Lyr, B, Ln_max, D_r]
+    *,
+    kv_tile=DEFAULT_KV_TILE,
+    interpret=True,
+):
+    """One decode iteration of the tiny MLA transformer.
+
+    Computes this step's latent KV, scatters it into the (functional)
+    cache at position ``lengths[b]``, runs the selected attention
+    variant over shared+non-shared context, and greedily samples.
+
+    Returns (next_tokens [B] i32, new_ckv [Lyr,B,D_l], new_krope
+    [Lyr,B,D_r]).  The Rust coordinator owns the canonical cache and
+    appends the returned entries itself.
+    """
+    b = tokens.shape[0]
+    positions = shared_len + lengths               # [B]
+    h = wts.embedding[tokens]                      # [B, d]
+    new_ckvs, new_kropes = [], []
+
+    for i in range(cfg.n_layers):
+        x = rms_norm(h, wts.attn_norm[i])
+        q_nope, q_rope = project_queries(cfg, wts, i, x, positions)
+        ckv_new, krope_new = project_kv_latent(cfg, wts, i, x, positions)
+        new_ckvs.append(ckv_new)
+        new_kropes.append(krope_new)
+
+        # Functional scatter of this step's entry at index lengths[b].
+        upd = jax.vmap(
+            lambda c, nk, idx: jax.lax.dynamic_update_slice(c, nk[None, :], (idx, 0)))
+        ckv_i = upd(ckv_cache[i], ckv_new, lengths)
+        krope_i = upd(krope_cache[i], krope_new, lengths)
+        attn_lens = lengths + 1
+
+        if variant == "typhoon":
+            o = tk.typhoon_attention(
+                q_nope, q_rope, shared_a[i], shared_b[i], shared_len,
+                ckv_i, krope_i, attn_lens, wts.w_kvb1[i], wts.w_kvb2[i],
+                kv_tile=kv_tile, interpret=interpret)
+        elif variant == "absorb":
+            o = tk.absorb_only_attention(
+                q_nope, q_rope, shared_a[i], shared_b[i], shared_len,
+                ckv_i, krope_i, attn_lens, wts.w_kvb1[i], wts.w_kvb2[i],
+                kv_tile=kv_tile, interpret=interpret)
+        elif variant == "naive":
+            k_n, v_n = expand_latent(cfg, wts, i, ckv_i, krope_i)
+            o = tk.naive_only_attention(
+                q_nope, q_rope, shared_a[i], shared_b[i], shared_len,
+                k_n, v_n, attn_lens, kv_tile=kv_tile, interpret=interpret)
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+
+        h = h + o.reshape(b, -1) @ wts.w_o[i]
+        h = h + mlp(wts, i, rms_norm(h, wts.mlp_norm[i]))
+
+    logits = rms_norm(h, wts.final_norm) @ wts.embedding.T
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, jnp.stack(new_ckvs), jnp.stack(new_kropes)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (compute path: plain-jnp naive attention, run once per prompt)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_attention(q, k, v, mask):
+    """q [B,S,H,Dqk], k/v [B,T,H,*], mask [B,1,S,T] -> [B,S,H,Dv]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+def prefill_shared(cfg: ModelConfig, wts: MlaWeights, tokens, shared_len,
+                   out_len=None):
+    """Prefill the shared prefix (a single sequence, batch of 1).
+
+    tokens [Ls_max] int32 (padded), shared_len scalar int32.
+
+    Returns per-layer caches, both latent and expanded:
+      shared_ckv [Lyr, Ls, D_l], shared_krope [Lyr, Ls, D_r],
+      shared_k [Lyr, Ls, H, D_qk], shared_v [Lyr, Ls, H, D_v].
+
+    The expansion is free here: the naive prefill computes K/V anyway
+    (paper §3.1 "the up-projection incurs no additional computational
+    overhead" in prefill).
+    """
+    s = tokens.shape[0]
+    out_len = out_len or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    valid = positions < shared_len
+    h = wts.embedding[tokens][None]                # [1, S, d]
+    pos_b = positions[None]
+    causal = (positions[None, :] <= positions[:, None])[None, None]  # [1,1,S,S]
+    mask = causal & valid[None, None, None, :]
+
+    ckvs, kropes, ks, vs = [], [], [], []
+    for i in range(cfg.n_layers):
+        x = rms_norm(h, wts.attn_norm[i])
+        q_nope, q_rope = project_queries(cfg, wts, i, x, pos_b)
+        ckv, krope = project_kv_latent(cfg, wts, i, x, pos_b)
+        k, v = expand_latent(cfg, wts, i, ckv, krope)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = _prefill_attention(q, k, v, mask)
+        h = h + o.reshape(1, s, -1) @ wts.w_o[i]
+        h = h + mlp(wts, i, rms_norm(h, wts.mlp_norm[i]))
+        ckvs.append(ckv[0, :out_len])
+        kropes.append(krope[0, :out_len])
+        ks.append(k[0, :out_len])
+        vs.append(v[0, :out_len])
+
+    return (jnp.stack(ckvs), jnp.stack(kropes), jnp.stack(ks), jnp.stack(vs))
+
+
+def prefill_requests(cfg: ModelConfig, wts: MlaWeights, tokens, q_lens,
+                     shared_len, shared_k, shared_v, ckv_out_len=None):
+    """Prefill a batch of non-shared question suffixes.
+
+    tokens [B, Lq_max] int32 (padded), q_lens [B] int32,
+    shared_k/shared_v [Lyr, Ls, H, *] expanded shared cache.
+
+    Each request attends causally to its own tokens and fully to the
+    valid shared prefix.  Returns:
+      ckv_init [Lyr, B, Lq(or ckv_out_len), D_l],
+      krope_init [Lyr, B, ..., D_r],
+      first_tokens [B] int32 — greedy first decode token.
+    """
+    b, s = tokens.shape
+    l_s = shared_k.shape[1]
+    ckv_out_len = ckv_out_len or s
+    positions = shared_len + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B,S]
+    h = wts.embedding[tokens]                     # [B, S, d]
+
+    own_causal = (jnp.arange(s)[None, :] <= jnp.arange(s)[:, None])
+    own_valid = (jnp.arange(s)[None, :] < q_lens[:, None])           # [B,S]
+    own_mask = own_causal[None, None] & own_valid[:, None, None, :]  # [B,1,S,S]
+    shared_mask = jnp.broadcast_to(
+        (jnp.arange(l_s) < shared_len)[None, None, None, :], (b, 1, s, l_s))
+    mask = jnp.concatenate([shared_mask, own_mask], axis=-1)
+
+    ckvs, kropes = [], []
+    for i in range(cfg.n_layers):
+        x = rms_norm(h, wts.attn_norm[i])
+        q_nope, q_rope = project_queries(cfg, wts, i, x, positions)
+        ckv, krope = project_kv_latent(cfg, wts, i, x, positions)
+        k_own, v_own = expand_latent(cfg, wts, i, ckv, krope)
+        k_sh = jnp.broadcast_to(shared_k[i][None], (b, *shared_k[i].shape))
+        v_sh = jnp.broadcast_to(shared_v[i][None], (b, *shared_v[i].shape))
+        k = jnp.concatenate([k_sh, k_own], axis=1)
+        v = jnp.concatenate([v_sh, v_own], axis=1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = _prefill_attention(q, k, v, mask)
+        h = h + o.reshape(b, s, -1) @ wts.w_o[i]
+        h = h + mlp(wts, i, rms_norm(h, wts.mlp_norm[i]))
+        ckvs.append(ckv[:, :ckv_out_len])
+        kropes.append(krope[:, :ckv_out_len])
+
+    # Logits at each request's last valid token.
+    last_idx = jnp.maximum(q_lens - 1, 0)                            # [B]
+    h_last = jnp.take_along_axis(h, last_idx[:, None, None], axis=1)[:, 0]
+    logits = rms_norm(h_last, wts.final_norm) @ wts.embedding.T
+    first_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(ckvs), jnp.stack(kropes), first_tokens
+
+
+# ---------------------------------------------------------------------------
+# Attention-only entry points (the kernel benchmark surface for Rust)
+# ---------------------------------------------------------------------------
+
+
+def attention_only(cfg: ModelConfig, variant: str):
+    """Returns a pure attention function over explicit caches/weights.
+
+    Used by aot.py to emit per-shape kernel artifacts that the Rust
+    criterion benches drive directly (no transformer around them).
+    """
+
+    def typhoon_fn(q_nope, q_rope, shared_k, shared_v, shared_len,
+                   ckv, krope, lengths, w_kvb1, w_kvb2):
+        return (tk.typhoon_attention(
+            q_nope, q_rope, shared_k, shared_v, shared_len[0],
+            ckv, krope, lengths, w_kvb1, w_kvb2),)
+
+    def absorb_fn(q_nope, q_rope, shared_ckv, shared_krope, shared_len,
+                  ckv, krope, lengths, w_kvb1, w_kvb2):
+        return (tk.absorb_only_attention(
+            q_nope, q_rope, shared_ckv, shared_krope, shared_len[0],
+            ckv, krope, lengths, w_kvb1, w_kvb2),)
+
+    def naive_fn(q_nope, q_rope, shared_k, shared_v, shared_len,
+                 k_n, v_n, lengths):
+        return (tk.naive_only_attention(
+            q_nope, q_rope, shared_k, shared_v, shared_len[0],
+            k_n, v_n, lengths),)
+
+    return {"typhoon": typhoon_fn, "absorb": absorb_fn, "naive": naive_fn}[variant]
+
+
+def expand_fn(ckv, krope, w_kvb1, w_kvb2):
+    """Latent -> uncompressed (K, V); the prefill-time shared-prefix
+    expansion the Rust cache manager invokes for TyphoonMLA."""
+    k_nope = jnp.einsum("...d,hnd->...hn", ckv, w_kvb1)
+    v = jnp.einsum("...d,hvd->...hv", ckv, w_kvb2)
+    d_r = krope.shape[-1]
+    k_rope = jnp.broadcast_to(krope[..., None, :], (*k_nope.shape[:-1], d_r))
+    return jnp.concatenate([k_nope, k_rope], axis=-1), v

@@ -1,0 +1,172 @@
+"""L1 performance tuning: structural analysis of the Pallas kernels.
+
+interpret=True wallclock on CPU is *not* a TPU proxy (the interpreter
+runs the grid as a Python loop over numpy ops), so per DESIGN.md §8 the
+L1 perf pass optimizes *structure*: VMEM working-set per grid step and
+MXU (128x128 systolic array) operand alignment, estimated from the
+BlockSpecs.  Run as::
+
+    cd python && python -m compile.tuning [--sweep]
+
+``--sweep`` additionally times the interpret-mode kernels across
+kv-tile sizes — useful only to confirm the interpreter is
+grid-overhead-bound (changes <5%), not as a TPU signal.
+"""
+
+import argparse
+import time
+from dataclasses import dataclass
+
+from .configs import CONFIGS, DEEPSEEK_V3, KIMI_K2, SIM
+
+BYTES_F32 = 4
+VMEM_BUDGET = 16 * 1024 * 1024  # ~16 MiB/core on current TPUs
+MXU_SUBLANE = 8
+MXU_LANE = 128
+
+
+@dataclass
+class KernelFootprint:
+    """Per-grid-step VMEM residency and MXU alignment of one kernel."""
+
+    name: str
+    vmem_bytes: int
+    #: (M, K, N) of every dot in the kernel body.
+    contractions: list
+    notes: str = ""
+
+    @property
+    def vmem_ok(self) -> bool:
+        return self.vmem_bytes <= VMEM_BUDGET
+
+    def mxu_aligned(self) -> list:
+        """Whether each contraction's K and N dims map cleanly onto the
+        (8, 128) MXU tile; M (batch rows) pads cheaply."""
+        return [
+            (k % MXU_SUBLANE == 0) and (n % MXU_LANE == 0 or n >= MXU_LANE)
+            for (_, k, n) in self.contractions
+        ]
+
+    def report(self) -> str:
+        aligned = self.mxu_aligned()
+        frac = sum(aligned) / max(len(aligned), 1)
+        return (
+            f"{self.name:<42} vmem/step {self.vmem_bytes/2**20:7.2f} MiB "
+            f"({'ok' if self.vmem_ok else 'OVER'})  "
+            f"mxu-aligned {sum(aligned)}/{len(aligned)} ({frac:.0%}) {self.notes}"
+        )
+
+
+def naive_shared_footprint(cfg, b_tile, kv_tile) -> KernelFootprint:
+    """One grid step of naive_shared: q [Bt,Dqk], k/v tiles, scratch."""
+    d_qk, d_v = cfg.d_qk, cfg.d_v
+    vmem = BYTES_F32 * (
+        b_tile * d_qk                 # q block
+        + kv_tile * d_qk              # k tile
+        + kv_tile * d_v               # v tile
+        + b_tile * kv_tile            # scores
+        + b_tile * (2 + d_v)          # m, l, acc scratch
+        + b_tile * d_v                # out block
+    )
+    return KernelFootprint(
+        name=f"naive_shared[{cfg.name}] bt={b_tile} kt={kv_tile}",
+        vmem_bytes=vmem,
+        contractions=[
+            (b_tile, d_qk, kv_tile),  # scores = q @ k.T
+            (b_tile, kv_tile, d_v),   # acc += p @ v
+        ],
+    )
+
+
+def absorb_batched_footprint(cfg, kv_tile) -> KernelFootprint:
+    """One grid step of absorb_batched: all H heads, one latent tile."""
+    h, d_l, d_r = cfg.n_heads, cfg.kv_lora_rank, cfg.d_rope
+    vmem = BYTES_F32 * (
+        h * d_l + h * d_r             # q_lat, q_rope
+        + kv_tile * (d_l + d_r)       # ckv + krope tiles
+        + h * kv_tile                 # scores
+        + h * (2 + d_l)               # scratch
+        + h * d_l                     # out
+    )
+    return KernelFootprint(
+        name=f"absorb_batched[{cfg.name}] kt={kv_tile}",
+        vmem_bytes=vmem,
+        contractions=[
+            (h, d_l, kv_tile),
+            (h, d_r, kv_tile),
+            (h, kv_tile, d_l),
+        ],
+    )
+
+
+def typhoon_footprints(cfg, b_tile, kv_tile):
+    return [
+        naive_shared_footprint(cfg, b_tile, kv_tile),
+        absorb_batched_footprint(cfg, kv_tile),
+    ]
+
+
+def structural_report(b_tile=64):
+    lines = ["== L1 structural analysis (VMEM/step + MXU alignment) =="]
+    for cfg in (SIM, DEEPSEEK_V3, KIMI_K2):
+        for kv_tile in (64, 128, 256, 512):
+            for fp in typhoon_footprints(cfg, min(b_tile, 128), kv_tile):
+                lines.append(fp.report())
+        lines.append("")
+    return "\n".join(lines)
+
+
+def interpret_sweep(b=16, ls=512, ln=128):
+    """Time interpret-mode kernels across kv tiles.  CPU-only signal:
+    expected to be flat (grid-loop bound), confirming there is nothing
+    to chase at L1 on this substrate."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .kernels import absorb, naive
+
+    cfg = SIM
+    rng = np.random.default_rng(0)
+    f32 = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    q = f32(b, cfg.n_heads, cfg.d_qk)
+    k = f32(ls, cfg.n_heads, cfg.d_qk)
+    v = f32(ls, cfg.n_heads, cfg.d_v)
+    q_lat = f32(b, cfg.n_heads, cfg.kv_lora_rank)
+    q_rope = f32(b, cfg.n_heads, cfg.d_rope)
+    ckv = f32(b, ln, cfg.kv_lora_rank)
+    krope = f32(b, ln, cfg.d_rope)
+    lens = jnp.full((b,), ln, jnp.int32)
+
+    lines = [f"== interpret-mode kv-tile sweep (B={b}, Ls={ls}, Ln={ln}) =="]
+    for tile in (64, 128, 256):
+        if ls % tile or ln % tile:
+            continue
+        for name, fn in [
+            ("naive_shared", lambda t=tile: naive.naive_shared_attention(
+                q, k, v, ls, kv_tile=t)),
+            ("absorb_batched", lambda t=tile: absorb.absorb_batched_attention(
+                q_lat, q_rope, ckv, krope, lens, kv_tile=t, d_qk=cfg.d_qk)),
+        ]:
+            fn()  # warm
+            t0 = time.perf_counter()
+            reps = 3
+            for _ in range(reps):
+                o, _ = fn()
+                o.block_until_ready()
+            dt = (time.perf_counter() - t0) / reps
+            lines.append(f"  {name:<16} kv_tile={tile:<4} {dt*1e3:8.1f} ms")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--b-tile", type=int, default=64)
+    args = ap.parse_args()
+    print(structural_report(args.b_tile))
+    if args.sweep:
+        print(interpret_sweep())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def randf(rng, *shape, scale=1.0):
+    import jax.numpy as jnp
+
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)

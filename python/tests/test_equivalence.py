@@ -1,0 +1,136 @@
+"""The paper's central mathematical claim: TyphoonMLA == naive == absorb.
+
+All three attention formulations (and the below-threshold fallback) must
+produce identical outputs over the same logical context.  We verify each
+against the monolithic decompress-everything oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, typhoon
+
+from .conftest import randf
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def make_problem(rng, b=4, h=3, dn=16, dr=8, dv=16, dl=32, sl=48, ln=32,
+                 tile=16):
+    lens = jnp.asarray(rng.integers(1, ln + 1, size=b), jnp.int32)
+    p = dict(
+        b=b, h=h, dn=dn, dr=dr, dv=dv, dl=dl, sl=sl, ln=ln, tile=tile,
+        q_nope=randf(rng, b, h, dn),
+        q_rope=randf(rng, b, h, dr),
+        ckv_shared=randf(rng, sl, dl),
+        krope_shared=randf(rng, sl, dr),
+        ckv=randf(rng, b, ln, dl),
+        krope=randf(rng, b, ln, dr),
+        lens=lens,
+        w_kvb1=randf(rng, h, dn, dl, scale=0.3),
+        w_kvb2=randf(rng, h, dv, dl, scale=0.3),
+    )
+    # Uncompressed (naive-form) shared cache.
+    k_nope = jnp.einsum("ld,hnd->lhn", p["ckv_shared"], p["w_kvb1"])
+    p["v_shared"] = jnp.einsum("ld,hvd->lhv", p["ckv_shared"], p["w_kvb2"])
+    p["k_shared"] = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(p["krope_shared"][:, None, :], (sl, h, dr))],
+        axis=-1)
+    # Uncompressed non-shared cache (for the naive baseline).
+    k_nope_n = jnp.einsum("bld,hnd->blhn", p["ckv"], p["w_kvb1"])
+    p["v_n"] = jnp.einsum("bld,hvd->blhv", p["ckv"], p["w_kvb2"])
+    p["k_n"] = jnp.concatenate(
+        [k_nope_n, jnp.broadcast_to(p["krope"][:, :, None, :], (b, ln, h, dr))],
+        axis=-1)
+    return p
+
+
+def monolithic(p):
+    b = p["b"]
+    ckv_full = jnp.concatenate(
+        [jnp.broadcast_to(p["ckv_shared"][None], (b, p["sl"], p["dl"])), p["ckv"]],
+        axis=1)
+    krope_full = jnp.concatenate(
+        [jnp.broadcast_to(p["krope_shared"][None], (b, p["sl"], p["dr"])), p["krope"]],
+        axis=1)
+    return ref.mla_attention_monolithic_ref(
+        p["q_nope"], p["q_rope"], ckv_full, krope_full,
+        p["sl"] + p["lens"], p["w_kvb1"], p["w_kvb2"])
+
+
+@pytest.fixture
+def problem(rng):
+    return make_problem(rng)
+
+
+def test_typhoon_equals_monolithic(problem):
+    p = problem
+    o = typhoon.typhoon_attention(
+        p["q_nope"], p["q_rope"], p["k_shared"], p["v_shared"], p["sl"],
+        p["ckv"], p["krope"], p["lens"], p["w_kvb1"], p["w_kvb2"],
+        kv_tile=p["tile"])
+    np.testing.assert_allclose(np.asarray(o), np.asarray(monolithic(p)), **TOL)
+
+
+def test_absorb_only_equals_monolithic(problem):
+    p = problem
+    o = typhoon.absorb_only_attention(
+        p["q_nope"], p["q_rope"], p["ckv_shared"], p["krope_shared"], p["sl"],
+        p["ckv"], p["krope"], p["lens"], p["w_kvb1"], p["w_kvb2"],
+        kv_tile=p["tile"])
+    np.testing.assert_allclose(np.asarray(o), np.asarray(monolithic(p)), **TOL)
+
+
+def test_naive_only_equals_monolithic(problem):
+    p = problem
+    o = typhoon.naive_only_attention(
+        p["q_nope"], p["q_rope"], p["k_shared"], p["v_shared"], p["sl"],
+        p["k_n"], p["v_n"], p["lens"], kv_tile=p["tile"])
+    np.testing.assert_allclose(np.asarray(o), np.asarray(monolithic(p)), **TOL)
+
+
+def test_all_three_agree(problem):
+    """Direct pairwise agreement (tighter than both-vs-oracle)."""
+    p = problem
+    o_t = typhoon.typhoon_attention(
+        p["q_nope"], p["q_rope"], p["k_shared"], p["v_shared"], p["sl"],
+        p["ckv"], p["krope"], p["lens"], p["w_kvb1"], p["w_kvb2"],
+        kv_tile=p["tile"])
+    o_a = typhoon.absorb_only_attention(
+        p["q_nope"], p["q_rope"], p["ckv_shared"], p["krope_shared"], p["sl"],
+        p["ckv"], p["krope"], p["lens"], p["w_kvb1"], p["w_kvb2"],
+        kv_tile=p["tile"])
+    o_n = typhoon.naive_only_attention(
+        p["q_nope"], p["q_rope"], p["k_shared"], p["v_shared"], p["sl"],
+        p["k_n"], p["v_n"], p["lens"], kv_tile=p["tile"])
+    np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_a), **TOL)
+    np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_n), **TOL)
+
+
+def test_zero_shared_prefix_degenerates_to_absorb(rng):
+    """With shared_len == 0 typhoon must equal absorb over the suffix only
+    (the fall-back regime's correctness basis)."""
+    p = make_problem(rng, sl=16)
+    o_t = typhoon.typhoon_attention(
+        p["q_nope"], p["q_rope"], p["k_shared"], p["v_shared"], 0,
+        p["ckv"], p["krope"], p["lens"], p["w_kvb1"], p["w_kvb2"],
+        kv_tile=p["tile"])
+    q_lat = jnp.einsum("bhn,hnl->bhl", p["q_nope"], p["w_kvb1"])
+    from compile.kernels import absorb as ab
+    o_lat, _ = ab.absorb_batched_attention(
+        q_lat, p["q_rope"], p["ckv"], p["krope"], p["lens"],
+        kv_tile=p["tile"], d_qk=p["dn"] + p["dr"])
+    o_a = jnp.einsum("bhl,hvl->bhv", o_lat, p["w_kvb2"])
+    np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_a), **TOL)
+
+
+@pytest.mark.parametrize("sl,ln", [(16, 16), (64, 16), (16, 64)])
+def test_equivalence_across_shared_ratios(rng, sl, ln):
+    """Equivalence holds regardless of the shared/non-shared split ratio."""
+    p = make_problem(rng, sl=sl, ln=ln)
+    o_t = typhoon.typhoon_attention(
+        p["q_nope"], p["q_rope"], p["k_shared"], p["v_shared"], p["sl"],
+        p["ckv"], p["krope"], p["lens"], p["w_kvb1"], p["w_kvb2"],
+        kv_tile=p["tile"])
+    np.testing.assert_allclose(np.asarray(o_t), np.asarray(monolithic(p)), **TOL)

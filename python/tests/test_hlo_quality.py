@@ -1,0 +1,91 @@
+"""L2 perf-quality gates over the AOT artifacts + L1 structural gates.
+
+Skipped when artifacts have not been built (`make artifacts`)."""
+
+import os
+
+import pytest
+
+from compile.configs import DEEPSEEK_V3, KIMI_K2, SIM, TINY
+from compile.inspect_hlo import analyze_dir
+from compile.tuning import (VMEM_BUDGET, absorb_batched_footprint,
+                            naive_shared_footprint)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built",
+)
+
+
+@pytest.fixture(scope="module")
+def analysis():
+    return analyze_dir(ART_DIR)
+
+
+def test_no_weight_constants_in_model_artifacts(analysis):
+    """Weights must be parameters, not baked constants: const payload of
+    every artifact stays tiny (< 64 KiB) even though the tiny model has
+    ~2M parameters (~8 MB)."""
+    for name, c in analysis.items():
+        assert c["const_payload_bytes"] < 64 * 1024, (name, c)
+
+
+def test_decode_step_dot_budget(analysis):
+    """No duplicated projections: per layer the decode step needs at
+    most ~16 contractions (q down/up, kv down, absorb or expand paths,
+    two attention stages at 3 dots each, W_KVb1/2, output, 3 MLP) plus
+    the logits matmul."""
+    lyr = TINY.n_layers
+    for name, c in analysis.items():
+        if c["kind"] != "decode_step":
+            continue
+        budget = lyr * 16 + 2
+        assert c["dots"] <= budget, f"{name}: {c['dots']} dots > {budget}"
+        assert c["dots"] >= lyr * 6, f"{name}: implausibly few dots"
+
+
+def test_attention_artifacts_have_no_while_loops(analysis):
+    """Pallas interpret-mode grids lower to unrolled/fused HLO with
+    dynamic-update-slices, not while loops; their presence would signal
+    an accidental scan/recompute."""
+    for name, c in analysis.items():
+        if c["kind"] == "attention":
+            assert c["whiles"] == 0, (name, c)
+
+
+def test_attention_dot_counts_by_variant(analysis):
+    """naive = 2 dots/stage x 2 stages; absorb adds score-split dots and
+    the two projection einsums; typhoon sits in between.  Exact values
+    pin the lowering so regressions (e.g. XLA splitting a dot) surface."""
+    for name, c in analysis.items():
+        if c["kind"] != "attention":
+            continue
+        if "naive" in name:
+            assert c["dots"] == 4, (name, c["dots"])
+        elif "absorb" in name:
+            assert c["dots"] == 8, (name, c["dots"])
+        elif "typhoon" in name:
+            assert c["dots"] == 7, (name, c["dots"])
+
+
+def test_vmem_budgets_at_paper_scale():
+    """Every kernel's per-step working set fits VMEM at DeepSeek-v3 and
+    Kimi K2 dimensions with the default (128) KV tile."""
+    for cfg in (SIM, DEEPSEEK_V3, KIMI_K2):
+        for kv_tile in (128, 256):
+            n = naive_shared_footprint(cfg, b_tile=128, kv_tile=kv_tile)
+            a = absorb_batched_footprint(cfg, kv_tile=kv_tile)
+            assert n.vmem_bytes < VMEM_BUDGET, n.name
+            assert a.vmem_bytes < VMEM_BUDGET, a.name
+
+
+def test_mxu_alignment_at_paper_scale():
+    """With kv_tile=128, every contraction in both kernels is
+    MXU-aligned for DeepSeek-v3/Kimi K2 (D_qk=192, D_v=128, D_l=512)."""
+    for cfg in (DEEPSEEK_V3, KIMI_K2):
+        n = naive_shared_footprint(cfg, b_tile=128, kv_tile=128)
+        a = absorb_batched_footprint(cfg, kv_tile=128)
+        assert all(n.mxu_aligned()), n.name
+        assert all(a.mxu_aligned()), a.name

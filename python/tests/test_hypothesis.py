@@ -1,0 +1,164 @@
+"""Hypothesis sweeps: kernel-vs-ref over randomized shapes and lengths.
+
+The deadline is disabled because interpret-mode Pallas runs the grid in
+Python; examples are capped to keep the suite fast.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import absorb, naive, ref
+
+SETTINGS = settings(max_examples=25, deadline=None,
+                    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def _rand(data, *shape):
+    # Deterministic values driven by hypothesis' entropy.
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@SETTINGS
+@given(data=st.data())
+def test_naive_shared_sweep(data):
+    b = data.draw(st.integers(1, 8), label="b")
+    h = data.draw(st.integers(1, 4), label="h")
+    dqk = data.draw(st.sampled_from([8, 16, 24, 48, 96]), label="dqk")
+    dv = data.draw(st.sampled_from([8, 16, 32, 64]), label="dv")
+    tile = data.draw(st.sampled_from([8, 16, 32]), label="tile")
+    n_tiles = data.draw(st.integers(1, 5), label="n_tiles")
+    ls = tile * n_tiles
+    length = data.draw(st.integers(0, ls), label="length")
+
+    q = _rand(data, b, h, dqk)
+    k = _rand(data, ls, h, dqk)
+    v = _rand(data, ls, h, dv)
+    o, lse = naive.naive_shared_attention(q, k, v, length, kv_tile=tile)
+    if length == 0:
+        assert np.all(np.asarray(o) == 0.0)
+        return
+    o_r, lse_r = ref.naive_shared_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), **TOL)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_r), **TOL)
+
+
+@SETTINGS
+@given(data=st.data())
+def test_naive_batched_sweep(data):
+    b = data.draw(st.integers(1, 6), label="b")
+    h = data.draw(st.integers(1, 3), label="h")
+    dqk = data.draw(st.sampled_from([8, 24, 48]), label="dqk")
+    dv = data.draw(st.sampled_from([8, 16, 32]), label="dv")
+    tile = data.draw(st.sampled_from([8, 16]), label="tile")
+    ln = tile * data.draw(st.integers(1, 4), label="n_tiles")
+    seed = data.draw(st.integers(0, 2**31 - 1), label="lens_seed")
+    lens = jnp.asarray(
+        np.random.default_rng(seed).integers(1, ln + 1, size=b), jnp.int32)
+
+    q = _rand(data, b, h, dqk)
+    k = _rand(data, b, ln, h, dqk)
+    v = _rand(data, b, ln, h, dv)
+    o, lse = naive.naive_batched_attention(q, k, v, lens, kv_tile=tile)
+    o_r, lse_r = ref.naive_batched_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), **TOL)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_r), **TOL)
+
+
+@SETTINGS
+@given(data=st.data())
+def test_absorb_batched_sweep(data):
+    b = data.draw(st.integers(1, 6), label="b")
+    h = data.draw(st.integers(1, 4), label="h")
+    dl = data.draw(st.sampled_from([16, 32, 64, 128]), label="dl")
+    dr = data.draw(st.sampled_from([8, 16, 32]), label="dr")
+    d_qk = data.draw(st.sampled_from([24, 48, 96]), label="d_qk")
+    tile = data.draw(st.sampled_from([8, 16, 32]), label="tile")
+    ln = tile * data.draw(st.integers(1, 4), label="n_tiles")
+    seed = data.draw(st.integers(0, 2**31 - 1), label="lens_seed")
+    lens = jnp.asarray(
+        np.random.default_rng(seed).integers(1, ln + 1, size=b), jnp.int32)
+
+    q_lat = _rand(data, b, h, dl)
+    q_rope = _rand(data, b, h, dr)
+    ckv = _rand(data, b, ln, dl)
+    krope = _rand(data, b, ln, dr)
+    o, lse = absorb.absorb_batched_attention(
+        q_lat, q_rope, ckv, krope, lens, kv_tile=tile, d_qk=d_qk)
+    o_r, lse_r = ref.absorb_batched_ref(q_lat, q_rope, ckv, krope, lens, d_qk)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), **TOL)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_r), **TOL)
+
+
+@SETTINGS
+@given(data=st.data())
+def test_absorb_shared_sweep(data):
+    b = data.draw(st.integers(1, 6), label="b")
+    h = data.draw(st.integers(1, 4), label="h")
+    dl = data.draw(st.sampled_from([16, 64]), label="dl")
+    dr = data.draw(st.sampled_from([8, 32]), label="dr")
+    d_qk = data.draw(st.sampled_from([24, 96]), label="d_qk")
+    tile = data.draw(st.sampled_from([8, 32]), label="tile")
+    ls = tile * data.draw(st.integers(1, 4), label="n_tiles")
+    length = data.draw(st.integers(1, ls), label="length")
+
+    q_lat = _rand(data, b, h, dl)
+    q_rope = _rand(data, b, h, dr)
+    ckv = _rand(data, ls, dl)
+    krope = _rand(data, ls, dr)
+    o, lse = absorb.absorb_shared_attention(
+        q_lat, q_rope, ckv, krope, length, kv_tile=tile, d_qk=d_qk)
+    o_r, lse_r = ref.absorb_shared_ref(q_lat, q_rope, ckv, krope, length, d_qk)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), **TOL)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_r), **TOL)
+
+
+@SETTINGS
+@given(data=st.data())
+def test_typhoon_equivalence_sweep(data):
+    """Randomized version of the equivalence theorem test."""
+    from compile.kernels import typhoon
+
+    b = data.draw(st.integers(1, 4), label="b")
+    h = data.draw(st.integers(1, 3), label="h")
+    dn = data.draw(st.sampled_from([8, 16]), label="dn")
+    dr = data.draw(st.sampled_from([8, 16]), label="dr")
+    dv = data.draw(st.sampled_from([8, 16]), label="dv")
+    dl = data.draw(st.sampled_from([16, 32]), label="dl")
+    tile = 16
+    sl = tile * data.draw(st.integers(1, 3), label="sl_tiles")
+    ln = tile * data.draw(st.integers(1, 3), label="ln_tiles")
+    seed = data.draw(st.integers(0, 2**31 - 1), label="lens_seed")
+    lens = jnp.asarray(
+        np.random.default_rng(seed).integers(1, ln + 1, size=b), jnp.int32)
+
+    q_nope = _rand(data, b, h, dn)
+    q_rope = _rand(data, b, h, dr)
+    ckv_s = _rand(data, sl, dl)
+    krope_s = _rand(data, sl, dr)
+    ckv = _rand(data, b, ln, dl)
+    krope = _rand(data, b, ln, dr)
+    w1 = _rand(data, h, dn, dl) * 0.3
+    w2 = _rand(data, h, dv, dl) * 0.3
+
+    k_nope = jnp.einsum("ld,hnd->lhn", ckv_s, w1)
+    v_sh = jnp.einsum("ld,hvd->lhv", ckv_s, w2)
+    k_sh = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_s[:, None, :], (sl, h, dr))], axis=-1)
+
+    o_t = typhoon.typhoon_attention(
+        q_nope, q_rope, k_sh, v_sh, sl, ckv, krope, lens, w1, w2, kv_tile=tile)
+    ckv_full = jnp.concatenate(
+        [jnp.broadcast_to(ckv_s[None], (b, sl, dl)), ckv], axis=1)
+    krope_full = jnp.concatenate(
+        [jnp.broadcast_to(krope_s[None], (b, sl, dr)), krope], axis=1)
+    o_m = ref.mla_attention_monolithic_ref(
+        q_nope, q_rope, ckv_full, krope_full, sl + lens, w1, w2)
+    np.testing.assert_allclose(np.asarray(o_t), np.asarray(o_m),
+                               rtol=5e-5, atol=5e-5)

@@ -1,0 +1,198 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Fixed-shape parametrized cases cover the interesting boundaries
+(single tile, many tiles, length == tile multiple, length 1, ragged
+batches); hypothesis sweeps randomize shapes/lengths more broadly in
+``test_hypothesis.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import absorb, naive, ref, typhoon
+from compile.kernels.common import combine_lse
+
+from .conftest import randf
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def assert_close(a, b, **kw):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **{**TOL, **kw})
+
+
+@pytest.mark.parametrize(
+    "b,h,dqk,dv,ls,length,tile",
+    [
+        (1, 1, 8, 8, 16, 16, 16),     # single tile, full length
+        (4, 3, 24, 16, 64, 50, 16),   # ragged tail in last tile
+        (8, 2, 24, 16, 64, 1, 16),    # single valid token
+        (2, 4, 48, 32, 128, 64, 32),  # length on a tile boundary
+        (16, 8, 96, 64, 256, 200, 128),  # sim-config-like dims
+    ],
+)
+def test_naive_shared_vs_ref(rng, b, h, dqk, dv, ls, length, tile):
+    q = randf(rng, b, h, dqk)
+    k = randf(rng, ls, h, dqk)
+    v = randf(rng, ls, h, dv)
+    o, lse = naive.naive_shared_attention(q, k, v, length, kv_tile=tile)
+    o_r, lse_r = ref.naive_shared_ref(q, k, v, length)
+    assert_close(o, o_r)
+    assert_close(lse, lse_r)
+
+
+@pytest.mark.parametrize("b_tile", [1, 2, 4])
+def test_naive_shared_batch_tiling(rng, b_tile):
+    """Tiling the batch dimension must not change results."""
+    q = randf(rng, 4, 2, 24)
+    k = randf(rng, 32, 2, 24)
+    v = randf(rng, 32, 2, 16)
+    o_full, lse_full = naive.naive_shared_attention(q, k, v, 30, kv_tile=16)
+    o_t, lse_t = naive.naive_shared_attention(q, k, v, 30, kv_tile=16, b_tile=b_tile)
+    assert_close(o_t, o_full)
+    assert_close(lse_t, lse_full)
+
+
+@pytest.mark.parametrize(
+    "b,h,dqk,dv,ln,tile",
+    [
+        (1, 1, 8, 8, 16, 16),
+        (4, 3, 24, 16, 64, 16),
+        (6, 2, 48, 32, 128, 32),
+    ],
+)
+def test_naive_batched_vs_ref(rng, b, h, dqk, dv, ln, tile):
+    q = randf(rng, b, h, dqk)
+    k = randf(rng, b, ln, h, dqk)
+    v = randf(rng, b, ln, h, dv)
+    lengths = jnp.asarray(rng.integers(1, ln + 1, size=b), jnp.int32)
+    o, lse = naive.naive_batched_attention(q, k, v, lengths, kv_tile=tile)
+    o_r, lse_r = ref.naive_batched_ref(q, k, v, lengths)
+    assert_close(o, o_r)
+    assert_close(lse, lse_r)
+
+
+@pytest.mark.parametrize(
+    "b,h,dl,dr,ln,tile",
+    [
+        (1, 1, 16, 8, 16, 16),
+        (4, 3, 32, 8, 64, 16),
+        (8, 8, 128, 32, 256, 128),   # sim-config dims
+    ],
+)
+def test_absorb_batched_vs_ref(rng, b, h, dl, dr, ln, tile):
+    d_qk = 24
+    q_lat = randf(rng, b, h, dl)
+    q_rope = randf(rng, b, h, dr)
+    ckv = randf(rng, b, ln, dl)
+    krope = randf(rng, b, ln, dr)
+    lengths = jnp.asarray(rng.integers(1, ln + 1, size=b), jnp.int32)
+    o, lse = absorb.absorb_batched_attention(
+        q_lat, q_rope, ckv, krope, lengths, kv_tile=tile, d_qk=d_qk)
+    o_r, lse_r = ref.absorb_batched_ref(q_lat, q_rope, ckv, krope, lengths, d_qk)
+    assert_close(o, o_r)
+    assert_close(lse, lse_r)
+
+
+@pytest.mark.parametrize(
+    "b,h,dl,dr,ls,length,tile",
+    [
+        (2, 2, 16, 8, 32, 20, 16),
+        (4, 4, 64, 16, 128, 128, 32),
+        (8, 8, 128, 32, 512, 300, 128),
+    ],
+)
+def test_absorb_shared_vs_ref(rng, b, h, dl, dr, ls, length, tile):
+    d_qk = 40
+    q_lat = randf(rng, b, h, dl)
+    q_rope = randf(rng, b, h, dr)
+    ckv = randf(rng, ls, dl)
+    krope = randf(rng, ls, dr)
+    o, lse = absorb.absorb_shared_attention(
+        q_lat, q_rope, ckv, krope, length, kv_tile=tile, d_qk=d_qk)
+    o_r, lse_r = ref.absorb_shared_ref(q_lat, q_rope, ckv, krope, length, d_qk)
+    assert_close(o, o_r)
+    assert_close(lse, lse_r)
+
+
+def test_absorb_shared_row_tiling(rng):
+    q_lat = randf(rng, 4, 2, 16)
+    q_rope = randf(rng, 4, 2, 8)
+    ckv = randf(rng, 32, 16)
+    krope = randf(rng, 32, 8)
+    o_full, lse_full = absorb.absorb_shared_attention(
+        q_lat, q_rope, ckv, krope, 32, kv_tile=16, d_qk=24)
+    o_t, lse_t = absorb.absorb_shared_attention(
+        q_lat, q_rope, ckv, krope, 32, kv_tile=16, d_qk=24, r_tile=2)
+    assert_close(o_t, o_full)
+    assert_close(lse_t, lse_full)
+
+
+class TestCombineLSE:
+    def test_combine_kernel_vs_ref(self, rng):
+        o1, o2 = randf(rng, 4, 3, 16), randf(rng, 4, 3, 16)
+        lse1, lse2 = randf(rng, 4, 3), randf(rng, 4, 3)
+        o, lse = typhoon.combine_lse_kernel(o1, lse1, o2, lse2)
+        o_r, lse_r = ref.combine_lse_ref(o1, lse1, o2, lse2)
+        assert_close(o, o_r)
+        assert_close(lse, lse_r)
+
+    def test_combine_matches_joint_softmax(self, rng):
+        """Combining partials over disjoint KV ranges == one softmax."""
+        q = randf(rng, 2, 2, 24)
+        k = randf(rng, 64, 2, 24)
+        v = randf(rng, 64, 2, 16)
+        o_full, lse_full = ref.naive_shared_ref(q, k, v, 64)
+        o1, lse1 = ref.naive_shared_ref(q, k[:32], v[:32], 32)
+        o2, lse2 = ref.naive_shared_ref(q, k[32:], v[32:], 32)
+        o_c, lse_c = combine_lse(o1, lse1, o2, lse2)
+        assert_close(o_c, o_full)
+        assert_close(lse_c, lse_full)
+
+    def test_combine_is_commutative(self, rng):
+        o1, o2 = randf(rng, 2, 2, 8), randf(rng, 2, 2, 8)
+        lse1, lse2 = randf(rng, 2, 2), randf(rng, 2, 2)
+        oa, la = combine_lse(o1, lse1, o2, lse2)
+        ob, lb = combine_lse(o2, lse2, o1, lse1)
+        assert_close(oa, ob)
+        assert_close(la, lb)
+
+    def test_combine_associative_three_way(self, rng):
+        """((1+2)+3) == (1+(2+3)) over a real split attention."""
+        q = randf(rng, 2, 1, 16)
+        k = randf(rng, 48, 1, 16)
+        v = randf(rng, 48, 1, 8)
+        parts = [ref.naive_shared_ref(q, k[i:i + 16], v[i:i + 16], 16)
+                 for i in (0, 16, 32)]
+        o_l, l_l = combine_lse(*combine_lse(*parts[0], *parts[1]), *parts[2])
+        o_r_, l_r_ = combine_lse(*parts[0], *combine_lse(*parts[1], *parts[2]))
+        assert_close(o_l, o_r_)
+        o_full, _ = ref.naive_shared_ref(q, k, v, 48)
+        assert_close(o_l, o_full)
+
+    def test_combine_ignores_empty_branch(self, rng):
+        """A fully-masked (length-0) branch must be a no-op in combine."""
+        q = randf(rng, 2, 2, 24)
+        k = randf(rng, 32, 2, 24)
+        v = randf(rng, 32, 2, 16)
+        o_full, lse_full = naive.naive_shared_attention(q, k, v, 32, kv_tile=16)
+        o_empty, lse_empty = naive.naive_shared_attention(q, k, v, 0, kv_tile=16)
+        assert np.all(np.asarray(o_empty) == 0.0)
+        o_c, lse_c = combine_lse(o_full, lse_full, o_empty, lse_empty)
+        assert_close(o_c, o_full)
+        assert_close(lse_c, lse_full)
+
+
+def test_lse_is_finite_and_ordered(rng):
+    """LSE must grow monotonically with context length (more mass)."""
+    q = randf(rng, 1, 1, 16, scale=0.1)
+    k = jnp.abs(randf(rng, 64, 1, 16, scale=0.1))
+    v = randf(rng, 64, 1, 8)
+    q = jnp.abs(q)
+    lses = []
+    for length in (16, 32, 48, 64):
+        _, lse = naive.naive_shared_attention(q, k, v, length, kv_tile=16)
+        lses.append(float(lse[0, 0]))
+    assert all(np.isfinite(lses))
+    assert lses == sorted(lses), lses  # positive scores => monotone lse

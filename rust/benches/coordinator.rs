@@ -1,0 +1,112 @@
+//! L3 hot-path benches: block allocator, radix matching, scheduler
+//! iteration overhead (NullEngine isolates pure coordination cost).
+//!
+//! Targets (DESIGN.md §8): allocator O(1) per op, radix match O(len),
+//! scheduler overhead per decode step ≪ any real kernel time.
+
+use std::time::Duration;
+
+use typhoon_mla::config::model::sim;
+use typhoon_mla::config::{KernelKind, ServingConfig};
+use typhoon_mla::coordinator::engine::NullEngine;
+use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
+use typhoon_mla::kvcache::{BlockAllocator, KvCacheManager, RadixTree};
+use typhoon_mla::util::bench::{Bench, BenchConfig};
+use typhoon_mla::util::rng::Rng;
+use typhoon_mla::workload::Request;
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(200),
+        min_iters: 50,
+        min_time: Duration::from_secs(1),
+        max_iters: 1_000_000,
+    });
+
+    // --- block allocator -------------------------------------------------
+    {
+        let mut alloc = BlockAllocator::new(65536, 128);
+        bench.bench("alloc/allocate_release_pair", || {
+            let b = alloc.allocate().unwrap();
+            alloc.release(b);
+        });
+        let mut held = Vec::new();
+        bench.bench("alloc/allocate_n_64", || {
+            held = alloc.allocate_n(64).unwrap();
+            for &b in &held {
+                alloc.release(b);
+            }
+        });
+    }
+
+    // --- radix tree --------------------------------------------------------
+    {
+        let mut tree = RadixTree::new();
+        let mut rng = Rng::new(7);
+        let mut corpus = Vec::new();
+        // 26k-token system prompt + 512 question branches (prompt-A scale).
+        let prompt: Vec<u32> = (0..26472).map(|_| rng.gen_range(0, 50000) as u32).collect();
+        let blocks: Vec<u32> = (0..prompt.len()).map(|i| (i / 128) as u32).collect();
+        tree.insert(&prompt, &blocks);
+        for q in 0..512u32 {
+            let mut s = prompt.clone();
+            for _ in 0..rng.gen_range_usize(8, 128) {
+                s.push(rng.gen_range(0, 50000) as u32);
+            }
+            let b: Vec<u32> = (0..s.len()).map(|i| (i / 128) as u32 + q * 1000).collect();
+            tree.insert(&s, &b);
+            corpus.push(s);
+        }
+        let probe = corpus[100].clone();
+        bench.bench("radix/match_26k_prefix", || {
+            let m = tree.match_prefix(&probe);
+            assert_eq!(m.matched, probe.len());
+        });
+    }
+
+    // --- cache manager ------------------------------------------------------
+    {
+        let mut kv = KvCacheManager::new(sim(), 65536, 128);
+        let prefix: Vec<u32> = (0..4096u32).collect();
+        let pid = kv.register_shared_prefix(&prefix).unwrap();
+        let mut next = 0u64;
+        bench.bench("kvcache/seq_lifecycle_128tok", || {
+            kv.add_sequence(next, pid, 64).unwrap();
+            for _ in 0..64 {
+                kv.append_token(next).unwrap();
+            }
+            kv.remove_sequence(next).unwrap();
+            next += 1;
+        });
+    }
+
+    // --- full scheduler step (pure coordination overhead) ------------------
+    for batch in [64usize, 512] {
+        let cfg = ServingConfig {
+            block_size: 128,
+            max_batch: batch,
+            max_seq_len: 2048,
+            total_blocks: batch * 16 + 64,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Typhoon, 61);
+        let kv = KvCacheManager::new(sim(), cfg.total_blocks, cfg.block_size);
+        let mut c = Coordinator::new(cfg, policy, kv, NullEngine::default())?;
+        c.set_shared_prefix(&(0..4096u32).collect::<Vec<_>>())?;
+        // Endless queue: keep the batch saturated so every measured
+        // step is a full decode iteration, not a drained no-op.
+        let mut i = 0u64;
+        bench.bench(&format!("scheduler/step_b{batch}"), || {
+            while c.queued() < 2 {
+                c.submit(&Request { id: i, prompt_tokens: 64, max_new_tokens: 1_000_000 })
+                    .unwrap();
+                i += 1;
+            }
+            let worked = c.step().unwrap();
+            assert!(worked);
+        });
+    }
+
+    bench.write_json("target/bench/coordinator.json")?;
+    Ok(())
+}

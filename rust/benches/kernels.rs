@@ -1,0 +1,151 @@
+//! Kernel benches: real CPU-PJRT execution of the AOT attention
+//! artifacts (sim config) across batch sizes and variants.
+//!
+//! This is the real-execution counterpart of Figs. 2/3: on this
+//! interpret-mode CPU path absolute times mean little, but the *shape*
+//! — typhoon tracking the cheaper of naive/absorb as batch grows — is
+//! measured on genuinely executing kernels.
+//!
+//! Requires `make artifacts`.  Run: `cargo bench --bench kernels`.
+
+use std::time::Duration;
+
+use typhoon_mla::config::model::sim;
+use typhoon_mla::runtime::client::random_f32;
+use typhoon_mla::runtime::{default_artifacts_dir, literal_i32, Manifest, PjrtRuntime};
+use typhoon_mla::util::bench::{Bench, BenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping kernel benches: run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let mut rt = PjrtRuntime::new(&dir)?;
+    let cfg = sim();
+    let (h, dn, dr, dv, dl) =
+        (cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.kv_lora_rank);
+    let dqk = dn + dr;
+
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(300),
+        min_iters: 8,
+        min_time: Duration::from_secs(1),
+        max_iters: 2000,
+    });
+
+    // Naive over a batched uncompressed cache is extremely slow under the
+    // CPU interpreter at large B; sample it with few iterations.
+    let mut slow = Bench::with_config(BenchConfig {
+        warmup: Duration::ZERO,
+        min_iters: 3,
+        min_time: Duration::from_millis(1),
+        max_iters: 3,
+    });
+
+    println!("# attention kernels, sim config (H={h}, Dl={dl}), CPU PJRT");
+    let mut batches: Vec<usize> = manifest
+        .select("attention", Some("typhoon"), Some("sim"))
+        .iter()
+        .filter_map(|a| a.dims.get("b").copied())
+        .collect();
+    batches.sort();
+
+    for &b in &batches {
+        let (ls, ln) = (1024usize, 256usize);
+        // Inputs (deterministic).
+        let q_nope = random_f32(&[b, h, dn], 1, 0.5)?;
+        let q_rope = random_f32(&[b, h, dr], 2, 0.5)?;
+        let ckv_sh = random_f32(&[ls, dl], 3, 0.5)?;
+        let krope_sh = random_f32(&[ls, dr], 4, 0.5)?;
+        let k_sh = random_f32(&[ls, h, dqk], 5, 0.5)?;
+        let v_sh = random_f32(&[ls, h, dv], 6, 0.5)?;
+        let ckv = random_f32(&[b, ln, dl], 7, 0.5)?;
+        let krope = random_f32(&[b, ln, dr], 8, 0.5)?;
+        let k_n = random_f32(&[b, ln, h, dqk], 9, 0.5)?;
+        let v_n = random_f32(&[b, ln, h, dv], 10, 0.5)?;
+        let w1 = random_f32(&[h, dn, dl], 11, 0.1)?;
+        let w2 = random_f32(&[h, dv, dl], 12, 0.1)?;
+        let sl = literal_i32(&[1], &[ls as i32])?;
+        let lens = literal_i32(&[b], &vec![ln as i32; b])?;
+
+        let name = |v: &str| format!("attn_{v}_sim_b{b}_s{ls}_n{ln}");
+        for v in ["typhoon", "absorb", "naive"] {
+            rt.load(&name(v))?;
+        }
+        bench.bench(&format!("attn/typhoon/b{b}"), || {
+            rt.execute_ref(
+                &name("typhoon"),
+                &[&q_nope, &q_rope, &k_sh, &v_sh, &sl, &ckv, &krope, &lens, &w1, &w2],
+            )
+            .unwrap();
+        });
+        bench.bench(&format!("attn/absorb/b{b}"), || {
+            rt.execute_ref(
+                &name("absorb"),
+                &[&q_nope, &q_rope, &ckv_sh, &krope_sh, &sl, &ckv, &krope, &lens, &w1, &w2],
+            )
+            .unwrap();
+        });
+        let naive_bench = if b >= 64 { &mut slow } else { &mut bench };
+        naive_bench.bench(&format!("attn/naive/b{b}"), || {
+            rt.execute_ref(
+                &name("naive"),
+                &[&q_nope, &q_rope, &k_sh, &v_sh, &sl, &k_n, &v_n, &lens],
+            )
+            .unwrap();
+        });
+    }
+
+    // Expansion kernel (prefill-time typhoon cache expansion).
+    if let Some(a) = manifest.select("expand", None, Some("sim")).first() {
+        let n = a.dim("n")?;
+        let ckv = random_f32(&[n, dl], 21, 0.5)?;
+        let krope = random_f32(&[n, dr], 22, 0.5)?;
+        let w1 = random_f32(&[h, dn, dl], 23, 0.1)?;
+        let w2 = random_f32(&[h, dv, dl], 24, 0.1)?;
+        let name = a.name.clone();
+        rt.load(&name)?;
+        bench.bench(&format!("expand/n{n}"), || {
+            rt.execute_ref(&name, &[&ckv, &krope, &w1, &w2]).unwrap();
+        });
+    }
+
+    bench.write_json("target/bench/kernels.json")?;
+    summarize_crossover(&bench, &slow);
+    Ok(())
+}
+
+/// Print the per-batch typhoon-vs-baselines picture (the Fig. 2 analog
+/// on real CPU execution).
+fn summarize_crossover(bench: &Bench, slow: &Bench) {
+    println!("\n# typhoon vs best baseline (real CPU execution)");
+    let results: Vec<_> =
+        bench.results().iter().chain(slow.results()).cloned().collect();
+    let get = |name: &str| results.iter().find(|r| r.name == name).map(|r| r.median_s);
+    let mut batches: Vec<usize> = results
+        .iter()
+        .filter_map(|r| {
+            r.name
+                .strip_prefix("attn/typhoon/b")
+                .and_then(|s| s.parse().ok())
+        })
+        .collect();
+    batches.sort();
+    for b in batches {
+        if let (Some(t), Some(a), Some(n)) = (
+            get(&format!("attn/typhoon/b{b}")),
+            get(&format!("attn/absorb/b{b}")),
+            get(&format!("attn/naive/b{b}")),
+        ) {
+            println!(
+                "b={b:>4}: typhoon {:.2}ms absorb {:.2}ms naive {:.2}ms -> speedup vs best {:.2}x",
+                t * 1e3,
+                a * 1e3,
+                n * 1e3,
+                a.min(n) / t
+            );
+        }
+    }
+}

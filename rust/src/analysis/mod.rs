@@ -1,0 +1,30 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (the per-experiment index of DESIGN.md §3).  Each function returns
+//! the rows as CSV-ish records plus a pretty-printed block; the
+//! `figures` binary writes them under `target/figures/`.
+
+pub mod figures;
+pub mod tables;
+
+/// A regenerated artifact: a text block + machine-readable CSV.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub id: &'static str,
+    pub title: String,
+    pub text: String,
+    pub csv: String,
+}
+
+impl Artifact {
+    pub fn print(&self) {
+        println!("==== {} — {} ====", self.id, self.title);
+        println!("{}", self.text);
+    }
+
+    pub fn write(&self, dir: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.id)), &self.text)?;
+        std::fs::write(dir.join(format!("{}.csv", self.id)), &self.csv)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,65 @@
+//! Regenerate every table and figure of the paper's evaluation.
+//!
+//! Usage:
+//!   figures all [--out DIR] [--full]      # everything
+//!   figures table1|eq1|table3|fig2|...|fig8
+//!
+//! `--full` runs the throughput sweeps over whole dataset splits (the
+//! paper's protocol); the default caps requests at 4x batch per cell so
+//! the full grid finishes in seconds.
+
+use anyhow::{bail, Result};
+use typhoon_mla::analysis::{figures, tables, Artifact};
+use typhoon_mla::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["full"])?;
+    let which = args.subcommand.clone().unwrap_or_else(|| "all".to_string());
+    let out = args.get_or("out", "target/figures").to_string();
+    let cap = if args.flag("full") { None } else { Some(4) };
+    let cap_reqs = if args.flag("full") { None } else { Some(512) };
+
+    let mut artifacts: Vec<Artifact> = Vec::new();
+    let all = which == "all";
+    if all || which == "table1" {
+        artifacts.push(tables::table1());
+    }
+    if all || which == "eq1" {
+        artifacts.push(tables::eq1());
+    }
+    if all || which == "fig2" {
+        artifacts.push(figures::fig2(cap)?);
+    }
+    if all || which == "fig3" {
+        artifacts.push(figures::fig3(cap)?);
+    }
+    if all || which == "fig4" {
+        artifacts.push(figures::fig4());
+    }
+    if all || which == "table3" {
+        artifacts.push(tables::table3(cap_reqs)?);
+    }
+    if all || which == "fig5" {
+        artifacts.push(figures::fig5());
+    }
+    if all || which == "fig6" {
+        artifacts.push(figures::fig6());
+    }
+    if all || which == "fig7" {
+        artifacts.push(figures::fig7());
+    }
+    if all || which == "fig8" {
+        artifacts.push(figures::fig8()?);
+    }
+    if artifacts.is_empty() {
+        bail!("unknown artifact {which:?} (all|table1|eq1|table3|fig2..fig8)");
+    }
+
+    let dir = std::path::Path::new(&out);
+    for a in &artifacts {
+        a.print();
+        a.write(dir)?;
+    }
+    eprintln!("[figures] wrote {} artifacts to {}", artifacts.len(), out);
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Hardware specifications for the cost model and simulator.
+//!
+//! Substitution note (DESIGN.md §6): we have neither an Ascend NPU nor
+//! an H800-class GPU; these specs parameterize the paper's own roofline
+//! formulas (§3.2, Appendix A.1) which the paper validates against
+//! msprof measurements to within a few percent.
+
+/// An accelerator described by its two roofline parameters plus memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareSpec {
+    pub name: &'static str,
+    /// Peak throughput in *operations*/second as vendors quote it
+    /// (multiply and add counted separately).  The cost model divides by
+    /// two to get MAC/s — this convention reproduces the paper's
+    /// B_theta = 61 exactly.
+    pub peak_ops: f64,
+    /// HBM bandwidth, bytes/second.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_bytes: u64,
+    /// Bytes per element of the KV-cache/activation dtype (2 = FP16).
+    pub bytes_per_word: f64,
+    /// Fraction of peak actually achievable by a well-tuned kernel
+    /// (MXU/cube utilization ceiling). 1.0 = ideal roofline.
+    pub compute_efficiency: f64,
+    /// Same for memory streams.
+    pub bandwidth_efficiency: f64,
+}
+
+impl HardwareSpec {
+    /// Achievable MAC throughput (multiply-accumulate per second).
+    pub fn macs_per_sec(&self) -> f64 {
+        self.peak_ops / 2.0 * self.compute_efficiency
+    }
+
+    /// Achievable HBM stream rate in *words* per second.
+    pub fn words_per_sec(&self) -> f64 {
+        self.hbm_bw / self.bytes_per_word * self.bandwidth_efficiency
+    }
+
+    /// Achievable HBM stream rate in bytes per second.
+    pub fn effective_bw(&self) -> f64 {
+        self.hbm_bw * self.bandwidth_efficiency
+    }
+
+    /// Ridge point of the roofline, MACs per word.
+    pub fn ridge_intensity(&self) -> f64 {
+        self.macs_per_sec() / self.words_per_sec()
+    }
+}
+
+/// Ascend NPU used in the paper's §4: 376 TOPS FP16, 1.8 TB/s, 64 GB.
+pub fn ascend_npu() -> HardwareSpec {
+    HardwareSpec {
+        name: "ascend-npu",
+        peak_ops: 376e12,
+        hbm_bw: 1.8e12,
+        hbm_bytes: 64 * (1u64 << 30),
+        bytes_per_word: 2.0,
+        compute_efficiency: 1.0,
+        bandwidth_efficiency: 1.0,
+    }
+}
+
+/// GPU used in the paper's §4: "1 PetaFLOPS/s FP16, 3.3 TB/s" (H800-class).
+pub fn gpu_h800() -> HardwareSpec {
+    HardwareSpec {
+        name: "gpu-h800",
+        peak_ops: 1.0e15,
+        hbm_bw: 3.3e12,
+        hbm_bytes: 80 * (1u64 << 30),
+        bytes_per_word: 2.0,
+        compute_efficiency: 1.0,
+        bandwidth_efficiency: 1.0,
+    }
+}
+
+/// Appendix A.1 roofline figure uses 400 TFLOPS "cube" + 1.8 TB/s.
+pub fn roofline_npu() -> HardwareSpec {
+    HardwareSpec {
+        name: "roofline-npu",
+        peak_ops: 400e12,
+        hbm_bw: 1.8e12,
+        hbm_bytes: 64 * (1u64 << 30),
+        bytes_per_word: 2.0,
+        compute_efficiency: 1.0,
+        bandwidth_efficiency: 1.0,
+    }
+}
+
+/// The CPU this repo actually executes kernels on (for CPU-bench
+/// contextualization only; measured numbers come from PJRT wall clock).
+pub fn host_cpu() -> HardwareSpec {
+    HardwareSpec {
+        name: "host-cpu",
+        peak_ops: 2e11,
+        hbm_bw: 2e10,
+        hbm_bytes: 16 * (1u64 << 30),
+        bytes_per_word: 4.0, // f32 on CPU
+        compute_efficiency: 1.0,
+        bandwidth_efficiency: 1.0,
+    }
+}
+
+pub fn by_name(name: &str) -> Option<HardwareSpec> {
+    match name {
+        "ascend-npu" => Some(ascend_npu()),
+        "gpu-h800" | "gpu" => Some(gpu_h800()),
+        "roofline-npu" => Some(roofline_npu()),
+        "host-cpu" => Some(host_cpu()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascend_matches_paper_quote() {
+        let hw = ascend_npu();
+        assert_eq!(hw.peak_ops, 376e12);
+        assert_eq!(hw.hbm_bw, 1.8e12);
+    }
+
+    #[test]
+    fn ridge_point_sane() {
+        // Ascend: 188e12 MAC/s / 0.9e12 words/s ≈ 209 MACs/word.
+        let r = ascend_npu().ridge_intensity();
+        assert!((r - 208.9).abs() < 1.0, "{r}");
+    }
+}

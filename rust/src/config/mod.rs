@@ -1,0 +1,9 @@
+//! Configuration: model geometries, hardware specs, serving knobs.
+
+pub mod hardware;
+pub mod model;
+pub mod serving;
+
+pub use hardware::HardwareSpec;
+pub use model::ModelConfig;
+pub use serving::{KernelKind, ServingConfig};

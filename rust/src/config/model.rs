@@ -1,0 +1,170 @@
+//! Model (attention-geometry) configurations, mirroring
+//! `python/compile/configs.py` and the paper's Table 1 notation.
+
+/// MLA attention geometry.  Field names follow the paper:
+/// `H, D_n, D_r, D_qk = D_n + D_r, D_v, D_l` (KV LoRA rank).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_heads: usize,      // H
+    pub d_nope: usize,       // D_n
+    pub d_rope: usize,       // D_r
+    pub d_v: usize,          // D_v
+    pub kv_lora_rank: usize, // D_l
+    pub q_lora_rank: usize,
+    /// Layer count of the full model (used by memory/e2e models).
+    pub n_layers: usize,
+    /// MoE/dense weight bytes of the full model, used by the Fig. 5
+    /// HBM-footprint model (FP8 for DeepSeek-v3: ~671 GB).
+    pub weight_bytes: u64,
+    /// Non-attention time per decode iteration per device, ms — from the
+    /// DeepSeek profile-data substitution (Table 3).
+    pub other_layer_ms: f64,
+}
+
+impl ModelConfig {
+    pub fn d_qk(&self) -> usize {
+        self.d_nope + self.d_rope
+    }
+
+    // ---- Table 1 factors (per query x context-token) ----
+    /// Naive-formulation MACs per (query, context token): H*(D_qk+D_v).
+    pub fn naive_factor(&self) -> u64 {
+        (self.n_heads * (self.d_qk() + self.d_v)) as u64
+    }
+
+    /// Absorb-formulation MACs per (query, context token): H*(2*D_l+D_r).
+    pub fn absorb_factor(&self) -> u64 {
+        (self.n_heads * (2 * self.kv_lora_rank + self.d_rope)) as u64
+    }
+
+    /// Words per cached token in latent form: D_l + D_r.
+    pub fn latent_words(&self) -> u64 {
+        (self.kv_lora_rank + self.d_rope) as u64
+    }
+
+    /// Words per cached token in uncompressed form: H*(D_qk + D_v).
+    pub fn uncompressed_words(&self) -> u64 {
+        (self.n_heads * (self.d_qk() + self.d_v)) as u64
+    }
+
+    /// The paper's naive/absorb MAC ratio (3.4x for DeepSeek-v3).
+    pub fn absorb_naive_mac_ratio(&self) -> f64 {
+        self.absorb_factor() as f64 / self.naive_factor() as f64
+    }
+}
+
+/// DeepSeek-v3: H=128. Table 1 constants: 40 Ki / 136 Ki / 0.5625 Ki.
+pub fn deepseek_v3() -> ModelConfig {
+    ModelConfig {
+        name: "deepseek-v3",
+        d_model: 7168,
+        n_heads: 128,
+        d_nope: 128,
+        d_rope: 64,
+        d_v: 128,
+        kv_lora_rank: 512,
+        q_lora_rank: 1536,
+        n_layers: 61,
+        // 671B params in FP8.
+        weight_bytes: 671_000_000_000,
+        // Table 3: total 127.2 ms at 99.1 ms attention => 28.1 ms other.
+        other_layer_ms: 28.1,
+    }
+}
+
+/// Kimi K2: same head geometry, half the heads (H=64).
+pub fn kimi_k2() -> ModelConfig {
+    ModelConfig {
+        name: "kimi-k2",
+        d_model: 7168,
+        n_heads: 64,
+        d_nope: 128,
+        d_rope: 64,
+        d_v: 128,
+        kv_lora_rank: 512,
+        q_lora_rank: 1536,
+        n_layers: 61,
+        weight_bytes: 1_000_000_000_000,
+        other_layer_ms: 28.1,
+    }
+}
+
+/// Scaled-down geometry used for real CPU-PJRT execution.
+pub fn sim() -> ModelConfig {
+    ModelConfig {
+        name: "sim",
+        d_model: 512,
+        n_heads: 8,
+        d_nope: 64,
+        d_rope: 32,
+        d_v: 64,
+        kv_lora_rank: 128,
+        q_lora_rank: 192,
+        n_layers: 4,
+        weight_bytes: 0,
+        other_layer_ms: 0.0,
+    }
+}
+
+/// Tiny end-to-end transformer (matches `python/compile/configs.py`).
+pub fn tiny() -> ModelConfig {
+    ModelConfig {
+        name: "tiny",
+        d_model: 256,
+        n_heads: 4,
+        d_nope: 32,
+        d_rope: 16,
+        d_v: 32,
+        kv_lora_rank: 64,
+        q_lora_rank: 96,
+        n_layers: 4,
+        weight_bytes: 0,
+        other_layer_ms: 0.0,
+    }
+}
+
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    match name {
+        "deepseek-v3" => Some(deepseek_v3()),
+        "kimi-k2" => Some(kimi_k2()),
+        "sim" => Some(sim()),
+        "tiny" => Some(tiny()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1, right-most column: the x1024 constants for DeepSeek-v3.
+    #[test]
+    fn table1_deepseek_constants() {
+        let c = deepseek_v3();
+        assert_eq!(c.naive_factor(), 40 * 1024);
+        assert_eq!(c.absorb_factor(), 136 * 1024);
+        assert_eq!(c.uncompressed_words(), 40 * 1024);
+        // 0.5625 Ki = 576 words.
+        assert_eq!(c.latent_words(), 576);
+        // "~3.4x smaller in the shared portion" (paper §3.2).
+        assert!((c.absorb_naive_mac_ratio() - 3.4).abs() < 0.01);
+    }
+
+    #[test]
+    fn kimi_half_heads() {
+        let k = kimi_k2();
+        let d = deepseek_v3();
+        assert_eq!(k.naive_factor() * 2, d.naive_factor());
+        assert_eq!(k.absorb_factor() * 2, d.absorb_factor());
+        // Latent cache is head-independent.
+        assert_eq!(k.latent_words(), d.latent_words());
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("deepseek-v3").unwrap().n_heads, 128);
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,127 @@
+//! Serving-runtime configuration (the L3 coordinator's knobs).
+
+use anyhow::{bail, Result};
+
+/// Which attention formulation the engine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Mixed naive(shared)+absorb(non-shared) — the paper's contribution.
+    Typhoon,
+    /// Absorb-only (FlashMLA / CATLASS baseline; also the fallback).
+    Absorb,
+    /// Naive-only (TorchNPU PagedAttention / FlashAttention baseline).
+    Naive,
+}
+
+impl KernelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelKind::Typhoon => "typhoon",
+            KernelKind::Absorb => "absorb",
+            KernelKind::Naive => "naive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "typhoon" => KernelKind::Typhoon,
+            "absorb" => KernelKind::Absorb,
+            "naive" => KernelKind::Naive,
+            _ => bail!("unknown kernel kind {s:?} (typhoon|absorb|naive)"),
+        })
+    }
+
+    pub fn all() -> [KernelKind; 3] {
+        [KernelKind::Typhoon, KernelKind::Absorb, KernelKind::Naive]
+    }
+}
+
+/// Continuous-batching / KV-cache knobs.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Paged KV-cache block size in tokens (paper experiments: 128).
+    pub block_size: usize,
+    /// Max sequences resident in a decode batch.
+    pub max_batch: usize,
+    /// Max non-shared tokens per sequence (prompt suffix + generation).
+    pub max_seq_len: usize,
+    /// Total KV-cache blocks available to the allocator.
+    pub total_blocks: usize,
+    /// Requested kernel. For `Typhoon` the policy may still fall back to
+    /// `Absorb` below the batch threshold.
+    pub kernel: KernelKind,
+    /// Override for the fallback threshold B_theta; `None` derives it
+    /// from hardware + model via the Eq. 1 cost model.
+    pub batch_threshold_override: Option<usize>,
+    /// Scheduler admits new requests only when at least this many slots
+    /// are free (hysteresis to avoid thrashing).
+    pub admit_hysteresis: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            block_size: 128,
+            max_batch: 64,
+            max_seq_len: 4096,
+            total_blocks: 4096,
+            kernel: KernelKind::Typhoon,
+            batch_threshold_override: None,
+            admit_hysteresis: 0,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.block_size == 0 || !self.block_size.is_power_of_two() {
+            bail!("block_size must be a power of two, got {}", self.block_size);
+        }
+        if self.max_batch == 0 {
+            bail!("max_batch must be positive");
+        }
+        if self.max_seq_len % self.block_size != 0 {
+            bail!(
+                "max_seq_len {} must be a multiple of block_size {}",
+                self.max_seq_len,
+                self.block_size
+            );
+        }
+        if self.total_blocks < self.max_batch {
+            bail!("total_blocks {} < max_batch {}", self.total_blocks, self.max_batch);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_block_size() {
+        let mut c = ServingConfig::default();
+        c.block_size = 100;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unaligned_seq_len() {
+        let mut c = ServingConfig::default();
+        c.max_seq_len = 1000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_kind_roundtrip() {
+        for k in KernelKind::all() {
+            assert_eq!(KernelKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(KernelKind::parse("x").is_err());
+    }
+}

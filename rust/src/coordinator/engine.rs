@@ -1,0 +1,96 @@
+//! The execution-engine abstraction the coordinator drives.
+//!
+//! Two implementations exist:
+//! * `runtime::TinyModelEngine` — real execution of the AOT-compiled
+//!   tiny transformer on the PJRT CPU client;
+//! * `simulator::SimEngine` — cost-model timing at paper scale
+//!   (DeepSeek-v3 / Kimi K2 on NPU/GPU hardware specs).
+
+use anyhow::Result;
+
+use crate::config::KernelKind;
+use crate::kvcache::{PrefixId, SeqId};
+use crate::metrics::BreakdownTimers;
+
+/// One decode iteration over the running set.
+#[derive(Clone, Debug)]
+pub struct DecodeBatch {
+    pub seqs: Vec<SeqId>,
+    pub kernel: KernelKind,
+    /// Shared prefix length visible to every sequence in the batch.
+    pub shared_len: usize,
+    /// Per-sequence non-shared context length *before* this step.
+    pub context_lens: Vec<usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct IterationOutcome {
+    /// Engine-reported execution time (wall seconds for real engines,
+    /// modeled seconds for the simulator).
+    pub seconds: f64,
+    pub breakdown: BreakdownTimers,
+}
+
+pub trait Engine {
+    /// Prefill + cache a shared prefix; for TyphoonMLA this includes the
+    /// uncompressed expansion.  Returns modeled/measured seconds.
+    fn prepare_shared(
+        &mut self,
+        prefix: PrefixId,
+        tokens: &[u32],
+        kernel: KernelKind,
+    ) -> Result<f64>;
+
+    /// Batched prefill of newly-admitted requests (non-shared prompts).
+    fn prefill_requests(&mut self, seqs: &[(SeqId, usize)]) -> Result<f64>;
+
+    /// One decode iteration; every sequence in the batch emits one token.
+    fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome>;
+
+    /// Free engine-side state of a finished/cancelled sequence.
+    fn release(&mut self, seq: SeqId);
+
+    /// Max sequences the engine can decode per iteration (artifact
+    /// bucket size for the PJRT engine; unbounded for the simulator).
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// A trivial engine with fixed step times.  Used by scheduler benches
+/// and server tests where execution content doesn't matter.
+#[derive(Clone, Debug)]
+pub struct NullEngine {
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+}
+
+impl Default for NullEngine {
+    fn default() -> Self {
+        NullEngine { prefill_seconds: 0.0, decode_seconds: 0.0 }
+    }
+}
+
+impl Engine for NullEngine {
+    fn prepare_shared(
+        &mut self,
+        _prefix: PrefixId,
+        _tokens: &[u32],
+        _kernel: KernelKind,
+    ) -> Result<f64> {
+        Ok(self.prefill_seconds)
+    }
+
+    fn prefill_requests(&mut self, _seqs: &[(SeqId, usize)]) -> Result<f64> {
+        Ok(self.prefill_seconds)
+    }
+
+    fn decode(&mut self, _batch: &DecodeBatch) -> Result<IterationOutcome> {
+        Ok(IterationOutcome {
+            seconds: self.decode_seconds,
+            breakdown: BreakdownTimers::default(),
+        })
+    }
+
+    fn release(&mut self, _seq: SeqId) {}
+}

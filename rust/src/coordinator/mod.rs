@@ -1,0 +1,488 @@
+//! The L3 coordinator: continuous batching over a paged, prefix-shared
+//! KV-cache with TyphoonMLA's kernel-selection policy.
+//!
+//! This is the Orca/vLLM-style serving loop the paper's experiments
+//! assume: a fixed-size decode batch where completed requests are
+//! replaced by new ones sampled from the dataset each iteration.
+
+pub mod engine;
+pub mod policy;
+pub mod sequence;
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{KernelKind, ServingConfig};
+use crate::kvcache::{KvCacheManager, PrefixId, SeqId};
+use crate::metrics::{Clock, Metrics};
+use crate::workload::Request;
+
+pub use engine::{DecodeBatch, Engine, IterationOutcome};
+pub use policy::KernelPolicy;
+pub use sequence::{SeqState, Sequence};
+
+pub struct Coordinator<E: Engine> {
+    cfg: ServingConfig,
+    policy: KernelPolicy,
+    pub kv: KvCacheManager,
+    pub engine: E,
+    queue: VecDeque<Sequence>,
+    running: Vec<SeqId>,
+    seqs: HashMap<SeqId, Sequence>,
+    pub metrics: Metrics,
+    shared_prefix: Option<(PrefixId, usize)>,
+    recently_finished: Vec<SeqId>,
+    next_seq: SeqId,
+    /// Canonical run clock: accumulated engine-reported seconds.
+    now: f64,
+}
+
+impl<E: Engine> Coordinator<E> {
+    pub fn new(
+        cfg: ServingConfig,
+        policy: KernelPolicy,
+        kv: KvCacheManager,
+        engine: E,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Coordinator {
+            cfg,
+            policy,
+            kv,
+            engine,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            seqs: HashMap::new(),
+            metrics: Metrics::new(Clock::Simulated),
+            shared_prefix: None,
+            recently_finished: Vec::new(),
+            next_seq: 0,
+            now: 0.0,
+        })
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Install the shared prefix (system prompt) and run its prefill.
+    /// For Typhoon/Naive the uncompressed copy is materialized too.
+    pub fn set_shared_prefix(&mut self, tokens: &[u32]) -> Result<PrefixId> {
+        let id = self.kv.register_shared_prefix(tokens)?;
+        let secs = self.engine.prepare_shared(id, tokens, self.cfg.kernel)?;
+        if self.cfg.kernel == KernelKind::Typhoon || self.cfg.kernel == KernelKind::Naive {
+            self.kv.expand_shared_prefix(id)?;
+        }
+        self.now += secs;
+        self.metrics.advance_sim_time(secs);
+        self.shared_prefix = Some((id, tokens.len()));
+        Ok(id)
+    }
+
+    pub fn shared_len(&self) -> usize {
+        self.shared_prefix.map_or(0, |(_, l)| l)
+    }
+
+    /// Enqueue a request (non-shared prompt + generation budget).
+    pub fn submit(&mut self, req: &Request) -> Result<SeqId> {
+        let (prefix, _) = self
+            .shared_prefix
+            .ok_or_else(|| anyhow!("no shared prefix installed"))?;
+        let id = self.next_seq;
+        self.next_seq += 1;
+        let prompt = req.prompt_tokens.min(self.cfg.max_seq_len.saturating_sub(1));
+        let budget = req.max_new_tokens.min(self.cfg.max_seq_len - prompt);
+        let seq = Sequence::new(id, prefix, prompt, budget, self.now);
+        self.queue.push_back(seq);
+        Ok(id)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn sequence(&self, id: SeqId) -> Option<&Sequence> {
+        self.seqs.get(&id)
+    }
+
+    fn effective_max_batch(&self) -> usize {
+        self.cfg.max_batch.min(self.engine.max_batch())
+    }
+
+    /// Admit queued requests into free batch slots (continuous batching).
+    fn admit(&mut self) -> Result<()> {
+        let max_batch = self.effective_max_batch();
+        let free = max_batch.saturating_sub(self.running.len());
+        if free == 0 || free < self.cfg.admit_hysteresis.min(max_batch) {
+            return Ok(());
+        }
+        let mut wave: Vec<(SeqId, usize)> = Vec::new();
+        while self.running.len() + wave.len() < max_batch {
+            let Some(front) = self.queue.front() else { break };
+            // Context includes regenerated tokens for preempted requeues.
+            if !self.kv.can_admit(front.context_len()) {
+                break; // KV backpressure: wait for capacity
+            }
+            let mut seq = self.queue.pop_front().unwrap();
+            self.kv.add_sequence(seq.id, seq.prefix, seq.context_len())?;
+            seq.state = SeqState::Decoding;
+            wave.push((seq.id, seq.context_len()));
+            self.seqs.insert(seq.id, seq);
+        }
+        if !wave.is_empty() {
+            let secs = self.engine.prefill_requests(&wave)?;
+            self.now += secs;
+            self.metrics.advance_sim_time(secs);
+            self.metrics.prefill_calls += 1;
+            self.metrics.requests_admitted += wave.len() as u64;
+            self.running.extend(wave.iter().map(|(id, _)| *id));
+        }
+        Ok(())
+    }
+
+    /// Preempt the most-recently-admitted running sequence: release its
+    /// pages and requeue it for recompute (vLLM-style recompute
+    /// preemption).  Returns the victim, or None if nothing to preempt.
+    fn preempt_one(&mut self, protect: SeqId) -> Result<Option<SeqId>> {
+        let victim = self.running.iter().rev().copied().find(|&s| s != protect);
+        let Some(victim) = victim else { return Ok(None) };
+        self.kv.remove_sequence(victim)?;
+        self.engine.release(victim);
+        self.running.retain(|&s| s != victim);
+        let mut seq = self.seqs.remove(&victim).expect("running seq exists");
+        seq.state = SeqState::Queued;
+        self.queue.push_front(seq);
+        self.metrics.preemptions += 1;
+        Ok(Some(victim))
+    }
+
+    /// Reserve a page slot for every running sequence's next token,
+    /// preempting under memory pressure.  If even a lone sequence cannot
+    /// grow, it is force-finished at its current length.
+    fn reserve_next_token(&mut self) -> Result<Vec<SeqId>> {
+        let mut force_finished = Vec::new();
+        for id in self.running.clone() {
+            if !self.running.contains(&id) {
+                continue; // already preempted this round
+            }
+            loop {
+                match self.kv.append_token(id) {
+                    Ok(()) => break,
+                    Err(_) => {
+                        if self.preempt_one(id)?.is_none() {
+                            // Nothing left to evict: out of pool for this
+                            // sequence — finish it where it stands.
+                            force_finished.push(id);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(force_finished)
+    }
+
+    /// One scheduler step: admit, decode one iteration, retire finished.
+    /// Returns false when there is nothing left to do.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit()?;
+        if self.running.is_empty() {
+            return Ok(!self.queue.is_empty());
+        }
+        // Page reservation for this step's tokens (may preempt).
+        let force_finished = self.reserve_next_token()?;
+        for id in force_finished {
+            self.kv.remove_sequence(id)?;
+            self.engine.release(id);
+            self.running.retain(|&s| s != id);
+            let seq = self.seqs.get_mut(&id).unwrap();
+            seq.state = SeqState::Finished;
+            seq.finished_at = Some(self.now);
+            self.metrics.requests_completed += 1;
+            self.recently_finished.push(id);
+        }
+        if self.running.is_empty() {
+            return Ok(!self.queue.is_empty());
+        }
+
+        let shared_len = self.shared_len();
+        let kernel = self.policy.select(self.running.len(), shared_len);
+        let context_lens: Vec<usize> = self
+            .running
+            .iter()
+            .map(|id| self.seqs[id].context_len())
+            .collect();
+        let batch = DecodeBatch {
+            seqs: self.running.clone(),
+            kernel,
+            shared_len,
+            context_lens,
+        };
+        let outcome = self.engine.decode(&batch)?;
+        self.now += outcome.seconds;
+        match kernel {
+            KernelKind::Typhoon => self.metrics.typhoon_iters += 1,
+            KernelKind::Absorb => self.metrics.absorb_iters += 1,
+            KernelKind::Naive => self.metrics.naive_iters += 1,
+        }
+        self.metrics.breakdown.add(&outcome.breakdown);
+
+        // Every running sequence produced one token (pages were
+        // reserved above).
+        let mut finished: Vec<SeqId> = Vec::new();
+        for id in self.running.clone() {
+            let seq = self.seqs.get_mut(&id).unwrap();
+            let done = seq.advance(self.now) || seq.context_len() >= self.cfg.max_seq_len;
+            if done {
+                seq.state = SeqState::Finished;
+                seq.finished_at.get_or_insert(self.now);
+                finished.push(id);
+            }
+        }
+        for id in &finished {
+            self.kv.remove_sequence(*id)?;
+            self.engine.release(*id);
+            self.metrics.requests_completed += 1;
+            if let Some(lat) = self.seqs[id].latency() {
+                self.metrics.request_latency.push(lat);
+            }
+            self.running.retain(|r| r != id);
+            self.recently_finished.push(*id);
+        }
+        self.metrics
+            .record_iteration(outcome.seconds, batch.seqs.len(), batch.seqs.len() as u64);
+        Ok(true)
+    }
+
+    /// Sequences that finished since the last call (drained).
+    pub fn take_finished(&mut self) -> Vec<SeqId> {
+        std::mem::take(&mut self.recently_finished)
+    }
+
+    /// Drive until queue and batch drain.  Returns total modeled seconds.
+    pub fn run_to_completion(&mut self) -> Result<f64> {
+        while self.step()? {}
+        Ok(self.now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::sim;
+    use crate::metrics::BreakdownTimers;
+
+    /// Deterministic mock: fixed prefill/decode times, records calls.
+    struct MockEngine {
+        decode_calls: usize,
+        batch_sizes: Vec<usize>,
+        kernels: Vec<KernelKind>,
+    }
+
+    impl MockEngine {
+        fn new() -> Self {
+            MockEngine { decode_calls: 0, batch_sizes: Vec::new(), kernels: Vec::new() }
+        }
+    }
+
+    impl Engine for MockEngine {
+        fn prepare_shared(
+            &mut self,
+            _p: PrefixId,
+            _tokens: &[u32],
+            _k: KernelKind,
+        ) -> Result<f64> {
+            Ok(0.5)
+        }
+
+        fn prefill_requests(&mut self, _seqs: &[(SeqId, usize)]) -> Result<f64> {
+            Ok(0.1)
+        }
+
+        fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome> {
+            self.decode_calls += 1;
+            self.batch_sizes.push(batch.seqs.len());
+            self.kernels.push(batch.kernel);
+            Ok(IterationOutcome { seconds: 0.01, breakdown: BreakdownTimers::default() })
+        }
+
+        fn release(&mut self, _seq: SeqId) {}
+    }
+
+    fn coordinator(max_batch: usize, b_theta: usize) -> Coordinator<MockEngine> {
+        let cfg = ServingConfig {
+            max_batch,
+            block_size: 16,
+            max_seq_len: 256,
+            total_blocks: 4096,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Typhoon, b_theta);
+        let kv = KvCacheManager::new(sim(), cfg.total_blocks, cfg.block_size);
+        Coordinator::new(cfg, policy, kv, MockEngine::new()).unwrap()
+    }
+
+    fn req(id: u64, prompt: usize, gen: usize) -> Request {
+        Request { id, prompt_tokens: prompt, max_new_tokens: gen }
+    }
+
+    #[test]
+    fn runs_all_requests_to_completion() {
+        let mut c = coordinator(4, 1);
+        c.set_shared_prefix(&(0..64u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..10 {
+            c.submit(&req(i, 8, 3)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 10);
+        assert_eq!(c.metrics.tokens_generated, 30);
+        assert_eq!(c.running(), 0);
+        assert_eq!(c.queued(), 0);
+        // All pages back except the shared prefix's.
+        assert_eq!(c.kv.used_blocks(), 4); // 64 tokens / 16
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let mut c = coordinator(3, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..7 {
+            c.submit(&req(i, 4, 2)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert!(c.engine.batch_sizes.iter().all(|&b| b <= 3));
+        assert!(c.engine.batch_sizes.contains(&3), "batch fills up");
+    }
+
+    #[test]
+    fn continuous_batching_replaces_completed() {
+        let mut c = coordinator(2, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        // One long, two short: the short ones cycle through slot 2.
+        c.submit(&req(0, 4, 6)).unwrap();
+        c.submit(&req(1, 4, 1)).unwrap();
+        c.submit(&req(2, 4, 1)).unwrap();
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 3);
+        assert_eq!(c.engine.batch_sizes[0], 2);
+        assert_eq!(c.engine.batch_sizes[1], 2);
+    }
+
+    #[test]
+    fn policy_fallback_at_small_batch() {
+        let mut c = coordinator(8, 4);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..2 {
+            c.submit(&req(i, 4, 2)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert!(c.engine.kernels.iter().all(|&k| k == KernelKind::Absorb));
+        assert_eq!(c.metrics.absorb_iters, c.metrics.decode_iterations);
+
+        let mut c = coordinator(8, 4);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..8 {
+            c.submit(&req(i, 4, 2)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert!(c.engine.kernels.contains(&KernelKind::Typhoon));
+    }
+
+    #[test]
+    fn kv_backpressure_blocks_admission() {
+        // Tiny pool: shared prefix (1 page) + 3 pages => only 3 single-page
+        // sequences fit at once.
+        let cfg = ServingConfig {
+            max_batch: 4,
+            block_size: 16,
+            max_seq_len: 64,
+            total_blocks: 4,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Typhoon, 1);
+        let kv = KvCacheManager::new(sim(), 4, 16);
+        let mut c = Coordinator::new(cfg, policy, kv, MockEngine::new()).unwrap();
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..6 {
+            c.submit(&req(i, 8, 2)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 6, "all served eventually");
+        assert!(
+            c.engine.batch_sizes.iter().all(|&b| b <= 3),
+            "{:?}",
+            c.engine.batch_sizes
+        );
+    }
+
+    #[test]
+    fn submit_without_prefix_errors() {
+        let mut c = coordinator(2, 1);
+        assert!(c.submit(&req(0, 4, 2)).is_err());
+    }
+
+    #[test]
+    fn token_conservation() {
+        let mut c = coordinator(4, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        let budgets = [3usize, 1, 7, 2, 5];
+        for (i, &g) in budgets.iter().enumerate() {
+            c.submit(&req(i as u64, 4, g)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.tokens_generated as usize, budgets.iter().sum::<usize>());
+        let by_batch: usize = c.engine.batch_sizes.iter().sum();
+        assert_eq!(by_batch, budgets.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn preemption_under_kv_pressure() {
+        // Pool: 1 prefix page + 3 pages.  Two sequences each eventually
+        // need 2+ pages; one must be preempted and recomputed, and both
+        // must still finish with their full budgets.
+        let cfg = ServingConfig {
+            max_batch: 3,
+            block_size: 16,
+            max_seq_len: 48,
+            total_blocks: 4,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Absorb, 1);
+        let kv = KvCacheManager::new(sim(), 4, 16);
+        let mut c = Coordinator::new(cfg, policy, kv, MockEngine::new()).unwrap();
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        c.submit(&req(0, 14, 20)).unwrap(); // grows past one page
+        c.submit(&req(1, 14, 20)).unwrap();
+        c.submit(&req(2, 14, 20)).unwrap();
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 3);
+        assert!(c.metrics.preemptions > 0, "pressure must trigger preemption");
+        assert_eq!(c.metrics.tokens_generated, 60, "budgets still met exactly");
+        assert_eq!(c.kv.used_blocks(), 1, "only the prefix page remains");
+    }
+
+    #[test]
+    fn max_seq_len_force_finishes() {
+        let cfg = ServingConfig {
+            max_batch: 1,
+            block_size: 16,
+            max_seq_len: 32,
+            total_blocks: 64,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Absorb, 1);
+        let kv = KvCacheManager::new(sim(), 64, 16);
+        let mut c = Coordinator::new(cfg, policy, kv, MockEngine::new()).unwrap();
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        c.submit(&req(0, 16, 100_000)).unwrap(); // budget clamped
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 1);
+        let gen = c.metrics.tokens_generated as usize;
+        assert!(gen <= 16, "generation stopped at context limit, got {gen}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Kernel-selection policy: TyphoonMLA's fall-back rule (paper §3.1,
+//! "Fall-back to Absorb").
+//!
+//! Below the batch threshold B_theta (Eq. 1) there is not enough data
+//! reuse for the naive stage to pay off, so a Typhoon deployment
+//! executes the absorb-only kernel instead — "ensuring consistently
+//! high efficiency across a wide range of batch sizes".
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::costmodel::threshold::batch_threshold;
+
+#[derive(Clone, Debug)]
+pub struct KernelPolicy {
+    /// The configured kernel (what the operator asked for).
+    pub requested: KernelKind,
+    /// Fall-back threshold in batch size (only used for Typhoon).
+    pub b_theta: usize,
+    /// A shared prefix must exist and be at least this long for the
+    /// naive stage to be worth scheduling at all.
+    pub min_shared_len: usize,
+}
+
+impl KernelPolicy {
+    /// Derive B_theta from the model + hardware via Eq. 1.
+    pub fn from_cost_model(
+        requested: KernelKind,
+        cfg: &ModelConfig,
+        hw: &HardwareSpec,
+    ) -> Self {
+        KernelPolicy {
+            requested,
+            b_theta: batch_threshold(cfg, hw, 1),
+            min_shared_len: 1,
+        }
+    }
+
+    pub fn with_threshold(requested: KernelKind, b_theta: usize) -> Self {
+        KernelPolicy { requested, b_theta, min_shared_len: 1 }
+    }
+
+    /// The per-iteration decision.
+    pub fn select(&self, batch: usize, shared_len: usize) -> KernelKind {
+        match self.requested {
+            KernelKind::Typhoon
+                if batch < self.b_theta || shared_len < self.min_shared_len =>
+            {
+                KernelKind::Absorb
+            }
+            k => k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+
+    #[test]
+    fn typhoon_falls_back_below_threshold() {
+        let p = KernelPolicy::with_threshold(KernelKind::Typhoon, 61);
+        assert_eq!(p.select(60, 4096), KernelKind::Absorb);
+        assert_eq!(p.select(61, 4096), KernelKind::Typhoon);
+        assert_eq!(p.select(1024, 4096), KernelKind::Typhoon);
+    }
+
+    #[test]
+    fn typhoon_falls_back_without_shared_prefix() {
+        let p = KernelPolicy::with_threshold(KernelKind::Typhoon, 1);
+        assert_eq!(p.select(512, 0), KernelKind::Absorb);
+    }
+
+    #[test]
+    fn baselines_never_switch() {
+        for k in [KernelKind::Absorb, KernelKind::Naive] {
+            let p = KernelPolicy::with_threshold(k, 61);
+            for b in [1, 61, 1024] {
+                assert_eq!(p.select(b, 4096), k);
+            }
+        }
+    }
+
+    #[test]
+    fn derived_threshold_matches_eq1() {
+        let p = KernelPolicy::from_cost_model(
+            KernelKind::Typhoon,
+            &deepseek_v3(),
+            &ascend_npu(),
+        );
+        assert_eq!(p.b_theta, 61);
+    }
+
+    /// Monotonicity: once typhoon is selected at batch b, it stays
+    /// selected for every larger batch (same shared length).
+    #[test]
+    fn selection_monotone_in_batch() {
+        let p = KernelPolicy::with_threshold(KernelKind::Typhoon, 61);
+        let mut seen_typhoon = false;
+        for b in 0..200 {
+            match p.select(b, 1000) {
+                KernelKind::Typhoon => seen_typhoon = true,
+                KernelKind::Absorb => {
+                    assert!(!seen_typhoon, "fallback after typhoon at b={b}")
+                }
+                KernelKind::Naive => unreachable!(),
+            }
+        }
+        assert!(seen_typhoon);
+    }
+}

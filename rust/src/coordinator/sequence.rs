@@ -1,0 +1,98 @@
+//! Per-request sequence lifecycle.
+
+use crate::kvcache::{PrefixId, SeqId};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqState {
+    /// Waiting for admission (KV capacity / batch slot).
+    Queued,
+    /// Admitted; prompt prefill pending or done, decoding tokens.
+    Decoding,
+    /// Hit its generation budget (or EOS).
+    Finished,
+    /// Dropped before completion.
+    Cancelled,
+}
+
+#[derive(Clone, Debug)]
+pub struct Sequence {
+    pub id: SeqId,
+    pub prefix: PrefixId,
+    /// Non-shared prompt length (the dataset question), tokens.
+    pub prompt_tokens: usize,
+    /// Generation budget.
+    pub max_new_tokens: usize,
+    pub generated: usize,
+    pub state: SeqState,
+    /// Simulated/wall time at submission and completion (seconds).
+    pub submitted_at: f64,
+    pub finished_at: Option<f64>,
+}
+
+impl Sequence {
+    pub fn new(
+        id: SeqId,
+        prefix: PrefixId,
+        prompt_tokens: usize,
+        max_new_tokens: usize,
+        now: f64,
+    ) -> Self {
+        Sequence {
+            id,
+            prefix,
+            prompt_tokens,
+            max_new_tokens: max_new_tokens.max(1),
+            generated: 0,
+            state: SeqState::Queued,
+            submitted_at: now,
+            finished_at: None,
+        }
+    }
+
+    /// Current non-shared context length (prompt + generated so far).
+    pub fn context_len(&self) -> usize {
+        self.prompt_tokens + self.generated
+    }
+
+    /// Record one generated token; returns true when the budget is hit.
+    pub fn advance(&mut self, now: f64) -> bool {
+        debug_assert_eq!(self.state, SeqState::Decoding);
+        self.generated += 1;
+        if self.generated >= self.max_new_tokens {
+            self.state = SeqState::Finished;
+            self.finished_at = Some(now);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn latency(&self) -> Option<f64> {
+        self.finished_at.map(|t| t - self.submitted_at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut s = Sequence::new(1, 0, 10, 3, 0.0);
+        assert_eq!(s.state, SeqState::Queued);
+        s.state = SeqState::Decoding;
+        assert!(!s.advance(1.0));
+        assert!(!s.advance(2.0));
+        assert_eq!(s.context_len(), 12);
+        assert!(s.advance(3.0));
+        assert_eq!(s.state, SeqState::Finished);
+        assert_eq!(s.latency(), Some(3.0));
+    }
+
+    #[test]
+    fn zero_budget_clamped_to_one() {
+        let mut s = Sequence::new(1, 0, 4, 0, 0.0);
+        s.state = SeqState::Decoding;
+        assert!(s.advance(0.5), "at least one token is always generated");
+    }
+}

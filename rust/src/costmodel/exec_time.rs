@@ -1,0 +1,139 @@
+//! Roofline execution-time estimation (paper §3.2, Appendix A.2).
+//!
+//! Each component of the attention computation takes
+//! `max(macs / MAC-throughput, words / word-bandwidth)` — the roofline
+//! bound — and components execute back-to-back (they are separate
+//! kernels / kernel stages on real hardware).
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+
+use super::flops::{attention_cost, AttentionWorkload, Component, CostBreakdown};
+
+/// Roofline time of a single component, in seconds.
+pub fn component_time(c: &Component, hw: &HardwareSpec) -> f64 {
+    let compute = c.macs as f64 / hw.macs_per_sec();
+    let memory = c.hbm_words as f64 / hw.words_per_sec();
+    compute.max(memory)
+}
+
+/// Per-component execution-time breakdown, seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimeBreakdown {
+    pub shared: f64,
+    pub non_shared: f64,
+    pub proj_kvb1: f64,
+    pub proj_kvb2: f64,
+    pub combine: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.shared + self.non_shared + self.proj_kvb1 + self.proj_kvb2 + self.combine
+    }
+}
+
+pub fn time_breakdown(cost: &CostBreakdown, hw: &HardwareSpec) -> TimeBreakdown {
+    TimeBreakdown {
+        shared: component_time(&cost.shared, hw),
+        non_shared: component_time(&cost.non_shared, hw),
+        proj_kvb1: component_time(&cost.proj_kvb1, hw),
+        proj_kvb2: component_time(&cost.proj_kvb2, hw),
+        combine: component_time(&cost.combine, hw),
+    }
+}
+
+/// Estimated attention time for one decode iteration, seconds.
+pub fn attention_time(
+    cfg: &ModelConfig,
+    kind: KernelKind,
+    wl: &AttentionWorkload,
+    hw: &HardwareSpec,
+) -> f64 {
+    time_breakdown(&attention_cost(cfg, kind, wl), hw).total()
+}
+
+/// Decode throughput in generated tokens per second per layer
+/// (the y-axis of the paper's Figs. 2-3): batch tokens per iteration
+/// divided by the iteration's attention time.
+pub fn tokens_per_sec(
+    cfg: &ModelConfig,
+    kind: KernelKind,
+    wl: &AttentionWorkload,
+    hw: &HardwareSpec,
+) -> f64 {
+    wl.batch as f64 / attention_time(cfg, kind, wl, hw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+
+    /// Appendix A.2 / Fig. 7: on the shared part, absorb time grows
+    /// linearly with batch while naive stays flat until ~B=128; naive
+    /// overtakes absorb past B≈64.
+    #[test]
+    fn fig7_crossover_on_shared_part() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let shared_time = |kind, b| {
+            let wl = AttentionWorkload::decode(b, 4096, 0);
+            time_breakdown(&attention_cost(&cfg, kind, &wl), &hw).shared
+        };
+        // Small batch: absorb faster on shared part.
+        assert!(shared_time(KernelKind::Absorb, 8) < shared_time(KernelKind::Naive, 8));
+        // Large batch: naive (= typhoon stage 1) faster.
+        assert!(shared_time(KernelKind::Naive, 256) < shared_time(KernelKind::Absorb, 256));
+        // Naive flat between B=1 and B=32 (memory-bound region).
+        let t1 = shared_time(KernelKind::Naive, 1);
+        let t32 = shared_time(KernelKind::Naive, 32);
+        assert!((t32 - t1).abs() / t1 < 1e-9, "naive shared is bandwidth-bound");
+        // Absorb linear: time(2B) = 2*time(B) in the compute-bound regime.
+        let a256 = shared_time(KernelKind::Absorb, 256);
+        let a512 = shared_time(KernelKind::Absorb, 512);
+        assert!((a512 / a256 - 2.0).abs() < 0.01);
+    }
+
+    /// Non-shared part: absorb always wins (paper Fig. 8b).
+    #[test]
+    fn absorb_wins_non_shared_at_all_batches() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        for b in [1u64, 8, 64, 512, 1024] {
+            let wl = AttentionWorkload::decode(b, 0, 512);
+            let n = time_breakdown(&attention_cost(&cfg, KernelKind::Naive, &wl), &hw);
+            let a = time_breakdown(&attention_cost(&cfg, KernelKind::Absorb, &wl), &hw);
+            assert!(a.non_shared <= n.non_shared, "b={b}");
+        }
+    }
+
+    /// Fig. 4 observation: at B=1024 (Kimi K2, Ls=4096, Ln=512) the ratio
+    /// between the baseline's shared-part time and typhoon's stage-1 time
+    /// is ~3.3x.
+    #[test]
+    fn fig4_shared_part_ratio() {
+        let cfg = crate::config::model::kimi_k2();
+        let hw = ascend_npu();
+        let wl = AttentionWorkload::decode(1024, 4096, 512);
+        let absorb = time_breakdown(&attention_cost(&cfg, KernelKind::Absorb, &wl), &hw);
+        let typhoon = time_breakdown(&attention_cost(&cfg, KernelKind::Typhoon, &wl), &hw);
+        let ratio = absorb.shared / typhoon.shared;
+        assert!((ratio - 3.4).abs() < 0.15, "shared-part speedup {ratio}");
+    }
+
+    /// Typhoon is never slower than the better baseline by more than the
+    /// (tiny) epilogue overhead, and the policy would fall back anyway.
+    #[test]
+    fn typhoon_attention_no_worse_than_best_baseline_large_batch() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        for b in [128u64, 256, 1024] {
+            let wl = AttentionWorkload::decode(b, 26472, 512);
+            let t = attention_time(&cfg, KernelKind::Typhoon, &wl, &hw);
+            let n = attention_time(&cfg, KernelKind::Naive, &wl, &hw);
+            let a = attention_time(&cfg, KernelKind::Absorb, &wl, &hw);
+            assert!(t <= n.min(a) * 1.02, "b={b}: t={t} n={n} a={a}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! HBM-footprint model (paper Fig. 5).
+//!
+//! Deployment: DeepSeek-v3 in FP8 (weights and KV-cache), distributed
+//! over a 384-NPU CloudMatrix-style cluster with full expert
+//! parallelism on MoE layers and data/tensor/sequence parallelism of
+//! 24 x 4 x 4 on attention.  TyphoonMLA additionally stores the shared
+//! prefix in uncompressed form — one logical copy per data-parallel
+//! group (sharded across that group's TP x SP devices) — which is the
+//! paper's "~3% HBM overhead".
+
+use crate::config::ModelConfig;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub n_devices: u64,
+    pub dp: u64,
+    pub tp: u64,
+    pub sp: u64,
+    /// Bytes per KV-cache/weight element (1 = FP8).
+    pub bytes_per_elem: f64,
+    /// HBM per device, bytes.
+    pub hbm_per_device: u64,
+    /// Layers of KV-cache accounted.  Fig. 5 of the paper is only
+    /// reproducible with per-layer KV accounting (weights could not
+    /// dominate at B=4K x 32K otherwise — 61-layer KV alone would be
+    /// ~4.7 TB vs 671 GB of weights), so the Fig. 5 preset uses 1.
+    /// Set to `cfg.n_layers` for whole-model accounting.
+    pub kv_layers: u64,
+}
+
+pub fn cloudmatrix_384() -> ClusterConfig {
+    ClusterConfig {
+        n_devices: 384,
+        dp: 24,
+        tp: 4,
+        sp: 4,
+        bytes_per_elem: 1.0, // FP8
+        hbm_per_device: 64 * (1u64 << 30),
+        kv_layers: 1,
+    }
+}
+
+/// Aggregate-cluster HBM breakdown, bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HbmFootprint {
+    pub weights: f64,
+    /// Non-shared (per-request) latent KV-cache.
+    pub kv_non_shared: f64,
+    /// Shared prefix in latent form (needed by absorb and typhoon).
+    pub kv_shared_latent: f64,
+    /// Shared prefix in uncompressed form (typhoon only).
+    pub kv_shared_uncompressed: f64,
+}
+
+impl HbmFootprint {
+    pub fn total(&self) -> f64 {
+        self.weights + self.kv_non_shared + self.kv_shared_latent + self.kv_shared_uncompressed
+    }
+}
+
+/// Footprint of a deployment serving `global_batch` concurrent requests
+/// of up to `max_seq_len` non-shared tokens over a shared prefix of
+/// `shared_len` tokens.
+pub fn hbm_footprint(
+    cfg: &ModelConfig,
+    cluster: &ClusterConfig,
+    global_batch: u64,
+    max_seq_len: u64,
+    shared_len: u64,
+    typhoon: bool,
+) -> HbmFootprint {
+    let layers = cluster.kv_layers as f64;
+    let be = cluster.bytes_per_elem;
+    // Weights: one logical copy cluster-wide (full EP for experts;
+    // attention weights are negligible at this scale and folded in).
+    let weights = cfg.weight_bytes as f64;
+    // Per-request latent cache lives once (its DP group), sharded inside.
+    let kv_non_shared =
+        global_batch as f64 * max_seq_len as f64 * cfg.latent_words() as f64 * be * layers;
+    // Shared prefix, latent form: one copy per DP group.
+    let kv_shared_latent =
+        cluster.dp as f64 * shared_len as f64 * cfg.latent_words() as f64 * be * layers;
+    // Shared prefix, uncompressed form (typhoon): one copy per DP group,
+    // sharded over the group's TP x SP devices.
+    let kv_shared_uncompressed = if typhoon {
+        cluster.dp as f64 * shared_len as f64 * cfg.uncompressed_words() as f64 * be * layers
+    } else {
+        0.0
+    };
+    HbmFootprint { weights, kv_non_shared, kv_shared_latent, kv_shared_uncompressed }
+}
+
+/// Relative HBM overhead of TyphoonMLA vs the absorb baseline.
+pub fn typhoon_overhead(
+    cfg: &ModelConfig,
+    cluster: &ClusterConfig,
+    global_batch: u64,
+    max_seq_len: u64,
+    shared_len: u64,
+) -> f64 {
+    let base = hbm_footprint(cfg, cluster, global_batch, max_seq_len, shared_len, false).total();
+    let typhoon =
+        hbm_footprint(cfg, cluster, global_batch, max_seq_len, shared_len, true).total();
+    typhoon / base - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::deepseek_v3;
+
+    const PROMPT_A: u64 = 26472; // Claude-4 system prompt (Table 2)
+
+    /// Fig. 5 claim: "TyphoonMLA incurs only a minimal HBM overhead,
+    /// limited to approximately 3% across a wide range of deployment
+    /// scenarios" — the paper's grid is B in 4K..32K, L in 32K..256K.
+    #[test]
+    fn overhead_at_most_a_few_percent_on_fig5_grid() {
+        let cfg = deepseek_v3();
+        let cl = cloudmatrix_384();
+        let mut worst: f64 = 0.0;
+        for batch in [4096u64, 8192, 16384, 32768] {
+            for seq in [32768u64, 65536, 131072, 262144] {
+                let ov = typhoon_overhead(&cfg, &cl, batch, seq, PROMPT_A);
+                assert!(ov > 0.0);
+                worst = worst.max(ov);
+            }
+        }
+        assert!(worst < 0.035, "worst-case overhead {worst}");
+    }
+
+    /// Overhead shrinks as batch/seq grow (non-shared KV dominates).
+    #[test]
+    fn overhead_decreases_with_scale() {
+        let cfg = deepseek_v3();
+        let cl = cloudmatrix_384();
+        let small = typhoon_overhead(&cfg, &cl, 4096, 32768, PROMPT_A);
+        let large = typhoon_overhead(&cfg, &cl, 32768, 262144, PROMPT_A);
+        assert!(large < small);
+    }
+
+    /// At small scale the weights dominate the footprint.
+    #[test]
+    fn weights_dominate_small_configs() {
+        let cfg = deepseek_v3();
+        let cl = cloudmatrix_384();
+        let f = hbm_footprint(&cfg, &cl, 1024, 8192, PROMPT_A, false);
+        assert!(f.weights > f.kv_non_shared);
+    }
+
+    /// The uncompressed shared prefix is H*(D_qk+D_v)/(D_l+D_r) ≈ 71x the
+    /// latent copy — the reason the naive baseline cannot cache-expand
+    /// everything.
+    #[test]
+    fn uncompressed_expansion_ratio() {
+        let cfg = deepseek_v3();
+        let cl = cloudmatrix_384();
+        let f = hbm_footprint(&cfg, &cl, 4096, 32768, PROMPT_A, true);
+        let ratio = f.kv_shared_uncompressed / f.kv_shared_latent;
+        assert!((ratio - 71.1).abs() < 0.5, "{ratio}");
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's analytical model: Table 1 operation counts, Eq. 1
+//! fall-back threshold, roofline analysis (Fig. 6), execution-time
+//! estimation (Figs. 4/7/8) and the HBM-footprint model (Fig. 5).
+
+pub mod exec_time;
+pub mod flops;
+pub mod memory;
+pub mod parallel;
+pub mod roofline;
+pub mod threshold;
+
+pub use exec_time::{attention_time, time_breakdown, tokens_per_sec, TimeBreakdown};
+pub use flops::{attention_cost, AttentionWorkload, Component, CostBreakdown};
+pub use parallel::{parallel_attention_time, scaling_efficiency, ParallelismConfig};
+pub use memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead, ClusterConfig};
+pub use roofline::{ridge_batch, roofline_curve, roofline_point, RooflinePoint};
+pub use threshold::{batch_threshold, batch_threshold_exact, use_typhoon};

@@ -1,0 +1,137 @@
+//! Roofline analysis of the naive and absorb formulations
+//! (paper Appendix A.1, Fig. 6).
+//!
+//! Scenario: B decode queries attend to one shared context of length L.
+//! Batch size controls operational intensity: the KV stream is read
+//! once and reused by all B queries, so intensity grows linearly in B
+//! until the compute ceiling.
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+
+/// One point of the roofline curve.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflinePoint {
+    pub batch: u64,
+    /// MACs per HBM word (operational intensity).
+    pub intensity: f64,
+    /// Query tokens processed per second.
+    pub throughput: f64,
+    /// True if this point is limited by compute, not bandwidth.
+    pub compute_bound: bool,
+}
+
+fn kernel_factor(cfg: &ModelConfig, kind: KernelKind) -> (u64, u64) {
+    // (MACs per query-token per context-token, words per context-token)
+    match kind {
+        KernelKind::Naive => (cfg.naive_factor(), cfg.uncompressed_words()),
+        KernelKind::Absorb => (cfg.absorb_factor(), cfg.latent_words()),
+        KernelKind::Typhoon => unreachable!("typhoon mixes both; plot its parts"),
+    }
+}
+
+/// Evaluate one roofline point for a batch of B queries over a shared
+/// context of length `l_ctx`.
+pub fn roofline_point(
+    cfg: &ModelConfig,
+    kind: KernelKind,
+    hw: &HardwareSpec,
+    batch: u64,
+    l_ctx: u64,
+) -> RooflinePoint {
+    let (f_mac, f_words) = kernel_factor(cfg, kind);
+    let macs = (batch * l_ctx * f_mac) as f64;
+    let words = (l_ctx * f_words) as f64;
+    let t_compute = macs / hw.macs_per_sec();
+    let t_memory = words / hw.words_per_sec();
+    let time = t_compute.max(t_memory);
+    RooflinePoint {
+        batch,
+        intensity: macs / words,
+        throughput: batch as f64 / time,
+        compute_bound: t_compute >= t_memory,
+    }
+}
+
+/// Full curve over a batch sweep.
+pub fn roofline_curve(
+    cfg: &ModelConfig,
+    kind: KernelKind,
+    hw: &HardwareSpec,
+    batches: &[u64],
+    l_ctx: u64,
+) -> Vec<RooflinePoint> {
+    batches.iter().map(|&b| roofline_point(cfg, kind, hw, b, l_ctx)).collect()
+}
+
+/// Batch size at which the formulation becomes compute-bound
+/// (the ridge crossing), in exact real arithmetic.
+pub fn ridge_batch(cfg: &ModelConfig, kind: KernelKind, hw: &HardwareSpec) -> f64 {
+    let (f_mac, f_words) = kernel_factor(cfg, kind);
+    f_words as f64 / f_mac as f64 * hw.ridge_intensity()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::roofline_npu;
+    use crate::config::model::{deepseek_v3, kimi_k2};
+
+    /// "the absorb implementation ... throughput quickly saturates beyond
+    /// a batch size of two" (Kimi K2, Appendix A.1).
+    #[test]
+    fn absorb_saturates_by_batch_two() {
+        let hw = roofline_npu();
+        for cfg in [deepseek_v3(), kimi_k2()] {
+            let ridge = ridge_batch(&cfg, KernelKind::Absorb, &hw);
+            assert!(ridge <= 2.0, "{}: ridge {ridge}", cfg.name);
+            let p2 = roofline_point(&cfg, KernelKind::Absorb, &hw, 2, 4096);
+            let p64 = roofline_point(&cfg, KernelKind::Absorb, &hw, 64, 4096);
+            assert!(p64.throughput / p2.throughput < 1.05, "flat after saturation");
+        }
+    }
+
+    /// "At batch sizes larger than 64 ... the naive implementation
+    /// achieves up to 3.4x higher throughput than the absorb".
+    #[test]
+    fn naive_ceiling_is_3_4x_absorb() {
+        let hw = roofline_npu();
+        let cfg = deepseek_v3();
+        let n = roofline_point(&cfg, KernelKind::Naive, &hw, 4096, 4096);
+        let a = roofline_point(&cfg, KernelKind::Absorb, &hw, 4096, 4096);
+        assert!(n.compute_bound && a.compute_bound);
+        let ratio = n.throughput / a.throughput;
+        assert!((ratio - 3.4).abs() < 0.01, "{ratio}");
+    }
+
+    /// Naive is bandwidth-bound at small batch (throughput grows ~linearly),
+    /// compute-bound past its ridge (~T/M ≈ 209 queries).
+    #[test]
+    fn naive_regions() {
+        let hw = roofline_npu();
+        let cfg = deepseek_v3();
+        let ridge = ridge_batch(&cfg, KernelKind::Naive, &hw);
+        assert!((ridge - hw.ridge_intensity()).abs() < 1e-9); // f_mac == f_words
+        let p8 = roofline_point(&cfg, KernelKind::Naive, &hw, 8, 4096);
+        let p16 = roofline_point(&cfg, KernelKind::Naive, &hw, 16, 4096);
+        assert!(!p8.compute_bound);
+        assert!((p16.throughput / p8.throughput - 2.0).abs() < 1e-9);
+        let big = roofline_point(&cfg, KernelKind::Naive, &hw, 1024, 4096);
+        assert!(big.compute_bound);
+    }
+
+    /// Throughput scales exactly as 1/L in both regimes (both ops and
+    /// bytes scale linearly with context length).
+    #[test]
+    fn context_length_scaling() {
+        let hw = roofline_npu();
+        let cfg = kimi_k2();
+        for kind in [KernelKind::Naive, KernelKind::Absorb] {
+            let a = roofline_point(&cfg, kind, &hw, 128, 1024);
+            let b = roofline_point(&cfg, kind, &hw, 128, 65536);
+            let ratio = a.throughput / b.throughput;
+            assert!((ratio - 64.0).abs() < 1e-9, "{ratio}");
+            // Intensity (MACs/word) is L-independent.
+            assert!((a.intensity - b.intensity).abs() < 1e-9);
+        }
+    }
+}

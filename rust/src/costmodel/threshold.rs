@@ -1,0 +1,84 @@
+//! Eq. 1 of the paper: the fall-back batch threshold B_theta.
+//!
+//! TyphoonMLA pays off only when reading the shared prefix in
+//! uncompressed (naive) form is faster than recomputing it in latent
+//! (absorb) form.  Equating the naive memory time with the absorb
+//! compute time on the shared part:
+//!
+//! ```text
+//! L_s H (D_qk + D_v) / M  =  B S_q L_s H (2 D_l + D_r) / T
+//!   => B_theta = (D_qk + D_v) / (S_q (2 D_l + D_r)) * T / M
+//! ```
+//!
+//! with T the MAC throughput and M the HBM word bandwidth.  For
+//! DeepSeek-v3 on the paper's Ascend NPU this gives B_theta = 61.
+
+use crate::config::{HardwareSpec, ModelConfig};
+
+/// Exact (real-valued) Eq. 1 threshold.
+pub fn batch_threshold_exact(cfg: &ModelConfig, hw: &HardwareSpec, s_q: u64) -> f64 {
+    let num = (cfg.d_qk() + cfg.d_v) as f64;
+    let den = s_q as f64 * (2 * cfg.kv_lora_rank + cfg.d_rope) as f64;
+    num / den * hw.macs_per_sec() / hw.words_per_sec()
+}
+
+/// Integer threshold as the paper reports it (floor).
+pub fn batch_threshold(cfg: &ModelConfig, hw: &HardwareSpec, s_q: u64) -> usize {
+    batch_threshold_exact(cfg, hw, s_q).floor() as usize
+}
+
+/// The decision the kernel policy makes each iteration.
+pub fn use_typhoon(cfg: &ModelConfig, hw: &HardwareSpec, batch: usize, s_q: u64) -> bool {
+    batch as f64 >= batch_threshold_exact(cfg, hw, s_q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{ascend_npu, gpu_h800};
+    use crate::config::model::{deepseek_v3, kimi_k2};
+
+    /// "we obtain B_theta = 61" (paper §3.2).
+    #[test]
+    fn eq1_deepseek_ascend_is_61() {
+        assert_eq!(batch_threshold(&deepseek_v3(), &ascend_npu(), 1), 61);
+    }
+
+    /// Kimi K2 has the same per-head dims, so the threshold is identical:
+    /// Eq. 1 has no H dependence.
+    #[test]
+    fn threshold_head_count_independent() {
+        assert_eq!(
+            batch_threshold(&kimi_k2(), &ascend_npu(), 1),
+            batch_threshold(&deepseek_v3(), &ascend_npu(), 1)
+        );
+    }
+
+    /// Larger S_q (speculative/tree decode) lowers the threshold
+    /// proportionally: more query tokens reuse the same stream.
+    #[test]
+    fn threshold_scales_inverse_with_sq() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let t1 = batch_threshold_exact(&cfg, &hw, 1);
+        let t4 = batch_threshold_exact(&cfg, &hw, 4);
+        assert!((t1 / t4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_threshold_reflects_its_roofline() {
+        // H800-class: T/M = 0.5e15 / 1.65e12 words/s ≈ 303 MACs/word
+        // => B_theta ≈ 0.294 * 303 ≈ 89.
+        let t = batch_threshold(&deepseek_v3(), &gpu_h800(), 1);
+        assert_eq!(t, 89);
+    }
+
+    #[test]
+    fn policy_flips_exactly_at_threshold() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let b = batch_threshold(&cfg, &hw, 1);
+        assert!(!use_typhoon(&cfg, &hw, b - 1, 1));
+        assert!(use_typhoon(&cfg, &hw, b + 1, 1));
+    }
+}

@@ -1,0 +1,221 @@
+//! Paged KV-cache block allocator (the PagedAttention substrate).
+//!
+//! Blocks are fixed-size pages of `block_size` tokens.  Reference
+//! counting supports copy-on-write sharing of prefix blocks between
+//! sequences (RadixAttention-style reuse).
+
+use anyhow::{bail, Result};
+
+pub type BlockId = u32;
+
+#[derive(Clone, Debug)]
+struct BlockMeta {
+    refcount: u32,
+}
+
+/// O(1) alloc/free block pool with refcounting.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    meta: Vec<BlockMeta>,
+    free: Vec<BlockId>,
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0);
+        BlockAllocator {
+            block_size,
+            meta: (0..total_blocks).map(|_| BlockMeta { refcount: 0 }).collect(),
+            free: (0..total_blocks as u32).rev().collect(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks() - self.free_blocks()
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn can_allocate(&self, n: usize) -> bool {
+        self.free.len() >= n
+    }
+
+    /// Allocate one block with refcount 1.
+    pub fn allocate(&mut self) -> Result<BlockId> {
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert_eq!(self.meta[id as usize].refcount, 0);
+                self.meta[id as usize].refcount = 1;
+                Ok(id)
+            }
+            None => bail!("KV cache exhausted: 0 of {} blocks free", self.total_blocks()),
+        }
+    }
+
+    /// Allocate `n` blocks atomically (all or nothing).
+    pub fn allocate_n(&mut self, n: usize) -> Result<Vec<BlockId>> {
+        if !self.can_allocate(n) {
+            bail!(
+                "KV cache exhausted: need {n} blocks, {} of {} free",
+                self.free.len(),
+                self.total_blocks()
+            );
+        }
+        Ok((0..n).map(|_| self.allocate().expect("checked")).collect())
+    }
+
+    /// Increment the refcount (prefix sharing).
+    pub fn retain(&mut self, id: BlockId) {
+        let m = &mut self.meta[id as usize];
+        assert!(m.refcount > 0, "retain of free block {id}");
+        m.refcount += 1;
+    }
+
+    /// Decrement the refcount; frees the block when it reaches zero.
+    pub fn release(&mut self, id: BlockId) {
+        let m = &mut self.meta[id as usize];
+        assert!(m.refcount > 0, "double free of block {id}");
+        m.refcount -= 1;
+        if m.refcount == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.meta[id as usize].refcount
+    }
+}
+
+/// The block table of one sequence: logical token index -> block list.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    /// Tokens stored (may be less than capacity of the block list).
+    pub len: usize,
+}
+
+impl BlockTable {
+    pub fn capacity(&self, block_size: usize) -> usize {
+        self.blocks.len() * block_size
+    }
+
+    /// Ensure capacity for one more token, allocating if needed.
+    pub fn append_token(&mut self, alloc: &mut BlockAllocator) -> Result<()> {
+        if self.len + 1 > self.capacity(alloc.block_size()) {
+            self.blocks.push(alloc.allocate()?);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Ensure capacity for `n` tokens total, allocating if needed.
+    pub fn reserve(&mut self, tokens: usize, alloc: &mut BlockAllocator) -> Result<()> {
+        let need = alloc.blocks_for(tokens);
+        while self.blocks.len() < need {
+            self.blocks.push(alloc.allocate()?);
+        }
+        Ok(())
+    }
+
+    pub fn release_all(&mut self, alloc: &mut BlockAllocator) {
+        for &b in &self.blocks {
+            alloc.release(b);
+        }
+        self.blocks.clear();
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(4, 128);
+        let b1 = a.allocate().unwrap();
+        let b2 = a.allocate().unwrap();
+        assert_ne!(b1, b2);
+        assert_eq!(a.free_blocks(), 2);
+        a.release(b1);
+        a.release(b2);
+        assert_eq!(a.free_blocks(), 4);
+    }
+
+    #[test]
+    fn exhaustion_is_error_not_panic() {
+        let mut a = BlockAllocator::new(2, 128);
+        a.allocate().unwrap();
+        a.allocate().unwrap();
+        assert!(a.allocate().is_err());
+    }
+
+    #[test]
+    fn allocate_n_is_atomic() {
+        let mut a = BlockAllocator::new(3, 128);
+        let _held = a.allocate().unwrap();
+        assert!(a.allocate_n(3).is_err());
+        assert_eq!(a.free_blocks(), 2, "failed bulk alloc must not leak");
+        let got = a.allocate_n(2).unwrap();
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn refcounted_sharing() {
+        let mut a = BlockAllocator::new(2, 128);
+        let b = a.allocate().unwrap();
+        a.retain(b);
+        assert_eq!(a.refcount(b), 2);
+        a.release(b);
+        assert_eq!(a.free_blocks(), 1, "still held by second ref");
+        a.release(b);
+        assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(1, 128);
+        let b = a.allocate().unwrap();
+        a.release(b);
+        a.release(b);
+    }
+
+    #[test]
+    fn block_table_growth() {
+        let mut a = BlockAllocator::new(8, 4);
+        let mut t = BlockTable::default();
+        for i in 1..=9 {
+            t.append_token(&mut a).unwrap();
+            assert_eq!(t.len, i);
+        }
+        assert_eq!(t.blocks.len(), 3); // ceil(9/4)
+        t.release_all(&mut a);
+        assert_eq!(a.free_blocks(), 8);
+    }
+
+    #[test]
+    fn blocks_for_rounding() {
+        let a = BlockAllocator::new(1, 128);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(128), 1);
+        assert_eq!(a.blocks_for(129), 2);
+    }
+}

@@ -1,0 +1,393 @@
+//! The KV-cache manager: paged latent cache for per-sequence suffixes,
+//! shared-prefix registry with radix-tree reuse, and TyphoonMLA's
+//! uncompressed shared-prefix expansion accounting.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ModelConfig;
+
+use super::block::{BlockAllocator, BlockId, BlockTable};
+use super::radix::RadixTree;
+
+pub type SeqId = u64;
+pub type PrefixId = u32;
+
+/// A registered shared prefix (e.g. a system prompt).
+#[derive(Debug)]
+pub struct SharedPrefix {
+    pub id: PrefixId,
+    pub tokens: Vec<u32>,
+    /// Latent-form pages (always present).
+    pub latent_blocks: Vec<BlockId>,
+    /// TyphoonMLA: uncompressed K/V copy exists (naive-stage cache).
+    pub expanded: bool,
+    /// Active sequences attached to this prefix.
+    pub users: usize,
+}
+
+impl SharedPrefix {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Per-sequence cache state: the non-shared suffix in latent form.
+#[derive(Debug)]
+pub struct SequenceCache {
+    pub prefix: PrefixId,
+    pub table: BlockTable,
+}
+
+#[derive(Debug)]
+pub struct KvCacheManager {
+    cfg: ModelConfig,
+    alloc: BlockAllocator,
+    radix: RadixTree,
+    prefixes: HashMap<PrefixId, SharedPrefix>,
+    seqs: HashMap<SeqId, SequenceCache>,
+    next_prefix: PrefixId,
+    /// Bytes of uncompressed expansion currently held (the "3%").
+    /// Tracked outside the block pool: expansion is ≈71x denser than
+    /// latent pages, so it gets dedicated accounting, not pool pages.
+    expanded_bytes: u64,
+    bytes_per_elem: u64,
+}
+
+impl KvCacheManager {
+    pub fn new(cfg: ModelConfig, total_blocks: usize, block_size: usize) -> Self {
+        KvCacheManager {
+            cfg,
+            alloc: BlockAllocator::new(total_blocks, block_size),
+            radix: RadixTree::new(),
+            prefixes: HashMap::new(),
+            seqs: HashMap::new(),
+            next_prefix: 0,
+            expanded_bytes: 0,
+            bytes_per_elem: 2,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.alloc.block_size()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.alloc.used_blocks()
+    }
+
+    pub fn active_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    // ---- shared prefixes --------------------------------------------------
+
+    /// Register a shared prefix.  If a (block-aligned) prefix of the
+    /// tokens is already cached, its pages are reused; only the new tail
+    /// is allocated.
+    pub fn register_shared_prefix(&mut self, tokens: &[u32]) -> Result<PrefixId> {
+        let bs = self.block_size();
+        let m = self.radix.match_prefix(tokens);
+        // Reuse only whole matched pages.
+        let reuse_tokens = (m.matched / bs) * bs;
+        let reused: Vec<BlockId> = {
+            let mut pl = Vec::new();
+            for &b in &m.blocks[..reuse_tokens] {
+                if pl.last() != Some(&b) {
+                    pl.push(b);
+                }
+            }
+            pl
+        };
+        let need_blocks = tokens.len().div_ceil(bs) - reused.len();
+        if !self.alloc.can_allocate(need_blocks) {
+            bail!("cannot register prefix: need {need_blocks} blocks");
+        }
+        for &b in &reused {
+            self.alloc.retain(b);
+        }
+        let mut blocks = reused;
+        blocks.extend(self.alloc.allocate_n(need_blocks)?);
+        // Per-token page ids for the radix tree.
+        let per_token: Vec<BlockId> =
+            (0..tokens.len()).map(|i| blocks[i / bs]).collect();
+        self.radix.insert(tokens, &per_token);
+        self.radix.pin(tokens);
+        let id = self.next_prefix;
+        self.next_prefix += 1;
+        self.prefixes.insert(
+            id,
+            SharedPrefix {
+                id,
+                tokens: tokens.to_vec(),
+                latent_blocks: blocks,
+                expanded: false,
+                users: 0,
+            },
+        );
+        Ok(id)
+    }
+
+    /// TyphoonMLA expansion: materialize the uncompressed K/V copy of a
+    /// shared prefix.  Returns the extra bytes held (0 if already done).
+    pub fn expand_shared_prefix(&mut self, id: PrefixId) -> Result<u64> {
+        let words = self.cfg.uncompressed_words();
+        let bpe = self.bytes_per_elem;
+        let p = self
+            .prefixes
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown prefix {id}"))?;
+        if p.expanded {
+            return Ok(0);
+        }
+        p.expanded = true;
+        let bytes = p.tokens.len() as u64 * words * bpe;
+        self.expanded_bytes += bytes;
+        let tokens = p.tokens.clone();
+        self.radix.mark_expanded(&tokens);
+        Ok(bytes)
+    }
+
+    pub fn prefix(&self, id: PrefixId) -> Option<&SharedPrefix> {
+        self.prefixes.get(&id)
+    }
+
+    /// Bytes of uncompressed expansion currently held.
+    pub fn expanded_bytes(&self) -> u64 {
+        self.expanded_bytes
+    }
+
+    /// Bytes of latent KV currently held in pages.
+    pub fn latent_bytes(&self) -> u64 {
+        (self.used_blocks() * self.block_size()) as u64
+            * self.cfg.latent_words()
+            * self.bytes_per_elem
+    }
+
+    /// The paper's HBM-overhead ratio for the current state.
+    pub fn expansion_overhead(&self) -> f64 {
+        let base = self.latent_bytes();
+        if base == 0 {
+            0.0
+        } else {
+            self.expanded_bytes as f64 / base as f64
+        }
+    }
+
+    pub fn release_shared_prefix(&mut self, id: PrefixId) -> Result<()> {
+        let p = self
+            .prefixes
+            .remove(&id)
+            .ok_or_else(|| anyhow!("unknown prefix {id}"))?;
+        if p.users > 0 {
+            let msg = format!("prefix {id} still has {} users", p.users);
+            self.prefixes.insert(id, p);
+            bail!(msg);
+        }
+        for &b in &p.latent_blocks {
+            self.alloc.release(b);
+        }
+        self.radix.unpin(&p.tokens);
+        if p.expanded {
+            self.expanded_bytes -=
+                p.tokens.len() as u64 * self.cfg.uncompressed_words() * self.bytes_per_elem;
+        }
+        Ok(())
+    }
+
+    // ---- sequences ---------------------------------------------------------
+
+    /// Would a new sequence with `prompt_tokens` non-shared tokens fit?
+    pub fn can_admit(&self, prompt_tokens: usize) -> bool {
+        self.alloc.can_allocate(self.alloc.blocks_for(prompt_tokens.max(1)))
+    }
+
+    /// Attach a sequence to a shared prefix and reserve pages for its
+    /// non-shared prompt suffix.
+    pub fn add_sequence(
+        &mut self,
+        seq: SeqId,
+        prefix: PrefixId,
+        prompt_tokens: usize,
+    ) -> Result<()> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already exists");
+        }
+        let p = self
+            .prefixes
+            .get_mut(&prefix)
+            .ok_or_else(|| anyhow!("unknown prefix {prefix}"))?;
+        p.users += 1;
+        let mut table = BlockTable::default();
+        if let Err(e) = table.reserve(prompt_tokens.max(1), &mut self.alloc) {
+            table.release_all(&mut self.alloc);
+            self.prefixes.get_mut(&prefix).unwrap().users -= 1;
+            return Err(e);
+        }
+        table.len = prompt_tokens;
+        self.seqs.insert(seq, SequenceCache { prefix, table });
+        Ok(())
+    }
+
+    /// Append one generated token to a sequence (may allocate a page).
+    pub fn append_token(&mut self, seq: SeqId) -> Result<()> {
+        let s = self
+            .seqs
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        s.table.append_token(&mut self.alloc)
+    }
+
+    pub fn sequence_len(&self, seq: SeqId) -> Option<usize> {
+        self.seqs.get(&seq).map(|s| s.table.len)
+    }
+
+    /// Remove a finished/cancelled sequence, releasing its pages.
+    pub fn remove_sequence(&mut self, seq: SeqId) -> Result<()> {
+        let mut s = self
+            .seqs
+            .remove(&seq)
+            .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        s.table.release_all(&mut self.alloc);
+        if let Some(p) = self.prefixes.get_mut(&s.prefix) {
+            p.users -= 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::sim;
+
+    fn mgr(blocks: usize) -> KvCacheManager {
+        KvCacheManager::new(sim(), blocks, 16)
+    }
+
+    fn prefix_tokens(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    #[test]
+    fn prefix_registration_allocates_pages() {
+        let mut m = mgr(16);
+        let id = m.register_shared_prefix(&prefix_tokens(40)).unwrap();
+        let p = m.prefix(id).unwrap();
+        assert_eq!(p.len(), 40);
+        assert_eq!(p.latent_blocks.len(), 3); // ceil(40/16)
+        assert_eq!(m.used_blocks(), 3);
+    }
+
+    #[test]
+    fn identical_prefix_reuses_blocks() {
+        let mut m = mgr(16);
+        let a = m.register_shared_prefix(&prefix_tokens(32)).unwrap();
+        let used = m.used_blocks();
+        let b = m.register_shared_prefix(&prefix_tokens(32)).unwrap();
+        assert_eq!(m.used_blocks(), used, "radix hit: no new pages");
+        assert_eq!(
+            m.prefix(a).unwrap().latent_blocks,
+            m.prefix(b).unwrap().latent_blocks
+        );
+    }
+
+    #[test]
+    fn extended_prefix_reuses_aligned_overlap() {
+        let mut m = mgr(16);
+        let a = m.register_shared_prefix(&prefix_tokens(32)).unwrap(); // 2 pages
+        let b = m.register_shared_prefix(&prefix_tokens(48)).unwrap(); // +1 page
+        assert_eq!(m.used_blocks(), 3);
+        assert_eq!(
+            m.prefix(b).unwrap().latent_blocks[..2],
+            m.prefix(a).unwrap().latent_blocks[..]
+        );
+    }
+
+    #[test]
+    fn expansion_accounting_matches_cost_model() {
+        let mut m = mgr(64);
+        let id = m.register_shared_prefix(&prefix_tokens(64)).unwrap();
+        let bytes = m.expand_shared_prefix(id).unwrap();
+        let cfg = sim();
+        assert_eq!(bytes, 64 * cfg.uncompressed_words() * 2);
+        assert_eq!(m.expanded_bytes(), bytes);
+        // Idempotent.
+        assert_eq!(m.expand_shared_prefix(id).unwrap(), 0);
+    }
+
+    #[test]
+    fn sequence_lifecycle_conserves_blocks() {
+        let mut m = mgr(32);
+        let id = m.register_shared_prefix(&prefix_tokens(16)).unwrap();
+        let base = m.used_blocks();
+        m.add_sequence(1, id, 20).unwrap();
+        m.add_sequence(2, id, 5).unwrap();
+        assert_eq!(m.used_blocks(), base + 2 + 1);
+        for _ in 0..12 {
+            m.append_token(1).unwrap();
+        }
+        assert_eq!(m.sequence_len(1), Some(32));
+        assert_eq!(m.used_blocks(), base + 2 + 1); // 32 tokens = 2 pages exactly
+        m.append_token(1).unwrap(); // 33rd token: new page
+        assert_eq!(m.used_blocks(), base + 3 + 1);
+        m.remove_sequence(1).unwrap();
+        m.remove_sequence(2).unwrap();
+        assert_eq!(m.used_blocks(), base);
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut m = mgr(4);
+        let id = m.register_shared_prefix(&prefix_tokens(32)).unwrap(); // 2 pages
+        assert!(m.can_admit(32)); // 2 pages free
+        assert!(!m.can_admit(33)); // would need 3
+        m.add_sequence(1, id, 32).unwrap();
+        assert!(!m.can_admit(1));
+        assert!(m.append_token(1).is_err(), "pool exhausted is an error");
+    }
+
+    #[test]
+    fn cannot_release_prefix_in_use() {
+        let mut m = mgr(8);
+        let id = m.register_shared_prefix(&prefix_tokens(8)).unwrap();
+        m.add_sequence(1, id, 4).unwrap();
+        assert!(m.release_shared_prefix(id).is_err());
+        m.remove_sequence(1).unwrap();
+        m.release_shared_prefix(id).unwrap();
+    }
+
+    #[test]
+    fn overhead_ratio_sane() {
+        let mut m = mgr(256);
+        let id = m.register_shared_prefix(&prefix_tokens(64)).unwrap();
+        m.expand_shared_prefix(id).unwrap();
+        for s in 0..16 {
+            m.add_sequence(s, id, 128).unwrap();
+        }
+        let ov = m.expansion_overhead();
+        let cfg = sim();
+        let expect = (64 * cfg.uncompressed_words()) as f64
+            / ((16 * 128 + 64) as f64 * cfg.latent_words() as f64);
+        assert!((ov - expect).abs() / expect < 0.05, "ov={ov} expect={expect}");
+    }
+
+    #[test]
+    fn release_after_expansion_returns_bytes() {
+        let mut m = mgr(8);
+        let id = m.register_shared_prefix(&prefix_tokens(16)).unwrap();
+        m.expand_shared_prefix(id).unwrap();
+        m.release_shared_prefix(id).unwrap();
+        assert_eq!(m.expanded_bytes(), 0);
+        assert_eq!(m.used_blocks(), 0);
+    }
+}

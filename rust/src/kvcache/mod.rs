@@ -1,0 +1,11 @@
+//! Paged KV-cache with radix-tree prefix sharing (the PagedAttention /
+//! RadixAttention substrate) plus TyphoonMLA's uncompressed
+//! shared-prefix expansion accounting.
+
+pub mod block;
+pub mod manager;
+pub mod radix;
+
+pub use block::{BlockAllocator, BlockId, BlockTable};
+pub use manager::{KvCacheManager, PrefixId, SeqId, SharedPrefix};
+pub use radix::{MatchResult, RadixTree};

@@ -1,0 +1,386 @@
+//! Radix tree over token sequences (the RadixAttention/SGLang substrate).
+//!
+//! Maps token prefixes to KV-cache blocks so that requests sharing a
+//! prefix (system prompt, tree-of-thought branches, speculative drafts)
+//! reuse cached entries instead of recomputing them.  TyphoonMLA
+//! additionally tags prefixes that have been *expanded* to uncompressed
+//! K/V form (the naive-stage cache).
+//!
+//! Design notes:
+//! * Edges carry one `BlockId` **per token** (the page id that token
+//!   lives in); the cache manager dedups consecutive ids back into page
+//!   lists.  Per-token granularity makes mid-edge splits exact.
+//! * Pin/unpin/mark operate on *token sequences*, not node handles, so
+//!   they stay valid across edge splits.
+
+use std::collections::HashMap;
+
+use super::block::BlockId;
+
+#[derive(Debug, Default)]
+struct Node {
+    /// Edge label: the token run leading into this node.
+    tokens: Vec<u32>,
+    /// Page id of each token in `tokens` (same length).
+    blocks: Vec<BlockId>,
+    children: HashMap<u32, usize>, // first token of child edge -> node id
+    /// Sequences currently pinning this edge.
+    refcount: usize,
+    /// TyphoonMLA: this edge's tokens also exist in uncompressed form.
+    expanded: bool,
+}
+
+/// Result of a prefix match.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MatchResult {
+    /// Number of tokens matched from the root.
+    pub matched: usize,
+    /// Page id per matched token (dedup for a page list).
+    pub blocks: Vec<BlockId>,
+    /// Longest fully-*expanded* prefix within the match.
+    pub expanded_len: usize,
+}
+
+impl MatchResult {
+    /// Page list with consecutive duplicates removed.
+    pub fn page_list(&self) -> Vec<BlockId> {
+        let mut out: Vec<BlockId> = Vec::new();
+        for &b in &self.blocks {
+            if out.last() != Some(&b) {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+/// Token-sequence radix tree.
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Node>,
+}
+
+impl Default for RadixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixTree {
+    pub fn new() -> Self {
+        RadixTree { nodes: vec![Node::default()] } // 0 = root
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Longest-prefix match of `tokens` against the tree.  Matches may
+    /// end mid-edge (per-token blocks make partial reuse exact).
+    pub fn match_prefix(&self, tokens: &[u32]) -> MatchResult {
+        let mut result = MatchResult::default();
+        let mut node = 0usize;
+        let mut pos = 0usize;
+        let mut expanded_run = true;
+        loop {
+            let Some(&next) = tokens.get(pos).and_then(|t| self.nodes[node].children.get(t))
+            else {
+                return result;
+            };
+            let edge = &self.nodes[next];
+            let common = edge
+                .tokens
+                .iter()
+                .zip(&tokens[pos..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            pos += common;
+            result.matched = pos;
+            result.blocks.extend_from_slice(&edge.blocks[..common]);
+            expanded_run &= edge.expanded;
+            if expanded_run {
+                result.expanded_len = pos;
+            }
+            if common < edge.tokens.len() {
+                return result; // diverged mid-edge
+            }
+            node = next;
+        }
+    }
+
+    /// Split the edge into `node` so its label has exactly `keep`
+    /// tokens; the remainder moves to a new child.  Both halves inherit
+    /// refcount/expanded.
+    fn split_edge(&mut self, node: usize, keep: usize) {
+        debug_assert!(keep > 0 && keep < self.nodes[node].tokens.len());
+        let rest_tokens = self.nodes[node].tokens.split_off(keep);
+        let rest_blocks = self.nodes[node].blocks.split_off(keep);
+        let rest = Node {
+            tokens: rest_tokens,
+            blocks: rest_blocks,
+            children: std::mem::take(&mut self.nodes[node].children),
+            refcount: self.nodes[node].refcount,
+            expanded: self.nodes[node].expanded,
+        };
+        let rest_id = self.nodes.len();
+        let first = rest.tokens[0];
+        self.nodes.push(rest);
+        self.nodes[node].children.insert(first, rest_id);
+    }
+
+    /// Insert a fully-cached token run (absolute prefix from the root)
+    /// with one page id per token.  Existing overlap is left untouched;
+    /// only the new suffix is added (splitting an edge if needed).
+    pub fn insert(&mut self, tokens: &[u32], blocks_per_token: &[BlockId]) {
+        assert_eq!(tokens.len(), blocks_per_token.len());
+        let mut node = 0usize;
+        let mut pos = 0usize;
+        loop {
+            if pos == tokens.len() {
+                return;
+            }
+            match self.nodes[node].children.get(&tokens[pos]).copied() {
+                None => {
+                    let id = self.nodes.len();
+                    self.nodes.push(Node {
+                        tokens: tokens[pos..].to_vec(),
+                        blocks: blocks_per_token[pos..].to_vec(),
+                        children: HashMap::new(),
+                        refcount: 0,
+                        expanded: false,
+                    });
+                    self.nodes[node].children.insert(tokens[pos], id);
+                    return;
+                }
+                Some(next) => {
+                    let common = self.nodes[next]
+                        .tokens
+                        .iter()
+                        .zip(&tokens[pos..])
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    if common < self.nodes[next].tokens.len() {
+                        self.split_edge(next, common);
+                    }
+                    pos += common;
+                    node = next;
+                }
+            }
+        }
+    }
+
+    /// Walk `tokens` applying `f` to every fully-covered edge.
+    /// Panics if `tokens` is not fully present (caller bug).
+    fn for_each_edge<F: FnMut(&mut Node)>(&mut self, tokens: &[u32], mut f: F) {
+        let mut node = 0usize;
+        let mut pos = 0usize;
+        while pos < tokens.len() {
+            let next = *self.nodes[node]
+                .children
+                .get(&tokens[pos])
+                .unwrap_or_else(|| panic!("token run not present at pos {pos}"));
+            let edge_len = self.nodes[next].tokens.len();
+            assert!(
+                tokens[pos..].len() >= edge_len
+                    && self.nodes[next].tokens == tokens[pos..pos + edge_len],
+                "token run diverges mid-edge at pos {pos}; split first via insert()"
+            );
+            f(&mut self.nodes[next]);
+            pos += edge_len;
+            node = next;
+        }
+    }
+
+    /// Pin a token run (one count per active user).  The run must be
+    /// edge-aligned — i.e. previously `insert`ed exactly.
+    pub fn pin(&mut self, tokens: &[u32]) {
+        self.for_each_edge(tokens, |n| n.refcount += 1);
+    }
+
+    pub fn unpin(&mut self, tokens: &[u32]) {
+        self.for_each_edge(tokens, |n| {
+            assert!(n.refcount > 0, "unpin of unpinned edge");
+            n.refcount -= 1;
+        });
+    }
+
+    /// Mark a token run as expanded to uncompressed form.
+    pub fn mark_expanded(&mut self, tokens: &[u32]) {
+        self.for_each_edge(tokens, |n| n.expanded = true);
+    }
+
+    /// Evict all unpinned leaves (transitively), returning the per-token
+    /// page ids they held (dedup before releasing refcounts once per
+    /// page — the manager owns that policy).
+    pub fn evict_unpinned(&mut self) -> Vec<BlockId> {
+        let mut released = Vec::new();
+        loop {
+            let mut parent_of: HashMap<usize, (usize, u32)> = HashMap::new();
+            for (pid, node) in self.nodes.iter().enumerate() {
+                for (&tok, &cid) in &node.children {
+                    parent_of.insert(cid, (pid, tok));
+                }
+            }
+            let victim = (1..self.nodes.len()).find(|&i| {
+                self.nodes[i].refcount == 0
+                    && self.nodes[i].children.is_empty()
+                    && !self.nodes[i].tokens.is_empty()
+            });
+            match victim {
+                None => return released,
+                Some(v) => {
+                    released.extend(self.nodes[v].blocks.drain(..));
+                    self.nodes[v].tokens.clear();
+                    if let Some(&(p, tok)) = parent_of.get(&v) {
+                        self.nodes[p].children.remove(&tok);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<u32> {
+        s.bytes().map(|b| b as u32).collect()
+    }
+
+    /// One page per 4 tokens, page ids starting at `base`.
+    fn pages(n: usize, base: u32) -> Vec<BlockId> {
+        (0..n).map(|i| base + (i / 4) as u32).collect()
+    }
+
+    #[test]
+    fn empty_tree_matches_nothing() {
+        let t = RadixTree::new();
+        let m = t.match_prefix(&toks("hello"));
+        assert_eq!(m.matched, 0);
+        assert!(m.blocks.is_empty());
+    }
+
+    #[test]
+    fn insert_then_full_match() {
+        let mut t = RadixTree::new();
+        let s = toks("system prompt");
+        t.insert(&s, &pages(s.len(), 0));
+        let m = t.match_prefix(&s);
+        assert_eq!(m.matched, 13);
+        assert_eq!(m.page_list(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn longest_prefix_of_longer_query() {
+        let mut t = RadixTree::new();
+        let s = toks("shared");
+        t.insert(&s, &pages(s.len(), 0));
+        let m = t.match_prefix(&toks("shared suffix"));
+        assert_eq!(m.matched, 6);
+    }
+
+    #[test]
+    fn mid_edge_partial_match_counts_tokens() {
+        let mut t = RadixTree::new();
+        t.insert(&toks("abcdef"), &pages(6, 0));
+        let m = t.match_prefix(&toks("abcxyz"));
+        assert_eq!(m.matched, 3);
+        assert_eq!(m.blocks.len(), 3);
+    }
+
+    #[test]
+    fn divergent_insert_splits_edge() {
+        let mut t = RadixTree::new();
+        t.insert(&toks("abcdef"), &pages(6, 0));
+        t.insert(&toks("abcxyz"), &{
+            let mut b = pages(3, 0);
+            b.extend(pages(3, 100));
+            b
+        });
+        for (q, want) in [("abcdef", 6), ("abcxyz", 6), ("abcq", 3), ("ab", 2)] {
+            assert_eq!(t.match_prefix(&toks(q)).matched, want, "{q}");
+        }
+    }
+
+    #[test]
+    fn pin_survives_split() {
+        let mut t = RadixTree::new();
+        let a = toks("abcdef");
+        t.insert(&a, &pages(6, 0));
+        t.pin(&a);
+        // Divergent insert splits the pinned edge.
+        t.insert(&toks("abcxyz"), &{
+            let mut b = pages(3, 0);
+            b.extend(pages(3, 100));
+            b
+        });
+        // Eviction must not touch the pinned run, but may take the
+        // unpinned new suffix.
+        let released = t.evict_unpinned();
+        assert!(!released.is_empty());
+        assert_eq!(t.match_prefix(&a).matched, 6, "pinned run intact");
+        t.unpin(&a);
+        t.evict_unpinned();
+        assert_eq!(t.match_prefix(&a).matched, 0);
+    }
+
+    #[test]
+    fn expanded_len_tracks_typhoon_coverage() {
+        let mut t = RadixTree::new();
+        let sys = toks("sys");
+        t.insert(&sys, &pages(3, 0));
+        t.insert(&toks("sysq1"), &{
+            let mut b = pages(3, 0);
+            b.extend(pages(2, 50));
+            b
+        });
+        t.mark_expanded(&sys);
+        let m = t.match_prefix(&toks("sysq1"));
+        assert_eq!(m.matched, 5);
+        assert_eq!(m.expanded_len, 3, "only the marked prefix is expanded");
+    }
+
+    #[test]
+    fn page_list_dedups() {
+        let m = MatchResult { matched: 6, blocks: vec![4, 4, 4, 7, 7, 9], expanded_len: 0 };
+        assert_eq!(m.page_list(), vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn match_against_naive_scan_randomized() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let mut t = RadixTree::new();
+        let mut corpus: Vec<Vec<u32>> = Vec::new();
+        for i in 0..60u32 {
+            let base = if corpus.is_empty() || rng.next_f64() < 0.3 {
+                Vec::new()
+            } else {
+                let b = rng.choose(&corpus).clone();
+                let cut = rng.gen_range_usize(0, b.len() + 1);
+                b[..cut].to_vec()
+            };
+            let mut s = base;
+            for _ in 0..rng.gen_range_usize(1, 6) {
+                s.push(rng.gen_range(0, 5) as u32);
+            }
+            let m = t.match_prefix(&s);
+            let mut blocks = m.blocks.clone();
+            blocks.extend((blocks.len()..s.len()).map(|j| i * 1000 + j as u32));
+            t.insert(&s, &blocks);
+            corpus.push(s);
+        }
+        // Oracle: longest common prefix against every inserted string.
+        for probe in &corpus {
+            let m = t.match_prefix(probe);
+            let oracle = corpus
+                .iter()
+                .map(|s| s.iter().zip(probe).take_while(|(a, b)| a == b).count())
+                .max()
+                .unwrap();
+            assert_eq!(m.matched, oracle);
+            assert_eq!(m.blocks.len(), m.matched);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! # TyphoonMLA
+//!
+//! A serving-oriented reproduction of *TyphoonMLA: A Mixed Naive-Absorb
+//! MLA Kernel For Shared Prefix* (Yüzügüler et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): naive, absorb and mixed
+//!   (TyphoonMLA) flash-decode attention kernels in Pallas.
+//! * **L2** (`python/compile/`): the MLA model graphs, AOT-lowered to
+//!   HLO text in `artifacts/`.
+//! * **L3** (this crate): a vLLM-style serving runtime — continuous
+//!   batching, paged KV-cache with radix-tree prefix sharing, the
+//!   naive/absorb kernel-selection policy, a PJRT execution engine for
+//!   the AOT artifacts, the paper's analytical cost model, and a
+//!   hardware simulator that regenerates every table and figure of the
+//!   paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod util;
+pub mod workload;

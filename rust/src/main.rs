@@ -1,0 +1,138 @@
+//! `typhoon-mla` — the serving CLI.
+//!
+//! Subcommands:
+//!   serve      run the real tiny-model serving stack on PJRT and a
+//!              synthetic workload, reporting latency/throughput
+//!   simulate   run a paper-scale serving simulation
+//!   threshold  print the Eq. 1 fall-back threshold for a model/hardware
+//!   info       show artifact manifest + runtime info
+
+use anyhow::{bail, Result};
+use typhoon_mla::config::hardware;
+use typhoon_mla::config::model;
+use typhoon_mla::config::{KernelKind, ServingConfig};
+use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
+use typhoon_mla::costmodel::threshold::batch_threshold;
+use typhoon_mla::kvcache::KvCacheManager;
+use typhoon_mla::runtime::{default_artifacts_dir, Manifest, TinyModelEngine};
+use typhoon_mla::simulator::{run_experiment, SimParams};
+use typhoon_mla::util::cli::Args;
+use typhoon_mla::workload::{datasets, prompts, Request};
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["full"])?;
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("simulate") => simulate(&args),
+        Some("threshold") => threshold(&args),
+        Some("info") => info(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}");
+            }
+            eprintln!(
+                "usage: typhoon-mla <serve|simulate|threshold|info> [options]\n\
+                 serve    --kernel typhoon|absorb|naive --requests N --gen N\n\
+                 simulate --model deepseek-v3|kimi-k2 --hw ascend-npu|gpu \
+                 --kernel K --batch B --dataset mmlu|gsm8k|simpleqa --prompt a|b|c\n\
+                 threshold --model M --hw H"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let kernel = KernelKind::parse(args.get_or("kernel", "typhoon"))?;
+    let n_requests = args.get_usize("requests", 16)?;
+    let gen_tokens = args.get_usize("gen", 8)?;
+    let dir = default_artifacts_dir();
+    let engine = TinyModelEngine::new(&dir, kernel)?;
+    println!("[serve] engine ready (compile {:.2}s)", engine.compile_seconds());
+    let cfg = ServingConfig {
+        block_size: 16,
+        max_batch: 8,
+        max_seq_len: 128,
+        total_blocks: 2048,
+        kernel,
+        ..Default::default()
+    };
+    let policy = KernelPolicy::with_threshold(kernel, 2);
+    let kv = KvCacheManager::new(model::tiny(), cfg.total_blocks, cfg.block_size);
+    let mut c = Coordinator::new(cfg, policy, kv, engine)?;
+    let prompt: Vec<u32> = (0..200u32).map(|i| (i * 31 + 7) % 255 + 1).collect();
+    c.set_shared_prefix(&prompt)?;
+    for i in 0..n_requests as u64 {
+        c.submit(&Request {
+            id: i,
+            prompt_tokens: 8 + (i as usize % 24),
+            max_new_tokens: gen_tokens,
+        })?;
+    }
+    c.run_to_completion()?;
+    println!("[serve] {}", c.metrics.report());
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let model = model::by_name(args.get_or("model", "deepseek-v3"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let hw = hardware::by_name(args.get_or("hw", "ascend-npu"))
+        .ok_or_else(|| anyhow::anyhow!("unknown hardware"))?;
+    let kernel = KernelKind::parse(args.get_or("kernel", "typhoon"))?;
+    let batch = args.get_usize("batch", 256)?;
+    let ds = datasets::by_name(args.get_or("dataset", "mmlu"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let prompt = prompts::by_name(args.get_or("prompt", "a"))
+        .ok_or_else(|| anyhow::anyhow!("unknown prompt"))?;
+    let mut p = SimParams::new(model, hw, kernel, batch);
+    if !args.flag("full") {
+        p.max_requests = Some(args.get_usize("requests", batch * 4)?);
+    }
+    let r = run_experiment(&p, &ds, &prompt)?;
+    println!(
+        "[simulate] {} tokens in {:.3}s of modeled decode -> {:.0} tok/s/layer \
+         (iters {}, mean batch {:.1}, typhoon/absorb iters {}/{})",
+        r.tokens,
+        r.decode_seconds,
+        r.throughput,
+        r.iterations,
+        r.mean_batch,
+        r.typhoon_iters,
+        r.absorb_iters
+    );
+    Ok(())
+}
+
+fn threshold(args: &Args) -> Result<()> {
+    let model = model::by_name(args.get_or("model", "deepseek-v3"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let hw = hardware::by_name(args.get_or("hw", "ascend-npu"))
+        .ok_or_else(|| anyhow::anyhow!("unknown hardware"))?;
+    println!(
+        "B_theta({}, {}) = {}",
+        model.name,
+        hw.name,
+        batch_threshold(&model, &hw, 1)
+    );
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        bail!("no artifacts at {dir:?}; run `make artifacts`");
+    }
+    let m = Manifest::load(&dir)?;
+    println!("artifacts dir: {dir:?}");
+    for a in &m.artifacts {
+        println!(
+            "  {:<44} kind={:<16} inputs={} outputs={}",
+            a.name,
+            a.kind,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Serving metrics: token/iteration counters, latency breakdowns, and
+//! the throughput report the benches print.
+
+use std::time::Instant;
+
+use crate::util::stats::{human_time, Percentiles, Summary};
+
+/// Wall-clock or simulated-clock duration source.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Clock {
+    Wall,
+    /// Simulated time is fed in explicitly via `record_iteration`.
+    Simulated,
+}
+
+/// Per-component latency accumulators matching the paper's Fig. 4
+/// breakdown categories.
+#[derive(Clone, Debug, Default)]
+pub struct BreakdownTimers {
+    pub stage1_attn: f64,
+    pub stage2_attn: f64,
+    pub proj_kvb1: f64,
+    pub proj_kvb2: f64,
+    pub combine: f64,
+    pub other: f64,
+}
+
+impl BreakdownTimers {
+    pub fn total(&self) -> f64 {
+        self.stage1_attn + self.stage2_attn + self.proj_kvb1 + self.proj_kvb2 + self.combine
+            + self.other
+    }
+
+    pub fn add(&mut self, other: &BreakdownTimers) {
+        self.stage1_attn += other.stage1_attn;
+        self.stage2_attn += other.stage2_attn;
+        self.proj_kvb1 += other.proj_kvb1;
+        self.proj_kvb2 += other.proj_kvb2;
+        self.combine += other.combine;
+        self.other += other.other;
+    }
+}
+
+/// Metrics for one serving run.
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    /// Simulated elapsed seconds (when clock == Simulated).
+    sim_elapsed: f64,
+    clock: Clock,
+    pub tokens_generated: u64,
+    pub requests_completed: u64,
+    pub requests_admitted: u64,
+    pub decode_iterations: u64,
+    pub prefill_calls: u64,
+    /// Sequences evicted for recompute under KV pressure.
+    pub preemptions: u64,
+    pub iteration_time: Summary,
+    pub batch_occupancy: Summary,
+    pub request_latency: Percentiles,
+    pub breakdown: BreakdownTimers,
+    /// Iterations executed with each kernel (typhoon fallback tracking).
+    pub typhoon_iters: u64,
+    pub absorb_iters: u64,
+    pub naive_iters: u64,
+}
+
+impl Metrics {
+    pub fn new(clock: Clock) -> Self {
+        Metrics {
+            start: Instant::now(),
+            sim_elapsed: 0.0,
+            clock,
+            tokens_generated: 0,
+            requests_completed: 0,
+            requests_admitted: 0,
+            decode_iterations: 0,
+            prefill_calls: 0,
+            preemptions: 0,
+            iteration_time: Summary::new(),
+            batch_occupancy: Summary::new(),
+            request_latency: Percentiles::default(),
+            breakdown: BreakdownTimers::default(),
+            typhoon_iters: 0,
+            absorb_iters: 0,
+            naive_iters: 0,
+        }
+    }
+
+    pub fn record_iteration(&mut self, seconds: f64, batch: usize, new_tokens: u64) {
+        self.decode_iterations += 1;
+        self.tokens_generated += new_tokens;
+        self.iteration_time.push(seconds);
+        self.batch_occupancy.push(batch as f64);
+        if self.clock == Clock::Simulated {
+            self.sim_elapsed += seconds;
+        }
+    }
+
+    pub fn advance_sim_time(&mut self, seconds: f64) {
+        debug_assert_eq!(self.clock, Clock::Simulated);
+        self.sim_elapsed += seconds;
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        match self.clock {
+            Clock::Wall => self.start.elapsed().as_secs_f64(),
+            Clock::Simulated => self.sim_elapsed,
+        }
+    }
+
+    /// Tokens per second over the run (the paper's Fig. 2/3 y-axis when
+    /// normalized per layer).
+    pub fn throughput(&self) -> f64 {
+        let t = self.elapsed();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / t
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "tokens={} reqs={}/{} iters={} elapsed={} throughput={:.1} tok/s \
+             mean_iter={} mean_batch={:.1} kernels(t/a/n)={}/{}/{}",
+            self.tokens_generated,
+            self.requests_completed,
+            self.requests_admitted,
+            self.decode_iterations,
+            human_time(self.elapsed()),
+            self.throughput(),
+            human_time(self.iteration_time.mean()),
+            self.batch_occupancy.mean(),
+            self.typhoon_iters,
+            self.absorb_iters,
+            self.naive_iters,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_clock_accumulates() {
+        let mut m = Metrics::new(Clock::Simulated);
+        m.record_iteration(0.25, 8, 8);
+        m.record_iteration(0.75, 16, 16);
+        assert_eq!(m.elapsed(), 1.0);
+        assert_eq!(m.tokens_generated, 24);
+        assert!((m.throughput() - 24.0).abs() < 1e-9);
+        assert!((m.batch_occupancy.mean() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_totals() {
+        let mut b = BreakdownTimers::default();
+        b.stage1_attn = 1.0;
+        b.stage2_attn = 0.5;
+        b.combine = 0.1;
+        let mut b2 = BreakdownTimers::default();
+        b2.proj_kvb1 = 0.2;
+        b.add(&b2);
+        assert!((b.total() - 1.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,270 @@
+//! PJRT execution client: loads AOT HLO-text artifacts, compiles them
+//! once, caches the executables, and marshals literals.
+//!
+//! The interchange format is HLO *text* — jax >= 0.5 emits
+//! HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see DESIGN.md / aot.py).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactInfo, Dtype, Manifest, TensorSpec};
+
+pub struct PjrtRuntime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, PjRtLoadedExecutable>,
+    /// Cumulative compile time (perf accounting).
+    pub compile_seconds: f64,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir.into())?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            compile_seconds: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let info = self.manifest.find(name)?.clone();
+            let path = self.manifest.artifact_path(&info);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            self.compile_seconds += t0.elapsed().as_secs_f64();
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple outputs.  Compiles on first use.
+    pub fn execute(&mut self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        self.load(name)?;
+        self.execute_ref(name, args)
+    }
+
+    /// Execute an already-loaded artifact (shared borrow — lets callers
+    /// keep references into `self`-owned literals while executing).
+    /// Validates argument count/shapes against the manifest first.
+    pub fn execute_ref(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let info = self.manifest.find(name)?;
+        validate_args(info, args)?;
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("{name} not loaded; call load() first"))?;
+        let result = exe
+            .execute::<&Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))?;
+        if parts.len() != info.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, runtime returned {}",
+                info.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Load the named weights bundle as literals in manifest order.
+    pub fn load_weights(&self, bundle: &str) -> Result<Vec<Literal>> {
+        let info = self
+            .manifest
+            .weights
+            .get(bundle)
+            .ok_or_else(|| anyhow!("no weights bundle {bundle:?}"))?;
+        let path = self.manifest.dir.join(&info.file);
+        let named: HashMap<String, Literal> =
+            Literal::read_npz(&path, &())
+                .map_err(|e| anyhow!("reading {path:?}: {e}"))?
+                .into_iter()
+                .collect();
+        info.names
+            .iter()
+            .map(|n| {
+                named
+                    .get(n)
+                    .map(shallow_clone)
+                    .ok_or_else(|| anyhow!("weights bundle missing {n:?}"))
+            })
+            .collect()
+    }
+}
+
+/// Literal has no Clone; round-trip through raw bytes.
+fn shallow_clone(l: &Literal) -> Literal {
+    let shape = l.array_shape().expect("array literal");
+    let mut bytes = vec![0u8; l.size_bytes()];
+    match l.ty().expect("typed literal") {
+        xla::ElementType::F32 => {
+            let mut v = vec![0f32; l.element_count()];
+            l.copy_raw_to(&mut v).unwrap();
+            bytes.copy_from_slice(bytemuck_cast_f32(&v));
+        }
+        xla::ElementType::S32 => {
+            let mut v = vec![0i32; l.element_count()];
+            l.copy_raw_to(&mut v).unwrap();
+            bytes.copy_from_slice(bytemuck_cast_i32(&v));
+        }
+        t => panic!("unsupported literal type {t:?}"),
+    }
+    Literal::create_from_shape_and_untyped_data(
+        l.element_type().unwrap(),
+        &shape.dims().iter().map(|&d| d as usize).collect::<Vec<_>>(),
+        &bytes,
+    )
+    .unwrap()
+}
+
+fn bytemuck_cast_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn bytemuck_cast_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn validate_args(info: &ArtifactInfo, args: &[&Literal]) -> Result<()> {
+    if args.len() != info.inputs.len() {
+        bail!(
+            "{}: expected {} args, got {}",
+            info.name,
+            info.inputs.len(),
+            args.len()
+        );
+    }
+    for (i, (spec, arg)) in info.inputs.iter().zip(args).enumerate() {
+        let shape = arg
+            .array_shape()
+            .with_context(|| format!("{} arg {i} not an array", info.name))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        if dims != spec.shape {
+            bail!(
+                "{} arg {i}: shape {:?} != manifest {:?}",
+                info.name,
+                dims,
+                spec.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Host tensor helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal with the given dims.
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal_f32: {dims:?} needs {n} elems, got {}", data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal with the given dims.
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal_i32: {dims:?} needs {n} elems, got {}", data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Extract an f32 vec (row-major) from a literal.
+pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Extract an i32 vec from a literal.
+pub fn to_vec_i32(l: &Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+/// Deterministic random f32 tensor (for bench inputs).
+pub fn random_f32(dims: &[usize], seed: u64, scale: f32) -> Result<Literal> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect();
+    literal_f32(dims, &data)
+}
+
+/// Literal for a TensorSpec filled deterministically (bench inputs).
+pub fn random_for_spec(spec: &TensorSpec, seed: u64, int_hi: i32) -> Result<Literal> {
+    match spec.dtype {
+        Dtype::F32 => random_f32(&spec.shape, seed, 0.5),
+        Dtype::I32 => {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let data: Vec<i32> =
+                (0..spec.elems()).map(|_| rng.gen_range(1, int_hi.max(2) as u64) as i32).collect();
+            literal_i32(&spec.shape, &data)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = literal_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = literal_i32(&[4], &[7, 8, 9, 10]).unwrap();
+        assert_eq!(to_vec_i32(&l).unwrap(), vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn shallow_clone_preserves_contents() {
+        let l = literal_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let c = shallow_clone(&l);
+        assert_eq!(to_vec_f32(&c).unwrap(), to_vec_f32(&l).unwrap());
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = random_f32(&[8], 42, 1.0).unwrap();
+        let b = random_f32(&[8], 42, 1.0).unwrap();
+        assert_eq!(to_vec_f32(&a).unwrap(), to_vec_f32(&b).unwrap());
+    }
+}

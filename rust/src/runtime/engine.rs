@@ -1,0 +1,314 @@
+//! Real-execution engine: drives the AOT-compiled tiny MLA transformer
+//! on the PJRT CPU client.  Implements the coordinator's `Engine` trait
+//! so the same serving loop runs against real numerics (here) or the
+//! cost-model simulator (`simulator::SimEngine`).
+//!
+//! The engine owns the canonical host-side latent KV cache (layers x
+//! slots x L_n x D) and scatters each decode step's returned entries —
+//! Python never touches the request path.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::config::KernelKind;
+use crate::coordinator::{DecodeBatch, Engine, IterationOutcome};
+use crate::kvcache::{PrefixId, SeqId};
+use crate::metrics::BreakdownTimers;
+use crate::util::rng::Rng;
+
+use super::client::{literal_i32, to_vec_f32, to_vec_i32, PjrtRuntime};
+
+struct SharedState {
+    len: i32,
+    /// Latent form [Lyr,Ls,Dl]/[Lyr,Ls,Dr] (absorb path).
+    ckv: Literal,
+    krope: Literal,
+    /// Uncompressed form [Lyr,Ls,H,Dqk]/[Lyr,Ls,H,Dv] (typhoon/naive).
+    k: Literal,
+    v: Literal,
+}
+
+pub struct TinyModelEngine {
+    rt: PjrtRuntime,
+    /// Default kernel this engine was configured for (informational;
+    /// the per-iteration kernel comes from the DecodeBatch).
+    pub variant: KernelKind,
+    // Artifact dims.
+    b: usize,
+    ls: usize,
+    ln: usize,
+    lq: usize,
+    layers: usize,
+    dl: usize,
+    dr: usize,
+    vocab: u32,
+    weights: Vec<Literal>,
+    shared: Option<SharedState>,
+    // Slot state.
+    slot_of: HashMap<SeqId, usize>,
+    free_slots: Vec<usize>,
+    lengths: Vec<i32>,
+    last_token: Vec<i32>,
+    // Host latent caches, row-major [layers][b][ln][d].
+    ckv: Vec<f32>,
+    krope: Vec<f32>,
+    /// Generated token history per sequence (for the examples).
+    pub generated: HashMap<SeqId, Vec<i32>>,
+    decode_names: HashMap<KernelKind, String>,
+    prefill_shared_name: String,
+    prefill_req_name: String,
+}
+
+impl TinyModelEngine {
+    /// Build from the artifacts directory; `variant` picks which shared
+    /// cache layout decode iterations default to (the policy may still
+    /// request absorb fall-back at runtime — both caches are retained).
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>, variant: KernelKind) -> Result<Self> {
+        let rt = PjrtRuntime::new(artifacts_dir)?;
+        let decode_infos = rt.manifest.select("decode_step", None, Some("tiny"));
+        if decode_infos.is_empty() {
+            bail!("no tiny decode_step artifacts; run `make artifacts`");
+        }
+        let mut decode_names = HashMap::new();
+        for info in &decode_infos {
+            if let Some(v) = &info.variant {
+                decode_names.insert(KernelKind::parse(v)?, info.name.clone());
+            }
+        }
+        let d0 = decode_infos[0];
+        let (b, ls, ln) = (d0.dim("b")?, d0.dim("ls")?, d0.dim("ln")?);
+        // decode inputs: ckv cache is input 5 for typhoon/naive layouts.
+        let prefill_shared = rt
+            .manifest
+            .select("prefill_shared", None, Some("tiny"))
+            .first()
+            .map(|a| a.name.clone())
+            .ok_or_else(|| anyhow!("no prefill_shared artifact"))?;
+        let prefill_req_info = *rt
+            .manifest
+            .select("prefill_requests", None, Some("tiny"))
+            .first()
+            .ok_or_else(|| anyhow!("no prefill_requests artifact"))?;
+        let lq = prefill_req_info.dim("lq")?;
+        let prefill_req = prefill_req_info.name.clone();
+        // Cache dims from the decode artifact's ckv input (index 5).
+        let typhoon_name = decode_names
+            .get(&KernelKind::Typhoon)
+            .ok_or_else(|| anyhow!("missing typhoon decode artifact"))?;
+        let tinfo = rt.manifest.find(typhoon_name)?;
+        let ckv_spec = &tinfo.inputs[5];
+        let krope_spec = &tinfo.inputs[6];
+        let (layers, dl) = (ckv_spec.shape[0], ckv_spec.shape[3]);
+        let dr = krope_spec.shape[3];
+
+        let weights = rt.load_weights("tiny")?;
+        let vocab = 256;
+        Ok(TinyModelEngine {
+            rt,
+            variant,
+            b,
+            ls,
+            ln,
+            lq,
+            layers,
+            dl,
+            dr,
+            vocab,
+            weights,
+            shared: None,
+            slot_of: HashMap::new(),
+            free_slots: (0..b).rev().collect(),
+            lengths: vec![0; b],
+            last_token: vec![0; b],
+            ckv: vec![0.0; layers * b * ln * dl],
+            krope: vec![0.0; layers * b * ln * dr],
+            generated: HashMap::new(),
+            decode_names,
+            prefill_shared_name: prefill_shared,
+            prefill_req_name: prefill_req,
+        })
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        self.rt.compile_seconds
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.b, self.ls, self.ln, self.lq)
+    }
+
+    /// Deterministic synthetic question tokens for a sequence
+    /// (workload substitution: content-free throughput benchmarks).
+    fn question_tokens(&self, seq: SeqId, len: usize) -> Vec<i32> {
+        let mut rng = Rng::new(0x5E9_u64 ^ seq.wrapping_mul(0x9E3779B97F4A7C15));
+        (0..len).map(|_| rng.gen_range(1, self.vocab as u64) as i32).collect()
+    }
+
+    fn weight_refs(&self) -> Vec<&Literal> {
+        self.weights.iter().collect()
+    }
+
+    fn cache_literals(&self) -> Result<(Literal, Literal)> {
+        use super::client::literal_f32;
+        Ok((
+            literal_f32(&[self.layers, self.b, self.ln, self.dl], &self.ckv)?,
+            literal_f32(&[self.layers, self.b, self.ln, self.dr], &self.krope)?,
+        ))
+    }
+}
+
+impl Engine for TinyModelEngine {
+    fn prepare_shared(
+        &mut self,
+        _prefix: PrefixId,
+        tokens: &[u32],
+        _kernel: KernelKind,
+    ) -> Result<f64> {
+        let t0 = Instant::now();
+        // Compile everything up front so decode wall-times are clean.
+        let names: Vec<String> = std::iter::once(self.prefill_shared_name.clone())
+            .chain(std::iter::once(self.prefill_req_name.clone()))
+            .chain(self.decode_names.values().cloned())
+            .collect();
+        for n in &names {
+            self.rt.load(n)?;
+        }
+        let shared_len = tokens.len().min(self.ls);
+        let mut padded: Vec<i32> = tokens.iter().take(shared_len).map(|&t| t as i32).collect();
+        padded.resize(self.ls, 0);
+        let tokens_l = literal_i32(&[self.ls], &padded)?;
+        let len_l = literal_i32(&[1], &[shared_len as i32])?;
+        let mut args: Vec<&Literal> = vec![&tokens_l, &len_l];
+        let w = self.weight_refs();
+        args.extend(w);
+        let mut out = self.rt.execute_ref(&self.prefill_shared_name, &args)?;
+        // outputs: (ckv [Lyr,Ls,Dl], krope, k [Lyr,Ls,H,Dqk], v)
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let krope = out.pop().unwrap();
+        let ckv = out.pop().unwrap();
+        self.shared = Some(SharedState { len: shared_len as i32, ckv, krope, k, v });
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn prefill_requests(&mut self, seqs: &[(SeqId, usize)]) -> Result<f64> {
+        let t0 = Instant::now();
+        let shared = self.shared.as_ref().ok_or_else(|| anyhow!("no shared prefix"))?;
+        if seqs.len() > self.free_slots.len() {
+            bail!("prefill wave {} exceeds free slots {}", seqs.len(), self.free_slots.len());
+        }
+        // Assign slots and build the [B, Lq] token matrix.
+        let mut tokens = vec![0i32; self.b * self.lq];
+        let mut qlens = vec![1i32; self.b]; // dummy slots: 1 token
+        let mut wave_slots = Vec::new();
+        for &(seq, prompt_len) in seqs {
+            let slot = self.free_slots.pop().expect("checked above");
+            self.slot_of.insert(seq, slot);
+            wave_slots.push((seq, slot));
+            let qlen = prompt_len.clamp(1, self.lq.min(self.ln));
+            qlens[slot] = qlen as i32;
+            let q = self.question_tokens(seq, qlen);
+            tokens[slot * self.lq..slot * self.lq + qlen].copy_from_slice(&q);
+        }
+        let tokens_l = literal_i32(&[self.b, self.lq], &tokens)?;
+        let qlens_l = literal_i32(&[self.b], &qlens)?;
+        let len_l = literal_i32(&[1], &[shared.len])?;
+        let mut args: Vec<&Literal> = vec![&tokens_l, &qlens_l, &len_l, &shared.k, &shared.v];
+        args.extend(self.weights.iter());
+        let out = self.rt.execute_ref(&self.prefill_req_name, &args)?;
+        // outputs: ckv_init [Lyr,B,Lq,Dl], krope_init [Lyr,B,Lq,Dr],
+        //          first_tokens [B]
+        let ckv_init = to_vec_f32(&out[0])?;
+        let krope_init = to_vec_f32(&out[1])?;
+        let first = to_vec_i32(&out[2])?;
+        for &(seq, slot) in &wave_slots {
+            let qlen = qlens[slot] as usize;
+            for l in 0..self.layers {
+                for p in 0..qlen {
+                    let src = ((l * self.b + slot) * self.lq + p) * self.dl;
+                    let dst = ((l * self.b + slot) * self.ln + p) * self.dl;
+                    self.ckv[dst..dst + self.dl]
+                        .copy_from_slice(&ckv_init[src..src + self.dl]);
+                    let src_r = ((l * self.b + slot) * self.lq + p) * self.dr;
+                    let dst_r = ((l * self.b + slot) * self.ln + p) * self.dr;
+                    self.krope[dst_r..dst_r + self.dr]
+                        .copy_from_slice(&krope_init[src_r..src_r + self.dr]);
+                }
+            }
+            self.lengths[slot] = qlens[slot];
+            self.last_token[slot] = first[slot];
+            self.generated.entry(seq).or_default().push(first[slot]);
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome> {
+        let t0 = Instant::now();
+        let shared = self.shared.as_ref().ok_or_else(|| anyhow!("no shared prefix"))?;
+        let name = self
+            .decode_names
+            .get(&batch.kernel)
+            .ok_or_else(|| anyhow!("no decode artifact for {:?}", batch.kernel))?
+            .clone();
+        // Guard: every sequence's cache (suffix + 1 new token) must fit.
+        for &seq in &batch.seqs {
+            let slot = *self
+                .slot_of
+                .get(&seq)
+                .ok_or_else(|| anyhow!("sequence {seq} not prefilled"))?;
+            if self.lengths[slot] as usize >= self.ln {
+                bail!("sequence {seq} exceeded engine cache Ln={}", self.ln);
+            }
+        }
+        let tokens_l = literal_i32(&[self.b], &self.last_token)?;
+        let lens_l = literal_i32(&[self.b], &self.lengths)?;
+        let sl_l = literal_i32(&[1], &[shared.len])?;
+        let (ckv_l, krope_l) = self.cache_literals()?;
+        let (sa, sb): (&Literal, &Literal) = match batch.kernel {
+            KernelKind::Absorb => (&shared.ckv, &shared.krope),
+            _ => (&shared.k, &shared.v),
+        };
+        let mut args: Vec<&Literal> = vec![&tokens_l, &lens_l, &sl_l, sa, sb, &ckv_l, &krope_l];
+        args.extend(self.weights.iter());
+        let out = self.rt.execute_ref(&name, &args)?;
+        let next = to_vec_i32(&out[0])?;
+        let new_ckv = to_vec_f32(&out[1])?; // [Lyr, B, Dl]
+        let new_krope = to_vec_f32(&out[2])?; // [Lyr, B, Dr]
+        // Scatter this step's entries and advance active slots only.
+        for &seq in &batch.seqs {
+            let slot = self.slot_of[&seq];
+            let pos = self.lengths[slot] as usize;
+            for l in 0..self.layers {
+                let src = (l * self.b + slot) * self.dl;
+                let dst = ((l * self.b + slot) * self.ln + pos) * self.dl;
+                self.ckv[dst..dst + self.dl].copy_from_slice(&new_ckv[src..src + self.dl]);
+                let src_r = (l * self.b + slot) * self.dr;
+                let dst_r = ((l * self.b + slot) * self.ln + pos) * self.dr;
+                self.krope[dst_r..dst_r + self.dr]
+                    .copy_from_slice(&new_krope[src_r..src_r + self.dr]);
+            }
+            self.lengths[slot] += 1;
+            self.last_token[slot] = next[slot];
+            self.generated.entry(seq).or_default().push(next[slot]);
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        let mut breakdown = BreakdownTimers::default();
+        breakdown.other = seconds;
+        Ok(IterationOutcome { seconds, breakdown })
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        if let Some(slot) = self.slot_of.remove(&seq) {
+            self.lengths[slot] = 0;
+            self.last_token[slot] = 0;
+            self.free_slots.push(slot);
+        }
+    }
+
+    fn max_batch(&self) -> usize {
+        self.b
+    }
+}

@@ -1,0 +1,255 @@
+//! Parser for `artifacts/manifest.json` — the contract between the
+//! Python AOT compiler and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" | "i32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype not a string"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub variant: Option<String>,
+    pub config: Option<String>,
+    pub dims: BTreeMap<String, usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactInfo {
+    pub fn dim(&self, name: &str) -> Result<usize> {
+        self.dims
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("artifact {} has no dim {name:?}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightsInfo {
+    pub file: String,
+    pub names: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub weights: BTreeMap<String, WeightsInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = json::parse(text)?;
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts not array"))? {
+            let dims = a
+                .get("dims")
+                .and_then(|d| d.as_obj())
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.push(ArtifactInfo {
+                name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                kind: a.req("kind")?.as_str().unwrap_or_default().to_string(),
+                variant: a.get("variant").and_then(|v| v.as_str()).map(String::from),
+                config: a.get("config").and_then(|v| v.as_str()).map(String::from),
+                dims,
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        let mut weights = BTreeMap::new();
+        if let Some(w) = j.get("weights").and_then(|w| w.as_obj()) {
+            for (k, v) in w {
+                weights.insert(
+                    k.clone(),
+                    WeightsInfo {
+                        file: v.req("file")?.as_str().unwrap_or_default().to_string(),
+                        names: v
+                            .req("names")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|x| x.as_str().map(String::from))
+                            .collect(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { dir, artifacts, weights })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// All artifacts of a kind (and optionally variant/config).
+    pub fn select(
+        &self,
+        kind: &str,
+        variant: Option<&str>,
+        config: Option<&str>,
+    ) -> Vec<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .filter(|a| variant.is_none() || a.variant.as_deref() == variant)
+            .filter(|a| config.is_none() || a.config.as_deref() == config)
+            .collect()
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+/// Default artifacts directory: `$TYPHOON_ARTIFACTS` or `./artifacts`
+/// relative to the crate root / current dir.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("TYPHOON_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    for base in [".", "..", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "attn_typhoon_sim_b4_s1024_n256", "file": "a.hlo.txt",
+         "kind": "attention", "variant": "typhoon", "config": "sim",
+         "dims": {"b": 4, "ls": 1024, "ln": 256},
+         "inputs": [{"shape": [4, 8, 64], "dtype": "f32"},
+                    {"shape": [4], "dtype": "s32"}],
+         "outputs": [{"shape": [4, 8, 64], "dtype": "f32"}]},
+        {"name": "expand_sim_n1024", "file": "e.hlo.txt", "kind": "expand",
+         "config": "sim", "dims": {"n": 1024}, "inputs": [], "outputs": []}
+      ],
+      "weights": {"tiny": {"file": "tiny_weights.npz", "names": ["embedding", "w_qa"]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("attn_typhoon_sim_b4_s1024_n256").unwrap();
+        assert_eq!(a.dim("b").unwrap(), 4);
+        assert_eq!(a.inputs[0].shape, vec![4, 8, 64]);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(m.weights["tiny"].names, vec!["embedding", "w_qa"]);
+    }
+
+    #[test]
+    fn select_filters() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.select("attention", Some("typhoon"), Some("sim")).len(), 1);
+        assert_eq!(m.select("attention", Some("absorb"), None).len(), 0);
+        assert_eq!(m.select("expand", None, None).len(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.find("nope").is_err());
+    }
+
+    /// The real manifest (if artifacts are built) parses cleanly.
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(m.artifact_path(a).exists(), "missing {}", a.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! The PJRT runtime: loads AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them from the Rust request path (Python is never on
+//! the hot path).
+
+pub mod client;
+pub mod engine;
+pub mod manifest;
+
+pub use client::{literal_f32, literal_i32, random_for_spec, to_vec_f32, to_vec_i32, PjrtRuntime};
+pub use engine::TinyModelEngine;
+pub use manifest::{default_artifacts_dir, ArtifactInfo, Dtype, Manifest, TensorSpec};

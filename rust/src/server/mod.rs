@@ -1,0 +1,221 @@
+//! Thread-based inference server: a worker thread owns the coordinator
+//! + engine; clients submit requests over a channel and receive
+//! completions on per-request channels.
+//!
+//! (The crate registry is offline in this environment, so this is a
+//! std-thread + mpsc event loop rather than a tokio service; the
+//! architecture — Rust event loop owning a PJRT engine, zero Python on
+//! the request path — is identical.)
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Coordinator, Engine};
+use crate::kvcache::SeqId;
+use crate::workload::Request;
+
+/// Completion notification for one request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub request_id: u64,
+    pub seq_id: SeqId,
+    pub generated_tokens: usize,
+    /// End-to-end latency in engine seconds (queue + prefill + decode).
+    pub latency: f64,
+}
+
+enum Msg {
+    Submit { req: Request, reply: Sender<Completion> },
+    Shutdown,
+}
+
+/// Final run statistics returned at shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub tokens_generated: u64,
+    pub requests_completed: u64,
+    pub decode_iterations: u64,
+    pub elapsed_seconds: f64,
+    pub throughput: f64,
+}
+
+pub struct InferenceServer {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<Result<ServerStats>>>,
+}
+
+impl InferenceServer {
+    /// Start the worker.  `make_coordinator` runs *inside* the worker
+    /// thread (PJRT handles are not Send); it must also install the
+    /// shared prefix.
+    pub fn start<E, F>(make_coordinator: F) -> Self
+    where
+        E: Engine,
+        F: FnOnce() -> Result<Coordinator<E>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn(move || worker(make_coordinator()?, rx));
+        InferenceServer { tx, handle: Some(handle) }
+    }
+
+    /// Submit a request; returns the channel the completion arrives on.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Completion>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit { req, reply })
+            .map_err(|_| anyhow!("server is down"))?;
+        Ok(rx)
+    }
+
+    /// Graceful shutdown: drains in-flight work, returns statistics.
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .map_err(|_| anyhow!("server thread panicked"))?
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker<E: Engine>(
+    mut coord: Coordinator<E>,
+    rx: Receiver<Msg>,
+) -> Result<ServerStats> {
+    use std::collections::HashMap;
+    let mut replies: HashMap<SeqId, (u64, Sender<Completion>)> = HashMap::new();
+    let mut shutting_down = false;
+    loop {
+        // Drain the mailbox: block briefly when idle, never when busy.
+        let has_work = coord.running() > 0 || coord.queued() > 0;
+        let first = if has_work || shutting_down {
+            rx.try_recv().ok()
+        } else {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => Some(Msg::Shutdown),
+            }
+        };
+        let mut msg = first;
+        while let Some(m) = msg {
+            match m {
+                Msg::Submit { req, reply } => {
+                    let seq = coord.submit(&req)?;
+                    replies.insert(seq, (req.id, reply));
+                }
+                Msg::Shutdown => shutting_down = true,
+            }
+            msg = rx.try_recv().ok();
+        }
+
+        let worked = coord.step()?;
+        for seq in coord.take_finished() {
+            if let Some((request_id, reply)) = replies.remove(&seq) {
+                let s = coord.sequence(seq).expect("finished seq exists");
+                let _ = reply.send(Completion {
+                    request_id,
+                    seq_id: seq,
+                    generated_tokens: s.generated,
+                    latency: s.latency().unwrap_or(0.0),
+                });
+            }
+        }
+        if shutting_down && !worked && coord.running() == 0 && coord.queued() == 0 {
+            let m = &coord.metrics;
+            return Ok(ServerStats {
+                tokens_generated: m.tokens_generated,
+                requests_completed: m.requests_completed,
+                decode_iterations: m.decode_iterations,
+                elapsed_seconds: m.elapsed(),
+                throughput: m.throughput(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::sim;
+    use crate::config::{KernelKind, ServingConfig};
+    use crate::coordinator::engine::NullEngine;
+    use crate::coordinator::KernelPolicy;
+    use crate::kvcache::KvCacheManager;
+
+    fn start_test_server() -> InferenceServer {
+        InferenceServer::start(move || {
+            let cfg = ServingConfig {
+                block_size: 16,
+                max_batch: 4,
+                max_seq_len: 256,
+                total_blocks: 1024,
+                ..Default::default()
+            };
+            let policy = KernelPolicy::with_threshold(KernelKind::Typhoon, 2);
+            let kv = KvCacheManager::new(sim(), cfg.total_blocks, cfg.block_size);
+            let mut c = Coordinator::new(
+                cfg,
+                policy,
+                kv,
+                NullEngine { prefill_seconds: 0.001, decode_seconds: 0.001 },
+            )?;
+            c.set_shared_prefix(&(0..64u32).collect::<Vec<_>>())?;
+            Ok(c)
+        })
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let server = start_test_server();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                server
+                    .submit(Request { id: i, prompt_tokens: 8, max_new_tokens: 4 })
+                    .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let c = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(c.request_id, i as u64);
+            assert_eq!(c.generated_tokens, 4);
+            assert!(c.latency > 0.0);
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests_completed, 6);
+        assert_eq!(stats.tokens_generated, 24);
+    }
+
+    #[test]
+    fn shutdown_drains_inflight() {
+        let server = start_test_server();
+        let rx = server
+            .submit(Request { id: 0, prompt_tokens: 4, max_new_tokens: 8 })
+            .unwrap();
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests_completed, 1);
+        let c = rx.try_recv().unwrap();
+        assert_eq!(c.generated_tokens, 8);
+    }
+
+    #[test]
+    fn drop_without_shutdown_is_clean() {
+        let server = start_test_server();
+        let _rx = server
+            .submit(Request { id: 0, prompt_tokens: 4, max_new_tokens: 2 })
+            .unwrap();
+        drop(server); // must not hang or panic
+    }
+}

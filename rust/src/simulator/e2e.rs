@@ -1,0 +1,101 @@
+//! End-to-end token-generation-rate estimation (paper Table 3).
+//!
+//! The paper measures attention on a GPU and takes the non-attention
+//! per-iteration time from DeepSeek's published profile data; we do the
+//! same arithmetic with simulated attention times and the 28.1 ms
+//! non-attention constant implied by Table 3 itself (127.2 - 99.1 ms).
+
+use anyhow::Result;
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::workload::{Dataset, SystemPrompt};
+
+use super::serving_sim::{run_experiment, SimParams};
+
+/// One Table-3 row for one kernel.
+#[derive(Clone, Debug)]
+pub struct TgrEntry {
+    /// Full-model attention time per decode iteration, ms.
+    pub attention_ms: f64,
+    /// Attention + non-attention time, ms.
+    pub total_ms: f64,
+    /// Token generation rate, kToken/s (batch / total time).
+    pub tgr_ktok_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TgrRow {
+    pub prompt: &'static str,
+    pub baseline: TgrEntry, // FlashMLA-analog (absorb-only)
+    pub typhoon: TgrEntry,
+}
+
+/// GPU spec calibrated so the absorb baseline's Prompt-A attention time
+/// lands near the paper's measured 99.1 ms (real kernels achieve ~60%
+/// of peak; the ideal roofline would give ~57 ms).  Used for Table 3
+/// regeneration only; Eq. 1 and the roofline figures use ideal specs,
+/// as the paper does.
+pub fn gpu_h800_calibrated() -> HardwareSpec {
+    let mut hw = crate::config::hardware::gpu_h800();
+    hw.name = "gpu-h800-calibrated";
+    hw.compute_efficiency = 0.60;
+    hw.bandwidth_efficiency = 0.80;
+    hw
+}
+
+pub fn tgr_row(
+    model: &ModelConfig,
+    hw: &HardwareSpec,
+    dataset: &Dataset,
+    prompt: &SystemPrompt,
+    batch: usize,
+    max_requests: Option<usize>,
+) -> Result<TgrRow> {
+    let layers = model.n_layers as f64;
+    let entry = |kernel: KernelKind| -> Result<TgrEntry> {
+        let mut p = SimParams::new(model.clone(), hw.clone(), kernel, batch);
+        p.max_requests = max_requests;
+        let r = run_experiment(&p, dataset, prompt)?;
+        let attention_ms = r.mean_iter_seconds * layers * 1e3;
+        let total_ms = attention_ms + model.other_layer_ms;
+        Ok(TgrEntry {
+            attention_ms,
+            total_ms,
+            tgr_ktok_s: batch as f64 / total_ms, // B tokens per total_ms => ktok/s
+        })
+    };
+    Ok(TgrRow {
+        prompt: prompt.name,
+        baseline: entry(KernelKind::Absorb)?,
+        typhoon: entry(KernelKind::Typhoon)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::deepseek_v3;
+    use crate::workload::datasets::mmlu;
+    use crate::workload::prompts::{PROMPT_A, PROMPT_C};
+
+    /// Table 3 shape: typhoon's end-to-end TGR gain is largest for
+    /// Prompt A (~1.48x in the paper) and smaller for Prompt C (~1.1x).
+    #[test]
+    fn tgr_speedup_ordering() {
+        let model = deepseek_v3();
+        let hw = gpu_h800_calibrated();
+        let a = tgr_row(&model, &hw, &mmlu(), &PROMPT_A, 128, Some(384)).unwrap();
+        let c = tgr_row(&model, &hw, &mmlu(), &PROMPT_C, 128, Some(384)).unwrap();
+        let speedup_a = a.typhoon.tgr_ktok_s / a.baseline.tgr_ktok_s;
+        let speedup_c = c.typhoon.tgr_ktok_s / c.baseline.tgr_ktok_s;
+        assert!(speedup_a > speedup_c, "A {speedup_a} vs C {speedup_c}");
+        assert!(speedup_a > 1.2, "prompt A speedup {speedup_a}");
+        assert!(speedup_c > 1.0, "prompt C speedup {speedup_c}");
+        // Attention time with prompt A in the right decade (paper: 99.1ms).
+        assert!(
+            a.baseline.attention_ms > 40.0 && a.baseline.attention_ms < 200.0,
+            "{}",
+            a.baseline.attention_ms
+        );
+    }
+}

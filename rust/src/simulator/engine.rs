@@ -1,0 +1,159 @@
+//! `SimEngine`: the coordinator engine that *models* execution time via
+//! the paper's Table-1 cost formulas + roofline, instead of running
+//! kernels.  This is the substitution for the Ascend NPU / H800 GPU
+//! testbeds (DESIGN.md §6): the paper itself validates that these
+//! formulas match msprof-measured runtimes to within a few percent
+//! (Fig. 4 discussion), and the scheduling/policy code driven here is
+//! the same code the real PJRT engine runs under.
+
+use anyhow::Result;
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::coordinator::{DecodeBatch, Engine, IterationOutcome};
+use crate::costmodel::exec_time::component_time;
+use crate::costmodel::flops::{attention_cost, AttentionWorkload};
+use crate::kvcache::{PrefixId, SeqId};
+use crate::metrics::BreakdownTimers;
+
+pub struct SimEngine {
+    pub cfg: ModelConfig,
+    pub hw: HardwareSpec,
+    /// Model prefill as compute-bound naive attention + projections.
+    pub include_prefill: bool,
+    shared_len: usize,
+}
+
+impl SimEngine {
+    pub fn new(cfg: ModelConfig, hw: HardwareSpec) -> Self {
+        SimEngine { cfg, hw, include_prefill: true, shared_len: 0 }
+    }
+
+    /// Per-layer decode-attention time of one iteration with mixed
+    /// per-request context lengths.  The shared part costs once per
+    /// batch (B queries x one stream); non-shared parts are summed per
+    /// request at their individual lengths.
+    fn iteration_time(&self, batch: &DecodeBatch) -> (f64, BreakdownTimers) {
+        let b = batch.seqs.len() as u64;
+        // Shared component at the true batch size (l_n = 0 isolates it).
+        let shared_wl = AttentionWorkload::decode(b, batch.shared_len as u64, 0);
+        let shared_cost = attention_cost(&self.cfg, batch.kernel, &shared_wl);
+        // Non-shared: per request at its own context length (B=1 each);
+        // the +1 is this step's token (scattered before attention).
+        let mut non_shared = crate::costmodel::flops::Component::default();
+        for &l in &batch.context_lens {
+            let wl = AttentionWorkload::decode(1, 0, l as u64 + 1);
+            let c = attention_cost(&self.cfg, batch.kernel, &wl);
+            non_shared = non_shared.add(c.non_shared);
+        }
+        let mut bd = BreakdownTimers::default();
+        bd.stage1_attn = component_time(&shared_cost.shared, &self.hw);
+        bd.stage2_attn = component_time(&non_shared, &self.hw);
+        bd.proj_kvb1 = component_time(&shared_cost.proj_kvb1, &self.hw);
+        bd.proj_kvb2 = component_time(&shared_cost.proj_kvb2, &self.hw);
+        bd.combine = component_time(&shared_cost.combine, &self.hw);
+        (bd.total(), bd)
+    }
+}
+
+impl Engine for SimEngine {
+    fn prepare_shared(
+        &mut self,
+        _prefix: PrefixId,
+        tokens: &[u32],
+        _kernel: KernelKind,
+    ) -> Result<f64> {
+        self.shared_len = tokens.len();
+        if !self.include_prefill {
+            return Ok(0.0);
+        }
+        // Causal prefill over Ls tokens: ~Ls^2/2 context pairs, naive
+        // formulation (compute-bound).  The typhoon expansion is free —
+        // K/V are computed by the naive prefill anyway (paper §3.1).
+        let ls = tokens.len() as f64;
+        let macs = 0.5 * ls * ls * self.cfg.naive_factor() as f64;
+        Ok(macs / self.hw.macs_per_sec())
+    }
+
+    fn prefill_requests(&mut self, seqs: &[(SeqId, usize)]) -> Result<f64> {
+        if !self.include_prefill {
+            return Ok(0.0);
+        }
+        // Each admitted question attends to the shared prefix + itself.
+        let mut macs = 0.0;
+        for &(_, qlen) in seqs {
+            let q = qlen as f64;
+            macs +=
+                q * (self.shared_len as f64 + 0.5 * q) * self.cfg.naive_factor() as f64;
+        }
+        Ok(macs / self.hw.macs_per_sec())
+    }
+
+    fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome> {
+        let (seconds, breakdown) = self.iteration_time(batch);
+        Ok(IterationOutcome { seconds, breakdown })
+    }
+
+    fn release(&mut self, _seq: SeqId) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+
+    fn batch(kernel: KernelKind, b: usize, shared: usize, ln: usize) -> DecodeBatch {
+        DecodeBatch {
+            seqs: (0..b as u64).collect(),
+            kernel,
+            shared_len: shared,
+            context_lens: vec![ln; b],
+        }
+    }
+
+    #[test]
+    fn typhoon_faster_than_absorb_at_large_batch() {
+        let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
+        let t = e.decode(&batch(KernelKind::Typhoon, 512, 4096, 512)).unwrap();
+        let a = e.decode(&batch(KernelKind::Absorb, 512, 4096, 512)).unwrap();
+        assert!(t.seconds < a.seconds, "t={} a={}", t.seconds, a.seconds);
+    }
+
+    #[test]
+    fn absorb_faster_at_small_batch() {
+        let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
+        let t = e.decode(&batch(KernelKind::Typhoon, 8, 4096, 512)).unwrap();
+        let a = e.decode(&batch(KernelKind::Absorb, 8, 4096, 512)).unwrap();
+        assert!(a.seconds < t.seconds);
+    }
+
+    #[test]
+    fn ragged_lengths_sum_not_max() {
+        let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
+        let uniform = e
+            .decode(&DecodeBatch {
+                seqs: vec![0, 1],
+                kernel: KernelKind::Absorb,
+                shared_len: 0,
+                context_lens: vec![100, 100],
+            })
+            .unwrap();
+        let ragged = e
+            .decode(&DecodeBatch {
+                seqs: vec![0, 1],
+                kernel: KernelKind::Absorb,
+                shared_len: 0,
+                context_lens: vec![180, 20],
+            })
+            .unwrap();
+        assert!((uniform.seconds - ragged.seconds).abs() / uniform.seconds < 1e-9);
+    }
+
+    #[test]
+    fn prefill_scales_quadratically() {
+        let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
+        let t1 = e.prepare_shared(0, &vec![0; 1000], KernelKind::Typhoon).unwrap();
+        let t2 = e.prepare_shared(0, &vec![0; 2000], KernelKind::Typhoon).unwrap();
+        assert!((t2 / t1 - 4.0).abs() < 1e-9);
+    }
+}

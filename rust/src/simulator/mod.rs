@@ -1,0 +1,11 @@
+//! The hardware simulator: replays the paper's serving experiments with
+//! cost-model timing on NPU/GPU hardware specs (the testbed
+//! substitution of DESIGN.md §6).
+
+pub mod e2e;
+pub mod engine;
+pub mod serving_sim;
+
+pub use e2e::{gpu_h800_calibrated, tgr_row, TgrEntry, TgrRow};
+pub use engine::SimEngine;
+pub use serving_sim::{run_experiment, run_kernel_comparison, SimParams, SimReport};

@@ -1,0 +1,188 @@
+//! The serving simulator: reproduces the paper's experimental protocol
+//! (§4) — continuous batching with a paged KV-cache over a dataset,
+//! repeated per (model x hardware x prompt x batch x kernel) — with the
+//! cost-model engine supplying iteration times.
+
+use anyhow::Result;
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig, ServingConfig};
+use crate::coordinator::{Coordinator, KernelPolicy};
+use crate::costmodel::threshold::batch_threshold;
+use crate::kvcache::KvCacheManager;
+use crate::metrics::BreakdownTimers;
+use crate::workload::{Dataset, RequestGenerator, SystemPrompt};
+
+use super::engine::SimEngine;
+
+/// Parameters of one simulated experiment.
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    pub model: ModelConfig,
+    pub hw: HardwareSpec,
+    pub kernel: KernelKind,
+    pub batch: usize,
+    /// Cap on requests processed (None = the whole dataset split, as in
+    /// the paper; a cap keeps CI fast).
+    pub max_requests: Option<usize>,
+    pub seed: u64,
+    /// Include prefill time in the modeled clock (the paper's
+    /// throughput counts decode iterations; prefill is excluded there).
+    pub include_prefill: bool,
+}
+
+impl SimParams {
+    pub fn new(model: ModelConfig, hw: HardwareSpec, kernel: KernelKind, batch: usize) -> Self {
+        SimParams {
+            model,
+            hw,
+            kernel,
+            batch,
+            max_requests: None,
+            seed: 42,
+            include_prefill: false,
+        }
+    }
+}
+
+/// Result of one simulated experiment.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub tokens: u64,
+    pub decode_seconds: f64,
+    /// Generated tokens per second per layer (Figs. 2-3 y-axis).
+    pub throughput: f64,
+    pub iterations: u64,
+    pub mean_batch: f64,
+    pub breakdown: BreakdownTimers,
+    pub typhoon_iters: u64,
+    pub absorb_iters: u64,
+    /// Mean attention time per decode iteration (seconds, per layer).
+    pub mean_iter_seconds: f64,
+}
+
+/// Run the paper's protocol once.
+pub fn run_experiment(
+    params: &SimParams,
+    dataset: &Dataset,
+    prompt: &SystemPrompt,
+) -> Result<SimReport> {
+    let block_size = 128; // paper: paged KV with block size 128
+    let max_seq_len = 2048; // covers question + answer for all datasets
+    // Pool: full batch at max length + the shared prefix + slack.
+    let prefix_blocks = prompt.tokens.div_ceil(block_size);
+    let total_blocks = params.batch * (max_seq_len / block_size) + prefix_blocks + 64;
+    let cfg = ServingConfig {
+        block_size,
+        max_batch: params.batch,
+        max_seq_len,
+        total_blocks,
+        kernel: params.kernel,
+        ..Default::default()
+    };
+    let b_theta = batch_threshold(&params.model, &params.hw, 1);
+    let policy = KernelPolicy::with_threshold(params.kernel, b_theta);
+    let kv = KvCacheManager::new(params.model.clone(), total_blocks, block_size);
+    let mut engine = SimEngine::new(params.model.clone(), params.hw.clone());
+    engine.include_prefill = params.include_prefill;
+    let mut coord = Coordinator::new(cfg, policy, kv, engine)?;
+
+    // The shared prefix: register by token count (content-free model).
+    let prefix_tokens = prompt.token_ids(50_000);
+    coord.set_shared_prefix(&prefix_tokens)?;
+
+    let mut gen = RequestGenerator::new(dataset, prompt.clone(), params.seed);
+    if let Some(cap) = params.max_requests {
+        gen = gen.take(cap);
+    }
+    while let Some(req) = gen.next_request() {
+        coord.submit(&req)?;
+    }
+    coord.run_to_completion()?;
+
+    let m = &coord.metrics;
+    let decode_seconds = m.iteration_time.mean() * m.decode_iterations as f64;
+    Ok(SimReport {
+        tokens: m.tokens_generated,
+        decode_seconds,
+        throughput: if decode_seconds > 0.0 {
+            m.tokens_generated as f64 / decode_seconds
+        } else {
+            0.0
+        },
+        iterations: m.decode_iterations,
+        mean_batch: m.batch_occupancy.mean(),
+        breakdown: m.breakdown.clone(),
+        typhoon_iters: m.typhoon_iters,
+        absorb_iters: m.absorb_iters,
+        mean_iter_seconds: m.iteration_time.mean(),
+    })
+}
+
+/// Convenience: run all three kernels on the same workload and return
+/// (typhoon, absorb, naive) reports.
+pub fn run_kernel_comparison(
+    model: &ModelConfig,
+    hw: &HardwareSpec,
+    batch: usize,
+    dataset: &Dataset,
+    prompt: &SystemPrompt,
+    max_requests: Option<usize>,
+) -> Result<[SimReport; 3]> {
+    let mut out = Vec::new();
+    for kernel in [KernelKind::Typhoon, KernelKind::Absorb, KernelKind::Naive] {
+        let mut p = SimParams::new(model.clone(), hw.clone(), kernel, batch);
+        p.max_requests = max_requests;
+        out.push(run_experiment(&p, dataset, prompt)?);
+    }
+    Ok(out.try_into().map_err(|_| anyhow::anyhow!("3 reports")).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+    use crate::workload::datasets::mmlu;
+    use crate::workload::prompts::PROMPT_C;
+
+    fn quick(kernel: KernelKind, batch: usize) -> SimReport {
+        let mut p = SimParams::new(deepseek_v3(), ascend_npu(), kernel, batch);
+        p.max_requests = Some(batch * 3);
+        run_experiment(&p, &mmlu(), &PROMPT_C).unwrap()
+    }
+
+    #[test]
+    fn conservation_and_occupancy() {
+        let r = quick(KernelKind::Typhoon, 64);
+        assert!(r.tokens > 0);
+        assert!(r.mean_batch > 32.0, "batch stays mostly full: {}", r.mean_batch);
+        assert!(r.throughput > 0.0);
+    }
+
+    /// The paper's headline: typhoon beats both baselines at large batch
+    /// with a long shared prompt.
+    #[test]
+    fn typhoon_wins_at_large_batch() {
+        let t = quick(KernelKind::Typhoon, 256);
+        let a = quick(KernelKind::Absorb, 256);
+        let n = quick(KernelKind::Naive, 256);
+        assert!(
+            t.throughput > a.throughput && t.throughput > n.throughput,
+            "t={} a={} n={}",
+            t.throughput,
+            a.throughput,
+            n.throughput
+        );
+    }
+
+    /// Below B_theta typhoon degenerates to absorb-only iterations.
+    #[test]
+    fn fallback_engaged_below_threshold() {
+        let r = quick(KernelKind::Typhoon, 32); // B_theta = 61 on Ascend
+        assert_eq!(r.typhoon_iters, 0);
+        assert!(r.absorb_iters > 0);
+        let a = quick(KernelKind::Absorb, 32);
+        let rel = (r.throughput - a.throughput).abs() / a.throughput;
+        assert!(rel < 0.05, "fallback ≈ absorb baseline, rel diff {rel}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Tiny criterion-style benchmark harness (offline environment: no
+//! criterion crate).  `cargo bench` targets use this via
+//! `harness = false` binaries.
+//!
+//! Protocol per benchmark: warm up for a fixed wall-clock budget, then
+//! run measured iterations until both a minimum iteration count and a
+//! minimum measuring time are reached; report mean ± std and median.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{human_time, Percentiles, Summary};
+
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_iters: u32,
+    pub min_time: Duration,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            min_iters: 10,
+            min_time: Duration::from_secs(1),
+            max_iters: 10_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<48} {:>12} ± {:<10} (median {:>10}, min {:>10}, n={})",
+            self.name,
+            human_time(self.mean_s),
+            human_time(self.std_s),
+            human_time(self.median_s),
+            human_time(self.min_s),
+            self.iters,
+        )
+    }
+}
+
+pub struct Bench {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // `cargo bench -- <filter>` passes the filter as an argument.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench { cfg: BenchConfig::default(), results: Vec::new(), filter }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        let mut b = Self::new();
+        b.cfg = cfg;
+        b
+    }
+
+    pub fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<BenchResult> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // Measure.
+        let mut summary = Summary::new();
+        let mut pct = Percentiles::default();
+        let measure_start = Instant::now();
+        let mut iters = 0u64;
+        while (iters < self.cfg.min_iters as u64
+            || measure_start.elapsed() < self.cfg.min_time)
+            && iters < self.cfg.max_iters as u64
+        {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_secs_f64();
+            summary.push(dt);
+            pct.push(dt);
+            iters += 1;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: summary.mean(),
+            std_s: summary.std(),
+            median_s: pct.median(),
+            min_s: summary.min(),
+        };
+        println!("{}", result.report_line());
+        self.results.push(result.clone());
+        Some(result)
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as JSON for downstream tooling.
+    pub fn write_json(&self, path: &str) -> anyhow::Result<()> {
+        use super::json::Json;
+        let arr = Json::arr(self.results.iter().map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("iters", Json::num(r.iters as f64)),
+                ("mean_s", Json::num(r.mean_s)),
+                ("std_s", Json::num(r.std_s)),
+                ("median_s", Json::num(r.median_s)),
+                ("min_s", Json::num(r.min_s)),
+            ])
+        }));
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, arr.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup: Duration::from_millis(1),
+            min_iters: 5,
+            min_time: Duration::from_millis(5),
+            max_iters: 1000,
+        });
+        let mut x = 0u64;
+        let r = b
+            .bench("noop", || {
+                x = x.wrapping_add(std::hint::black_box(1));
+            })
+            .unwrap();
+        assert!(r.iters >= 5);
+        assert!(r.mean_s >= 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained utilities (the crate registry is offline in this
+//! build environment, so PRNG / JSON / CLI / bench harness are local).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,164 @@
+//! Statistical models of the paper's benchmark datasets.
+//!
+//! Substitution (DESIGN.md §6): attention throughput depends only on the
+//! question/answer token-*length* distributions and the arrival pattern,
+//! not on token content, so each dataset is modeled by its published
+//! length statistics.  Lengths are sampled log-normally (token lengths
+//! of NL corpora are approximately log-normal) clipped to observed
+//! ranges.
+
+use crate::util::rng::Rng;
+
+/// A dataset's length model.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: &'static str,
+    /// Mean/σ of ln(question tokens).
+    q_mu: f64,
+    q_sigma: f64,
+    q_range: (usize, usize),
+    /// Mean/σ of ln(answer tokens) — generation length until EOS.
+    a_mu: f64,
+    a_sigma: f64,
+    a_range: (usize, usize),
+    /// Number of examples in the benchmark split.
+    pub size: usize,
+}
+
+/// MMLU (Hendrycks et al., 2021): multiple-choice; short-ish questions
+/// (stem + 4 options, ~100 tokens median), short answers.
+pub fn mmlu() -> Dataset {
+    Dataset {
+        name: "mmlu",
+        q_mu: (100.0f64).ln(),
+        q_sigma: 0.55,
+        q_range: (16, 1024),
+        a_mu: (24.0f64).ln(),
+        a_sigma: 0.6,
+        a_range: (2, 256),
+        size: 14042,
+    }
+}
+
+/// GSM8K (Cobbe et al., 2021): grade-school math; short questions,
+/// longer chain-of-thought answers (~130 tokens median).
+pub fn gsm8k() -> Dataset {
+    Dataset {
+        name: "gsm8k",
+        q_mu: (60.0f64).ln(),
+        q_sigma: 0.4,
+        q_range: (16, 512),
+        a_mu: (130.0f64).ln(),
+        a_sigma: 0.5,
+        a_range: (16, 512),
+        size: 1319,
+    }
+}
+
+/// SimpleQA (Wei et al., 2024): short factual questions, terse answers.
+pub fn simpleqa() -> Dataset {
+    Dataset {
+        name: "simpleqa",
+        q_mu: (20.0f64).ln(),
+        q_sigma: 0.35,
+        q_range: (6, 128),
+        a_mu: (12.0f64).ln(),
+        a_sigma: 0.5,
+        a_range: (1, 128),
+        size: 4326,
+    }
+}
+
+pub fn all_datasets() -> [Dataset; 3] {
+    [mmlu(), gsm8k(), simpleqa()]
+}
+
+pub fn by_name(name: &str) -> Option<Dataset> {
+    match name {
+        "mmlu" => Some(mmlu()),
+        "gsm8k" => Some(gsm8k()),
+        "simpleqa" => Some(simpleqa()),
+        _ => None,
+    }
+}
+
+/// One sampled benchmark example.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Example {
+    pub question_tokens: usize,
+    pub answer_tokens: usize,
+}
+
+impl Dataset {
+    fn clip(x: f64, (lo, hi): (usize, usize)) -> usize {
+        (x.round() as i64).clamp(lo as i64, hi as i64) as usize
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Example {
+        Example {
+            question_tokens: Self::clip(rng.next_lognormal(self.q_mu, self.q_sigma), self.q_range),
+            answer_tokens: Self::clip(rng.next_lognormal(self.a_mu, self.a_sigma), self.a_range),
+        }
+    }
+
+    /// Sample the whole benchmark split (the paper's experiments run
+    /// until the dataset is exhausted).
+    pub fn sample_split(&self, seed: u64) -> Vec<Example> {
+        let mut rng = Rng::new(seed ^ self.name.len() as u64);
+        (0..self.size).map(|_| self.sample(&mut rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn medians_near_model_targets() {
+        let mut rng = Rng::new(7);
+        let ds = mmlu();
+        let mut qs: Vec<usize> = (0..20_000).map(|_| ds.sample(&mut rng).question_tokens).collect();
+        qs.sort();
+        let median = qs[qs.len() / 2] as f64;
+        assert!((median - 100.0).abs() / 100.0 < 0.1, "median {median}");
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut rng = Rng::new(3);
+        for ds in all_datasets() {
+            for _ in 0..5_000 {
+                let e = ds.sample(&mut rng);
+                assert!(e.question_tokens >= ds.q_range.0 && e.question_tokens <= ds.q_range.1);
+                assert!(e.answer_tokens >= ds.a_range.0 && e.answer_tokens <= ds.a_range.1);
+            }
+        }
+    }
+
+    #[test]
+    fn split_is_deterministic_and_full_size() {
+        let ds = gsm8k();
+        let a = ds.sample_split(1);
+        let b = ds.sample_split(1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), ds.size);
+        assert_ne!(a, ds.sample_split(2));
+    }
+
+    #[test]
+    fn gsm8k_answers_longer_than_simpleqa() {
+        let g: f64 = gsm8k()
+            .sample_split(5)
+            .iter()
+            .map(|e| e.answer_tokens as f64)
+            .sum::<f64>()
+            / gsm8k().size as f64;
+        let s: f64 = simpleqa()
+            .sample_split(5)
+            .iter()
+            .map(|e| e.answer_tokens as f64)
+            .sum::<f64>()
+            / simpleqa().size as f64;
+        assert!(g > 3.0 * s, "gsm8k {g} vs simpleqa {s}");
+    }
+}

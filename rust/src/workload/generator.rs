@@ -1,0 +1,120 @@
+//! Request generation: turns (dataset x system prompt) into a stream of
+//! serving requests, reproducing the paper's experimental protocol —
+//! "each experiment starts by randomly sampling questions from a
+//! dataset and forming a batch of queries ... completed queries are
+//! replaced with new questions ... until the entire dataset is
+//! processed" (continuous batching).
+
+use std::collections::VecDeque;
+
+use crate::util::rng::Rng;
+
+use super::datasets::Dataset;
+use super::prompts::SystemPrompt;
+
+/// One inference request (lengths only; token ids are synthesized by
+/// the engine layer when actually executing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Non-shared prompt (the dataset question), tokens.
+    pub prompt_tokens: usize,
+    /// Generation budget until EOS, tokens.
+    pub max_new_tokens: usize,
+}
+
+/// A finite request stream over one dataset split, shuffled.
+#[derive(Debug)]
+pub struct RequestGenerator {
+    queue: VecDeque<Request>,
+    pub prompt: SystemPrompt,
+    total: usize,
+}
+
+impl RequestGenerator {
+    pub fn new(dataset: &Dataset, prompt: SystemPrompt, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut examples = dataset.sample_split(seed);
+        rng.shuffle(&mut examples);
+        let queue: VecDeque<Request> = examples
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Request {
+                id: i as u64,
+                prompt_tokens: e.question_tokens,
+                max_new_tokens: e.answer_tokens,
+            })
+            .collect();
+        let total = queue.len();
+        RequestGenerator { queue, prompt, total }
+    }
+
+    /// Cap the stream length (for fast tests / CPU e2e runs).
+    pub fn take(mut self, n: usize) -> Self {
+        self.queue.truncate(n);
+        self.total = self.queue.len();
+        self
+    }
+
+    pub fn next_request(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Total tokens the full stream will generate (for conservation
+    /// checks in the simulator).
+    pub fn total_new_tokens(&self) -> usize {
+        self.queue.iter().map(|r| r.max_new_tokens).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::datasets::simpleqa;
+    use crate::workload::prompts::PROMPT_C;
+
+    #[test]
+    fn generator_covers_whole_split() {
+        let ds = simpleqa();
+        let mut g = RequestGenerator::new(&ds, PROMPT_C, 42);
+        assert_eq!(g.total(), ds.size);
+        let mut n = 0;
+        while g.next_request().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, ds.size);
+        assert!(g.is_exhausted());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let ds = simpleqa();
+        let mut a = RequestGenerator::new(&ds, PROMPT_C, 1);
+        let mut b = RequestGenerator::new(&ds, PROMPT_C, 1);
+        for _ in 0..50 {
+            assert_eq!(a.next_request(), b.next_request());
+        }
+        let mut c = RequestGenerator::new(&ds, PROMPT_C, 2);
+        let different = (0..50).any(|_| a.next_request() != c.next_request());
+        assert!(different);
+    }
+
+    #[test]
+    fn take_caps_stream() {
+        let g = RequestGenerator::new(&simpleqa(), PROMPT_C, 1).take(10);
+        assert_eq!(g.total(), 10);
+        assert_eq!(g.remaining(), 10);
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload modeling: the paper's benchmark datasets (length
+//! distributions), system prompts (Table 2) and request generation.
+
+pub mod datasets;
+pub mod generator;
+pub mod prompts;
+
+pub use datasets::{all_datasets, Dataset, Example};
+pub use generator::{Request, RequestGenerator};
+pub use prompts::{all_prompts, SystemPrompt, PROMPT_A, PROMPT_B, PROMPT_C};

@@ -1,0 +1,73 @@
+//! System prompts used in the paper's experiments (Table 2).
+//!
+//! Substitution: the paper uses leaked production prompts (Johnson,
+//! 2025); only the *token count* affects attention throughput, so we
+//! model each prompt as a deterministic synthetic token sequence of the
+//! paper's exact length.
+
+/// A shared system prompt.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemPrompt {
+    pub name: &'static str,
+    pub service: &'static str,
+    pub tokens: usize,
+}
+
+/// Table 2, Prompt A: Claude-4, 26472 tokens.
+pub const PROMPT_A: SystemPrompt =
+    SystemPrompt { name: "prompt-a", service: "Claude-4", tokens: 26472 };
+
+/// Table 2, Prompt B: OpenAI/o3, 7069 tokens.
+pub const PROMPT_B: SystemPrompt =
+    SystemPrompt { name: "prompt-b", service: "OpenAI/o3", tokens: 7069 };
+
+/// Table 2, Prompt C: Grok/Personas, 4759 tokens.
+pub const PROMPT_C: SystemPrompt =
+    SystemPrompt { name: "prompt-c", service: "Grok/Personas", tokens: 4759 };
+
+pub fn all_prompts() -> [SystemPrompt; 3] {
+    [PROMPT_A, PROMPT_B, PROMPT_C]
+}
+
+pub fn by_name(name: &str) -> Option<SystemPrompt> {
+    match name {
+        "prompt-a" | "a" => Some(PROMPT_A),
+        "prompt-b" | "b" => Some(PROMPT_B),
+        "prompt-c" | "c" => Some(PROMPT_C),
+        _ => None,
+    }
+}
+
+impl SystemPrompt {
+    /// Deterministic synthetic token ids of the prompt's length
+    /// (seeded by name so different prompts never collide in the radix
+    /// tree).
+    pub fn token_ids(&self, vocab: u32) -> Vec<u32> {
+        let mut rng = crate::util::rng::Rng::new(
+            self.name.bytes().map(|b| b as u64).sum::<u64>(),
+        );
+        (0..self.tokens).map(|_| rng.gen_range(0, vocab as u64) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_token_counts() {
+        assert_eq!(PROMPT_A.tokens, 26472);
+        assert_eq!(PROMPT_B.tokens, 7069);
+        assert_eq!(PROMPT_C.tokens, 4759);
+    }
+
+    #[test]
+    fn token_ids_deterministic_and_distinct() {
+        let a1 = PROMPT_A.token_ids(256);
+        let a2 = PROMPT_A.token_ids(256);
+        assert_eq!(a1, a2);
+        assert_eq!(a1.len(), 26472);
+        let b = PROMPT_B.token_ids(256);
+        assert_ne!(&a1[..100], &b[..100]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//! Skipped (cleanly) when `make artifacts` hasn't been run.
+
+use typhoon_mla::config::{KernelKind, ServingConfig};
+use typhoon_mla::config::model::{sim, tiny};
+use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
+use typhoon_mla::kvcache::KvCacheManager;
+use typhoon_mla::runtime::{
+    default_artifacts_dir, random_for_spec, to_vec_f32, Manifest, PjrtRuntime, TinyModelEngine,
+};
+use typhoon_mla::workload::Request;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+/// All three attention variants, executed through PJRT on identical
+/// logical inputs, must agree — the paper's equivalence claim, verified
+/// end-to-end through the HLO-text -> PJRT path.
+#[test]
+fn attention_variants_agree_through_pjrt() {
+    require_artifacts!();
+    let dir = default_artifacts_dir();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let b = 4usize;
+    let cfg = sim();
+    let (h, dn, dr, dv, dl) =
+        (cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.kv_lora_rank);
+    let (ls, ln) = (1024usize, 256usize);
+
+    // Shared logical inputs.
+    let q_nope = random_for_spec(
+        &typhoon_mla::runtime::TensorSpec { shape: vec![b, h, dn], dtype: typhoon_mla::runtime::Dtype::F32 },
+        1, 0,
+    )
+    .unwrap();
+    let q_rope = typhoon_mla::runtime::client::random_f32(&[b, h, dr], 2, 0.5).unwrap();
+    let ckv_shared = typhoon_mla::runtime::client::random_f32(&[ls, dl], 3, 0.5).unwrap();
+    let krope_shared = typhoon_mla::runtime::client::random_f32(&[ls, dr], 4, 0.5).unwrap();
+    let ckv = typhoon_mla::runtime::client::random_f32(&[b, ln, dl], 5, 0.5).unwrap();
+    let krope = typhoon_mla::runtime::client::random_f32(&[b, ln, dr], 6, 0.5).unwrap();
+    let w1 = typhoon_mla::runtime::client::random_f32(&[h, dn, dl], 7, 0.1).unwrap();
+    let w2 = typhoon_mla::runtime::client::random_f32(&[h, dv, dl], 8, 0.1).unwrap();
+    let shared_len = typhoon_mla::runtime::literal_i32(&[1], &[1000]).unwrap();
+    let lens =
+        typhoon_mla::runtime::literal_i32(&[b], &[256, 100, 17, 1]).unwrap();
+
+    // Expand the shared latent cache via the expand artifact (the
+    // typhoon/naive path's prefill-time expansion).
+    let expand = manifest.select("expand", None, Some("sim"))[0].name.clone();
+    let expanded = rt
+        .execute(&expand, &[&ckv_shared, &krope_shared, &w1, &w2])
+        .unwrap();
+    let (k_sh, v_sh) = (&expanded[0], &expanded[1]);
+
+    // Expand the per-request latent cache for the naive baseline.
+    // (Do it per request through the same artifact by reshaping.)
+    let ckv_flat = to_vec_f32(&ckv).unwrap();
+    let krope_flat = to_vec_f32(&krope).unwrap();
+    let mut k_n = Vec::new();
+    let mut v_n = Vec::new();
+    for r in 0..b {
+        let ckv_r = typhoon_mla::runtime::literal_f32(
+            &[ln, dl],
+            &ckv_flat[r * ln * dl..(r + 1) * ln * dl],
+        )
+        .unwrap();
+        // expand artifact is n=1024; pad Ln=256 to 1024.
+        let mut padded_ckv = ckv_flat[r * ln * dl..(r + 1) * ln * dl].to_vec();
+        padded_ckv.resize(1024 * dl, 0.0);
+        let mut padded_kr = krope_flat[r * ln * dr..(r + 1) * ln * dr].to_vec();
+        padded_kr.resize(1024 * dr, 0.0);
+        let ckv_p = typhoon_mla::runtime::literal_f32(&[1024, dl], &padded_ckv).unwrap();
+        let kr_p = typhoon_mla::runtime::literal_f32(&[1024, dr], &padded_kr).unwrap();
+        let out = rt.execute(&expand, &[&ckv_p, &kr_p, &w1, &w2]).unwrap();
+        let k_full = to_vec_f32(&out[0]).unwrap();
+        let v_full = to_vec_f32(&out[1]).unwrap();
+        let dqk = dn + dr;
+        k_n.extend_from_slice(&k_full[..ln * h * dqk]);
+        v_n.extend_from_slice(&v_full[..ln * h * dv]);
+        drop(ckv_r);
+    }
+    let dqk = dn + dr;
+    let k_n = typhoon_mla::runtime::literal_f32(&[b, ln, h, dqk], &k_n).unwrap();
+    let v_n = typhoon_mla::runtime::literal_f32(&[b, ln, h, dv], &v_n).unwrap();
+
+    let name = |v: &str| format!("attn_{v}_sim_b{b}_s{ls}_n{ln}");
+    let o_typhoon = rt
+        .execute(
+            &name("typhoon"),
+            &[&q_nope, &q_rope, k_sh, v_sh, &shared_len, &ckv, &krope, &lens, &w1, &w2],
+        )
+        .unwrap();
+    let o_absorb = rt
+        .execute(
+            &name("absorb"),
+            &[&q_nope, &q_rope, &ckv_shared, &krope_shared, &shared_len, &ckv, &krope, &lens,
+              &w1, &w2],
+        )
+        .unwrap();
+    let o_naive = rt
+        .execute(
+            &name("naive"),
+            &[&q_nope, &q_rope, k_sh, v_sh, &shared_len, &k_n, &v_n, &lens],
+        )
+        .unwrap();
+
+    let t = to_vec_f32(&o_typhoon[0]).unwrap();
+    let a = to_vec_f32(&o_absorb[0]).unwrap();
+    let n = to_vec_f32(&o_naive[0]).unwrap();
+    assert_eq!(t.len(), b * h * dv);
+    let max_ta = t.iter().zip(&a).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    let max_tn = t.iter().zip(&n).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max_ta < 5e-4, "typhoon vs absorb max diff {max_ta}");
+    assert!(max_tn < 5e-4, "typhoon vs naive max diff {max_tn}");
+    // And they're not trivially zero.
+    assert!(t.iter().any(|x| x.abs() > 1e-3));
+}
+
+/// Full serving stack over the real tiny transformer: coordinator +
+/// paged KV + policy + PJRT engine.  Typhoon and absorb runs must
+/// produce the same tokens (mathematical equivalence at system level).
+#[test]
+fn tiny_model_serving_end_to_end() {
+    require_artifacts!();
+    let dir = default_artifacts_dir();
+
+    let run = |kernel: KernelKind, b_theta: usize| {
+        let engine = TinyModelEngine::new(&dir, kernel).unwrap();
+        let cfg = ServingConfig {
+            block_size: 16,
+            max_batch: 8,
+            max_seq_len: 128,
+            total_blocks: 1024,
+            kernel,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(kernel, b_theta);
+        let kv = KvCacheManager::new(tiny(), cfg.total_blocks, cfg.block_size);
+        let mut c = Coordinator::new(cfg, policy, kv, engine).unwrap();
+        let prompt: Vec<u32> = (0..200u32).map(|i| (i * 7 + 3) % 251 + 1).collect();
+        c.set_shared_prefix(&prompt).unwrap();
+        for i in 0..6 {
+            c.submit(&Request {
+                id: i,
+                prompt_tokens: 8 + (i as usize) * 3,
+                max_new_tokens: 5,
+            })
+            .unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 6);
+        assert_eq!(c.metrics.tokens_generated, 30);
+        let mut gen: Vec<(u64, Vec<i32>)> =
+            c.engine.generated.iter().map(|(k, v)| (*k, v.clone())).collect();
+        gen.sort();
+        gen
+    };
+
+    let typhoon_tokens = run(KernelKind::Typhoon, 1);
+    let absorb_tokens = run(KernelKind::Absorb, 1);
+    assert_eq!(
+        typhoon_tokens, absorb_tokens,
+        "typhoon and absorb must generate identical tokens"
+    );
+    // Fallback path: typhoon config with a high threshold decodes via
+    // absorb kernels but must still match.
+    let fallback_tokens = run(KernelKind::Typhoon, 1000);
+    assert_eq!(typhoon_tokens, fallback_tokens);
+}

@@ -1,0 +1,250 @@
+//! Randomized property tests over the coordination substrate
+//! (self-rolled: the proptest crate is unavailable offline — each test
+//! runs many seeded random scenarios and asserts invariants).
+
+use typhoon_mla::config::model::sim;
+use typhoon_mla::config::{KernelKind, ServingConfig};
+use typhoon_mla::coordinator::engine::NullEngine;
+use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
+use typhoon_mla::kvcache::{BlockAllocator, KvCacheManager, RadixTree};
+use typhoon_mla::util::rng::Rng;
+use typhoon_mla::workload::Request;
+
+/// Allocator fuzz: random allocate/retain/release sequences never leak
+/// or double-count; free+held == total at every step.
+#[test]
+fn allocator_conservation_fuzz() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(seed);
+        let total = 64;
+        let mut alloc = BlockAllocator::new(total, 16);
+        let mut held: Vec<(u32, u32)> = Vec::new(); // (block, refcount)
+        for _ in 0..2000 {
+            match rng.gen_range(0, 3) {
+                0 => {
+                    if let Ok(b) = alloc.allocate() {
+                        held.push((b, 1));
+                    } else {
+                        assert_eq!(alloc.free_blocks(), 0, "spurious exhaustion");
+                    }
+                }
+                1 => {
+                    if !held.is_empty() {
+                        let i = rng.gen_range_usize(0, held.len());
+                        alloc.retain(held[i].0);
+                        held[i].1 += 1;
+                    }
+                }
+                _ => {
+                    if !held.is_empty() {
+                        let i = rng.gen_range_usize(0, held.len());
+                        alloc.release(held[i].0);
+                        held[i].1 -= 1;
+                        if held[i].1 == 0 {
+                            held.swap_remove(i);
+                        }
+                    }
+                }
+            }
+            let distinct_held = held.len();
+            assert_eq!(
+                alloc.free_blocks() + distinct_held,
+                total,
+                "conservation violated (seed {seed})"
+            );
+            for &(b, rc) in &held {
+                assert_eq!(alloc.refcount(b), rc);
+            }
+        }
+    }
+}
+
+/// Radix fuzz: longest-prefix match equals the brute-force oracle over
+/// everything inserted, and blocks length always equals match length.
+#[test]
+fn radix_matches_oracle_fuzz() {
+    for seed in 0..10 {
+        let mut rng = Rng::new(100 + seed);
+        let mut tree = RadixTree::new();
+        let mut corpus: Vec<Vec<u32>> = Vec::new();
+        for i in 0..80u32 {
+            let mut s = if corpus.is_empty() || rng.next_f64() < 0.25 {
+                Vec::new()
+            } else {
+                let b = rng.choose(&corpus);
+                b[..rng.gen_range_usize(0, b.len() + 1)].to_vec()
+            };
+            for _ in 0..rng.gen_range_usize(1, 8) {
+                s.push(rng.gen_range(0, 4) as u32); // tiny alphabet: max overlap
+            }
+            let m = tree.match_prefix(&s);
+            let mut blocks = m.blocks.clone();
+            blocks.extend((blocks.len()..s.len()).map(|j| i * 1000 + j as u32));
+            tree.insert(&s, &blocks);
+            corpus.push(s);
+
+            // Oracle check over random probes.
+            for _ in 0..5 {
+                let probe: Vec<u32> =
+                    (0..rng.gen_range_usize(1, 12)).map(|_| rng.gen_range(0, 4) as u32).collect();
+                let m = tree.match_prefix(&probe);
+                let oracle = corpus
+                    .iter()
+                    .map(|s| s.iter().zip(&probe).take_while(|(a, b)| a == b).count())
+                    .max()
+                    .unwrap_or(0);
+                assert_eq!(m.matched, oracle, "seed {seed} probe {probe:?}");
+                assert_eq!(m.blocks.len(), m.matched);
+            }
+        }
+    }
+}
+
+/// Scheduler fuzz: random workloads; invariants — every request
+/// completes exactly once, token counts conserve, batch never exceeds
+/// max, KV pages return to baseline, and the clock never goes backward.
+#[test]
+fn scheduler_invariants_fuzz() {
+    for seed in 0..15 {
+        let mut rng = Rng::new(1000 + seed);
+        let max_batch = rng.gen_range_usize(1, 9);
+        let block_size = 16;
+        let total_blocks = rng.gen_range_usize(max_batch.max(4), 64);
+        let cfg = ServingConfig {
+            block_size,
+            max_batch,
+            max_seq_len: 128,
+            total_blocks,
+            ..Default::default()
+        };
+        let policy =
+            KernelPolicy::with_threshold(KernelKind::Typhoon, rng.gen_range_usize(1, 6));
+        let kv = KvCacheManager::new(sim(), total_blocks, block_size);
+        let mut c = match Coordinator::new(cfg, policy, kv, NullEngine::default()) {
+            Ok(c) => c,
+            Err(_) => continue, // invalid random config (validated away)
+        };
+        let prefix_len = rng.gen_range_usize(1, 3) * block_size;
+        if c.set_shared_prefix(&(0..prefix_len as u32).collect::<Vec<_>>()).is_err() {
+            continue;
+        }
+        let baseline_blocks = c.kv.used_blocks();
+
+        let n_reqs = rng.gen_range_usize(1, 40);
+        let mut total_budget = 0usize;
+        for i in 0..n_reqs {
+            // Keep prompts admissible within the random pool.
+            let prompt = rng.gen_range_usize(1, block_size * 2);
+            let gen = rng.gen_range_usize(1, 20);
+            total_budget += gen.min(128 - prompt);
+            c.submit(&Request {
+                id: i as u64,
+                prompt_tokens: prompt,
+                max_new_tokens: gen,
+            })
+            .unwrap();
+        }
+        let mut last_now = c.now();
+        let mut guard = 0;
+        loop {
+            match c.step() {
+                Ok(true) => {}
+                Ok(false) => break,
+                Err(e) => panic!("seed {seed}: step failed: {e}"),
+            }
+            assert!(c.now() >= last_now, "clock went backward");
+            last_now = c.now();
+            assert!(c.running() <= max_batch);
+            guard += 1;
+            assert!(guard < 100_000, "seed {seed}: no progress");
+        }
+        assert_eq!(c.metrics.requests_completed as usize, n_reqs, "seed {seed}");
+        assert_eq!(
+            c.metrics.tokens_generated as usize, total_budget,
+            "seed {seed}: token conservation"
+        );
+        assert_eq!(
+            c.kv.used_blocks(),
+            baseline_blocks,
+            "seed {seed}: leaked KV pages"
+        );
+    }
+}
+
+/// Failure injection: engines that error must surface errors, not hang
+/// or corrupt state.
+#[test]
+fn failing_engine_surfaces_errors() {
+    use anyhow::{bail, Result};
+    use typhoon_mla::coordinator::{DecodeBatch, Engine, IterationOutcome};
+    use typhoon_mla::kvcache::{PrefixId, SeqId};
+
+    struct FailAfter {
+        n: usize,
+    }
+    impl Engine for FailAfter {
+        fn prepare_shared(&mut self, _: PrefixId, _: &[u32], _: KernelKind) -> Result<f64> {
+            Ok(0.0)
+        }
+        fn prefill_requests(&mut self, _: &[(SeqId, usize)]) -> Result<f64> {
+            Ok(0.0)
+        }
+        fn decode(&mut self, _: &DecodeBatch) -> Result<IterationOutcome> {
+            if self.n == 0 {
+                bail!("injected engine failure");
+            }
+            self.n -= 1;
+            Ok(IterationOutcome::default())
+        }
+        fn release(&mut self, _: SeqId) {}
+    }
+
+    let cfg = ServingConfig {
+        block_size: 16,
+        max_batch: 2,
+        max_seq_len: 64,
+        total_blocks: 64,
+        ..Default::default()
+    };
+    let policy = KernelPolicy::with_threshold(KernelKind::Absorb, 1);
+    let kv = KvCacheManager::new(sim(), 64, 16);
+    let mut c = Coordinator::new(cfg, policy, kv, FailAfter { n: 3 }).unwrap();
+    c.set_shared_prefix(&[1, 2, 3]).unwrap();
+    c.submit(&Request { id: 0, prompt_tokens: 4, max_new_tokens: 10 }).unwrap();
+    let err = c.run_to_completion().unwrap_err();
+    assert!(err.to_string().contains("injected"), "{err}");
+}
+
+/// Failure injection: corrupt manifest and missing artifacts produce
+/// errors, not panics.
+#[test]
+fn runtime_failure_injection() {
+    use typhoon_mla::runtime::Manifest;
+
+    // Corrupt JSON.
+    assert!(Manifest::parse("{not json", "/tmp".into()).is_err());
+    // Valid JSON, missing keys.
+    assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#, "/tmp".into()).is_err());
+    // Missing directory.
+    assert!(Manifest::load("/nonexistent/path").is_err());
+}
+
+/// Oversized request: budget clamped to max_seq_len, no overflow.
+#[test]
+fn oversized_requests_clamped() {
+    let cfg = ServingConfig {
+        block_size: 16,
+        max_batch: 2,
+        max_seq_len: 64,
+        total_blocks: 128,
+        ..Default::default()
+    };
+    let policy = KernelPolicy::with_threshold(KernelKind::Absorb, 1);
+    let kv = KvCacheManager::new(sim(), 128, 16);
+    let mut c = Coordinator::new(cfg, policy, kv, NullEngine::default()).unwrap();
+    c.set_shared_prefix(&[1, 2, 3, 4]).unwrap();
+    c.submit(&Request { id: 0, prompt_tokens: 10_000, max_new_tokens: usize::MAX }).unwrap();
+    c.run_to_completion().unwrap();
+    assert_eq!(c.metrics.requests_completed, 1);
+    assert!(c.metrics.tokens_generated <= 64);
+}
