@@ -45,16 +45,18 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(7);
         let mut corpus = Vec::new();
         // 26k-token system prompt + 512 question branches (prompt-A scale).
+        // Page-granular edges: one page id per 128-token block.
         let prompt: Vec<u32> = (0..26472).map(|_| rng.gen_range(0, 50000) as u32).collect();
-        let blocks: Vec<u32> = (0..prompt.len()).map(|i| (i / 128) as u32).collect();
-        tree.insert(&prompt, &blocks);
+        let pages: Vec<u32> = (0..prompt.len().div_ceil(128)).map(|j| j as u32).collect();
+        tree.insert_chunked(&prompt, &pages, 128);
         for q in 0..512u32 {
             let mut s = prompt.clone();
             for _ in 0..rng.gen_range_usize(8, 128) {
                 s.push(rng.gen_range(0, 50000) as u32);
             }
-            let b: Vec<u32> = (0..s.len()).map(|i| (i / 128) as u32 + q * 1000).collect();
-            tree.insert(&s, &b);
+            let b: Vec<u32> =
+                (0..s.len().div_ceil(128)).map(|j| j as u32 + q * 1000).collect();
+            tree.insert_chunked(&s, &b, 128);
             corpus.push(s);
         }
         let probe = corpus[100].clone();

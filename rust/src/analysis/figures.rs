@@ -12,76 +12,95 @@ use crate::costmodel::exec_time::{time_breakdown, TimeBreakdown};
 use crate::costmodel::flops::{attention_cost, AttentionWorkload};
 use crate::costmodel::memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead};
 use crate::costmodel::roofline::roofline_point;
-use crate::simulator::run_kernel_comparison;
-use crate::workload::datasets::all_datasets;
-use crate::workload::prompts::all_prompts;
+use crate::simulator::sweep::{
+    run_throughput_sweep, throughput_cells, SweepExecutor, ThroughputCellResult,
+};
 
 use super::Artifact;
 
 pub const PAPER_BATCHES: [usize; 5] = [64, 128, 256, 512, 1024];
 
+/// The Fig. 2/3 model pair.
+pub fn paper_models() -> Vec<crate::config::ModelConfig> {
+    vec![deepseek_v3(), kimi_k2()]
+}
+
+/// Format evaluated throughput-grid cells into the Fig. 2/3 artifact.
+/// Cells must be in `throughput_cells` order with `batches_per_group`
+/// batches per (model x prompt x dataset) group; the output is
+/// byte-identical however the cells were evaluated (serial or
+/// parallel) — only their order matters.
+pub fn format_throughput(
+    id: &'static str,
+    hw: &HardwareSpec,
+    results: &[ThroughputCellResult],
+    batches_per_group: usize,
+) -> Artifact {
+    let mut text = String::new();
+    let mut csv = String::from(
+        "model,prompt,dataset,batch,typhoon_tok_s,absorb_tok_s,naive_tok_s,speedup_vs_best_baseline\n",
+    );
+    for (i, r) in results.iter().enumerate() {
+        let c = &r.cell;
+        if batches_per_group > 0 && i % batches_per_group == 0 {
+            writeln!(
+                text,
+                "-- {} / {} / {} ({} tokens shared) --",
+                c.model.name, c.prompt.name, c.dataset.name, c.prompt.tokens
+            )
+            .unwrap();
+            writeln!(
+                text,
+                "{:>6} {:>14} {:>14} {:>14} {:>9}",
+                "batch", "typhoon tok/s", "absorb tok/s", "naive tok/s", "speedup"
+            )
+            .unwrap();
+        }
+        let [t, a, n] = &r.reports;
+        let best = a.throughput.max(n.throughput);
+        let speedup = t.throughput / best;
+        writeln!(
+            text,
+            "{:>6} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x",
+            c.batch, t.throughput, a.throughput, n.throughput, speedup
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{},{},{},{:.1},{:.1},{:.1},{:.3}",
+            c.model.name,
+            c.prompt.name,
+            c.dataset.name,
+            c.batch,
+            t.throughput,
+            a.throughput,
+            n.throughput,
+            speedup
+        )
+        .unwrap();
+    }
+    Artifact {
+        id: if id == "fig2" { "fig2" } else { "fig3" },
+        title: format!("Decode throughput sweep on {}", hw.name),
+        text,
+        csv,
+    }
+}
+
 /// Figs. 2 (NPU) and 3 (GPU): normalized decode throughput, per
 /// (model x prompt x dataset x batch), typhoon vs absorb vs naive.
+/// Cells are evaluated under `exec` (parallel workers with ordered
+/// collection by default; the artifact is byte-identical to serial).
 pub fn fig_throughput(
     id: &'static str,
     hw: &HardwareSpec,
     batches: &[usize],
     max_requests_factor: Option<usize>,
+    exec: &SweepExecutor,
 ) -> Result<Artifact> {
-    let mut text = String::new();
-    let mut csv = String::from(
-        "model,prompt,dataset,batch,typhoon_tok_s,absorb_tok_s,naive_tok_s,speedup_vs_best_baseline\n",
-    );
-    for model in [deepseek_v3(), kimi_k2()] {
-        for prompt in all_prompts() {
-            for ds in all_datasets() {
-                writeln!(
-                    text,
-                    "-- {} / {} / {} ({} tokens shared) --",
-                    model.name, prompt.name, ds.name, prompt.tokens
-                )
-                .unwrap();
-                writeln!(
-                    text,
-                    "{:>6} {:>14} {:>14} {:>14} {:>9}",
-                    "batch", "typhoon tok/s", "absorb tok/s", "naive tok/s", "speedup"
-                )
-                .unwrap();
-                for &b in batches {
-                    let cap = max_requests_factor.map(|f| f * b);
-                    let [t, a, n] =
-                        run_kernel_comparison(&model, hw, b, &ds, &prompt, cap)?;
-                    let best = a.throughput.max(n.throughput);
-                    let speedup = t.throughput / best;
-                    writeln!(
-                        text,
-                        "{:>6} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x",
-                        b, t.throughput, a.throughput, n.throughput, speedup
-                    )
-                    .unwrap();
-                    writeln!(
-                        csv,
-                        "{},{},{},{},{:.1},{:.1},{:.1},{:.3}",
-                        model.name,
-                        prompt.name,
-                        ds.name,
-                        b,
-                        t.throughput,
-                        a.throughput,
-                        n.throughput,
-                        speedup
-                    )
-                    .unwrap();
-                }
-            }
-        }
-    }
-    Ok(Artifact {
-        id: if id == "fig2" { "fig2" } else { "fig3" },
-        title: format!("Decode throughput sweep on {}", hw.name),
-        text,
-        csv,
-    })
+    let cells = throughput_cells(&paper_models(), batches, max_requests_factor);
+    let results = run_throughput_sweep(hw, &cells, exec)?;
+    Ok(format_throughput(id, hw, &results, batches.len()))
 }
 
 /// Fig. 4: latency breakdown, Kimi K2, Ls=4096, Ln=512, B in 128..1024,
@@ -355,11 +374,23 @@ pub fn fig8() -> Result<Artifact> {
 
 /// The two throughput figures with paper batch sweeps.
 pub fn fig2(max_requests_factor: Option<usize>) -> Result<Artifact> {
-    fig_throughput("fig2", &ascend_npu(), &PAPER_BATCHES, max_requests_factor)
+    fig_throughput(
+        "fig2",
+        &ascend_npu(),
+        &PAPER_BATCHES,
+        max_requests_factor,
+        &SweepExecutor::from_env(),
+    )
 }
 
 pub fn fig3(max_requests_factor: Option<usize>) -> Result<Artifact> {
-    fig_throughput("fig3", &gpu_h800(), &PAPER_BATCHES, max_requests_factor)
+    fig_throughput(
+        "fig3",
+        &gpu_h800(),
+        &PAPER_BATCHES,
+        max_requests_factor,
+        &SweepExecutor::from_env(),
+    )
 }
 
 #[cfg(test)]
@@ -406,7 +437,14 @@ mod tests {
     #[test]
     fn fig2_small_slice_shapes() {
         // One cell only (batch 64, capped) to keep the test fast.
-        let a = fig_throughput("fig2", &ascend_npu(), &[64], Some(2)).unwrap();
+        let a = fig_throughput(
+            "fig2",
+            &ascend_npu(),
+            &[64],
+            Some(2),
+            &crate::simulator::SweepExecutor::from_env(),
+        )
+        .unwrap();
         assert!(a.csv.lines().count() > 10);
         // typhoon >= best baseline (speedup >= ~1) everywhere at B=64
         // with prompt A.

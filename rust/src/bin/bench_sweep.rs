@@ -1,0 +1,142 @@
+//! `bench_sweep` — times the Fig. 2/3 end-to-end figure sweep and
+//! tracks the speedup of the parallel+memoized hot path across PRs.
+//!
+//! Usage:
+//!   bench_sweep [--quick] [--full] [--threads N] [--out FILE]
+//!               [--skip-serial]
+//!
+//! * `--quick`  caps `max_requests` and shrinks the batch set to a
+//!   tier-1-friendly load (default mode is a middle ground; `--full`
+//!   is the paper's whole-split protocol).
+//! * By default the sweep runs twice — a **serial, unmemoized**
+//!   baseline (pre-optimization hot path: per-sequence Table-1
+//!   evaluation, single thread), then the optimized parallel+memoized
+//!   path — asserts the figure text/CSV artifacts are
+//!   **byte-identical**, and reports the speedup.  `--skip-serial`
+//!   times only the parallel run.
+//!
+//! Emits `BENCH_sweep.json` with schema
+//! `{wall_seconds, cells, tokens_simulated}` (plus serial baseline and
+//! speedup fields when measured) via util::bench-style JSON.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+use typhoon_mla::analysis::figures::{format_throughput, paper_models, PAPER_BATCHES};
+use typhoon_mla::analysis::Artifact;
+use typhoon_mla::config::hardware::{ascend_npu, gpu_h800};
+use typhoon_mla::simulator::sweep::{
+    run_throughput_sweep, throughput_cells, SweepExecutor, ThroughputCell,
+};
+use typhoon_mla::util::cli::Args;
+use typhoon_mla::util::json::Json;
+
+struct SweepOutcome {
+    wall_seconds: f64,
+    cells: usize,
+    tokens: u64,
+    artifacts: Vec<Artifact>,
+}
+
+/// Run the fig2 (Ascend) + fig3 (H800) grids under one executor.
+fn run_sweep(
+    cells: &[ThroughputCell],
+    batches_per_group: usize,
+    exec: &SweepExecutor,
+) -> Result<SweepOutcome> {
+    let t0 = Instant::now();
+    let mut artifacts = Vec::new();
+    let mut tokens = 0u64;
+    let mut n_cells = 0usize;
+    for (id, hw) in [("fig2", ascend_npu()), ("fig3", gpu_h800())] {
+        let results = run_throughput_sweep(&hw, cells, exec)?;
+        n_cells += results.len();
+        tokens += results.iter().map(|r| r.tokens()).sum::<u64>();
+        artifacts.push(format_throughput(id, &hw, &results, batches_per_group));
+    }
+    Ok(SweepOutcome {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        cells: n_cells,
+        tokens,
+        artifacts,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["quick", "full", "skip-serial"])?;
+    args.reject_unknown(&["quick", "full", "skip-serial", "threads", "out"])?;
+    let out_path = args.get_or("out", "target/bench/BENCH_sweep.json").to_string();
+
+    // Batch set + request cap per mode.
+    let (batches, factor): (Vec<usize>, Option<usize>) = if args.flag("quick") {
+        (vec![64, 128], Some(2))
+    } else if args.flag("full") {
+        (PAPER_BATCHES.to_vec(), None)
+    } else {
+        (PAPER_BATCHES.to_vec(), Some(4))
+    };
+
+    let parallel = match args.get("threads") {
+        Some(_) => SweepExecutor::with_threads(args.get_usize("threads", 0)?),
+        None => SweepExecutor::from_env(),
+    };
+    let cells = throughput_cells(&paper_models(), &batches, factor);
+    eprintln!(
+        "[bench_sweep] {} cells/figure x 2 figures x 3 kernels, {} worker(s)",
+        cells.len(),
+        parallel.threads
+    );
+
+    let par = run_sweep(&cells, batches.len(), &parallel)?;
+    println!(
+        "parallel: {:.3}s wall, {} cells, {} tokens simulated",
+        par.wall_seconds, par.cells, par.tokens
+    );
+
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("wall_seconds", Json::num(par.wall_seconds)),
+        ("cells", Json::num(par.cells as f64)),
+        ("tokens_simulated", Json::num(par.tokens as f64)),
+        ("threads", Json::num(parallel.threads as f64)),
+        ("quick", Json::Bool(args.flag("quick"))),
+    ];
+
+    if !args.flag("skip-serial") {
+        // Baseline: single worker + the per-sequence reference engine
+        // (no memoization, no length bucketing) — the pre-optimization
+        // hot path.  Its artifacts must still be byte-identical.
+        let mut baseline_cells = cells.clone();
+        for c in &mut baseline_cells {
+            c.memoized = false;
+        }
+        let serial = run_sweep(&baseline_cells, batches.len(), &SweepExecutor::serial())?;
+        println!(
+            "serial/unmemoized: {:.3}s wall, {} cells, {} tokens simulated",
+            serial.wall_seconds, serial.cells, serial.tokens
+        );
+        // The whole point of ordered collection: artifacts must be
+        // byte-identical between the serial and parallel paths.
+        ensure!(
+            serial.artifacts.len() == par.artifacts.len(),
+            "artifact count diverged"
+        );
+        for (s, p) in serial.artifacts.iter().zip(&par.artifacts) {
+            ensure!(s.text == p.text, "{}: text artifact diverged", s.id);
+            ensure!(s.csv == p.csv, "{}: csv artifact diverged", s.id);
+        }
+        ensure!(serial.tokens == par.tokens, "token totals diverged");
+        let speedup = serial.wall_seconds / par.wall_seconds.max(1e-12);
+        println!("speedup:           {speedup:.2}x (artifacts byte-identical)");
+        fields.push(("serial_wall_seconds", Json::num(serial.wall_seconds)));
+        fields.push(("speedup", Json::num(speedup)));
+        fields.push(("artifacts_identical", Json::Bool(true)));
+    }
+
+    let json = Json::obj(fields);
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out_path, json.to_string_pretty())?;
+    eprintln!("[bench_sweep] wrote {out_path}");
+    Ok(())
+}

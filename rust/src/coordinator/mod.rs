@@ -7,6 +7,7 @@
 
 pub mod engine;
 pub mod policy;
+pub mod running;
 pub mod sequence;
 
 use std::collections::{HashMap, VecDeque};
@@ -20,6 +21,7 @@ use crate::workload::Request;
 
 pub use engine::{DecodeBatch, Engine, IterationOutcome};
 pub use policy::KernelPolicy;
+pub use running::RunningSet;
 pub use sequence::{SeqState, Sequence};
 
 pub struct Coordinator<E: Engine> {
@@ -28,7 +30,7 @@ pub struct Coordinator<E: Engine> {
     pub kv: KvCacheManager,
     pub engine: E,
     queue: VecDeque<Sequence>,
-    running: Vec<SeqId>,
+    running: RunningSet,
     seqs: HashMap<SeqId, Sequence>,
     pub metrics: Metrics,
     shared_prefix: Option<(PrefixId, usize)>,
@@ -52,7 +54,7 @@ impl<E: Engine> Coordinator<E> {
             kv,
             engine,
             queue: VecDeque::new(),
-            running: Vec::new(),
+            running: RunningSet::new(),
             seqs: HashMap::new(),
             metrics: Metrics::new(Clock::Simulated),
             shared_prefix: None,
@@ -140,7 +142,9 @@ impl<E: Engine> Coordinator<E> {
             self.metrics.advance_sim_time(secs);
             self.metrics.prefill_calls += 1;
             self.metrics.requests_admitted += wave.len() as u64;
-            self.running.extend(wave.iter().map(|(id, _)| *id));
+            for &(id, _) in &wave {
+                self.running.push(id);
+            }
         }
         Ok(())
     }
@@ -149,11 +153,11 @@ impl<E: Engine> Coordinator<E> {
     /// pages and requeue it for recompute (vLLM-style recompute
     /// preemption).  Returns the victim, or None if nothing to preempt.
     fn preempt_one(&mut self, protect: SeqId) -> Result<Option<SeqId>> {
-        let victim = self.running.iter().rev().copied().find(|&s| s != protect);
+        let victim = self.running.last_except(protect);
         let Some(victim) = victim else { return Ok(None) };
         self.kv.remove_sequence(victim)?;
         self.engine.release(victim);
-        self.running.retain(|&s| s != victim);
+        self.running.remove(victim);
         let mut seq = self.seqs.remove(&victim).expect("running seq exists");
         seq.state = SeqState::Queued;
         self.queue.push_front(seq);
@@ -166,8 +170,8 @@ impl<E: Engine> Coordinator<E> {
     /// grow, it is force-finished at its current length.
     fn reserve_next_token(&mut self) -> Result<Vec<SeqId>> {
         let mut force_finished = Vec::new();
-        for id in self.running.clone() {
-            if !self.running.contains(&id) {
+        for id in self.running.snapshot() {
+            if !self.running.contains(id) {
                 continue; // already preempted this round
             }
             loop {
@@ -196,10 +200,10 @@ impl<E: Engine> Coordinator<E> {
         }
         // Page reservation for this step's tokens (may preempt).
         let force_finished = self.reserve_next_token()?;
+        self.running.remove_many(&force_finished);
         for id in force_finished {
             self.kv.remove_sequence(id)?;
             self.engine.release(id);
-            self.running.retain(|&s| s != id);
             let seq = self.seqs.get_mut(&id).unwrap();
             seq.state = SeqState::Finished;
             seq.finished_at = Some(self.now);
@@ -215,10 +219,10 @@ impl<E: Engine> Coordinator<E> {
         let context_lens: Vec<usize> = self
             .running
             .iter()
-            .map(|id| self.seqs[id].context_len())
+            .map(|id| self.seqs[&id].context_len())
             .collect();
         let batch = DecodeBatch {
-            seqs: self.running.clone(),
+            seqs: self.running.snapshot(),
             kernel,
             shared_len,
             context_lens,
@@ -235,7 +239,7 @@ impl<E: Engine> Coordinator<E> {
         // Every running sequence produced one token (pages were
         // reserved above).
         let mut finished: Vec<SeqId> = Vec::new();
-        for id in self.running.clone() {
+        for &id in &batch.seqs {
             let seq = self.seqs.get_mut(&id).unwrap();
             let done = seq.advance(self.now) || seq.context_len() >= self.cfg.max_seq_len;
             if done {
@@ -244,6 +248,7 @@ impl<E: Engine> Coordinator<E> {
                 finished.push(id);
             }
         }
+        self.running.remove_many(&finished);
         for id in &finished {
             self.kv.remove_sequence(*id)?;
             self.engine.release(*id);
@@ -251,7 +256,6 @@ impl<E: Engine> Coordinator<E> {
             if let Some(lat) = self.seqs[id].latency() {
                 self.metrics.request_latency.push(lat);
             }
-            self.running.retain(|r| r != id);
             self.recently_finished.push(*id);
         }
         self.metrics

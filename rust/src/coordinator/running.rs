@@ -1,0 +1,194 @@
+//! Order-preserving membership structure for the running decode batch.
+//!
+//! The scheduler previously kept a plain `Vec<SeqId>` and answered
+//! membership with `Vec::contains` inside per-sequence loops
+//! (`reserve_next_token`, retirement), an O(B²) pattern per decode step
+//! at B up to 1024.  `RunningSet` pairs the admission-ordered vector
+//! (batch order is observable: it fixes `DecodeBatch::seqs` and the
+//! per-sequence `context_lens` layout, so it must be preserved exactly)
+//! with a position index for O(1) membership and O(1) position lookup;
+//! removal compacts the tail (O(tail), amortized far below the old
+//! full-vector scans and allocation-heavy `clone`+`retain` pairs).
+
+use std::collections::HashMap;
+
+use crate::kvcache::SeqId;
+
+#[derive(Debug, Default)]
+pub struct RunningSet {
+    /// Admission order (the decode-batch order).
+    order: Vec<SeqId>,
+    /// SeqId -> index into `order`.
+    pos: HashMap<SeqId, usize>,
+}
+
+impl RunningSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn contains(&self, id: SeqId) -> bool {
+        self.pos.contains_key(&id)
+    }
+
+    /// The batch in admission order.
+    pub fn ids(&self) -> &[SeqId] {
+        &self.order
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.order.iter().copied()
+    }
+
+    /// Append at the end of the admission order.  Panics on duplicates
+    /// (a sequence is running at most once — scheduler invariant).
+    pub fn push(&mut self, id: SeqId) {
+        let prev = self.pos.insert(id, self.order.len());
+        assert!(prev.is_none(), "sequence {id} already running");
+        self.order.push(id);
+    }
+
+    /// The most recently admitted sequence other than `protect`
+    /// (the preemption victim rule).
+    pub fn last_except(&self, protect: SeqId) -> Option<SeqId> {
+        self.order.iter().rev().copied().find(|&s| s != protect)
+    }
+
+    /// Remove `id`, preserving the order of the remaining sequences.
+    /// Returns false if it was not present.
+    pub fn remove(&mut self, id: SeqId) -> bool {
+        let Some(idx) = self.pos.remove(&id) else { return false };
+        self.order.remove(idx);
+        for (i, &s) in self.order.iter().enumerate().skip(idx) {
+            self.pos.insert(s, i);
+        }
+        true
+    }
+
+    /// Remove a batch of ids with one compaction + one reindex pass —
+    /// O(B) total rather than O(k*B) repeated `remove` calls (the
+    /// retire path can drop a whole admission wave in one step).
+    /// Ids not present are ignored.
+    pub fn remove_many(&mut self, ids: &[SeqId]) {
+        if ids.is_empty() {
+            return;
+        }
+        for id in ids {
+            self.pos.remove(id);
+        }
+        self.order.retain(|s| self.pos.contains_key(s));
+        for (i, &s) in self.order.iter().enumerate() {
+            self.pos.insert(s, i);
+        }
+    }
+
+    /// Snapshot of the current batch (for iteration while mutating).
+    pub fn snapshot(&self) -> Vec<SeqId> {
+        self.order.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_contains_remove_preserves_order() {
+        let mut r = RunningSet::new();
+        for id in [5u64, 3, 9, 7] {
+            r.push(id);
+        }
+        assert_eq!(r.len(), 4);
+        assert!(r.contains(9));
+        assert!(!r.contains(4));
+        assert!(r.remove(3));
+        assert!(!r.remove(3), "double remove is a no-op");
+        assert_eq!(r.ids(), &[5, 9, 7]);
+        assert!(r.contains(7));
+        assert!(!r.contains(3));
+        // Positions stay consistent after the shift.
+        assert!(r.remove(9));
+        assert_eq!(r.ids(), &[5, 7]);
+        assert!(r.contains(5) && r.contains(7));
+    }
+
+    #[test]
+    fn last_except_skips_protected() {
+        let mut r = RunningSet::new();
+        r.push(1);
+        r.push(2);
+        r.push(3);
+        assert_eq!(r.last_except(3), Some(2));
+        assert_eq!(r.last_except(0), Some(3));
+        r.remove(2);
+        r.remove(3);
+        assert_eq!(r.last_except(1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "already running")]
+    fn duplicate_push_panics() {
+        let mut r = RunningSet::new();
+        r.push(1);
+        r.push(1);
+    }
+
+    #[test]
+    fn remove_many_matches_individual_removes() {
+        let mut a = RunningSet::new();
+        let mut b = RunningSet::new();
+        for id in 0..10u64 {
+            a.push(id);
+            b.push(id);
+        }
+        let victims = [3u64, 7, 0, 9, 42]; // 42 absent: ignored
+        a.remove_many(&victims);
+        for &v in &victims {
+            b.remove(v);
+        }
+        assert_eq!(a.ids(), b.ids());
+        for id in 0..10u64 {
+            assert_eq!(a.contains(id), b.contains(id), "{id}");
+        }
+        a.remove_many(&[]);
+        assert_eq!(a.ids(), b.ids());
+    }
+
+    /// Randomized consistency vs a reference Vec.
+    #[test]
+    fn fuzz_matches_vec_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(12);
+        let mut r = RunningSet::new();
+        let mut reference: Vec<SeqId> = Vec::new();
+        for step in 0..2000 {
+            if reference.is_empty() || rng.next_f64() < 0.6 {
+                let id = step as u64;
+                r.push(id);
+                reference.push(id);
+            } else if rng.next_f64() < 0.3 {
+                let k = rng.gen_range_usize(1, reference.len().min(4) + 1);
+                let ids: Vec<SeqId> =
+                    (0..k).map(|_| *rng.choose(&reference)).collect();
+                r.remove_many(&ids);
+                reference.retain(|s| !ids.contains(s));
+            } else {
+                let id = *rng.choose(&reference);
+                assert!(r.remove(id));
+                reference.retain(|&s| s != id);
+            }
+            assert_eq!(r.ids(), &reference[..], "step {step}");
+            for &id in &reference {
+                assert!(r.contains(id));
+            }
+        }
+    }
+}

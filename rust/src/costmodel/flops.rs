@@ -40,6 +40,13 @@ impl Component {
     pub fn add(self, other: Component) -> Component {
         Component { macs: self.macs + other.macs, hbm_words: self.hbm_words + other.hbm_words }
     }
+
+    /// `n` identical components summed — exact (u64 multiplication is
+    /// repeated addition), used by the simulator's length-bucketed
+    /// iteration cost.
+    pub fn scale(self, n: u64) -> Component {
+        Component { macs: self.macs * n, hbm_words: self.hbm_words * n }
+    }
 }
 
 /// Full per-kernel cost breakdown.

@@ -7,10 +7,12 @@ pub mod flops;
 pub mod memory;
 pub mod parallel;
 pub mod roofline;
+pub mod table;
 pub mod threshold;
 
 pub use exec_time::{attention_time, time_breakdown, tokens_per_sec, TimeBreakdown};
 pub use flops::{attention_cost, AttentionWorkload, Component, CostBreakdown};
+pub use table::CostTable;
 pub use parallel::{parallel_attention_time, scaling_efficiency, ParallelismConfig};
 pub use memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead, ClusterConfig};
 pub use roofline::{ridge_batch, roofline_curve, roofline_point, RooflinePoint};

@@ -1,0 +1,112 @@
+//! Memoized Table-1 cost evaluation for the simulator hot path.
+//!
+//! A serving simulation evaluates `attention_cost` once per sequence
+//! per decode iteration; across a figure sweep (model x hardware x
+//! prompt x dataset x batch x kernel, batch up to 1024, tens of
+//! thousands of iterations per cell) the same `(kernel, B, L_s, L_n)`
+//! workloads recur constantly — context lengths are bounded by
+//! `max_seq_len` and the shared length is fixed per cell.  `CostTable`
+//! caches the exact `CostBreakdown` per key, turning the dominant
+//! per-iteration cost into hash lookups.
+//!
+//! Exactness: `attention_cost` is a pure function of
+//! `(ModelConfig, KernelKind, AttentionWorkload)` over integers, so a
+//! cache hit returns bit-identical results to direct evaluation — the
+//! figure artifacts cannot drift.
+
+use std::collections::HashMap;
+
+use crate::config::{KernelKind, ModelConfig};
+
+use super::flops::{attention_cost, AttentionWorkload, CostBreakdown};
+
+/// Cache key: (kernel, batch, shared_len, nonshared_len) with s_q = 1
+/// (plain decode; speculative s_q > 1 bypasses the table).
+type CostKey = (KernelKind, u64, u64, u64);
+
+/// Entry cap — a full Fig. 2/3 sweep stays far below this (distinct
+/// lengths are bounded by `max_seq_len`), but a runaway caller must not
+/// grow the table without bound.
+const MAX_ENTRIES: usize = 1 << 20;
+
+#[derive(Debug)]
+pub struct CostTable {
+    cfg: ModelConfig,
+    map: HashMap<CostKey, CostBreakdown>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CostTable {
+    pub fn new(cfg: ModelConfig) -> Self {
+        CostTable { cfg, map: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Memoized `attention_cost` for a plain-decode workload.
+    pub fn cost(&mut self, kernel: KernelKind, batch: u64, l_s: u64, l_n: u64) -> CostBreakdown {
+        let key = (kernel, batch, l_s, l_n);
+        if let Some(c) = self.map.get(&key) {
+            self.hits += 1;
+            return *c;
+        }
+        self.misses += 1;
+        let wl = AttentionWorkload::decode(batch, l_s, l_n);
+        let c = attention_cost(&self.cfg, kernel, &wl);
+        if self.map.len() >= MAX_ENTRIES {
+            self.map.clear();
+        }
+        self.map.insert(key, c);
+        c
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::deepseek_v3;
+
+    #[test]
+    fn memoized_equals_direct() {
+        let cfg = deepseek_v3();
+        let mut table = CostTable::new(cfg.clone());
+        for kernel in KernelKind::all() {
+            for (b, ls, ln) in [(1u64, 0u64, 17u64), (64, 4096, 512), (1024, 26472, 1)] {
+                let direct =
+                    attention_cost(&cfg, kernel, &AttentionWorkload::decode(b, ls, ln));
+                assert_eq!(table.cost(kernel, b, ls, ln), direct);
+                // Second lookup hits the cache and is still identical.
+                assert_eq!(table.cost(kernel, b, ls, ln), direct);
+            }
+        }
+        assert_eq!(table.misses, 9);
+        assert_eq!(table.hits, 9);
+    }
+
+    #[test]
+    fn keys_are_distinguished() {
+        let mut table = CostTable::new(deepseek_v3());
+        let a = table.cost(KernelKind::Absorb, 8, 100, 10);
+        let b = table.cost(KernelKind::Naive, 8, 100, 10);
+        let c = table.cost(KernelKind::Absorb, 8, 100, 11);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(table.hits, 0);
+        assert_eq!(table.misses, 3);
+    }
+}

@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::ModelConfig;
 
 use super::block::{BlockAllocator, BlockId, BlockTable};
-use super::radix::RadixTree;
+use super::radix::{spans_from_pages, PageSpan, RadixTree};
 
 pub type SeqId = u64;
 pub type PrefixId = u32;
@@ -97,30 +97,36 @@ impl KvCacheManager {
     pub fn register_shared_prefix(&mut self, tokens: &[u32]) -> Result<PrefixId> {
         let bs = self.block_size();
         let m = self.radix.match_prefix(tokens);
-        // Reuse only whole matched pages.
+        // Reuse only whole matched pages (block-aligned token count).
         let reuse_tokens = (m.matched / bs) * bs;
-        let reused: Vec<BlockId> = {
-            let mut pl = Vec::new();
-            for &b in &m.blocks[..reuse_tokens] {
-                if pl.last() != Some(&b) {
-                    pl.push(b);
-                }
-            }
-            pl
-        };
-        let need_blocks = tokens.len().div_ceil(bs) - reused.len();
+        let reused = m.pages_for_tokens(reuse_tokens);
+        let fresh_tokens = tokens.len() - reuse_tokens;
+        let need_blocks = fresh_tokens.div_ceil(bs);
         if !self.alloc.can_allocate(need_blocks) {
             bail!("cannot register prefix: need {need_blocks} blocks");
         }
         for &b in &reused {
             self.alloc.retain(b);
         }
+        let fresh = self.alloc.allocate_n(need_blocks)?;
+        // Page spans for the radix tree: the reused run layout as
+        // matched, then block-aligned spans over the fresh pages.
+        let mut spans: Vec<PageSpan> = Vec::with_capacity(reused.len() + fresh.len());
+        {
+            let mut left = reuse_tokens;
+            for s in &m.spans {
+                if left == 0 {
+                    break;
+                }
+                let take = (s.tokens as usize).min(left);
+                spans.push(PageSpan::new(s.page, take));
+                left -= take;
+            }
+        }
+        spans.extend(spans_from_pages(&fresh, fresh_tokens, bs));
         let mut blocks = reused;
-        blocks.extend(self.alloc.allocate_n(need_blocks)?);
-        // Per-token page ids for the radix tree.
-        let per_token: Vec<BlockId> =
-            (0..tokens.len()).map(|i| blocks[i / bs]).collect();
-        self.radix.insert(tokens, &per_token);
+        blocks.extend(&fresh);
+        self.radix.insert(tokens, &spans);
         self.radix.pin(tokens);
         let id = self.next_prefix;
         self.next_prefix += 1;

@@ -8,4 +8,4 @@ pub mod radix;
 
 pub use block::{BlockAllocator, BlockId, BlockTable};
 pub use manager::{KvCacheManager, PrefixId, SeqId, SharedPrefix};
-pub use radix::{MatchResult, RadixTree};
+pub use radix::{spans_from_pages, spans_from_per_token, MatchResult, PageSpan, RadixTree};

@@ -1,15 +1,21 @@
 //! Radix tree over token sequences (the RadixAttention/SGLang substrate).
 //!
-//! Maps token prefixes to KV-cache blocks so that requests sharing a
+//! Maps token prefixes to KV-cache pages so that requests sharing a
 //! prefix (system prompt, tree-of-thought branches, speculative drafts)
 //! reuse cached entries instead of recomputing them.  TyphoonMLA
 //! additionally tags prefixes that have been *expanded* to uncompressed
 //! K/V form (the naive-stage cache).
 //!
 //! Design notes:
-//! * Edges carry one `BlockId` **per token** (the page id that token
-//!   lives in); the cache manager dedups consecutive ids back into page
-//!   lists.  Per-token granularity makes mid-edge splits exact.
+//! * Edges carry **page spans** — `(page id, token count)` runs — not
+//!   one `BlockId` per token.  With block size 128 this shrinks edge
+//!   metadata and the match/insert/split page bookkeeping by ~128x
+//!   while remaining *exact*: a span split mid-run keeps the page on
+//!   both sides, which is precisely what the per-token representation
+//!   encoded (adjacent tokens in one page).  The per-token semantics
+//!   (`matched`, `expanded_len`, deduped `page_list()`) are preserved
+//!   bit-for-bit; `tests/properties.rs` asserts the equivalence against
+//!   a per-token oracle on randomized streams.
 //! * Pin/unpin/mark operate on *token sequences*, not node handles, so
 //!   they stay valid across edge splits.
 
@@ -17,12 +23,65 @@ use std::collections::HashMap;
 
 use super::block::BlockId;
 
+/// A run of consecutive tokens stored in one page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageSpan {
+    pub page: BlockId,
+    /// Tokens of the run covered by `page` (>= 1).
+    pub tokens: u32,
+}
+
+impl PageSpan {
+    pub fn new(page: BlockId, tokens: usize) -> Self {
+        debug_assert!(tokens > 0);
+        PageSpan { page, tokens: tokens as u32 }
+    }
+}
+
+/// Append `span` to `out`, merging with the last run when the page id
+/// continues (keeps span lists canonical: adjacent runs differ).
+fn push_span(out: &mut Vec<PageSpan>, span: PageSpan) {
+    if span.tokens == 0 {
+        return;
+    }
+    if let Some(last) = out.last_mut() {
+        if last.page == span.page {
+            last.tokens += span.tokens;
+            return;
+        }
+    }
+    out.push(span);
+}
+
+/// RLE-compress a per-token page list into canonical spans.
+pub fn spans_from_per_token(blocks: &[BlockId]) -> Vec<PageSpan> {
+    let mut out = Vec::new();
+    for &b in blocks {
+        push_span(&mut out, PageSpan { page: b, tokens: 1 });
+    }
+    out
+}
+
+/// Spans for `tokens` tokens stored in block-aligned pages: page `j`
+/// covers tokens `[j*block_size, (j+1)*block_size)` (tail partial).
+/// `pages.len()` must be `tokens.div_ceil(block_size)`.
+pub fn spans_from_pages(pages: &[BlockId], tokens: usize, block_size: usize) -> Vec<PageSpan> {
+    assert!(block_size > 0);
+    assert_eq!(pages.len(), tokens.div_ceil(block_size), "one page per chunk");
+    let mut out = Vec::new();
+    for (j, &p) in pages.iter().enumerate() {
+        let covered = (tokens - j * block_size).min(block_size);
+        push_span(&mut out, PageSpan::new(p, covered));
+    }
+    out
+}
+
 #[derive(Debug, Default)]
 struct Node {
     /// Edge label: the token run leading into this node.
     tokens: Vec<u32>,
-    /// Page id of each token in `tokens` (same length).
-    blocks: Vec<BlockId>,
+    /// Page spans of `tokens` (span token counts sum to tokens.len()).
+    spans: Vec<PageSpan>,
     children: HashMap<u32, usize>, // first token of child edge -> node id
     /// Sequences currently pinning this edge.
     refcount: usize,
@@ -35,26 +94,39 @@ struct Node {
 pub struct MatchResult {
     /// Number of tokens matched from the root.
     pub matched: usize,
-    /// Page id per matched token (dedup for a page list).
-    pub blocks: Vec<BlockId>,
+    /// Page spans covering the matched tokens (canonical: adjacent runs
+    /// have distinct pages; token counts sum to `matched`).
+    pub spans: Vec<PageSpan>,
     /// Longest fully-*expanded* prefix within the match.
     pub expanded_len: usize,
 }
 
 impl MatchResult {
-    /// Page list with consecutive duplicates removed.
+    /// Page list with consecutive duplicates removed — identical to the
+    /// old per-token `page_list()` (spans are the dedup runs).
     pub fn page_list(&self) -> Vec<BlockId> {
-        let mut out: Vec<BlockId> = Vec::new();
-        for &b in &self.blocks {
-            if out.last() != Some(&b) {
-                out.push(b);
+        self.spans.iter().map(|s| s.page).collect()
+    }
+
+    /// Pages covering the first `n` matched tokens (run boundaries that
+    /// straddle `n` include the straddling page, matching the per-token
+    /// dedup of `blocks[..n]`).  `n` must be <= `matched`.
+    pub fn pages_for_tokens(&self, n: usize) -> Vec<BlockId> {
+        debug_assert!(n <= self.matched);
+        let mut out = Vec::new();
+        let mut consumed = 0usize;
+        for s in &self.spans {
+            if consumed >= n {
+                break;
             }
+            out.push(s.page);
+            consumed += s.tokens as usize;
         }
         out
     }
 }
 
-/// Token-sequence radix tree.
+/// Token-sequence radix tree with page-span edges.
 #[derive(Debug)]
 pub struct RadixTree {
     nodes: Vec<Node>,
@@ -66,6 +138,35 @@ impl Default for RadixTree {
     }
 }
 
+/// Split a canonical span list after `keep` tokens; returns
+/// (prefix, suffix).  A run straddling the cut appears in both halves
+/// with its token count split (same page on both sides — exactly the
+/// per-token behavior).
+fn split_spans(spans: &[PageSpan], keep: usize) -> (Vec<PageSpan>, Vec<PageSpan>) {
+    let mut head = Vec::new();
+    let mut tail = Vec::new();
+    let mut consumed = 0usize;
+    for s in spans {
+        let len = s.tokens as usize;
+        if consumed + len <= keep {
+            push_span(&mut head, *s);
+        } else if consumed >= keep {
+            push_span(&mut tail, *s);
+        } else {
+            let head_part = keep - consumed;
+            push_span(&mut head, PageSpan::new(s.page, head_part));
+            push_span(&mut tail, PageSpan::new(s.page, len - head_part));
+        }
+        consumed += len;
+    }
+    (head, tail)
+}
+
+/// Prefix of a canonical span list covering `n` tokens.
+fn truncate_spans(spans: &[PageSpan], n: usize) -> Vec<PageSpan> {
+    split_spans(spans, n).0
+}
+
 impl RadixTree {
     pub fn new() -> Self {
         RadixTree { nodes: vec![Node::default()] } // 0 = root
@@ -75,8 +176,14 @@ impl RadixTree {
         self.nodes.len()
     }
 
+    /// Total page spans held across all edges (memory diagnostic: in the
+    /// per-token representation this was the total token count).
+    pub fn span_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.spans.len()).sum()
+    }
+
     /// Longest-prefix match of `tokens` against the tree.  Matches may
-    /// end mid-edge (per-token blocks make partial reuse exact).
+    /// end mid-edge (span splitting keeps partial reuse exact).
     pub fn match_prefix(&self, tokens: &[u32]) -> MatchResult {
         let mut result = MatchResult::default();
         let mut node = 0usize;
@@ -96,7 +203,15 @@ impl RadixTree {
                 .count();
             pos += common;
             result.matched = pos;
-            result.blocks.extend_from_slice(&edge.blocks[..common]);
+            if common == edge.tokens.len() {
+                for &s in &edge.spans {
+                    push_span(&mut result.spans, s);
+                }
+            } else {
+                for s in truncate_spans(&edge.spans, common) {
+                    push_span(&mut result.spans, s);
+                }
+            }
             expanded_run &= edge.expanded;
             if expanded_run {
                 result.expanded_len = pos;
@@ -110,14 +225,16 @@ impl RadixTree {
 
     /// Split the edge into `node` so its label has exactly `keep`
     /// tokens; the remainder moves to a new child.  Both halves inherit
-    /// refcount/expanded.
+    /// refcount/expanded; a page run straddling the split is kept on
+    /// both sides.
     fn split_edge(&mut self, node: usize, keep: usize) {
         debug_assert!(keep > 0 && keep < self.nodes[node].tokens.len());
         let rest_tokens = self.nodes[node].tokens.split_off(keep);
-        let rest_blocks = self.nodes[node].blocks.split_off(keep);
+        let (head_spans, rest_spans) = split_spans(&self.nodes[node].spans, keep);
+        self.nodes[node].spans = head_spans;
         let rest = Node {
             tokens: rest_tokens,
-            blocks: rest_blocks,
+            spans: rest_spans,
             children: std::mem::take(&mut self.nodes[node].children),
             refcount: self.nodes[node].refcount,
             expanded: self.nodes[node].expanded,
@@ -129,10 +246,11 @@ impl RadixTree {
     }
 
     /// Insert a fully-cached token run (absolute prefix from the root)
-    /// with one page id per token.  Existing overlap is left untouched;
-    /// only the new suffix is added (splitting an edge if needed).
-    pub fn insert(&mut self, tokens: &[u32], blocks_per_token: &[BlockId]) {
-        assert_eq!(tokens.len(), blocks_per_token.len());
+    /// with its page spans.  Existing overlap is left untouched; only
+    /// the new suffix is added (splitting an edge if needed).
+    pub fn insert(&mut self, tokens: &[u32], spans: &[PageSpan]) {
+        let covered: usize = spans.iter().map(|s| s.tokens as usize).sum();
+        assert_eq!(covered, tokens.len(), "spans must cover the token run exactly");
         let mut node = 0usize;
         let mut pos = 0usize;
         loop {
@@ -144,7 +262,7 @@ impl RadixTree {
                     let id = self.nodes.len();
                     self.nodes.push(Node {
                         tokens: tokens[pos..].to_vec(),
-                        blocks: blocks_per_token[pos..].to_vec(),
+                        spans: split_spans(spans, pos).1,
                         children: HashMap::new(),
                         refcount: 0,
                         expanded: false,
@@ -167,6 +285,13 @@ impl RadixTree {
                 }
             }
         }
+    }
+
+    /// Convenience: insert with block-aligned pages (page `j` covers
+    /// tokens `[j*block_size, (j+1)*block_size)`).
+    pub fn insert_chunked(&mut self, tokens: &[u32], pages: &[BlockId], block_size: usize) {
+        let spans = spans_from_pages(pages, tokens.len(), block_size);
+        self.insert(tokens, &spans);
     }
 
     /// Walk `tokens` applying `f` to every fully-covered edge.
@@ -209,9 +334,11 @@ impl RadixTree {
         self.for_each_edge(tokens, |n| n.expanded = true);
     }
 
-    /// Evict all unpinned leaves (transitively), returning the per-token
-    /// page ids they held (dedup before releasing refcounts once per
-    /// page — the manager owns that policy).
+    /// Evict all unpinned leaves (transitively), returning the page ids
+    /// they held — one entry per span run (dedup before releasing
+    /// refcounts once per page; the manager owns that policy, and a
+    /// page straddling an edge split may appear in a surviving edge
+    /// too).
     pub fn evict_unpinned(&mut self) -> Vec<BlockId> {
         let mut released = Vec::new();
         loop {
@@ -229,7 +356,7 @@ impl RadixTree {
             match victim {
                 None => return released,
                 Some(v) => {
-                    released.extend(self.nodes[v].blocks.drain(..));
+                    released.extend(self.nodes[v].spans.drain(..).map(|s| s.page));
                     self.nodes[v].tokens.clear();
                     if let Some(&(p, tok)) = parent_of.get(&v) {
                         self.nodes[p].children.remove(&tok);
@@ -248,9 +375,14 @@ mod tests {
         s.bytes().map(|b| b as u32).collect()
     }
 
-    /// One page per 4 tokens, page ids starting at `base`.
-    fn pages(n: usize, base: u32) -> Vec<BlockId> {
+    /// One page per 4 tokens, page ids starting at `base` — as a
+    /// per-token list, RLE-compressed at the API boundary.
+    fn per_token_pages(n: usize, base: u32) -> Vec<BlockId> {
         (0..n).map(|i| base + (i / 4) as u32).collect()
+    }
+
+    fn spans(n: usize, base: u32) -> Vec<PageSpan> {
+        spans_from_per_token(&per_token_pages(n, base))
     }
 
     #[test]
@@ -258,14 +390,14 @@ mod tests {
         let t = RadixTree::new();
         let m = t.match_prefix(&toks("hello"));
         assert_eq!(m.matched, 0);
-        assert!(m.blocks.is_empty());
+        assert!(m.spans.is_empty());
     }
 
     #[test]
     fn insert_then_full_match() {
         let mut t = RadixTree::new();
         let s = toks("system prompt");
-        t.insert(&s, &pages(s.len(), 0));
+        t.insert(&s, &spans(s.len(), 0));
         let m = t.match_prefix(&s);
         assert_eq!(m.matched, 13);
         assert_eq!(m.page_list(), vec![0, 1, 2, 3]);
@@ -275,7 +407,7 @@ mod tests {
     fn longest_prefix_of_longer_query() {
         let mut t = RadixTree::new();
         let s = toks("shared");
-        t.insert(&s, &pages(s.len(), 0));
+        t.insert(&s, &spans(s.len(), 0));
         let m = t.match_prefix(&toks("shared suffix"));
         assert_eq!(m.matched, 6);
     }
@@ -283,20 +415,21 @@ mod tests {
     #[test]
     fn mid_edge_partial_match_counts_tokens() {
         let mut t = RadixTree::new();
-        t.insert(&toks("abcdef"), &pages(6, 0));
+        t.insert(&toks("abcdef"), &spans(6, 0));
         let m = t.match_prefix(&toks("abcxyz"));
         assert_eq!(m.matched, 3);
-        assert_eq!(m.blocks.len(), 3);
+        assert_eq!(m.spans.iter().map(|s| s.tokens as usize).sum::<usize>(), 3);
+        assert_eq!(m.page_list(), vec![0]);
     }
 
     #[test]
     fn divergent_insert_splits_edge() {
         let mut t = RadixTree::new();
-        t.insert(&toks("abcdef"), &pages(6, 0));
+        t.insert(&toks("abcdef"), &spans(6, 0));
         t.insert(&toks("abcxyz"), &{
-            let mut b = pages(3, 0);
-            b.extend(pages(3, 100));
-            b
+            let mut b = per_token_pages(3, 0);
+            b.extend(per_token_pages(3, 100));
+            spans_from_per_token(&b)
         });
         for (q, want) in [("abcdef", 6), ("abcxyz", 6), ("abcq", 3), ("ab", 2)] {
             assert_eq!(t.match_prefix(&toks(q)).matched, want, "{q}");
@@ -307,13 +440,13 @@ mod tests {
     fn pin_survives_split() {
         let mut t = RadixTree::new();
         let a = toks("abcdef");
-        t.insert(&a, &pages(6, 0));
+        t.insert(&a, &spans(6, 0));
         t.pin(&a);
         // Divergent insert splits the pinned edge.
         t.insert(&toks("abcxyz"), &{
-            let mut b = pages(3, 0);
-            b.extend(pages(3, 100));
-            b
+            let mut b = per_token_pages(3, 0);
+            b.extend(per_token_pages(3, 100));
+            spans_from_per_token(&b)
         });
         // Eviction must not touch the pinned run, but may take the
         // unpinned new suffix.
@@ -329,11 +462,11 @@ mod tests {
     fn expanded_len_tracks_typhoon_coverage() {
         let mut t = RadixTree::new();
         let sys = toks("sys");
-        t.insert(&sys, &pages(3, 0));
+        t.insert(&sys, &spans(3, 0));
         t.insert(&toks("sysq1"), &{
-            let mut b = pages(3, 0);
-            b.extend(pages(2, 50));
-            b
+            let mut b = per_token_pages(3, 0);
+            b.extend(per_token_pages(2, 50));
+            spans_from_per_token(&b)
         });
         t.mark_expanded(&sys);
         let m = t.match_prefix(&toks("sysq1"));
@@ -343,8 +476,45 @@ mod tests {
 
     #[test]
     fn page_list_dedups() {
-        let m = MatchResult { matched: 6, blocks: vec![4, 4, 4, 7, 7, 9], expanded_len: 0 };
+        let m = MatchResult {
+            matched: 6,
+            spans: spans_from_per_token(&[4, 4, 4, 7, 7, 9]),
+            expanded_len: 0,
+        };
         assert_eq!(m.page_list(), vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn pages_for_tokens_matches_per_token_dedup() {
+        let blocks = [4u32, 4, 4, 7, 7, 9, 9, 9];
+        let m = MatchResult {
+            matched: 8,
+            spans: spans_from_per_token(&blocks),
+            expanded_len: 0,
+        };
+        for n in 0..=8usize {
+            let mut expect: Vec<BlockId> = Vec::new();
+            for &b in &blocks[..n] {
+                if expect.last() != Some(&b) {
+                    expect.push(b);
+                }
+            }
+            assert_eq!(m.pages_for_tokens(n), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn span_helpers_roundtrip() {
+        // Block-aligned construction matches per-token expansion.
+        let pages = [10u32, 11, 12];
+        let aligned = spans_from_pages(&pages, 9, 4); // 4+4+1 tokens
+        let per_token: Vec<BlockId> =
+            (0..9).map(|i| pages[i / 4]).collect();
+        assert_eq!(aligned, spans_from_per_token(&per_token));
+        // Splitting mid-run keeps the page on both sides.
+        let (head, tail) = split_spans(&aligned, 6);
+        assert_eq!(head, vec![PageSpan::new(10, 4), PageSpan::new(11, 2)]);
+        assert_eq!(tail, vec![PageSpan::new(11, 2), PageSpan::new(12, 1)]);
     }
 
     #[test]
@@ -353,26 +523,32 @@ mod tests {
         let mut rng = Rng::new(99);
         let mut t = RadixTree::new();
         let mut corpus: Vec<Vec<u32>> = Vec::new();
+        let mut per_token: Vec<Vec<BlockId>> = Vec::new();
         for i in 0..60u32 {
-            let base = if corpus.is_empty() || rng.next_f64() < 0.3 {
-                Vec::new()
+            let (mut s, mut blocks) = if corpus.is_empty() || rng.next_f64() < 0.3 {
+                (Vec::new(), Vec::new())
             } else {
-                let b = rng.choose(&corpus).clone();
-                let cut = rng.gen_range_usize(0, b.len() + 1);
-                b[..cut].to_vec()
+                let k = rng.gen_range_usize(0, corpus.len());
+                let cut = rng.gen_range_usize(0, corpus[k].len() + 1);
+                (corpus[k][..cut].to_vec(), per_token[k][..cut].to_vec())
             };
-            let mut s = base;
             for _ in 0..rng.gen_range_usize(1, 6) {
                 s.push(rng.gen_range(0, 5) as u32);
             }
-            let m = t.match_prefix(&s);
-            let mut blocks = m.blocks.clone();
+            // Fresh per-token pages for the new suffix (may start
+            // mid-"page" — the per-token model the spans must replicate).
             blocks.extend((blocks.len()..s.len()).map(|j| i * 1000 + j as u32));
-            t.insert(&s, &blocks);
+            let m = t.match_prefix(&s);
+            assert_eq!(
+                m.spans.iter().map(|x| x.tokens as usize).sum::<usize>(),
+                m.matched
+            );
+            t.insert(&s, &spans_from_per_token(&blocks));
             corpus.push(s);
+            per_token.push(blocks);
         }
         // Oracle: longest common prefix against every inserted string.
-        for probe in &corpus {
+        for (probe, blocks) in corpus.iter().zip(&per_token) {
             let m = t.match_prefix(probe);
             let oracle = corpus
                 .iter()
@@ -380,7 +556,14 @@ mod tests {
                 .max()
                 .unwrap();
             assert_eq!(m.matched, oracle);
-            assert_eq!(m.blocks.len(), m.matched);
+            // Page list identical to per-token dedup.
+            let mut expect: Vec<BlockId> = Vec::new();
+            for &b in &blocks[..m.matched] {
+                if expect.last() != Some(&b) {
+                    expect.push(b);
+                }
+            }
+            assert_eq!(m.page_list(), expect);
         }
     }
 }

@@ -1,0 +1,70 @@
+//! API-compatible stub of `TinyModelEngine`, compiled when the `pjrt`
+//! cargo feature is off.  Construction fails with the stub message, so
+//! no Engine method is ever reachable; they exist only so the serving
+//! CLI, examples and e2e tests type-check without the `xla` crate.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::KernelKind;
+use crate::coordinator::{DecodeBatch, Engine, IterationOutcome};
+use crate::kvcache::{PrefixId, SeqId};
+
+const STUB_MSG: &str =
+    "typhoon_mla was built without the `pjrt` feature; real PJRT execution \
+     requires the `xla` crate (see rust/Cargo.toml)";
+
+pub struct TinyModelEngine {
+    pub variant: KernelKind,
+    /// Generated token history per sequence (for the examples).
+    pub generated: HashMap<SeqId, Vec<i32>>,
+}
+
+impl TinyModelEngine {
+    pub fn new(
+        _artifacts_dir: impl Into<std::path::PathBuf>,
+        _variant: KernelKind,
+    ) -> Result<Self> {
+        bail!(STUB_MSG)
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        0.0
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        (0, 0, 0, 0)
+    }
+}
+
+impl Engine for TinyModelEngine {
+    fn prepare_shared(
+        &mut self,
+        _prefix: PrefixId,
+        _tokens: &[u32],
+        _kernel: KernelKind,
+    ) -> Result<f64> {
+        bail!(STUB_MSG)
+    }
+
+    fn prefill_requests(&mut self, _seqs: &[(SeqId, usize)]) -> Result<f64> {
+        bail!(STUB_MSG)
+    }
+
+    fn decode(&mut self, _batch: &DecodeBatch) -> Result<IterationOutcome> {
+        bail!(STUB_MSG)
+    }
+
+    fn release(&mut self, _seq: SeqId) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_to_construct() {
+        assert!(TinyModelEngine::new("/tmp", KernelKind::Typhoon).is_err());
+    }
+}

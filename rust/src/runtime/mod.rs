@@ -2,9 +2,26 @@
 //! `python/compile/aot.py`, compiles them once on the CPU PJRT client,
 //! and executes them from the Rust request path (Python is never on
 //! the hot path).
+//!
+//! The real client/engine need the `xla` crate (bindings over
+//! xla_extension), which the offline build environment does not ship.
+//! They are gated behind the `pjrt` cargo feature; without it this
+//! module compiles API-compatible stubs that error at construction, so
+//! the rest of the stack (simulator, coordinator, figures, benches)
+//! builds and runs everywhere.  `manifest` is pure JSON and always real.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
+pub mod client;
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
+
 pub mod manifest;
 
 pub use client::{literal_f32, literal_i32, random_for_spec, to_vec_f32, to_vec_i32, PjrtRuntime};

@@ -5,13 +5,24 @@
 //! formulas match msprof-measured runtimes to within a few percent
 //! (Fig. 4 discussion), and the scheduling/policy code driven here is
 //! the same code the real PJRT engine runs under.
+//!
+//! Hot path: one decode iteration used to evaluate the Table-1 model
+//! once per sequence (`O(B)` per iteration, B up to 1024).  Context
+//! lengths repeat heavily inside a batch (requests admitted in the same
+//! wave advance in lockstep), so the engine now buckets
+//! `batch.context_lens` by distinct length — counting-sort style over
+//! a reusable scratch array — and evaluates the memoized `CostTable`
+//! once per *distinct* length, scaling the resulting `Component` by the
+//! bucket count.  Both steps are exact over integer MAC/word counts, so
+//! modeled times are bit-identical to the per-sequence evaluation.
 
 use anyhow::Result;
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 use crate::coordinator::{DecodeBatch, Engine, IterationOutcome};
 use crate::costmodel::exec_time::component_time;
-use crate::costmodel::flops::{attention_cost, AttentionWorkload};
+use crate::costmodel::flops::Component;
+use crate::costmodel::table::CostTable;
 use crate::kvcache::{PrefixId, SeqId};
 use crate::metrics::BreakdownTimers;
 
@@ -20,31 +31,91 @@ pub struct SimEngine {
     pub hw: HardwareSpec,
     /// Model prefill as compute-bound naive attention + projections.
     pub include_prefill: bool,
+    /// Hot-path switch: bucket lengths + memoize the cost table.  Off,
+    /// the engine evaluates Table 1 once per sequence per iteration —
+    /// the pre-optimization reference, kept as the measurable baseline
+    /// (`bench_sweep`) and for equivalence tests.  Results are
+    /// bit-identical either way.
+    pub memoized: bool,
     shared_len: usize,
+    /// Memoized Table-1 evaluations, shared across all iterations.
+    table: CostTable,
+    /// Counting-sort scratch: `len_counts[l]` = sequences at length `l`
+    /// this iteration; `touched` lists the distinct lengths to reset.
+    len_counts: Vec<u64>,
+    touched: Vec<usize>,
 }
 
 impl SimEngine {
     pub fn new(cfg: ModelConfig, hw: HardwareSpec) -> Self {
-        SimEngine { cfg, hw, include_prefill: true, shared_len: 0 }
+        let table = CostTable::new(cfg.clone());
+        SimEngine {
+            cfg,
+            hw,
+            include_prefill: true,
+            memoized: true,
+            shared_len: 0,
+            table,
+            len_counts: Vec::new(),
+            touched: Vec::new(),
+        }
+    }
+
+    /// Cache statistics of the memoized cost table: (hits, misses).
+    pub fn cost_cache_stats(&self) -> (u64, u64) {
+        (self.table.hits, self.table.misses)
     }
 
     /// Per-layer decode-attention time of one iteration with mixed
     /// per-request context lengths.  The shared part costs once per
     /// batch (B queries x one stream); non-shared parts are summed per
-    /// request at their individual lengths.
-    fn iteration_time(&self, batch: &DecodeBatch) -> (f64, BreakdownTimers) {
+    /// *distinct* request length, scaled by how many requests share it.
+    fn iteration_time(&mut self, batch: &DecodeBatch) -> (f64, BreakdownTimers) {
         let b = batch.seqs.len() as u64;
-        // Shared component at the true batch size (l_n = 0 isolates it).
-        let shared_wl = AttentionWorkload::decode(b, batch.shared_len as u64, 0);
-        let shared_cost = attention_cost(&self.cfg, batch.kernel, &shared_wl);
-        // Non-shared: per request at its own context length (B=1 each);
-        // the +1 is this step's token (scattered before attention).
-        let mut non_shared = crate::costmodel::flops::Component::default();
-        for &l in &batch.context_lens {
-            let wl = AttentionWorkload::decode(1, 0, l as u64 + 1);
-            let c = attention_cost(&self.cfg, batch.kernel, &wl);
-            non_shared = non_shared.add(c.non_shared);
-        }
+        let (shared_cost, non_shared) = if self.memoized {
+            // Shared component at the true batch size (l_n=0 isolates it).
+            let shared_cost = self.table.cost(batch.kernel, b, batch.shared_len as u64, 0);
+            // Bucket the context lengths (counting sort over the scratch).
+            debug_assert!(self.touched.is_empty());
+            for &l in &batch.context_lens {
+                if l >= self.len_counts.len() {
+                    self.len_counts.resize(l + 1, 0);
+                }
+                if self.len_counts[l] == 0 {
+                    self.touched.push(l);
+                }
+                self.len_counts[l] += 1;
+            }
+            // Deterministic order (ascending length) so the walk is
+            // reproducible; the u64 sums are order-independent anyway.
+            self.touched.sort_unstable();
+            // Non-shared: one cost-model evaluation per distinct length
+            // (B=1 each; the +1 is this step's token, scattered before
+            // attention), scaled by the bucket count — exactly the sum
+            // the per-sequence loop produces.
+            let mut non_shared = Component::default();
+            for i in 0..self.touched.len() {
+                let l = self.touched[i];
+                let count = self.len_counts[l];
+                self.len_counts[l] = 0;
+                let c = self.table.cost(batch.kernel, 1, 0, l as u64 + 1);
+                non_shared = non_shared.add(c.non_shared.scale(count));
+            }
+            self.touched.clear();
+            (shared_cost, non_shared)
+        } else {
+            // Reference path: direct Table-1 evaluation per sequence.
+            use crate::costmodel::flops::{attention_cost, AttentionWorkload};
+            let shared_wl = AttentionWorkload::decode(b, batch.shared_len as u64, 0);
+            let shared_cost = attention_cost(&self.cfg, batch.kernel, &shared_wl);
+            let mut non_shared = Component::default();
+            for &l in &batch.context_lens {
+                let wl = AttentionWorkload::decode(1, 0, l as u64 + 1);
+                non_shared =
+                    non_shared.add(attention_cost(&self.cfg, batch.kernel, &wl).non_shared);
+            }
+            (shared_cost, non_shared)
+        };
         let mut bd = BreakdownTimers::default();
         bd.stage1_attn = component_time(&shared_cost.shared, &self.hw);
         bd.stage2_attn = component_time(&non_shared, &self.hw);
@@ -101,6 +172,7 @@ mod tests {
     use super::*;
     use crate::config::hardware::ascend_npu;
     use crate::config::model::deepseek_v3;
+    use crate::costmodel::flops::{attention_cost, AttentionWorkload};
 
     fn batch(kernel: KernelKind, b: usize, shared: usize, ln: usize) -> DecodeBatch {
         DecodeBatch {
@@ -155,5 +227,74 @@ mod tests {
         let t1 = e.prepare_shared(0, &vec![0; 1000], KernelKind::Typhoon).unwrap();
         let t2 = e.prepare_shared(0, &vec![0; 2000], KernelKind::Typhoon).unwrap();
         assert!((t2 / t1 - 4.0).abs() < 1e-9);
+    }
+
+    /// The bucketed + memoized iteration time must be *bit-identical*
+    /// to the straightforward per-sequence evaluation — both against a
+    /// hand-rolled reference and against the engine's own
+    /// `memoized = false` path.
+    #[test]
+    fn bucketed_matches_per_sequence_reference() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let mut e = SimEngine::new(cfg.clone(), hw.clone());
+        let mut reference_engine = SimEngine::new(cfg.clone(), hw.clone());
+        reference_engine.memoized = false;
+        let mut rng = crate::util::rng::Rng::new(17);
+        for kernel in KernelKind::all() {
+            for trial in 0..10 {
+                let b = rng.gen_range_usize(1, 300);
+                let shared = rng.gen_range_usize(0, 8000);
+                let lens: Vec<usize> =
+                    (0..b).map(|_| rng.gen_range_usize(0, 64)).collect();
+                let batch = DecodeBatch {
+                    seqs: (0..b as u64).collect(),
+                    kernel,
+                    shared_len: shared,
+                    context_lens: lens.clone(),
+                };
+                let got = e.decode(&batch).unwrap();
+                let via_flag = reference_engine.decode(&batch).unwrap();
+                assert_eq!(got.seconds, via_flag.seconds, "memoized flag must not drift");
+
+                // Reference: the original per-sequence formulation.
+                let shared_wl = AttentionWorkload::decode(b as u64, shared as u64, 0);
+                let shared_cost = attention_cost(&cfg, kernel, &shared_wl);
+                let mut non_shared = Component::default();
+                for &l in &lens {
+                    let wl = AttentionWorkload::decode(1, 0, l as u64 + 1);
+                    non_shared = non_shared.add(attention_cost(&cfg, kernel, &wl).non_shared);
+                }
+                let mut bd = BreakdownTimers::default();
+                bd.stage1_attn = component_time(&shared_cost.shared, &hw);
+                bd.stage2_attn = component_time(&non_shared, &hw);
+                bd.proj_kvb1 = component_time(&shared_cost.proj_kvb1, &hw);
+                bd.proj_kvb2 = component_time(&shared_cost.proj_kvb2, &hw);
+                bd.combine = component_time(&shared_cost.combine, &hw);
+                assert_eq!(got.seconds, bd.total(), "kernel {kernel:?} trial {trial}");
+            }
+        }
+        let (hits, misses) = e.cost_cache_stats();
+        assert!(hits > 0, "repeated lengths must hit the cache");
+        assert!(misses > 0);
+    }
+
+    /// Repeated identical batches do O(distinct lengths) model
+    /// evaluations, not O(B) — everything after the first iteration is
+    /// a cache hit.
+    #[test]
+    fn steady_state_is_all_cache_hits() {
+        let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
+        let b = batch(KernelKind::Typhoon, 256, 4096, 512);
+        e.decode(&b).unwrap();
+        let (_, misses_after_first) = e.cost_cache_stats();
+        // 256 equal lengths -> 1 shared + 1 non-shared evaluation.
+        assert_eq!(misses_after_first, 2);
+        for _ in 0..10 {
+            e.decode(&b).unwrap();
+        }
+        let (hits, misses) = e.cost_cache_stats();
+        assert_eq!(misses, misses_after_first, "steady state never misses");
+        assert_eq!(hits, 20);
     }
 }

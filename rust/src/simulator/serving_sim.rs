@@ -28,6 +28,10 @@ pub struct SimParams {
     /// Include prefill time in the modeled clock (the paper's
     /// throughput counts decode iterations; prefill is excluded there).
     pub include_prefill: bool,
+    /// Use the memoized + length-bucketed engine hot path (default).
+    /// `false` selects the per-sequence reference evaluation — slower,
+    /// bit-identical results; `bench_sweep` uses it as the baseline.
+    pub memoized_engine: bool,
 }
 
 impl SimParams {
@@ -40,6 +44,7 @@ impl SimParams {
             max_requests: None,
             seed: 42,
             include_prefill: false,
+            memoized_engine: true,
         }
     }
 }
@@ -84,6 +89,7 @@ pub fn run_experiment(
     let kv = KvCacheManager::new(params.model.clone(), total_blocks, block_size);
     let mut engine = SimEngine::new(params.model.clone(), params.hw.clone());
     engine.include_prefill = params.include_prefill;
+    engine.memoized = params.memoized_engine;
     let mut coord = Coordinator::new(cfg, policy, kv, engine)?;
 
     // The shared prefix: register by token count (content-free model).

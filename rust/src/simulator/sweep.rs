@@ -1,0 +1,247 @@
+//! `SweepExecutor`: deterministic parallel evaluation of independent
+//! experiment cells (the Fig. 2/3 grids, `run_kernel_comparison`, and
+//! any other embarrassingly-parallel sweep).
+//!
+//! Each cell of the paper's evaluation grid — (model x hardware x
+//! prompt x dataset x batch x kernel) — is a self-contained serving
+//! simulation with its own coordinator, KV-cache and seeded RNG; cells
+//! share no mutable state.  The executor fans cells out over
+//! `std::thread::scope` workers pulling indices from an atomic counter,
+//! stores each result at its cell index, and returns them **in cell
+//! order** — so any artifact formatted from the results is
+//! byte-identical to a serial run (asserted by
+//! `tests/sweep_equivalence.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::workload::datasets::all_datasets;
+use crate::workload::prompts::all_prompts;
+use crate::workload::{Dataset, SystemPrompt};
+
+use super::serving_sim::{run_experiment, SimParams, SimReport};
+
+/// Worker-count policy for a sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepExecutor {
+    /// Number of worker threads (1 = run serially on the caller).
+    pub threads: usize,
+}
+
+impl Default for SweepExecutor {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl SweepExecutor {
+    /// Strictly serial execution on the calling thread.
+    pub fn serial() -> Self {
+        SweepExecutor { threads: 1 }
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        SweepExecutor { threads: threads.max(1) }
+    }
+
+    /// Parallel over the machine's cores; `TYPHOON_SWEEP_THREADS`
+    /// overrides (0 or 1 forces serial).
+    pub fn from_env() -> Self {
+        if let Ok(v) = std::env::var("TYPHOON_SWEEP_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return Self::with_threads(n);
+            }
+        }
+        let n = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Self::with_threads(n)
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1
+    }
+
+    /// Evaluate `f(0..n)` and return the results **in index order**.
+    /// `f` must be a pure function of its index (all sweep cells are:
+    /// they build their own seeded state).  The first error wins and is
+    /// returned after all workers drain.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        if self.is_serial() || n <= 1 {
+            return (0..n).map(&f).collect();
+        }
+        let workers = self.threads.min(n);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<T>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    let out = f(i);
+                    *slots[i].lock().expect("sweep slot poisoned") = Some(out);
+                });
+            }
+        });
+        // A worker panic is re-raised by scope() above, so reaching
+        // this point means every slot was filled exactly once.
+        let mut results = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            let out = slot
+                .into_inner()
+                .unwrap_or_else(|_| unreachable!("poisoned slot survived scope"))
+                .unwrap_or_else(|| unreachable!("sweep cell {i} never ran"));
+            results.push(out?);
+        }
+        Ok(results)
+    }
+}
+
+/// One cell of the Fig. 2/3 throughput grid (kernel comparison inside).
+#[derive(Clone, Debug)]
+pub struct ThroughputCell {
+    pub model: ModelConfig,
+    pub prompt: SystemPrompt,
+    pub dataset: Dataset,
+    pub batch: usize,
+    pub max_requests: Option<usize>,
+    /// Engine hot path: memoized + length-bucketed (default `true`).
+    /// `false` is the per-sequence reference — `bench_sweep`'s
+    /// unmemoized baseline.  Results are bit-identical either way.
+    pub memoized: bool,
+}
+
+/// The grid in the paper's enumeration order: model (outer) x prompt x
+/// dataset x batch (inner) — the order `fig_throughput` formats rows.
+pub fn throughput_cells(
+    models: &[ModelConfig],
+    batches: &[usize],
+    max_requests_factor: Option<usize>,
+) -> Vec<ThroughputCell> {
+    let mut cells = Vec::new();
+    for model in models {
+        for prompt in all_prompts() {
+            for ds in all_datasets() {
+                for &b in batches {
+                    cells.push(ThroughputCell {
+                        model: model.clone(),
+                        prompt: prompt.clone(),
+                        dataset: ds.clone(),
+                        batch: b,
+                        max_requests: max_requests_factor.map(|f| f * b),
+                        memoized: true,
+                    });
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// One evaluated grid cell: (typhoon, absorb, naive) reports.
+#[derive(Clone, Debug)]
+pub struct ThroughputCellResult {
+    pub cell: ThroughputCell,
+    pub reports: [SimReport; 3],
+}
+
+impl ThroughputCellResult {
+    /// Generated tokens summed over the three kernel runs.
+    pub fn tokens(&self) -> u64 {
+        self.reports.iter().map(|r| r.tokens).sum()
+    }
+}
+
+/// Evaluate the whole grid on `hw` under the executor.  Results come
+/// back in cell order regardless of scheduling.
+pub fn run_throughput_sweep(
+    hw: &HardwareSpec,
+    cells: &[ThroughputCell],
+    exec: &SweepExecutor,
+) -> Result<Vec<ThroughputCellResult>> {
+    exec.run(cells.len(), |i| {
+        let c = &cells[i];
+        let mut reports = Vec::with_capacity(3);
+        for kernel in [KernelKind::Typhoon, KernelKind::Absorb, KernelKind::Naive] {
+            let mut p = SimParams::new(c.model.clone(), hw.clone(), kernel, c.batch);
+            p.max_requests = c.max_requests;
+            p.memoized_engine = c.memoized;
+            reports.push(run_experiment(&p, &c.dataset, &c.prompt)?);
+        }
+        let reports: [SimReport; 3] =
+            reports.try_into().expect("exactly three kernel reports");
+        Ok(ThroughputCellResult { cell: c.clone(), reports })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+
+    #[test]
+    fn ordered_results_under_parallelism() {
+        let exec = SweepExecutor::with_threads(4);
+        let out = exec.run(37, |i| Ok(i * i)).unwrap();
+        assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let serial = SweepExecutor::serial().run(16, |i| Ok(i as u64 + 7)).unwrap();
+        let par = SweepExecutor::with_threads(8).run(16, |i| Ok(i as u64 + 7)).unwrap();
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let exec = SweepExecutor::with_threads(3);
+        let out = exec.run(8, |i| {
+            if i == 5 {
+                anyhow::bail!("cell 5 exploded")
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(out.is_err());
+    }
+
+    #[test]
+    fn cell_enumeration_matches_paper_order() {
+        let cells = throughput_cells(&[deepseek_v3()], &[64, 128], Some(2));
+        // 1 model x 3 prompts x 3 datasets x 2 batches.
+        assert_eq!(cells.len(), 18);
+        assert_eq!(cells[0].batch, 64);
+        assert_eq!(cells[1].batch, 128);
+        assert_eq!(cells[0].prompt.name, cells[5].prompt.name);
+        assert_eq!(cells[0].max_requests, Some(128));
+    }
+
+    /// A tiny real sweep: parallel report values equal the serial ones
+    /// exactly (deterministic seeds, no shared state).
+    #[test]
+    fn real_cells_deterministic_across_executors() {
+        let hw = ascend_npu();
+        let cells = throughput_cells(&[deepseek_v3()], &[64], Some(1));
+        let cells = &cells[..3]; // keep the test quick
+        let serial = run_throughput_sweep(&hw, cells, &SweepExecutor::serial()).unwrap();
+        let par =
+            run_throughput_sweep(&hw, cells, &SweepExecutor::with_threads(3)).unwrap();
+        for (s, p) in serial.iter().zip(&par) {
+            for k in 0..3 {
+                assert_eq!(s.reports[k].tokens, p.reports[k].tokens);
+                assert_eq!(s.reports[k].throughput, p.reports[k].throughput);
+                assert_eq!(s.reports[k].iterations, p.reports[k].iterations);
+            }
+        }
+    }
+}

@@ -6,7 +6,9 @@ use typhoon_mla::config::model::sim;
 use typhoon_mla::config::{KernelKind, ServingConfig};
 use typhoon_mla::coordinator::engine::NullEngine;
 use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
-use typhoon_mla::kvcache::{BlockAllocator, KvCacheManager, RadixTree};
+use typhoon_mla::kvcache::{
+    spans_from_pages, spans_from_per_token, BlockAllocator, BlockId, KvCacheManager, RadixTree,
+};
 use typhoon_mla::util::rng::Rng;
 use typhoon_mla::workload::Request;
 
@@ -60,28 +62,34 @@ fn allocator_conservation_fuzz() {
 }
 
 /// Radix fuzz: longest-prefix match equals the brute-force oracle over
-/// everything inserted, and blocks length always equals match length.
+/// everything inserted, and the page spans always cover the match.
 #[test]
 fn radix_matches_oracle_fuzz() {
     for seed in 0..10 {
         let mut rng = Rng::new(100 + seed);
         let mut tree = RadixTree::new();
         let mut corpus: Vec<Vec<u32>> = Vec::new();
+        let mut per_token: Vec<Vec<BlockId>> = Vec::new();
+        let mut marked: Vec<Vec<u32>> = Vec::new();
         for i in 0..80u32 {
-            let mut s = if corpus.is_empty() || rng.next_f64() < 0.25 {
-                Vec::new()
+            let (mut s, mut blocks) = if corpus.is_empty() || rng.next_f64() < 0.25 {
+                (Vec::new(), Vec::new())
             } else {
-                let b = rng.choose(&corpus);
-                b[..rng.gen_range_usize(0, b.len() + 1)].to_vec()
+                let k = rng.gen_range_usize(0, corpus.len());
+                let cut = rng.gen_range_usize(0, corpus[k].len() + 1);
+                (corpus[k][..cut].to_vec(), per_token[k][..cut].to_vec())
             };
             for _ in 0..rng.gen_range_usize(1, 8) {
                 s.push(rng.gen_range(0, 4) as u32); // tiny alphabet: max overlap
             }
-            let m = tree.match_prefix(&s);
-            let mut blocks = m.blocks.clone();
             blocks.extend((blocks.len()..s.len()).map(|j| i * 1000 + j as u32));
-            tree.insert(&s, &blocks);
+            tree.insert(&s, &spans_from_per_token(&blocks));
+            if rng.next_f64() < 0.3 {
+                tree.mark_expanded(&s);
+                marked.push(s.clone());
+            }
             corpus.push(s);
+            per_token.push(blocks);
 
             // Oracle check over random probes.
             for _ in 0..5 {
@@ -94,7 +102,101 @@ fn radix_matches_oracle_fuzz() {
                     .max()
                     .unwrap_or(0);
                 assert_eq!(m.matched, oracle, "seed {seed} probe {probe:?}");
-                assert_eq!(m.blocks.len(), m.matched);
+                assert_eq!(
+                    m.spans.iter().map(|sp| sp.tokens as usize).sum::<usize>(),
+                    m.matched,
+                    "seed {seed}: spans must cover the match"
+                );
+                // Expanded-prefix oracle: marking a string marks every
+                // edge on its root path, so the longest expanded prefix
+                // of any probe is its max LCP with a marked string.
+                let expanded_oracle = marked
+                    .iter()
+                    .map(|s| s.iter().zip(&probe).take_while(|(a, b)| a == b).count())
+                    .max()
+                    .unwrap_or(0);
+                assert_eq!(
+                    m.expanded_len, expanded_oracle,
+                    "seed {seed} probe {probe:?}"
+                );
+            }
+        }
+        // Every corpus entry's page list equals the per-token dedup —
+        // the page-granular representation is exact.
+        for (s, blocks) in corpus.iter().zip(&per_token) {
+            let m = tree.match_prefix(s);
+            assert_eq!(m.matched, s.len());
+            let mut expect: Vec<BlockId> = Vec::new();
+            for &b in blocks.iter() {
+                if expect.last() != Some(&b) {
+                    expect.push(b);
+                }
+            }
+            assert_eq!(m.page_list(), expect, "seed {seed}");
+        }
+    }
+}
+
+/// Page-granular equivalence: a tree fed block-aligned page spans must
+/// report byte-identical `matched`, `expanded_len` and `page_list()` to
+/// a tree fed the exploded per-token representation of the same pages,
+/// across randomized insert orders, splits and mid-edge matches.
+#[test]
+fn radix_chunked_equals_per_token_semantics() {
+    for seed in 0..8 {
+        let mut rng = Rng::new(7000 + seed);
+        let bs = [1usize, 2, 4, 16][rng.gen_range_usize(0, 4)];
+        let mut chunked = RadixTree::new();
+        let mut exploded = RadixTree::new();
+        let mut corpus: Vec<Vec<u32>> = Vec::new();
+        let mut next_page: BlockId = 0;
+        for _ in 0..60 {
+            // Extend a block-aligned prefix of an existing entry (the
+            // manager's reuse discipline) or start fresh.
+            let (mut s, mut pages) = if corpus.is_empty() || rng.next_f64() < 0.3 {
+                (Vec::new(), Vec::new())
+            } else {
+                let k = rng.gen_range_usize(0, corpus.len());
+                let keep_chunks = rng.gen_range_usize(0, corpus[k].len() / bs + 1);
+                let keep = keep_chunks * bs;
+                let m = chunked.match_prefix(&corpus[k][..keep]);
+                assert_eq!(m.matched, keep);
+                (corpus[k][..keep].to_vec(), m.page_list())
+            };
+            for _ in 0..rng.gen_range_usize(1, 3 * bs + 2) {
+                s.push(rng.gen_range(0, 4) as u32);
+            }
+            while pages.len() < s.len().div_ceil(bs) {
+                pages.push(1000 + next_page);
+                next_page += 1;
+            }
+            let spans = spans_from_pages(&pages, s.len(), bs);
+            chunked.insert(&s, &spans);
+            let per_token: Vec<BlockId> = (0..s.len()).map(|i| pages[i / bs]).collect();
+            exploded.insert(&s, &spans_from_per_token(&per_token));
+            if rng.next_f64() < 0.3 {
+                chunked.mark_expanded(&s);
+                exploded.mark_expanded(&s);
+            }
+            corpus.push(s);
+
+            // Probes: corpus entries, prefixes, and random strings.
+            for _ in 0..6 {
+                let probe: Vec<u32> = match rng.gen_range_usize(0, 3) {
+                    0 => rng.choose(&corpus).clone(),
+                    1 => {
+                        let c = rng.choose(&corpus);
+                        c[..rng.gen_range_usize(0, c.len() + 1)].to_vec()
+                    }
+                    _ => (0..rng.gen_range_usize(1, 3 * bs + 2))
+                        .map(|_| rng.gen_range(0, 4) as u32)
+                        .collect(),
+                };
+                let a = chunked.match_prefix(&probe);
+                let b = exploded.match_prefix(&probe);
+                assert_eq!(a.matched, b.matched, "seed {seed} bs {bs}");
+                assert_eq!(a.expanded_len, b.expanded_len, "seed {seed} bs {bs}");
+                assert_eq!(a.page_list(), b.page_list(), "seed {seed} bs {bs}");
             }
         }
     }

@@ -1,0 +1,79 @@
+//! Regression: the parallel sweep executor must produce *byte-identical*
+//! figure artifacts to the serial path (deterministic per-cell seeds +
+//! ordered result collection), and the memoized/bucketed cost engine
+//! must leave simulation results exactly unchanged.
+
+use typhoon_mla::analysis::figures::fig_throughput;
+use typhoon_mla::config::hardware::ascend_npu;
+use typhoon_mla::config::model::deepseek_v3;
+use typhoon_mla::config::KernelKind;
+use typhoon_mla::simulator::sweep::{run_throughput_sweep, throughput_cells, SweepExecutor};
+use typhoon_mla::simulator::{run_experiment, SimParams};
+use typhoon_mla::workload::datasets::mmlu;
+use typhoon_mla::workload::prompts::PROMPT_C;
+
+/// Serial and parallel fig2 slices are byte-identical, text and CSV.
+#[test]
+fn parallel_and_serial_fig_artifacts_identical() {
+    let hw = ascend_npu();
+    let serial =
+        fig_throughput("fig2", &hw, &[64], Some(2), &SweepExecutor::serial()).unwrap();
+    let parallel =
+        fig_throughput("fig2", &hw, &[64], Some(2), &SweepExecutor::with_threads(4))
+            .unwrap();
+    assert_eq!(serial.text, parallel.text, "text artifact must not drift");
+    assert_eq!(serial.csv, parallel.csv, "csv artifact must not drift");
+    assert!(serial.csv.lines().count() > 10);
+}
+
+/// Per-cell reports are bitwise equal across executors, across
+/// repeated runs (seeded determinism, no shared state), and across the
+/// memoized vs per-sequence-reference engine paths.
+#[test]
+fn sweep_reports_bitwise_stable() {
+    let hw = ascend_npu();
+    let cells = throughput_cells(&[deepseek_v3()], &[64], Some(2));
+    let cells = &cells[..4];
+    let mut reference_cells = cells.to_vec();
+    for c in &mut reference_cells {
+        c.memoized = false;
+    }
+    let a = run_throughput_sweep(&hw, cells, &SweepExecutor::serial()).unwrap();
+    let b = run_throughput_sweep(&hw, cells, &SweepExecutor::with_threads(3)).unwrap();
+    let c = run_throughput_sweep(&hw, cells, &SweepExecutor::with_threads(3)).unwrap();
+    let r = run_throughput_sweep(&hw, &reference_cells, &SweepExecutor::serial()).unwrap();
+    for (((x, y), z), w) in a.iter().zip(&b).zip(&c).zip(&r) {
+        for k in 0..3 {
+            assert_eq!(x.reports[k].tokens, y.reports[k].tokens);
+            assert_eq!(x.reports[k].iterations, y.reports[k].iterations);
+            assert_eq!(x.reports[k].throughput.to_bits(), y.reports[k].throughput.to_bits());
+            assert_eq!(y.reports[k].throughput.to_bits(), z.reports[k].throughput.to_bits());
+            assert_eq!(
+                x.reports[k].decode_seconds.to_bits(),
+                y.reports[k].decode_seconds.to_bits()
+            );
+            // Unmemoized reference engine: identical to the last bit.
+            assert_eq!(x.reports[k].tokens, w.reports[k].tokens);
+            assert_eq!(x.reports[k].throughput.to_bits(), w.reports[k].throughput.to_bits());
+            assert_eq!(
+                x.reports[k].decode_seconds.to_bits(),
+                w.reports[k].decode_seconds.to_bits()
+            );
+        }
+    }
+}
+
+/// The same experiment run twice in-process gives bitwise-equal output
+/// (the memoized cost table may be cold or warm — results must not
+/// depend on cache state).
+#[test]
+fn repeated_experiments_bitwise_equal() {
+    let mut p = SimParams::new(deepseek_v3(), ascend_npu(), KernelKind::Typhoon, 32);
+    p.max_requests = Some(64);
+    let a = run_experiment(&p, &mmlu(), &PROMPT_C).unwrap();
+    let b = run_experiment(&p, &mmlu(), &PROMPT_C).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    assert_eq!(a.decode_seconds.to_bits(), b.decode_seconds.to_bits());
+}
