@@ -13,12 +13,17 @@ use crate::costmodel::flops::{attention_cost, AttentionWorkload};
 use crate::costmodel::memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead};
 use crate::costmodel::roofline::roofline_point;
 use crate::simulator::sweep::{
-    run_throughput_sweep, throughput_cells, SweepExecutor, ThroughputCellResult,
+    run_tenant_sweep, run_throughput_sweep, tenant_cells, throughput_cells, SweepExecutor,
+    TenantCellResult, ThroughputCellResult,
 };
 
 use super::Artifact;
 
 pub const PAPER_BATCHES: [usize; 5] = [64, 128, 256, 512, 1024];
+
+/// The `tenants` artifact grid: tenant count x arrival skew.
+pub const TENANT_COUNTS: [usize; 4] = [1, 2, 4, 8];
+pub const TENANT_SKEWS: [f64; 3] = [0.0, 1.0, 2.0];
 
 /// The Fig. 2/3 model pair.
 pub fn paper_models() -> Vec<crate::config::ModelConfig> {
@@ -101,6 +106,91 @@ pub fn fig_throughput(
     let cells = throughput_cells(&paper_models(), batches, max_requests_factor);
     let results = run_throughput_sweep(hw, &cells, exec)?;
     Ok(format_throughput(id, hw, &results, batches.len()))
+}
+
+/// Format evaluated tenants-grid cells into the `tenants` artifact.
+/// Byte-identical however the cells were evaluated (serial or
+/// parallel) — only their order matters.
+pub fn format_tenants(results: &[TenantCellResult]) -> Artifact {
+    let gib = (1u64 << 30) as f64;
+    let mut text = String::new();
+    let mut csv = String::from(
+        "tenants,skew,typhoon_tok_s,absorb_tok_s,naive_tok_s,\
+         speedup_vs_best_baseline,mixed_iters,typhoon_group_iters,expansion_gib\n",
+    );
+    writeln!(
+        text,
+        "{:>7} {:>5} {:>14} {:>14} {:>14} {:>9} {:>7} {:>10}",
+        "tenants", "skew", "typhoon tok/s", "absorb tok/s", "naive tok/s", "speedup",
+        "mixed", "expand GiB"
+    )
+    .unwrap();
+    for r in results {
+        let c = &r.cell;
+        let [t, a, n] = &r.reports;
+        let best = a.throughput.max(n.throughput);
+        let speedup = t.throughput / best;
+        writeln!(
+            text,
+            "{:>7} {:>5.1} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x {:>7} {:>10.3}",
+            c.tenants,
+            c.skew,
+            t.throughput,
+            a.throughput,
+            n.throughput,
+            speedup,
+            t.mixed_iters,
+            t.expansion_bytes as f64 / gib
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{:.1},{:.1},{:.1},{:.1},{:.3},{},{},{:.4}",
+            c.tenants,
+            c.skew,
+            t.throughput,
+            a.throughput,
+            n.throughput,
+            speedup,
+            t.mixed_iters,
+            t.typhoon_iters,
+            t.expansion_bytes as f64 / gib
+        )
+        .unwrap();
+    }
+    text.push_str(
+        "(grouped typhoon: per-group fall-back — hot tenants run the mixed \
+         kernel while cold ones absorb; baselines: global absorb, per-tenant \
+         naive)\n",
+    );
+    Artifact {
+        id: "tenants",
+        title: "Multi-tenant prefix groups: tenant count x skew, DeepSeek-v3 (Ascend)"
+            .into(),
+        text,
+        csv,
+    }
+}
+
+/// `tenants` artifact: tenant-count x skew sweep comparing grouped
+/// Typhoon against the global-absorb and per-tenant-naive baselines on
+/// the same multi-tenant workload.  Cells run under `exec` with
+/// ordered collection — byte-identical to a serial run.
+pub fn fig_tenants(
+    max_requests_factor: Option<usize>,
+    exec: &SweepExecutor,
+) -> Result<Artifact> {
+    let batch = 256;
+    let total_requests = max_requests_factor.unwrap_or(8) * batch;
+    let cells = tenant_cells(
+        &deepseek_v3(),
+        &TENANT_COUNTS,
+        &TENANT_SKEWS,
+        batch,
+        total_requests,
+    );
+    let results = run_tenant_sweep(&ascend_npu(), &cells, exec)?;
+    Ok(format_tenants(&results))
 }
 
 /// Fig. 4: latency breakdown, Kimi K2, Ls=4096, Ln=512, B in 128..1024,
@@ -432,6 +522,25 @@ mod tests {
             line.split(',').skip(1).map(|x| x.parse().unwrap()).collect();
         let (n, abs) = (f[1], f[2]);
         assert!(n < abs, "naive {n} < absorb {abs} at B=1024");
+    }
+
+    #[test]
+    fn tenants_artifact_shapes_and_wins() {
+        let cells = tenant_cells(&deepseek_v3(), &[1, 4], &[2.0], 128, 256);
+        let results =
+            run_tenant_sweep(&ascend_npu(), &cells, &SweepExecutor::from_env()).unwrap();
+        let a = format_tenants(&results);
+        assert_eq!(a.id, "tenants");
+        assert_eq!(a.csv.lines().count(), 3, "header + 2 rows");
+        // The skewed 4-tenant row: grouped typhoon at least matches the
+        // best baseline (hot group clears B_theta at batch 128).
+        let row = a.csv.lines().last().unwrap();
+        assert!(row.starts_with("4,2.0"), "{row}");
+        let fields: Vec<&str> = row.split(',').collect();
+        let speedup: f64 = fields[5].parse().unwrap();
+        assert!(speedup >= 0.99, "grouped typhoon should win: {row}");
+        let mixed: u64 = fields[6].parse().unwrap();
+        assert!(mixed > 0, "skewed cell must mix kernels: {row}");
     }
 
     #[test]

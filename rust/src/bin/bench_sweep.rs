@@ -17,7 +17,9 @@
 //!
 //! Emits `BENCH_sweep.json` with schema
 //! `{wall_seconds, cells, tokens_simulated}` (plus serial baseline and
-//! speedup fields when measured) via util::bench-style JSON.
+//! speedup fields when measured) via util::bench-style JSON — to
+//! `--out` (default `target/bench/`) *and* to the tracked repo-root
+//! copy `BENCH_sweep.json`, so the perf trajectory survives PRs.
 
 use std::time::Instant;
 
@@ -137,6 +139,35 @@ fn main() -> Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     std::fs::write(&out_path, json.to_string_pretty())?;
-    eprintln!("[bench_sweep] wrote {out_path}");
+    // Tracked copy at the repo root, so the perf trajectory survives
+    // across PRs in version control.  Resolved at *runtime*: the
+    // topmost Cargo.toml-bearing ancestor of the cwd (the workspace
+    // root under `cargo run`); skipped with a note when the binary
+    // runs outside any checkout.
+    match workspace_root() {
+        Some(root) => {
+            let root_copy = root.join("BENCH_sweep.json");
+            std::fs::write(&root_copy, json.to_string_pretty())?;
+            eprintln!("[bench_sweep] wrote {out_path} and {}", root_copy.display());
+        }
+        None => eprintln!(
+            "[bench_sweep] wrote {out_path} (no Cargo.toml ancestor; tracked copy skipped)"
+        ),
+    }
     Ok(())
+}
+
+/// The topmost ancestor of the cwd containing a `Cargo.toml` (the
+/// workspace root when invoked via cargo), or None outside a checkout.
+fn workspace_root() -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    let mut found = None;
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            found = Some(dir.clone());
+        }
+        if !dir.pop() {
+            return found;
+        }
+    }
 }

@@ -2,7 +2,7 @@
 //!
 //! Usage:
 //!   figures all [--out DIR] [--full]      # everything
-//!   figures table1|eq1|table3|fig2|...|fig8
+//!   figures table1|eq1|table3|fig2|...|fig8|tenants
 //!
 //! `--full` runs the throughput sweeps over whole dataset splits (the
 //! paper's protocol); the default caps requests at 4x batch per cell so
@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 use typhoon_mla::analysis::{figures, tables, Artifact};
+use typhoon_mla::simulator::SweepExecutor;
 use typhoon_mla::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -51,8 +52,11 @@ fn main() -> Result<()> {
     if all || which == "fig8" {
         artifacts.push(figures::fig8()?);
     }
+    if all || which == "tenants" {
+        artifacts.push(figures::fig_tenants(cap, &SweepExecutor::from_env())?);
+    }
     if artifacts.is_empty() {
-        bail!("unknown artifact {which:?} (all|table1|eq1|table3|fig2..fig8)");
+        bail!("unknown artifact {which:?} (all|table1|eq1|table3|fig2..fig8|tenants)");
     }
 
     let dir = std::path::Path::new(&out);

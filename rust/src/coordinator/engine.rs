@@ -5,6 +5,14 @@
 //!   tiny transformer on the PJRT CPU client;
 //! * `simulator::SimEngine` — cost-model timing at paper scale
 //!   (DeepSeek-v3 / Kimi K2 on NPU/GPU hardware specs).
+//!
+//! A decode iteration is **grouped by shared prefix**: every sequence
+//! belongs to exactly one prefix group (its tenant's system prompt),
+//! and the paper's naive-stage amortization argument (§3) applies *per
+//! group* — so the batch carries a per-group partition and a per-group
+//! kernel decision instead of one global `shared_len`/kernel pair.  A
+//! single-tenant batch has exactly one group and reduces to the old
+//! formulation bit-for-bit.
 
 use anyhow::Result;
 
@@ -12,15 +20,92 @@ use crate::config::KernelKind;
 use crate::kvcache::{PrefixId, SeqId};
 use crate::metrics::BreakdownTimers;
 
-/// One decode iteration over the running set.
+/// One prefix group's slice of a decode batch.  `start..start+len`
+/// indexes `DecodeBatch::seqs` / `context_lens`; members of a group are
+/// contiguous and keep their admission order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchGroup {
+    /// The shared prefix (tenant system prompt) this group attends to.
+    pub prefix: PrefixId,
+    /// Length of that shared prefix, tokens.
+    pub shared_len: usize,
+    /// Kernel selected for this group (the fall-back rule is evaluated
+    /// per group against the *group's* occupancy, not the batch's).
+    pub kernel: KernelKind,
+    /// First member index into the batch arrays.
+    pub start: usize,
+    /// Member count (group occupancy).
+    pub len: usize,
+}
+
+/// One decode iteration over the running set, partitioned into prefix
+/// groups.
 #[derive(Clone, Debug)]
 pub struct DecodeBatch {
+    /// All sequences this iteration, grouped-contiguous.
     pub seqs: Vec<SeqId>,
-    pub kernel: KernelKind,
-    /// Shared prefix length visible to every sequence in the batch.
-    pub shared_len: usize,
-    /// Per-sequence non-shared context length *before* this step.
+    /// Per-sequence non-shared context length *before* this step,
+    /// parallel to `seqs`.
     pub context_lens: Vec<usize>,
+    /// The group partition.  Non-empty; group slices tile
+    /// `0..seqs.len()` exactly, in scheduler order.
+    pub groups: Vec<BatchGroup>,
+}
+
+impl DecodeBatch {
+    /// A single-group batch — the classic single-shared-prefix shape
+    /// every pre-tenancy call site used.
+    pub fn single(
+        kernel: KernelKind,
+        shared_len: usize,
+        seqs: Vec<SeqId>,
+        context_lens: Vec<usize>,
+    ) -> Self {
+        let len = seqs.len();
+        DecodeBatch {
+            seqs,
+            context_lens,
+            groups: vec![BatchGroup { prefix: 0, shared_len, kernel, start: 0, len }],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// The batch's kernel when every group agrees (always true for
+    /// single-prefix configs); `None` for a mixed iteration.
+    pub fn uniform_kernel(&self) -> Option<KernelKind> {
+        let first = self.groups.first()?.kernel;
+        self.groups.iter().all(|g| g.kernel == first).then_some(first)
+    }
+
+    /// A group's member sequence ids.
+    pub fn group_seqs(&self, g: &BatchGroup) -> &[SeqId] {
+        &self.seqs[g.start..g.start + g.len]
+    }
+
+    /// A group's member context lengths.
+    pub fn group_lens(&self, g: &BatchGroup) -> &[usize] {
+        &self.context_lens[g.start..g.start + g.len]
+    }
+}
+
+/// One newly-admitted sequence to prefill: its non-shared prompt plus
+/// the shared-prefix length its group attends to (prefill cost models
+/// the question attending to prefix + itself).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefillRequest {
+    pub seq: SeqId,
+    /// Non-shared context tokens to prefill (prompt, plus regenerated
+    /// tokens for preempted requeues).
+    pub context_len: usize,
+    /// Shared-prefix length visible to this sequence's group.
+    pub shared_len: usize,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -33,7 +118,8 @@ pub struct IterationOutcome {
 
 pub trait Engine {
     /// Prefill + cache a shared prefix; for TyphoonMLA this includes the
-    /// uncompressed expansion.  Returns modeled/measured seconds.
+    /// uncompressed expansion.  Called once per registered prefix group.
+    /// Returns modeled/measured seconds.
     fn prepare_shared(
         &mut self,
         prefix: PrefixId,
@@ -42,7 +128,7 @@ pub trait Engine {
     ) -> Result<f64>;
 
     /// Batched prefill of newly-admitted requests (non-shared prompts).
-    fn prefill_requests(&mut self, seqs: &[(SeqId, usize)]) -> Result<f64>;
+    fn prefill_requests(&mut self, seqs: &[PrefillRequest]) -> Result<f64>;
 
     /// One decode iteration; every sequence in the batch emits one token.
     fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome>;
@@ -81,7 +167,7 @@ impl Engine for NullEngine {
         Ok(self.prefill_seconds)
     }
 
-    fn prefill_requests(&mut self, _seqs: &[(SeqId, usize)]) -> Result<f64> {
+    fn prefill_requests(&mut self, _seqs: &[PrefillRequest]) -> Result<f64> {
         Ok(self.prefill_seconds)
     }
 
@@ -93,4 +179,45 @@ impl Engine for NullEngine {
     }
 
     fn release(&mut self, _seq: SeqId) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_group_tiles_whole_batch() {
+        let b = DecodeBatch::single(KernelKind::Typhoon, 4096, vec![3, 1, 2], vec![5, 6, 7]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.groups.len(), 1);
+        assert_eq!(b.uniform_kernel(), Some(KernelKind::Typhoon));
+        assert_eq!(b.group_seqs(&b.groups[0]), &[3, 1, 2]);
+        assert_eq!(b.group_lens(&b.groups[0]), &[5, 6, 7]);
+    }
+
+    #[test]
+    fn mixed_kernels_are_not_uniform() {
+        let b = DecodeBatch {
+            seqs: vec![0, 1, 2],
+            context_lens: vec![1, 2, 3],
+            groups: vec![
+                BatchGroup {
+                    prefix: 0,
+                    shared_len: 4096,
+                    kernel: KernelKind::Typhoon,
+                    start: 0,
+                    len: 2,
+                },
+                BatchGroup {
+                    prefix: 1,
+                    shared_len: 128,
+                    kernel: KernelKind::Absorb,
+                    start: 2,
+                    len: 1,
+                },
+            ],
+        };
+        assert_eq!(b.uniform_kernel(), None);
+        assert_eq!(b.group_seqs(&b.groups[1]), &[2]);
+    }
 }

@@ -4,6 +4,17 @@
 //! This is the Orca/vLLM-style serving loop the paper's experiments
 //! assume: a fixed-size decode batch where completed requests are
 //! replaced by new ones sampled from the dataset each iteration.
+//!
+//! **Prefix groups.**  The paper's protocol serves one global system
+//! prompt; a production fleet serves many tenants, each with its own.
+//! The coordinator therefore keeps a registry of shared prefixes
+//! ("prefix groups"), tags every sequence with its group, and builds
+//! each decode iteration as a *grouped* `DecodeBatch`: members are
+//! partitioned by prefix and the Eq. 1 fall-back rule is evaluated per
+//! group against the group's occupancy — a cold group falls back to
+//! absorb while a hot group runs Typhoon in the same iteration.  With
+//! one registered prefix this reduces to the paper's single-prompt
+//! protocol bit-for-bit.
 
 pub mod engine;
 pub mod policy;
@@ -19,7 +30,7 @@ use crate::kvcache::{KvCacheManager, PrefixId, SeqId};
 use crate::metrics::{Clock, Metrics};
 use crate::workload::Request;
 
-pub use engine::{DecodeBatch, Engine, IterationOutcome};
+pub use engine::{BatchGroup, DecodeBatch, Engine, IterationOutcome, PrefillRequest};
 pub use policy::KernelPolicy;
 pub use running::RunningSet;
 pub use sequence::{SeqState, Sequence};
@@ -33,7 +44,11 @@ pub struct Coordinator<E: Engine> {
     running: RunningSet,
     seqs: HashMap<SeqId, Sequence>,
     pub metrics: Metrics,
-    shared_prefix: Option<(PrefixId, usize)>,
+    /// Registered prefix groups, in registration order: (id, token len).
+    prefixes: Vec<(PrefixId, usize)>,
+    /// Target of group-less `submit` calls: the prefix installed by
+    /// `set_shared_prefix` (or the first registered group).
+    default_prefix: Option<PrefixId>,
     recently_finished: Vec<SeqId>,
     next_seq: SeqId,
     /// Canonical run clock: accumulated engine-reported seconds.
@@ -57,7 +72,8 @@ impl<E: Engine> Coordinator<E> {
             running: RunningSet::new(),
             seqs: HashMap::new(),
             metrics: Metrics::new(Clock::Simulated),
-            shared_prefix: None,
+            prefixes: Vec::new(),
+            default_prefix: None,
             recently_finished: Vec::new(),
             next_seq: 0,
             now: 0.0,
@@ -68,9 +84,11 @@ impl<E: Engine> Coordinator<E> {
         self.now
     }
 
-    /// Install the shared prefix (system prompt) and run its prefill.
-    /// For Typhoon/Naive the uncompressed copy is materialized too.
-    pub fn set_shared_prefix(&mut self, tokens: &[u32]) -> Result<PrefixId> {
+    /// Register a prefix group (one tenant's system prompt) and run its
+    /// prefill.  For Typhoon/Naive the uncompressed copy is
+    /// materialized too.  The first registered group becomes the
+    /// default target of group-less `submit` calls.
+    pub fn register_prefix_group(&mut self, tokens: &[u32]) -> Result<PrefixId> {
         let id = self.kv.register_shared_prefix(tokens)?;
         let secs = self.engine.prepare_shared(id, tokens, self.cfg.kernel)?;
         if self.cfg.kernel == KernelKind::Typhoon || self.cfg.kernel == KernelKind::Naive {
@@ -78,19 +96,54 @@ impl<E: Engine> Coordinator<E> {
         }
         self.now += secs;
         self.metrics.advance_sim_time(secs);
-        self.shared_prefix = Some((id, tokens.len()));
+        self.prefixes.push((id, tokens.len()));
+        if self.default_prefix.is_none() {
+            self.default_prefix = Some(id);
+        }
         Ok(id)
     }
 
-    pub fn shared_len(&self) -> usize {
-        self.shared_prefix.map_or(0, |(_, l)| l)
+    /// Install the shared prefix (system prompt) and run its prefill —
+    /// the classic single-tenant entry point.  Registers a group and
+    /// makes it the default `submit` target.
+    pub fn set_shared_prefix(&mut self, tokens: &[u32]) -> Result<PrefixId> {
+        let id = self.register_prefix_group(tokens)?;
+        self.default_prefix = Some(id);
+        Ok(id)
     }
 
-    /// Enqueue a request (non-shared prompt + generation budget).
+    /// Shared length of the default prefix group (0 when none).
+    pub fn shared_len(&self) -> usize {
+        self.default_prefix.and_then(|p| self.prefix_len(p)).unwrap_or(0)
+    }
+
+    /// Token length of a registered prefix group.
+    pub fn prefix_len(&self, prefix: PrefixId) -> Option<usize> {
+        self.prefixes.iter().find(|&&(id, _)| id == prefix).map(|&(_, l)| l)
+    }
+
+    /// Registered prefix groups in registration order.
+    pub fn prefix_groups(&self) -> &[(PrefixId, usize)] {
+        &self.prefixes
+    }
+
+    /// Enqueue a request against the default prefix group.
     pub fn submit(&mut self, req: &Request) -> Result<SeqId> {
-        let (prefix, _) = self
-            .shared_prefix
+        let prefix = self
+            .default_prefix
             .ok_or_else(|| anyhow!("no shared prefix installed"))?;
+        self.submit_to(req, prefix)
+    }
+
+    /// Enqueue a request against a specific prefix group.  The group's
+    /// pages are pinned while the request is queued, admitted or
+    /// running — `KvCacheManager::release_shared_prefix` refuses until
+    /// every sequence of the group has retired.
+    pub fn submit_to(&mut self, req: &Request, prefix: PrefixId) -> Result<SeqId> {
+        if self.prefix_len(prefix).is_none() {
+            return Err(anyhow!("unknown prefix group {prefix}"));
+        }
+        self.kv.pin_pending(prefix)?;
         let id = self.next_seq;
         self.next_seq += 1;
         let prompt = req.prompt_tokens.min(self.cfg.max_seq_len.saturating_sub(1));
@@ -123,7 +176,7 @@ impl<E: Engine> Coordinator<E> {
         if free == 0 || free < self.cfg.admit_hysteresis.min(max_batch) {
             return Ok(());
         }
-        let mut wave: Vec<(SeqId, usize)> = Vec::new();
+        let mut wave: Vec<PrefillRequest> = Vec::new();
         while self.running.len() + wave.len() < max_batch {
             let Some(front) = self.queue.front() else { break };
             // Context includes regenerated tokens for preempted requeues.
@@ -132,8 +185,14 @@ impl<E: Engine> Coordinator<E> {
             }
             let mut seq = self.queue.pop_front().unwrap();
             self.kv.add_sequence(seq.id, seq.prefix, seq.context_len())?;
+            self.kv.unpin_pending(seq.prefix)?;
             seq.state = SeqState::Decoding;
-            wave.push((seq.id, seq.context_len()));
+            let shared_len = self.prefix_len(seq.prefix).unwrap_or(0);
+            wave.push(PrefillRequest {
+                seq: seq.id,
+                context_len: seq.context_len(),
+                shared_len,
+            });
             self.seqs.insert(seq.id, seq);
         }
         if !wave.is_empty() {
@@ -142,8 +201,8 @@ impl<E: Engine> Coordinator<E> {
             self.metrics.advance_sim_time(secs);
             self.metrics.prefill_calls += 1;
             self.metrics.requests_admitted += wave.len() as u64;
-            for &(id, _) in &wave {
-                self.running.push(id);
+            for r in &wave {
+                self.running.push(r.seq);
             }
         }
         Ok(())
@@ -160,6 +219,9 @@ impl<E: Engine> Coordinator<E> {
         self.running.remove(victim);
         let mut seq = self.seqs.remove(&victim).expect("running seq exists");
         seq.state = SeqState::Queued;
+        // Back in the queue: re-pin its group so the prefix cannot be
+        // freed out from under a preempted (but unfinished) request.
+        self.kv.pin_pending(seq.prefix)?;
         self.queue.push_front(seq);
         self.metrics.preemptions += 1;
         Ok(Some(victim))
@@ -191,6 +253,69 @@ impl<E: Engine> Coordinator<E> {
         Ok(force_finished)
     }
 
+    /// Partition the running set into prefix groups, preserving
+    /// admission order inside each group; groups appear in prefix
+    /// registration order (deterministic; modeled times are
+    /// order-independent anyway — exact u64 sums).  The fall-back rule
+    /// is applied per group.
+    fn build_decode_batch(&self) -> DecodeBatch {
+        let ids = self.running.snapshot();
+        // Fast path: one registered group (the paper's single-prompt
+        // protocol and the dominant sweep configuration) — the batch
+        // *is* the group; no partition, no extra allocations on the
+        // hot path.
+        if let [(prefix, shared_len)] = self.prefixes[..] {
+            let context_lens = ids.iter().map(|id| self.seqs[id].context_len()).collect();
+            let kernel = self.policy.select(ids.len(), shared_len);
+            return DecodeBatch {
+                context_lens,
+                groups: vec![BatchGroup {
+                    prefix,
+                    shared_len,
+                    kernel,
+                    start: 0,
+                    len: ids.len(),
+                }],
+                seqs: ids,
+            };
+        }
+        // General path: bucket members by registration index (small
+        // linear scan over the tenant registry, no hashing).
+        let mut members: Vec<Vec<SeqId>> = vec![Vec::new(); self.prefixes.len()];
+        for id in ids {
+            let p = self.seqs[&id].prefix;
+            let gi = self
+                .prefixes
+                .iter()
+                .position(|&(pid, _)| pid == p)
+                .expect("running sequence's prefix is registered");
+            members[gi].push(id);
+        }
+        let n = self.running.len();
+        let mut seqs = Vec::with_capacity(n);
+        let mut context_lens = Vec::with_capacity(n);
+        let mut groups = Vec::new();
+        for (gi, m) in members.into_iter().enumerate() {
+            if m.is_empty() {
+                continue;
+            }
+            let (prefix, shared_len) = self.prefixes[gi];
+            let kernel = self.policy.select(m.len(), shared_len);
+            groups.push(BatchGroup {
+                prefix,
+                shared_len,
+                kernel,
+                start: seqs.len(),
+                len: m.len(),
+            });
+            for id in m {
+                context_lens.push(self.seqs[&id].context_len());
+                seqs.push(id);
+            }
+        }
+        DecodeBatch { seqs, context_lens, groups }
+    }
+
     /// One scheduler step: admit, decode one iteration, retire finished.
     /// Returns false when there is nothing left to do.
     pub fn step(&mut self) -> Result<bool> {
@@ -208,31 +333,29 @@ impl<E: Engine> Coordinator<E> {
             seq.state = SeqState::Finished;
             seq.finished_at = Some(self.now);
             self.metrics.requests_completed += 1;
+            // Out-of-pool completions are completions too: their
+            // latency counts like any normally-finished request's.
+            if let Some(lat) = self.seqs[&id].latency() {
+                self.metrics.request_latency.push(lat);
+            }
             self.recently_finished.push(id);
         }
         if self.running.is_empty() {
             return Ok(!self.queue.is_empty());
         }
 
-        let shared_len = self.shared_len();
-        let kernel = self.policy.select(self.running.len(), shared_len);
-        let context_lens: Vec<usize> = self
-            .running
-            .iter()
-            .map(|id| self.seqs[&id].context_len())
-            .collect();
-        let batch = DecodeBatch {
-            seqs: self.running.snapshot(),
-            kernel,
-            shared_len,
-            context_lens,
-        };
+        let batch = self.build_decode_batch();
         let outcome = self.engine.decode(&batch)?;
         self.now += outcome.seconds;
-        match kernel {
-            KernelKind::Typhoon => self.metrics.typhoon_iters += 1,
-            KernelKind::Absorb => self.metrics.absorb_iters += 1,
-            KernelKind::Naive => self.metrics.naive_iters += 1,
+        for g in &batch.groups {
+            match g.kernel {
+                KernelKind::Typhoon => self.metrics.typhoon_iters += 1,
+                KernelKind::Absorb => self.metrics.absorb_iters += 1,
+                KernelKind::Naive => self.metrics.naive_iters += 1,
+            }
+        }
+        if batch.uniform_kernel().is_none() {
+            self.metrics.mixed_iters += 1;
         }
         self.metrics.breakdown.add(&outcome.breakdown);
 
@@ -286,11 +409,17 @@ mod tests {
         decode_calls: usize,
         batch_sizes: Vec<usize>,
         kernels: Vec<KernelKind>,
+        groups_seen: Vec<Vec<BatchGroup>>,
     }
 
     impl MockEngine {
         fn new() -> Self {
-            MockEngine { decode_calls: 0, batch_sizes: Vec::new(), kernels: Vec::new() }
+            MockEngine {
+                decode_calls: 0,
+                batch_sizes: Vec::new(),
+                kernels: Vec::new(),
+                groups_seen: Vec::new(),
+            }
         }
     }
 
@@ -304,14 +433,19 @@ mod tests {
             Ok(0.5)
         }
 
-        fn prefill_requests(&mut self, _seqs: &[(SeqId, usize)]) -> Result<f64> {
+        fn prefill_requests(&mut self, _seqs: &[PrefillRequest]) -> Result<f64> {
             Ok(0.1)
         }
 
         fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome> {
             self.decode_calls += 1;
             self.batch_sizes.push(batch.seqs.len());
-            self.kernels.push(batch.kernel);
+            // Single-prefix tests assert on the batch-wide kernel; mixed
+            // iterations land in `groups_seen` only.
+            if let Some(k) = batch.uniform_kernel() {
+                self.kernels.push(k);
+            }
+            self.groups_seen.push(batch.groups.clone());
             Ok(IterationOutcome { seconds: 0.01, breakdown: BreakdownTimers::default() })
         }
 
@@ -431,6 +565,13 @@ mod tests {
     }
 
     #[test]
+    fn submit_to_unknown_group_errors() {
+        let mut c = coordinator(2, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        assert!(c.submit_to(&req(0, 4, 2), 999).is_err());
+    }
+
+    #[test]
     fn token_conservation() {
         let mut c = coordinator(4, 1);
         c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
@@ -488,5 +629,129 @@ mod tests {
         assert_eq!(c.metrics.requests_completed, 1);
         let gen = c.metrics.tokens_generated as usize;
         assert!(gen <= 16, "generation stopped at context limit, got {gen}");
+    }
+
+    /// Out-of-pool force-finishes must record request latency exactly
+    /// like normal completions.
+    #[test]
+    fn force_finished_latency_recorded() {
+        // Pool: 1 prefix page + 1 page; a lone sequence exhausts it and
+        // is force-finished with no preemption candidates.
+        let cfg = ServingConfig {
+            max_batch: 1,
+            block_size: 16,
+            max_seq_len: 64,
+            total_blocks: 2,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Absorb, 1);
+        let kv = KvCacheManager::new(sim(), 2, 16);
+        let mut c = Coordinator::new(cfg, policy, kv, MockEngine::new()).unwrap();
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        c.submit(&req(0, 8, 40)).unwrap(); // wants 3 pages, pool has 1
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 1);
+        assert!(
+            c.metrics.tokens_generated < 40,
+            "must have been cut short, got {}",
+            c.metrics.tokens_generated
+        );
+        assert_eq!(
+            c.metrics.request_latency.len(),
+            1,
+            "force-finished request latency must be recorded"
+        );
+    }
+
+    #[test]
+    fn grouped_batch_partitions_by_prefix() {
+        let mut c = coordinator(8, 1);
+        let pa = c.register_prefix_group(&(0..64u32).collect::<Vec<_>>()).unwrap();
+        let pb = c
+            .register_prefix_group(&(1000..1032u32).collect::<Vec<_>>())
+            .unwrap();
+        assert_ne!(pa, pb);
+        c.submit_to(&req(0, 4, 2), pa).unwrap();
+        c.submit_to(&req(1, 4, 2), pb).unwrap();
+        c.submit_to(&req(2, 4, 2), pa).unwrap();
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 3);
+        let first = &c.engine.groups_seen[0];
+        assert_eq!(first.len(), 2, "two prefix groups in the batch");
+        let ga = first.iter().find(|g| g.prefix == pa).unwrap();
+        let gb = first.iter().find(|g| g.prefix == pb).unwrap();
+        assert_eq!((ga.len, ga.shared_len), (2, 64));
+        assert_eq!((gb.len, gb.shared_len), (1, 32));
+        // Slices tile the batch exactly.
+        assert_eq!(ga.len + gb.len, c.engine.batch_sizes[0]);
+    }
+
+    /// The per-group fall-back rule: in one iteration a hot group runs
+    /// Typhoon while a cold group (below B_theta) falls back to absorb.
+    #[test]
+    fn per_group_fallback_mixes_kernels() {
+        let mut c = coordinator(8, 3); // B_theta = 3
+        let hot = c.register_prefix_group(&(0..64u32).collect::<Vec<_>>()).unwrap();
+        let cold = c
+            .register_prefix_group(&(1000..1064u32).collect::<Vec<_>>())
+            .unwrap();
+        for i in 0..4 {
+            c.submit_to(&req(i, 4, 2), hot).unwrap();
+        }
+        c.submit_to(&req(9, 4, 2), cold).unwrap();
+        c.run_to_completion().unwrap();
+        let first = &c.engine.groups_seen[0];
+        let hot_g = first.iter().find(|g| g.prefix == hot).unwrap();
+        let cold_g = first.iter().find(|g| g.prefix == cold).unwrap();
+        assert_eq!(hot_g.kernel, KernelKind::Typhoon, "4 >= B_theta");
+        assert_eq!(cold_g.kernel, KernelKind::Absorb, "1 < B_theta falls back");
+        assert!(c.metrics.mixed_iters > 0, "mixed iteration recorded");
+        assert!(c.metrics.typhoon_iters > 0 && c.metrics.absorb_iters > 0);
+    }
+
+    /// Single-prefix batches reduce to the legacy shape: one group
+    /// covering the whole batch with the default prefix.
+    #[test]
+    fn single_prefix_reduces_to_legacy_batch() {
+        let mut c = coordinator(4, 1);
+        let p = c.set_shared_prefix(&(0..64u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..4 {
+            c.submit(&req(i, 4, 3)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        for (groups, &b) in c.engine.groups_seen.iter().zip(&c.engine.batch_sizes) {
+            assert_eq!(groups.len(), 1);
+            assert_eq!(groups[0].prefix, p);
+            assert_eq!(groups[0].shared_len, 64);
+            assert_eq!((groups[0].start, groups[0].len), (0, b));
+        }
+        assert_eq!(c.metrics.mixed_iters, 0);
+    }
+
+    /// A registered group's pages cannot be freed while any of its
+    /// sequences is queued or running.
+    #[test]
+    fn queued_sequences_pin_their_prefix() {
+        let mut c = coordinator(1, 1);
+        let pa = c.register_prefix_group(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        let pb = c
+            .register_prefix_group(&(100..116u32).collect::<Vec<_>>())
+            .unwrap();
+        // pb's only request sits queued behind pa's (max_batch = 1).
+        c.submit_to(&req(0, 4, 50), pa).unwrap();
+        c.submit_to(&req(1, 4, 2), pb).unwrap();
+        c.step().unwrap(); // admits pa's request only
+        assert_eq!(c.queued(), 1);
+        assert!(
+            c.kv.release_shared_prefix(pb).is_err(),
+            "queued sequence must pin its group"
+        );
+        assert!(
+            c.kv.release_shared_prefix(pa).is_err(),
+            "running sequence must pin its group"
+        );
+        c.run_to_completion().unwrap();
+        c.kv.release_shared_prefix(pb).unwrap();
+        c.kv.release_shared_prefix(pa).unwrap();
     }
 }

@@ -5,6 +5,12 @@
 //! reuse for the naive stage to pay off, so a Typhoon deployment
 //! executes the absorb-only kernel instead — "ensuring consistently
 //! high efficiency across a wide range of batch sizes".
+//!
+//! With prefix groups the decision is **per group**: the naive stage
+//! amortizes over the sequences sharing *each* prefix, so `select` is
+//! called with the group's occupancy and the group's shared length —
+//! a cold tenant falls back to absorb while a hot tenant runs Typhoon
+//! in the same decode iteration.
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 use crate::costmodel::threshold::batch_threshold;
@@ -38,7 +44,9 @@ impl KernelPolicy {
         KernelPolicy { requested, b_theta, min_shared_len: 1 }
     }
 
-    /// The per-iteration decision.
+    /// The per-group decision: `batch` is the *group's* occupancy (the
+    /// whole batch for single-prefix configs), `shared_len` the group's
+    /// prefix length.
     pub fn select(&self, batch: usize, shared_len: usize) -> KernelKind {
         match self.requested {
             KernelKind::Typhoon
@@ -89,6 +97,19 @@ mod tests {
             &ascend_npu(),
         );
         assert_eq!(p.b_theta, 61);
+    }
+
+    /// Per-group semantics: one policy instance makes independent
+    /// decisions per group occupancy within an iteration.
+    #[test]
+    fn per_group_decisions_independent() {
+        let p = KernelPolicy::with_threshold(KernelKind::Typhoon, 61);
+        let picks: Vec<_> =
+            [(100usize, 4096usize), (8, 4096), (61, 0)].iter().map(|&(b, s)| p.select(b, s)).collect();
+        assert_eq!(
+            picks,
+            vec![KernelKind::Typhoon, KernelKind::Absorb, KernelKind::Absorb]
+        );
     }
 
     /// Monotonicity: once typhoon is selected at batch b, it stays

@@ -17,6 +17,8 @@ pub enum SeqState {
 #[derive(Clone, Debug)]
 pub struct Sequence {
     pub id: SeqId,
+    /// The prefix group (tenant system prompt) this sequence attends
+    /// to — set at submission, immutable for the sequence's lifetime.
     pub prefix: PrefixId,
     /// Non-shared prompt length (the dataset question), tokens.
     pub prompt_tokens: usize,
@@ -52,6 +54,12 @@ impl Sequence {
     /// Current non-shared context length (prompt + generated so far).
     pub fn context_len(&self) -> usize {
         self.prompt_tokens + self.generated
+    }
+
+    /// The sequence's prefix group (alias of `prefix`, named for the
+    /// tenancy layer).
+    pub fn group(&self) -> PrefixId {
+        self.prefix
     }
 
     /// Record one generated token; returns true when the budget is hit.

@@ -74,6 +74,29 @@ impl CostTable {
     pub fn clear(&mut self) {
         self.map.clear();
     }
+
+    /// Shared-stage cost of a *grouped* decode iteration: one memoized
+    /// Table-1 evaluation per prefix group — `(kernel, occupancy,
+    /// shared_len)` — with `l_n = 0` isolating the shared component;
+    /// shared/projection/combine components are summed exactly (u64).
+    /// The non-shared stage is length-bucketed across the whole batch
+    /// by the engine and is *not* included (`non_shared` stays zero).
+    /// A single-group iteration reduces to one `cost` call — the
+    /// pre-tenancy formulation, bit for bit.
+    pub fn grouped_shared_cost<I>(&mut self, groups: I) -> CostBreakdown
+    where
+        I: IntoIterator<Item = (KernelKind, u64, u64)>,
+    {
+        let mut total = CostBreakdown::default();
+        for (kernel, occupancy, l_s) in groups {
+            let c = self.cost(kernel, occupancy, l_s, 0);
+            total.shared = total.shared.add(c.shared);
+            total.proj_kvb1 = total.proj_kvb1.add(c.proj_kvb1);
+            total.proj_kvb2 = total.proj_kvb2.add(c.proj_kvb2);
+            total.combine = total.combine.add(c.combine);
+        }
+        total
+    }
 }
 
 #[cfg(test)]
@@ -96,6 +119,29 @@ mod tests {
         }
         assert_eq!(table.misses, 9);
         assert_eq!(table.hits, 9);
+    }
+
+    #[test]
+    fn grouped_shared_cost_sums_per_group() {
+        let cfg = deepseek_v3();
+        let mut table = CostTable::new(cfg.clone());
+        let groups = [
+            (KernelKind::Typhoon, 100u64, 4096u64),
+            (KernelKind::Absorb, 8, 7069),
+        ];
+        let got = table.grouped_shared_cost(groups);
+        let mut expect_shared = 0u64;
+        for &(k, b, ls) in &groups {
+            expect_shared +=
+                attention_cost(&cfg, k, &AttentionWorkload::decode(b, ls, 0)).shared.macs;
+        }
+        assert_eq!(got.shared.macs, expect_shared);
+        assert_eq!(got.non_shared, Default::default(), "shared stage only");
+        // Single group == plain cost call (the legacy reduction).
+        let single = table.grouped_shared_cost([(KernelKind::Typhoon, 64u64, 1000u64)]);
+        let direct = table.cost(KernelKind::Typhoon, 64, 1000, 0);
+        assert_eq!(single.shared, direct.shared);
+        assert_eq!(single.combine, direct.combine);
     }
 
     #[test]

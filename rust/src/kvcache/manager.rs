@@ -14,7 +14,7 @@ use super::radix::{spans_from_pages, PageSpan, RadixTree};
 pub type SeqId = u64;
 pub type PrefixId = u32;
 
-/// A registered shared prefix (e.g. a system prompt).
+/// A registered shared prefix (e.g. one tenant's system prompt).
 #[derive(Debug)]
 pub struct SharedPrefix {
     pub id: PrefixId,
@@ -23,8 +23,16 @@ pub struct SharedPrefix {
     pub latent_blocks: Vec<BlockId>,
     /// TyphoonMLA: uncompressed K/V copy exists (naive-stage cache).
     pub expanded: bool,
-    /// Active sequences attached to this prefix.
+    /// Uncompressed expansion bytes held for *this* prefix (0 until
+    /// `expand_shared_prefix`; per-group accounting for the tenancy
+    /// layer — the manager-wide total is the sum over prefixes).
+    pub expanded_bytes: u64,
+    /// Active (admitted) sequences attached to this prefix.
     pub users: usize,
+    /// Submitted-but-not-admitted sequences of this prefix's group
+    /// (queued or preempted-for-recompute).  Pinned via `pin_pending`;
+    /// the prefix cannot be released while `users + pending > 0`.
+    pub pending: usize,
 }
 
 impl SharedPrefix {
@@ -137,7 +145,9 @@ impl KvCacheManager {
                 tokens: tokens.to_vec(),
                 latent_blocks: blocks,
                 expanded: false,
+                expanded_bytes: 0,
                 users: 0,
+                pending: 0,
             },
         );
         Ok(id)
@@ -157,6 +167,7 @@ impl KvCacheManager {
         }
         p.expanded = true;
         let bytes = p.tokens.len() as u64 * words * bpe;
+        p.expanded_bytes = bytes;
         self.expanded_bytes += bytes;
         let tokens = p.tokens.clone();
         self.radix.mark_expanded(&tokens);
@@ -167,9 +178,44 @@ impl KvCacheManager {
         self.prefixes.get(&id)
     }
 
-    /// Bytes of uncompressed expansion currently held.
+    /// Number of registered shared prefixes (prefix groups).
+    pub fn registered_prefixes(&self) -> usize {
+        self.prefixes.len()
+    }
+
+    /// Pin a prefix for a submitted-but-not-admitted sequence of its
+    /// group.  Balanced by `unpin_pending` at admission (or release of
+    /// the request).  While pinned, `release_shared_prefix` refuses.
+    pub fn pin_pending(&mut self, id: PrefixId) -> Result<()> {
+        let p = self
+            .prefixes
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown prefix {id}"))?;
+        p.pending += 1;
+        Ok(())
+    }
+
+    /// Drop one pending pin (the sequence was admitted or abandoned).
+    pub fn unpin_pending(&mut self, id: PrefixId) -> Result<()> {
+        let p = self
+            .prefixes
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown prefix {id}"))?;
+        if p.pending == 0 {
+            bail!("prefix {id}: unbalanced unpin_pending");
+        }
+        p.pending -= 1;
+        Ok(())
+    }
+
+    /// Bytes of uncompressed expansion currently held (all prefixes).
     pub fn expanded_bytes(&self) -> u64 {
         self.expanded_bytes
+    }
+
+    /// Uncompressed expansion bytes held for one prefix group.
+    pub fn prefix_expanded_bytes(&self, id: PrefixId) -> u64 {
+        self.prefixes.get(&id).map_or(0, |p| p.expanded_bytes)
     }
 
     /// Bytes of latent KV currently held in pages.
@@ -189,13 +235,20 @@ impl KvCacheManager {
         }
     }
 
+    /// Release a prefix group's pages.  Refuses while the group has any
+    /// live sequence — admitted (`users`) *or* queued/preempted
+    /// (`pending`) — so eviction storms can never free a prefix out
+    /// from under its tenants.
     pub fn release_shared_prefix(&mut self, id: PrefixId) -> Result<()> {
         let p = self
             .prefixes
             .remove(&id)
             .ok_or_else(|| anyhow!("unknown prefix {id}"))?;
-        if p.users > 0 {
-            let msg = format!("prefix {id} still has {} users", p.users);
+        if p.users > 0 || p.pending > 0 {
+            let msg = format!(
+                "prefix {id} still has {} admitted + {} queued sequences",
+                p.users, p.pending
+            );
             self.prefixes.insert(id, p);
             bail!(msg);
         }
@@ -204,8 +257,7 @@ impl KvCacheManager {
         }
         self.radix.unpin(&p.tokens);
         if p.expanded {
-            self.expanded_bytes -=
-                p.tokens.len() as u64 * self.cfg.uncompressed_words() * self.bytes_per_elem;
+            self.expanded_bytes -= p.expanded_bytes;
         }
         Ok(())
     }
@@ -370,6 +422,35 @@ mod tests {
         assert!(m.release_shared_prefix(id).is_err());
         m.remove_sequence(1).unwrap();
         m.release_shared_prefix(id).unwrap();
+    }
+
+    #[test]
+    fn pending_pins_block_release() {
+        let mut m = mgr(8);
+        let id = m.register_shared_prefix(&prefix_tokens(8)).unwrap();
+        m.pin_pending(id).unwrap();
+        assert!(m.release_shared_prefix(id).is_err(), "queued sequence pins pages");
+        m.unpin_pending(id).unwrap();
+        assert!(m.unpin_pending(id).is_err(), "unbalanced unpin rejected");
+        m.release_shared_prefix(id).unwrap();
+        assert!(m.pin_pending(id).is_err(), "released prefix unknown");
+    }
+
+    #[test]
+    fn per_prefix_expansion_accounting() {
+        let mut m = mgr(64);
+        let a = m.register_shared_prefix(&prefix_tokens(32)).unwrap();
+        let b = m.register_shared_prefix(&(100..164u32).collect::<Vec<_>>()).unwrap();
+        let ba = m.expand_shared_prefix(a).unwrap();
+        let bb = m.expand_shared_prefix(b).unwrap();
+        assert!(ba > 0 && bb == 2 * ba, "64 vs 32 tokens");
+        assert_eq!(m.prefix_expanded_bytes(a), ba);
+        assert_eq!(m.prefix_expanded_bytes(b), bb);
+        assert_eq!(m.expanded_bytes(), ba + bb);
+        m.release_shared_prefix(a).unwrap();
+        assert_eq!(m.expanded_bytes(), bb);
+        assert_eq!(m.registered_prefixes(), 1);
+        assert_eq!(m.prefix_expanded_bytes(a), 0, "released prefix reports 0");
     }
 
     #[test]

@@ -15,7 +15,7 @@ use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
 use typhoon_mla::costmodel::threshold::batch_threshold;
 use typhoon_mla::kvcache::KvCacheManager;
 use typhoon_mla::runtime::{default_artifacts_dir, Manifest, TinyModelEngine};
-use typhoon_mla::simulator::{run_experiment, SimParams};
+use typhoon_mla::simulator::{run_experiment, run_tenant_experiment, SimParams, TenantSimParams};
 use typhoon_mla::util::cli::Args;
 use typhoon_mla::workload::{datasets, prompts, Request};
 
@@ -34,7 +34,8 @@ fn main() -> Result<()> {
                 "usage: typhoon-mla <serve|simulate|threshold|info> [options]\n\
                  serve    --kernel typhoon|absorb|naive --requests N --gen N\n\
                  simulate --model deepseek-v3|kimi-k2 --hw ascend-npu|gpu \
-                 --kernel K --batch B --dataset mmlu|gsm8k|simpleqa --prompt a|b|c\n\
+                 --kernel K --batch B --dataset mmlu|gsm8k|simpleqa --prompt a|b|c \
+                 [--tenants N --skew S]\n\
                  threshold --model M --hw H"
             );
             Ok(())
@@ -81,6 +82,38 @@ fn simulate(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown hardware"))?;
     let kernel = KernelKind::parse(args.get_or("kernel", "typhoon"))?;
     let batch = args.get_usize("batch", 256)?;
+    // Multi-tenant mode: N prefix groups with Zipf(skew) arrivals.
+    let tenants = args.get_usize("tenants", 1)?;
+    if tenants > 1 {
+        let mut p = TenantSimParams::new(
+            model,
+            hw,
+            kernel,
+            batch,
+            tenants,
+            args.get_f64("skew", 1.0)?,
+        );
+        // --requests always wins; --full only raises the default budget.
+        let default_requests = if args.flag("full") { batch * 16 } else { batch * 4 };
+        p.total_requests = args.get_usize("requests", default_requests)?;
+        let r = run_tenant_experiment(&p)?;
+        println!(
+            "[simulate] {} tenants: {} tokens in {:.3}s of modeled decode -> \
+             {:.0} tok/s/layer (iters {}, mean batch {:.1}, \
+             group-iters t/a/n {}/{}/{}, mixed {})",
+            tenants,
+            r.tokens,
+            r.decode_seconds,
+            r.throughput,
+            r.iterations,
+            r.mean_batch,
+            r.typhoon_iters,
+            r.absorb_iters,
+            r.naive_iters,
+            r.mixed_iters
+        );
+        return Ok(());
+    }
     let ds = datasets::by_name(args.get_or("dataset", "mmlu"))
         .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
     let prompt = prompts::by_name(args.get_or("prompt", "a"))

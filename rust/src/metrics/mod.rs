@@ -59,10 +59,18 @@ pub struct Metrics {
     pub batch_occupancy: Summary,
     pub request_latency: Percentiles,
     pub breakdown: BreakdownTimers,
-    /// Iterations executed with each kernel (typhoon fallback tracking).
+    /// Exact accumulated decode seconds (sum of iteration times, no
+    /// mean x count reconstruction — reports use this directly).
+    pub decode_seconds: f64,
+    /// Group-iterations executed with each kernel (typhoon fallback
+    /// tracking; one count per prefix group per decode iteration, which
+    /// reduces to one per iteration for single-prefix configs).
     pub typhoon_iters: u64,
     pub absorb_iters: u64,
     pub naive_iters: u64,
+    /// Decode iterations whose groups selected more than one kernel
+    /// (a hot group on Typhoon while a cold one fell back to absorb).
+    pub mixed_iters: u64,
 }
 
 impl Metrics {
@@ -81,9 +89,11 @@ impl Metrics {
             batch_occupancy: Summary::new(),
             request_latency: Percentiles::default(),
             breakdown: BreakdownTimers::default(),
+            decode_seconds: 0.0,
             typhoon_iters: 0,
             absorb_iters: 0,
             naive_iters: 0,
+            mixed_iters: 0,
         }
     }
 
@@ -92,6 +102,7 @@ impl Metrics {
         self.tokens_generated += new_tokens;
         self.iteration_time.push(seconds);
         self.batch_occupancy.push(batch as f64);
+        self.decode_seconds += seconds;
         if self.clock == Clock::Simulated {
             self.sim_elapsed += seconds;
         }
@@ -152,6 +163,23 @@ mod tests {
         assert_eq!(m.tokens_generated, 24);
         assert!((m.throughput() - 24.0).abs() < 1e-9);
         assert!((m.batch_occupancy.mean() - 12.0).abs() < 1e-9);
+        assert_eq!(m.decode_seconds, 1.0, "exact sum, not mean x count");
+    }
+
+    /// The exact accumulator vs the Welford reconstruction: summing many
+    /// irrational iteration times, the mean x count round trip drifts
+    /// while `decode_seconds` is the plain f64 sum.
+    #[test]
+    fn decode_seconds_is_exact_sum() {
+        let mut m = Metrics::new(Clock::Simulated);
+        let mut expect = 0.0f64;
+        let mut x = 0.1f64;
+        for _ in 0..10_000 {
+            x = (x * 1.000_1).rem_euclid(0.37) + 1e-4;
+            m.record_iteration(x, 4, 4);
+            expect += x;
+        }
+        assert_eq!(m.decode_seconds.to_bits(), expect.to_bits());
     }
 
     #[test]

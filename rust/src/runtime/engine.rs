@@ -14,7 +14,7 @@ use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
 use crate::config::KernelKind;
-use crate::coordinator::{DecodeBatch, Engine, IterationOutcome};
+use crate::coordinator::{DecodeBatch, Engine, IterationOutcome, PrefillRequest};
 use crate::kvcache::{PrefixId, SeqId};
 use crate::metrics::BreakdownTimers;
 use crate::util::rng::Rng;
@@ -194,7 +194,7 @@ impl Engine for TinyModelEngine {
         Ok(t0.elapsed().as_secs_f64())
     }
 
-    fn prefill_requests(&mut self, seqs: &[(SeqId, usize)]) -> Result<f64> {
+    fn prefill_requests(&mut self, seqs: &[PrefillRequest]) -> Result<f64> {
         let t0 = Instant::now();
         let shared = self.shared.as_ref().ok_or_else(|| anyhow!("no shared prefix"))?;
         if seqs.len() > self.free_slots.len() {
@@ -204,13 +204,13 @@ impl Engine for TinyModelEngine {
         let mut tokens = vec![0i32; self.b * self.lq];
         let mut qlens = vec![1i32; self.b]; // dummy slots: 1 token
         let mut wave_slots = Vec::new();
-        for &(seq, prompt_len) in seqs {
+        for r in seqs {
             let slot = self.free_slots.pop().expect("checked above");
-            self.slot_of.insert(seq, slot);
-            wave_slots.push((seq, slot));
-            let qlen = prompt_len.clamp(1, self.lq.min(self.ln));
+            self.slot_of.insert(r.seq, slot);
+            wave_slots.push((r.seq, slot));
+            let qlen = r.context_len.clamp(1, self.lq.min(self.ln));
             qlens[slot] = qlen as i32;
-            let q = self.question_tokens(seq, qlen);
+            let q = self.question_tokens(r.seq, qlen);
             tokens[slot * self.lq..slot * self.lq + qlen].copy_from_slice(&q);
         }
         let tokens_l = literal_i32(&[self.b, self.lq], &tokens)?;
@@ -248,10 +248,21 @@ impl Engine for TinyModelEngine {
     fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome> {
         let t0 = Instant::now();
         let shared = self.shared.as_ref().ok_or_else(|| anyhow!("no shared prefix"))?;
+        // The tiny AOT artifacts bake in a single shared cache layout
+        // (prepare_shared keeps only the last prefix), so this engine
+        // serves single-group batches only — a multi-group batch would
+        // silently attend every sequence to the wrong prefix.
+        if batch.groups.len() != 1 {
+            bail!(
+                "tiny engine supports single-prefix batches only, got {} groups",
+                batch.groups.len()
+            );
+        }
+        let kernel = batch.groups[0].kernel;
         let name = self
             .decode_names
-            .get(&batch.kernel)
-            .ok_or_else(|| anyhow!("no decode artifact for {:?}", batch.kernel))?
+            .get(&kernel)
+            .ok_or_else(|| anyhow!("no decode artifact for {kernel:?}"))?
             .clone();
         // Guard: every sequence's cache (suffix + 1 new token) must fit.
         for &seq in &batch.seqs {
@@ -267,7 +278,7 @@ impl Engine for TinyModelEngine {
         let lens_l = literal_i32(&[self.b], &self.lengths)?;
         let sl_l = literal_i32(&[1], &[shared.len])?;
         let (ckv_l, krope_l) = self.cache_literals()?;
-        let (sa, sb): (&Literal, &Literal) = match batch.kernel {
+        let (sa, sb): (&Literal, &Literal) = match kernel {
             KernelKind::Absorb => (&shared.ckv, &shared.krope),
             _ => (&shared.k, &shared.v),
         };

@@ -8,7 +8,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 use crate::config::KernelKind;
-use crate::coordinator::{DecodeBatch, Engine, IterationOutcome};
+use crate::coordinator::{DecodeBatch, Engine, IterationOutcome, PrefillRequest};
 use crate::kvcache::{PrefixId, SeqId};
 
 const STUB_MSG: &str =
@@ -48,7 +48,7 @@ impl Engine for TinyModelEngine {
         bail!(STUB_MSG)
     }
 
-    fn prefill_requests(&mut self, _seqs: &[(SeqId, usize)]) -> Result<f64> {
+    fn prefill_requests(&mut self, _seqs: &[PrefillRequest]) -> Result<f64> {
         bail!(STUB_MSG)
     }
 

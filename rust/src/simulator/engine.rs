@@ -6,24 +6,29 @@
 //! (Fig. 4 discussion), and the scheduling/policy code driven here is
 //! the same code the real PJRT engine runs under.
 //!
-//! Hot path: one decode iteration used to evaluate the Table-1 model
-//! once per sequence (`O(B)` per iteration, B up to 1024).  Context
-//! lengths repeat heavily inside a batch (requests admitted in the same
-//! wave advance in lockstep), so the engine now buckets
-//! `batch.context_lens` by distinct length — counting-sort style over
-//! a reusable scratch array — and evaluates the memoized `CostTable`
-//! once per *distinct* length, scaling the resulting `Component` by the
-//! bucket count.  Both steps are exact over integer MAC/word counts, so
-//! modeled times are bit-identical to the per-sequence evaluation.
+//! **Grouped iterations.**  A decode batch is partitioned into prefix
+//! groups (multi-tenant serving); the shared-stage cost is charged
+//! *once per group* at the group's occupancy and the group's kernel —
+//! each group's prefix is a distinct KV stream, so the naive/absorb
+//! reads and the projection/combine launches are per group — while the
+//! non-shared stage is length-bucketed across the whole batch per
+//! kernel class.  All sums are exact over integer MAC/word counts, so
+//! a single-group batch is bit-identical to the pre-tenancy
+//! formulation (shared cost at full batch + per-sequence non-shared).
+//!
+//! Hot path: `context_lens` are bucketed by distinct length
+//! (counting-sort scratch) and the memoized `CostTable` is evaluated
+//! once per *distinct* length — O(#distinct) cost evaluations per
+//! decode iteration instead of O(B), bit-identical results.
 
 use anyhow::Result;
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
-use crate::coordinator::{DecodeBatch, Engine, IterationOutcome};
+use crate::coordinator::{DecodeBatch, Engine, IterationOutcome, PrefillRequest};
 use crate::costmodel::exec_time::component_time;
 use crate::costmodel::flops::Component;
 use crate::costmodel::table::CostTable;
-use crate::kvcache::{PrefixId, SeqId};
+use crate::kvcache::PrefixId;
 use crate::metrics::BreakdownTimers;
 
 pub struct SimEngine {
@@ -37,7 +42,6 @@ pub struct SimEngine {
     /// (`bench_sweep`) and for equivalence tests.  Results are
     /// bit-identical either way.
     pub memoized: bool,
-    shared_len: usize,
     /// Memoized Table-1 evaluations, shared across all iterations.
     table: CostTable,
     /// Counting-sort scratch: `len_counts[l]` = sequences at length `l`
@@ -54,7 +58,6 @@ impl SimEngine {
             hw,
             include_prefill: true,
             memoized: true,
-            shared_len: 0,
             table,
             len_counts: Vec::new(),
             touched: Vec::new(),
@@ -66,53 +69,74 @@ impl SimEngine {
         (self.table.hits, self.table.misses)
     }
 
-    /// Per-layer decode-attention time of one iteration with mixed
-    /// per-request context lengths.  The shared part costs once per
-    /// batch (B queries x one stream); non-shared parts are summed per
-    /// *distinct* request length, scaled by how many requests share it.
+    /// Per-layer decode-attention time of one grouped iteration with
+    /// mixed per-request context lengths.  Shared parts cost once per
+    /// group (group occupancy x that group's prefix stream); non-shared
+    /// parts are summed per *distinct* request length within each
+    /// kernel class, scaled by how many requests share it.
     fn iteration_time(&mut self, batch: &DecodeBatch) -> (f64, BreakdownTimers) {
-        let b = batch.seqs.len() as u64;
         let (shared_cost, non_shared) = if self.memoized {
-            // Shared component at the true batch size (l_n=0 isolates it).
-            let shared_cost = self.table.cost(batch.kernel, b, batch.shared_len as u64, 0);
-            // Bucket the context lengths (counting sort over the scratch).
-            debug_assert!(self.touched.is_empty());
-            for &l in &batch.context_lens {
-                if l >= self.len_counts.len() {
-                    self.len_counts.resize(l + 1, 0);
-                }
-                if self.len_counts[l] == 0 {
-                    self.touched.push(l);
-                }
-                self.len_counts[l] += 1;
-            }
-            // Deterministic order (ascending length) so the walk is
-            // reproducible; the u64 sums are order-independent anyway.
-            self.touched.sort_unstable();
-            // Non-shared: one cost-model evaluation per distinct length
-            // (B=1 each; the +1 is this step's token, scattered before
-            // attention), scaled by the bucket count — exactly the sum
-            // the per-sequence loop produces.
+            // Shared stage: one memoized evaluation per group (l_n=0
+            // isolates the shared component + projections/combine).
+            let shared_cost = self.table.grouped_shared_cost(
+                batch.groups.iter().map(|g| (g.kernel, g.len as u64, g.shared_len as u64)),
+            );
+            // Non-shared stage: bucket context lengths per kernel class
+            // (counting sort over the scratch).  Typhoon and its absorb
+            // fall-back share the non-shared formulation, but keying by
+            // the group's kernel keeps naive-requested configs exact.
             let mut non_shared = Component::default();
-            for i in 0..self.touched.len() {
-                let l = self.touched[i];
-                let count = self.len_counts[l];
-                self.len_counts[l] = 0;
-                let c = self.table.cost(batch.kernel, 1, 0, l as u64 + 1);
-                non_shared = non_shared.add(c.non_shared.scale(count));
+            for kernel in KernelKind::all() {
+                debug_assert!(self.touched.is_empty());
+                for g in batch.groups.iter().filter(|g| g.kernel == kernel) {
+                    for &l in batch.group_lens(g) {
+                        if l >= self.len_counts.len() {
+                            self.len_counts.resize(l + 1, 0);
+                        }
+                        if self.len_counts[l] == 0 {
+                            self.touched.push(l);
+                        }
+                        self.len_counts[l] += 1;
+                    }
+                }
+                if self.touched.is_empty() {
+                    continue;
+                }
+                // Deterministic order (ascending length) so the walk is
+                // reproducible; the u64 sums are order-independent anyway.
+                self.touched.sort_unstable();
+                // One cost-model evaluation per distinct length (B=1
+                // each; the +1 is this step's token, scattered before
+                // attention), scaled by the bucket count — exactly the
+                // sum the per-sequence loop produces.
+                for i in 0..self.touched.len() {
+                    let l = self.touched[i];
+                    let count = self.len_counts[l];
+                    self.len_counts[l] = 0;
+                    let c = self.table.cost(kernel, 1, 0, l as u64 + 1);
+                    non_shared = non_shared.add(c.non_shared.scale(count));
+                }
+                self.touched.clear();
             }
-            self.touched.clear();
             (shared_cost, non_shared)
         } else {
-            // Reference path: direct Table-1 evaluation per sequence.
-            use crate::costmodel::flops::{attention_cost, AttentionWorkload};
-            let shared_wl = AttentionWorkload::decode(b, batch.shared_len as u64, 0);
-            let shared_cost = attention_cost(&self.cfg, batch.kernel, &shared_wl);
+            // Reference path: direct Table-1 evaluation per group and
+            // per sequence (the pre-optimization formulation).
+            use crate::costmodel::flops::{attention_cost, AttentionWorkload, CostBreakdown};
+            let mut shared_cost = CostBreakdown::default();
             let mut non_shared = Component::default();
-            for &l in &batch.context_lens {
-                let wl = AttentionWorkload::decode(1, 0, l as u64 + 1);
-                non_shared =
-                    non_shared.add(attention_cost(&self.cfg, batch.kernel, &wl).non_shared);
+            for g in &batch.groups {
+                let wl = AttentionWorkload::decode(g.len as u64, g.shared_len as u64, 0);
+                let c = attention_cost(&self.cfg, g.kernel, &wl);
+                shared_cost.shared = shared_cost.shared.add(c.shared);
+                shared_cost.proj_kvb1 = shared_cost.proj_kvb1.add(c.proj_kvb1);
+                shared_cost.proj_kvb2 = shared_cost.proj_kvb2.add(c.proj_kvb2);
+                shared_cost.combine = shared_cost.combine.add(c.combine);
+                for &l in batch.group_lens(g) {
+                    let wl = AttentionWorkload::decode(1, 0, l as u64 + 1);
+                    non_shared =
+                        non_shared.add(attention_cost(&self.cfg, g.kernel, &wl).non_shared);
+                }
             }
             (shared_cost, non_shared)
         };
@@ -133,28 +157,28 @@ impl Engine for SimEngine {
         tokens: &[u32],
         _kernel: KernelKind,
     ) -> Result<f64> {
-        self.shared_len = tokens.len();
         if !self.include_prefill {
             return Ok(0.0);
         }
         // Causal prefill over Ls tokens: ~Ls^2/2 context pairs, naive
         // formulation (compute-bound).  The typhoon expansion is free —
         // K/V are computed by the naive prefill anyway (paper §3.1).
+        // Called once per registered prefix group.
         let ls = tokens.len() as f64;
         let macs = 0.5 * ls * ls * self.cfg.naive_factor() as f64;
         Ok(macs / self.hw.macs_per_sec())
     }
 
-    fn prefill_requests(&mut self, seqs: &[(SeqId, usize)]) -> Result<f64> {
+    fn prefill_requests(&mut self, seqs: &[PrefillRequest]) -> Result<f64> {
         if !self.include_prefill {
             return Ok(0.0);
         }
-        // Each admitted question attends to the shared prefix + itself.
+        // Each admitted question attends to its *group's* shared prefix
+        // + itself.
         let mut macs = 0.0;
-        for &(_, qlen) in seqs {
-            let q = qlen as f64;
-            macs +=
-                q * (self.shared_len as f64 + 0.5 * q) * self.cfg.naive_factor() as f64;
+        for r in seqs {
+            let q = r.context_len as f64;
+            macs += q * (r.shared_len as f64 + 0.5 * q) * self.cfg.naive_factor() as f64;
         }
         Ok(macs / self.hw.macs_per_sec())
     }
@@ -164,7 +188,7 @@ impl Engine for SimEngine {
         Ok(IterationOutcome { seconds, breakdown })
     }
 
-    fn release(&mut self, _seq: SeqId) {}
+    fn release(&mut self, _seq: crate::kvcache::SeqId) {}
 }
 
 #[cfg(test)]
@@ -172,15 +196,11 @@ mod tests {
     use super::*;
     use crate::config::hardware::ascend_npu;
     use crate::config::model::deepseek_v3;
+    use crate::coordinator::BatchGroup;
     use crate::costmodel::flops::{attention_cost, AttentionWorkload};
 
     fn batch(kernel: KernelKind, b: usize, shared: usize, ln: usize) -> DecodeBatch {
-        DecodeBatch {
-            seqs: (0..b as u64).collect(),
-            kernel,
-            shared_len: shared,
-            context_lens: vec![ln; b],
-        }
+        DecodeBatch::single(kernel, shared, (0..b as u64).collect(), vec![ln; b])
     }
 
     #[test]
@@ -203,20 +223,10 @@ mod tests {
     fn ragged_lengths_sum_not_max() {
         let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
         let uniform = e
-            .decode(&DecodeBatch {
-                seqs: vec![0, 1],
-                kernel: KernelKind::Absorb,
-                shared_len: 0,
-                context_lens: vec![100, 100],
-            })
+            .decode(&DecodeBatch::single(KernelKind::Absorb, 0, vec![0, 1], vec![100, 100]))
             .unwrap();
         let ragged = e
-            .decode(&DecodeBatch {
-                seqs: vec![0, 1],
-                kernel: KernelKind::Absorb,
-                shared_len: 0,
-                context_lens: vec![180, 20],
-            })
+            .decode(&DecodeBatch::single(KernelKind::Absorb, 0, vec![0, 1], vec![180, 20]))
             .unwrap();
         assert!((uniform.seconds - ragged.seconds).abs() / uniform.seconds < 1e-9);
     }
@@ -229,10 +239,24 @@ mod tests {
         assert!((t2 / t1 - 4.0).abs() < 1e-9);
     }
 
+    #[test]
+    fn prefill_uses_group_shared_len() {
+        let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
+        let short = e
+            .prefill_requests(&[PrefillRequest { seq: 0, context_len: 64, shared_len: 100 }])
+            .unwrap();
+        let long = e
+            .prefill_requests(&[PrefillRequest { seq: 0, context_len: 64, shared_len: 10_000 }])
+            .unwrap();
+        assert!(long > short, "longer group prefix costs more prefill");
+    }
+
     /// The bucketed + memoized iteration time must be *bit-identical*
     /// to the straightforward per-sequence evaluation — both against a
-    /// hand-rolled reference and against the engine's own
-    /// `memoized = false` path.
+    /// hand-rolled reference (the pre-refactor single-prefix
+    /// formulation) and against the engine's own `memoized = false`
+    /// path.  This is the single-tenant regression: grouped machinery
+    /// with one group == the old code, to the last bit.
     #[test]
     fn bucketed_matches_per_sequence_reference() {
         let cfg = deepseek_v3();
@@ -247,17 +271,19 @@ mod tests {
                 let shared = rng.gen_range_usize(0, 8000);
                 let lens: Vec<usize> =
                     (0..b).map(|_| rng.gen_range_usize(0, 64)).collect();
-                let batch = DecodeBatch {
-                    seqs: (0..b as u64).collect(),
+                let batch = DecodeBatch::single(
                     kernel,
-                    shared_len: shared,
-                    context_lens: lens.clone(),
-                };
+                    shared,
+                    (0..b as u64).collect(),
+                    lens.clone(),
+                );
                 let got = e.decode(&batch).unwrap();
                 let via_flag = reference_engine.decode(&batch).unwrap();
                 assert_eq!(got.seconds, via_flag.seconds, "memoized flag must not drift");
 
-                // Reference: the original per-sequence formulation.
+                // Reference: the original pre-tenancy formulation —
+                // shared cost at the full batch size + per-sequence
+                // non-shared terms.
                 let shared_wl = AttentionWorkload::decode(b as u64, shared as u64, 0);
                 let shared_cost = attention_cost(&cfg, kernel, &shared_wl);
                 let mut non_shared = Component::default();
@@ -277,6 +303,81 @@ mod tests {
         let (hits, misses) = e.cost_cache_stats();
         assert!(hits > 0, "repeated lengths must hit the cache");
         assert!(misses > 0);
+    }
+
+    /// Grouped batches: the memoized path must bit-match the reference
+    /// engine across random multi-group partitions and kernel mixes.
+    #[test]
+    fn grouped_memoized_matches_reference() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let mut e = SimEngine::new(cfg.clone(), hw.clone());
+        let mut reference_engine = SimEngine::new(cfg, hw);
+        reference_engine.memoized = false;
+        let mut rng = crate::util::rng::Rng::new(23);
+        for trial in 0..40 {
+            let n_groups = rng.gen_range_usize(1, 5);
+            let mut seqs = Vec::new();
+            let mut lens = Vec::new();
+            let mut groups = Vec::new();
+            for gi in 0..n_groups {
+                let members = rng.gen_range_usize(1, 100);
+                let kernel = *rng.choose(&KernelKind::all());
+                let shared_len = rng.gen_range_usize(0, 8000);
+                groups.push(BatchGroup {
+                    prefix: gi as u32,
+                    shared_len,
+                    kernel,
+                    start: seqs.len(),
+                    len: members,
+                });
+                for _ in 0..members {
+                    lens.push(rng.gen_range_usize(0, 64));
+                    seqs.push(seqs.len() as u64);
+                }
+            }
+            let batch = DecodeBatch { seqs, context_lens: lens, groups };
+            let got = e.decode(&batch).unwrap();
+            let reference = reference_engine.decode(&batch).unwrap();
+            assert_eq!(
+                got.seconds.to_bits(),
+                reference.seconds.to_bits(),
+                "trial {trial}"
+            );
+        }
+    }
+
+    /// Two groups of the same kernel cost the shared stage per group
+    /// but share non-shared length buckets; splitting one group into
+    /// two with the same total occupancy must *increase* modeled time
+    /// only via the per-group stream reads (never decrease).
+    #[test]
+    fn splitting_a_group_never_reduces_cost() {
+        let mut e = SimEngine::new(deepseek_v3(), ascend_npu());
+        let single = e.decode(&batch(KernelKind::Absorb, 64, 4096, 128)).unwrap();
+        let split = e
+            .decode(&DecodeBatch {
+                seqs: (0..64).collect(),
+                context_lens: vec![128; 64],
+                groups: vec![
+                    BatchGroup {
+                        prefix: 0,
+                        shared_len: 4096,
+                        kernel: KernelKind::Absorb,
+                        start: 0,
+                        len: 32,
+                    },
+                    BatchGroup {
+                        prefix: 1,
+                        shared_len: 4096,
+                        kernel: KernelKind::Absorb,
+                        start: 32,
+                        len: 32,
+                    },
+                ],
+            })
+            .unwrap();
+        assert!(split.seconds >= single.seconds, "{} < {}", split.seconds, single.seconds);
     }
 
     /// Repeated identical batches do O(distinct lengths) model

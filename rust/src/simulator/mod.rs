@@ -6,10 +6,15 @@ pub mod e2e;
 pub mod engine;
 pub mod serving_sim;
 pub mod sweep;
+pub mod tenancy;
 
 pub use e2e::{gpu_h800_calibrated, tgr_row, TgrEntry, TgrRow};
 pub use engine::SimEngine;
 pub use serving_sim::{run_experiment, run_kernel_comparison, SimParams, SimReport};
 pub use sweep::{
     run_throughput_sweep, throughput_cells, SweepExecutor, ThroughputCell, ThroughputCellResult,
+};
+pub use tenancy::{
+    run_tenant_comparison, run_tenant_experiment, run_tenant_experiment_with, TenantSimParams,
+    TenantSimReport,
 };

@@ -106,7 +106,10 @@ pub fn run_experiment(
     coord.run_to_completion()?;
 
     let m = &coord.metrics;
-    let decode_seconds = m.iteration_time.mean() * m.decode_iterations as f64;
+    // Exact accumulated sum from Metrics — not mean() * iterations,
+    // which would reintroduce the float round-trip the accumulator
+    // exists to avoid.
+    let decode_seconds = m.decode_seconds;
     Ok(SimReport {
         tokens: m.tokens_generated,
         decode_seconds,

@@ -23,6 +23,7 @@ use crate::workload::prompts::all_prompts;
 use crate::workload::{Dataset, SystemPrompt};
 
 use super::serving_sim::{run_experiment, SimParams, SimReport};
+use super::tenancy::{run_tenant_comparison, TenantSimParams, TenantSimReport};
 
 /// Worker-count policy for a sweep.
 #[derive(Clone, Copy, Debug)]
@@ -182,6 +183,72 @@ pub fn run_throughput_sweep(
     })
 }
 
+/// One cell of the `tenants` grid: tenant count x skew, with the
+/// three-deployment kernel comparison evaluated inside the cell.
+#[derive(Clone, Debug)]
+pub struct TenantCell {
+    pub model: ModelConfig,
+    pub tenants: usize,
+    pub skew: f64,
+    pub batch: usize,
+    pub total_requests: usize,
+}
+
+/// The tenants grid in row order: tenant count (outer) x skew (inner).
+pub fn tenant_cells(
+    model: &ModelConfig,
+    tenant_counts: &[usize],
+    skews: &[f64],
+    batch: usize,
+    total_requests: usize,
+) -> Vec<TenantCell> {
+    let mut cells = Vec::new();
+    for &tenants in tenant_counts {
+        for &skew in skews {
+            cells.push(TenantCell {
+                model: model.clone(),
+                tenants,
+                skew,
+                batch,
+                total_requests,
+            });
+        }
+    }
+    cells
+}
+
+/// One evaluated tenants cell: (grouped typhoon, global absorb,
+/// per-tenant naive) reports.
+#[derive(Clone, Debug)]
+pub struct TenantCellResult {
+    pub cell: TenantCell,
+    pub reports: [TenantSimReport; 3],
+}
+
+/// Evaluate the tenants grid on `hw` under the executor; results come
+/// back in cell order regardless of scheduling (byte-identical
+/// artifacts serial vs parallel, same discipline as the Fig. 2/3 grid).
+pub fn run_tenant_sweep(
+    hw: &HardwareSpec,
+    cells: &[TenantCell],
+    exec: &SweepExecutor,
+) -> Result<Vec<TenantCellResult>> {
+    exec.run(cells.len(), |i| {
+        let c = &cells[i];
+        let mut p = TenantSimParams::new(
+            c.model.clone(),
+            hw.clone(),
+            KernelKind::Typhoon,
+            c.batch,
+            c.tenants,
+            c.skew,
+        );
+        p.total_requests = c.total_requests;
+        let reports = run_tenant_comparison(&p)?;
+        Ok(TenantCellResult { cell: c.clone(), reports })
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +291,35 @@ mod tests {
         assert_eq!(cells[1].batch, 128);
         assert_eq!(cells[0].prompt.name, cells[5].prompt.name);
         assert_eq!(cells[0].max_requests, Some(128));
+    }
+
+    #[test]
+    fn tenant_cell_enumeration_row_order() {
+        let cells = tenant_cells(&deepseek_v3(), &[1, 4], &[0.0, 2.0], 64, 128);
+        assert_eq!(cells.len(), 4);
+        assert_eq!((cells[0].tenants, cells[0].skew), (1, 0.0));
+        assert_eq!((cells[1].tenants, cells[1].skew), (1, 2.0));
+        assert_eq!((cells[3].tenants, cells[3].skew), (4, 2.0));
+    }
+
+    /// Tenant sweep determinism: serial and parallel executors produce
+    /// bitwise-equal reports per cell.
+    #[test]
+    fn tenant_sweep_deterministic_across_executors() {
+        let hw = ascend_npu();
+        let cells = tenant_cells(&deepseek_v3(), &[1, 2], &[1.0], 32, 64);
+        let serial = run_tenant_sweep(&hw, &cells, &SweepExecutor::serial()).unwrap();
+        let par = run_tenant_sweep(&hw, &cells, &SweepExecutor::with_threads(2)).unwrap();
+        for (s, p) in serial.iter().zip(&par) {
+            for k in 0..3 {
+                assert_eq!(s.reports[k].tokens, p.reports[k].tokens);
+                assert_eq!(
+                    s.reports[k].throughput.to_bits(),
+                    p.reports[k].throughput.to_bits()
+                );
+                assert_eq!(s.reports[k].iterations, p.reports[k].iterations);
+            }
+        }
     }
 
     /// A tiny real sweep: parallel report values equal the serial ones

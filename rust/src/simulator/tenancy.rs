@@ -1,0 +1,216 @@
+//! Multi-tenant serving simulation: the paper's continuous-batching
+//! protocol generalized to N prefix groups (tenant system prompts),
+//! with the Eq. 1 fall-back rule applied per group.
+//!
+//! Three deployments are comparable on the same workload:
+//! * **grouped Typhoon** (`KernelKind::Typhoon`) — hot groups run the
+//!   mixed kernel, cold groups fall back to absorb, per iteration;
+//! * **global absorb** (`KernelKind::Absorb`) — the FlashMLA-style
+//!   baseline, every group absorb-only;
+//! * **per-tenant naive** (`KernelKind::Naive`) — each group naive on
+//!   both stages (prefix-aware PagedAttention).
+
+use anyhow::Result;
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig, ServingConfig};
+use crate::coordinator::{Coordinator, KernelPolicy};
+use crate::costmodel::threshold::batch_threshold;
+use crate::kvcache::{KvCacheManager, PrefixId};
+use crate::workload::tenants::{tenant_set, MultiTenantGenerator, TenantSpec};
+
+use super::engine::SimEngine;
+
+/// Parameters of one multi-tenant experiment.
+#[derive(Clone, Debug)]
+pub struct TenantSimParams {
+    pub model: ModelConfig,
+    pub hw: HardwareSpec,
+    /// Requested kernel (per-group fall-back applies to Typhoon).
+    pub kernel: KernelKind,
+    pub batch: usize,
+    /// Number of tenants (prefix groups).
+    pub tenants: usize,
+    /// Zipf exponent of the arrival shares (0 = uniform).
+    pub skew: f64,
+    /// Total request budget, split per tenant by arrival share.
+    pub total_requests: usize,
+    pub seed: u64,
+    /// Include prefill time in the modeled clock (decode-only by
+    /// default, matching the paper's throughput protocol).
+    pub include_prefill: bool,
+}
+
+impl TenantSimParams {
+    pub fn new(
+        model: ModelConfig,
+        hw: HardwareSpec,
+        kernel: KernelKind,
+        batch: usize,
+        tenants: usize,
+        skew: f64,
+    ) -> Self {
+        TenantSimParams {
+            model,
+            hw,
+            kernel,
+            batch,
+            tenants,
+            skew,
+            total_requests: batch * 4,
+            seed: 42,
+            include_prefill: false,
+        }
+    }
+}
+
+/// Result of one multi-tenant experiment.
+#[derive(Clone, Debug)]
+pub struct TenantSimReport {
+    pub tokens: u64,
+    /// Exact accumulated decode seconds (from `Metrics`).
+    pub decode_seconds: f64,
+    /// Generated tokens per second per layer.
+    pub throughput: f64,
+    pub iterations: u64,
+    pub mean_batch: f64,
+    /// Group-iterations per kernel (one count per group per iteration).
+    pub typhoon_iters: u64,
+    pub absorb_iters: u64,
+    pub naive_iters: u64,
+    /// Iterations whose groups split across kernels (hot Typhoon +
+    /// cold absorb fall-back in the same decode step).
+    pub mixed_iters: u64,
+    /// Uncompressed shared-prefix expansion held, bytes (all groups).
+    pub expansion_bytes: u64,
+}
+
+/// Run one multi-tenant experiment over a generated tenant set.
+pub fn run_tenant_experiment(params: &TenantSimParams) -> Result<TenantSimReport> {
+    let tenants = tenant_set(params.tenants, params.skew);
+    run_tenant_experiment_with(params, &tenants)
+}
+
+/// Run over an explicit tenant set (callers may hand-craft shares).
+pub fn run_tenant_experiment_with(
+    params: &TenantSimParams,
+    tenants: &[TenantSpec],
+) -> Result<TenantSimReport> {
+    let block_size = 128; // paper: paged KV with block size 128
+    let max_seq_len = 2048;
+    // Pool: full batch at max length + every tenant's prefix + slack.
+    let prefix_blocks: usize =
+        tenants.iter().map(|t| t.prompt_tokens.div_ceil(block_size)).sum();
+    let total_blocks = params.batch * (max_seq_len / block_size) + prefix_blocks + 64;
+    let cfg = ServingConfig {
+        block_size,
+        max_batch: params.batch,
+        max_seq_len,
+        total_blocks,
+        kernel: params.kernel,
+        ..Default::default()
+    };
+    let b_theta = batch_threshold(&params.model, &params.hw, 1);
+    let policy = KernelPolicy::with_threshold(params.kernel, b_theta);
+    let kv = KvCacheManager::new(params.model.clone(), total_blocks, block_size);
+    let mut engine = SimEngine::new(params.model.clone(), params.hw.clone());
+    engine.include_prefill = params.include_prefill;
+    let mut coord = Coordinator::new(cfg, policy, kv, engine)?;
+
+    let mut prefix_of: Vec<PrefixId> = Vec::with_capacity(tenants.len());
+    for t in tenants {
+        prefix_of.push(coord.register_prefix_group(&t.prompt_token_ids(50_000))?);
+    }
+    let mut gen = MultiTenantGenerator::new(tenants, params.total_requests, params.seed);
+    while let Some(tr) = gen.next_request() {
+        coord.submit_to(&tr.request, prefix_of[tr.tenant])?;
+    }
+    coord.run_to_completion()?;
+
+    let m = &coord.metrics;
+    Ok(TenantSimReport {
+        tokens: m.tokens_generated,
+        decode_seconds: m.decode_seconds,
+        throughput: if m.decode_seconds > 0.0 {
+            m.tokens_generated as f64 / m.decode_seconds
+        } else {
+            0.0
+        },
+        iterations: m.decode_iterations,
+        mean_batch: m.batch_occupancy.mean(),
+        typhoon_iters: m.typhoon_iters,
+        absorb_iters: m.absorb_iters,
+        naive_iters: m.naive_iters,
+        mixed_iters: m.mixed_iters,
+        expansion_bytes: coord.kv.expanded_bytes(),
+    })
+}
+
+/// Run the three deployments (grouped typhoon / global absorb /
+/// per-tenant naive) on the same workload.
+pub fn run_tenant_comparison(
+    params: &TenantSimParams,
+) -> Result<[TenantSimReport; 3]> {
+    let mut out = Vec::with_capacity(3);
+    for kernel in [KernelKind::Typhoon, KernelKind::Absorb, KernelKind::Naive] {
+        let mut p = params.clone();
+        p.kernel = kernel;
+        out.push(run_tenant_experiment(&p)?);
+    }
+    Ok(out.try_into().map_err(|_| anyhow::anyhow!("3 reports")).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+
+    fn quick(kernel: KernelKind, tenants: usize, skew: f64, batch: usize) -> TenantSimReport {
+        let mut p =
+            TenantSimParams::new(deepseek_v3(), ascend_npu(), kernel, batch, tenants, skew);
+        p.total_requests = batch * 2;
+        run_tenant_experiment(&p).unwrap()
+    }
+
+    #[test]
+    fn conservation_across_tenants() {
+        let r = quick(KernelKind::Typhoon, 3, 1.0, 64);
+        assert!(r.tokens > 0);
+        assert!(r.iterations > 0);
+        assert!(r.throughput > 0.0);
+        assert!(r.expansion_bytes > 0, "typhoon expands every group");
+    }
+
+    /// Skewed traffic at a healthy batch: the hot group clears B_theta
+    /// and runs Typhoon while cold groups fall back — mixed iterations
+    /// must occur, and grouped Typhoon must beat the global-absorb
+    /// baseline on modeled throughput.
+    #[test]
+    fn grouped_typhoon_beats_global_absorb_on_skew() {
+        let t = quick(KernelKind::Typhoon, 4, 2.0, 256);
+        let a = quick(KernelKind::Absorb, 4, 2.0, 256);
+        let n = quick(KernelKind::Naive, 4, 2.0, 256);
+        assert!(t.mixed_iters > 0, "hot+cold kernel split expected");
+        assert!(
+            t.throughput >= a.throughput,
+            "grouped typhoon {} < global absorb {}",
+            t.throughput,
+            a.throughput
+        );
+        assert!(
+            t.throughput > n.throughput,
+            "grouped typhoon {} <= per-tenant naive {}",
+            t.throughput,
+            n.throughput
+        );
+    }
+
+    /// Absorb never mixes (no fall-back concept) and never expands.
+    #[test]
+    fn absorb_baseline_uniform_and_unexpanded() {
+        let a = quick(KernelKind::Absorb, 3, 1.0, 64);
+        assert_eq!(a.mixed_iters, 0);
+        assert_eq!(a.typhoon_iters, 0);
+        assert_eq!(a.expansion_bytes, 0, "absorb keeps latent-only prefixes");
+    }
+}

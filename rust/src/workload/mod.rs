@@ -1,10 +1,13 @@
 //! Workload modeling: the paper's benchmark datasets (length
-//! distributions), system prompts (Table 2) and request generation.
+//! distributions), system prompts (Table 2), request generation, and
+//! the multi-tenant (per-prefix-group) traffic generator.
 
 pub mod datasets;
 pub mod generator;
 pub mod prompts;
+pub mod tenants;
 
 pub use datasets::{all_datasets, Dataset, Example};
 pub use generator::{Request, RequestGenerator};
 pub use prompts::{all_prompts, SystemPrompt, PROMPT_A, PROMPT_B, PROMPT_C};
+pub use tenants::{tenant_set, MultiTenantGenerator, TenantRequest, TenantSpec};

@@ -1,0 +1,223 @@
+//! Multi-tenant workload modeling: N tenants, each with its own
+//! Table-2-length system prompt and an arrival share, interleaved into
+//! one request stream.
+//!
+//! The paper's protocol serves a single system prompt; a production
+//! fleet serves many.  Tenant prompt lengths cycle through the paper's
+//! Table 2 (26472 / 7069 / 4759 tokens) so each group's shared stage
+//! sits in the regime the paper characterizes, and arrival shares
+//! follow a Zipf(`skew`) law — `skew = 0` is uniform traffic, larger
+//! values concentrate arrivals on the head tenants (one hot group,
+//! many cold ones).
+
+use std::collections::VecDeque;
+
+use crate::util::rng::Rng;
+
+use super::datasets::{all_datasets, Dataset};
+use super::generator::Request;
+
+/// The paper's Table 2 system-prompt lengths (tokens).
+pub const TABLE2_LENGTHS: [usize; 3] = [26472, 7069, 4759];
+
+/// One tenant: a system prompt (its own prefix group) plus traffic.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub id: usize,
+    pub name: String,
+    /// System-prompt length, tokens (a Table-2 length).
+    pub prompt_tokens: usize,
+    /// Arrival share, normalized over the tenant set.
+    pub share: f64,
+    /// Length model of this tenant's questions/answers.
+    pub dataset: Dataset,
+}
+
+impl TenantSpec {
+    /// Deterministic synthetic prompt token ids — distinct per tenant
+    /// (seeded by tenant id) so different tenants never collide in the
+    /// radix tree, same discipline as `SystemPrompt::token_ids`.
+    pub fn prompt_token_ids(&self, vocab: u32) -> Vec<u32> {
+        let mut rng = Rng::new(0x7E4A_57A1u64 ^ (self.id as u64).wrapping_mul(0x9E37_79B9));
+        (0..self.prompt_tokens).map(|_| rng.gen_range(0, vocab as u64) as u32).collect()
+    }
+}
+
+/// Build `n` tenants with Zipf(`skew`) arrival shares (share_i ∝
+/// 1/(i+1)^skew, normalized; `skew = 0` → uniform), prompt lengths and
+/// datasets cycling through the paper's sets.
+pub fn tenant_set(n: usize, skew: f64) -> Vec<TenantSpec> {
+    assert!(n > 0, "at least one tenant");
+    let datasets = all_datasets();
+    let raw: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(skew)).collect();
+    let total: f64 = raw.iter().sum();
+    (0..n)
+        .map(|i| TenantSpec {
+            id: i,
+            name: format!("tenant-{i}"),
+            prompt_tokens: TABLE2_LENGTHS[i % TABLE2_LENGTHS.len()],
+            share: raw[i] / total,
+            dataset: datasets[i % datasets.len()].clone(),
+        })
+        .collect()
+}
+
+/// One arrival of the interleaved stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantRequest {
+    pub tenant: usize,
+    pub request: Request,
+}
+
+/// A finite multi-tenant request stream: per-tenant queues sampled from
+/// each tenant's dataset, interleaved by weighted (share) picks from a
+/// seeded RNG — fully deterministic per seed.
+#[derive(Debug)]
+pub struct MultiTenantGenerator {
+    queues: Vec<VecDeque<Request>>,
+    shares: Vec<f64>,
+    rng: Rng,
+    total: usize,
+}
+
+impl MultiTenantGenerator {
+    /// Per-tenant request counts are `round(share x total_requests)`
+    /// with a floor of 1 — every tenant sends *some* traffic, so every
+    /// prefix group goes live.
+    pub fn new(tenants: &[TenantSpec], total_requests: usize, seed: u64) -> Self {
+        let mut queues = Vec::with_capacity(tenants.len());
+        let mut next_id = 0u64;
+        for t in tenants {
+            let count = ((t.share * total_requests as f64).round() as usize).max(1);
+            let mut rng_t = Rng::new(seed ^ (t.id as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F));
+            let q: VecDeque<Request> = (0..count)
+                .map(|_| {
+                    let e = t.dataset.sample(&mut rng_t);
+                    let r = Request {
+                        id: next_id,
+                        prompt_tokens: e.question_tokens,
+                        max_new_tokens: e.answer_tokens,
+                    };
+                    next_id += 1;
+                    r
+                })
+                .collect();
+            queues.push(q);
+        }
+        let total = queues.iter().map(|q| q.len()).sum();
+        MultiTenantGenerator {
+            queues,
+            shares: tenants.iter().map(|t| t.share).collect(),
+            rng: Rng::new(seed.wrapping_mul(0x2545_F491_4F6C_DD1D).wrapping_add(1)),
+            total,
+        }
+    }
+
+    /// Next arrival: weighted pick among tenants with traffic left.
+    pub fn next_request(&mut self) -> Option<TenantRequest> {
+        let live: Vec<usize> =
+            (0..self.queues.len()).filter(|&i| !self.queues[i].is_empty()).collect();
+        if live.is_empty() {
+            return None;
+        }
+        let total_w: f64 = live.iter().map(|&i| self.shares[i]).sum();
+        let mut x = self.rng.next_f64() * total_w;
+        let mut pick = *live.last().unwrap();
+        for &i in &live {
+            if x < self.shares[i] {
+                pick = i;
+                break;
+            }
+            x -= self.shares[i];
+        }
+        let request = self.queues[pick].pop_front().unwrap();
+        Some(TenantRequest { tenant: pick, request })
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Total tokens the full stream will generate (conservation checks).
+    pub fn total_new_tokens(&self) -> usize {
+        self.queues.iter().flatten().map(|r| r.max_new_tokens).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_normalized_and_skewed() {
+        for n in [1usize, 3, 8] {
+            for skew in [0.0, 1.0, 2.0] {
+                let ts = tenant_set(n, skew);
+                let total: f64 = ts.iter().map(|t| t.share).sum();
+                assert!((total - 1.0).abs() < 1e-12, "n={n} skew={skew}");
+            }
+        }
+        let uniform = tenant_set(4, 0.0);
+        assert!((uniform[0].share - 0.25).abs() < 1e-12);
+        let skewed = tenant_set(4, 2.0);
+        assert!(skewed[0].share > 0.5, "head tenant dominates at skew 2");
+        assert!(skewed[3].share < uniform[3].share);
+    }
+
+    #[test]
+    fn prompts_cycle_table2_and_differ_per_tenant() {
+        let ts = tenant_set(5, 1.0);
+        assert_eq!(ts[0].prompt_tokens, 26472);
+        assert_eq!(ts[1].prompt_tokens, 7069);
+        assert_eq!(ts[2].prompt_tokens, 4759);
+        assert_eq!(ts[3].prompt_tokens, 26472);
+        let a = ts[0].prompt_token_ids(256);
+        let d = ts[3].prompt_token_ids(256);
+        assert_eq!(a.len(), d.len());
+        assert_ne!(&a[..64], &d[..64], "same length, distinct content");
+        assert_eq!(a, ts[0].prompt_token_ids(256), "deterministic");
+    }
+
+    #[test]
+    fn generator_deterministic_and_complete() {
+        let ts = tenant_set(3, 1.0);
+        let mut a = MultiTenantGenerator::new(&ts, 60, 7);
+        let mut b = MultiTenantGenerator::new(&ts, 60, 7);
+        let mut n = 0;
+        let mut seen = vec![0usize; 3];
+        while let Some(ra) = a.next_request() {
+            assert_eq!(Some(&ra), b.next_request().as_ref());
+            seen[ra.tenant] += 1;
+            n += 1;
+        }
+        assert!(b.is_exhausted());
+        assert_eq!(n, a.total());
+        assert!(seen.iter().all(|&c| c > 0), "every tenant sends traffic: {seen:?}");
+        // Shares shape the counts: head tenant sends the most.
+        assert!(seen[0] > seen[2], "{seen:?}");
+    }
+
+    #[test]
+    fn every_tenant_floors_at_one_request() {
+        let ts = tenant_set(8, 3.0); // tail shares are tiny
+        let g = MultiTenantGenerator::new(&ts, 10, 1);
+        assert!(g.total() >= 8, "floor of 1 per tenant");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let ts = tenant_set(3, 1.0);
+        let mut a = MultiTenantGenerator::new(&ts, 60, 1);
+        let mut b = MultiTenantGenerator::new(&ts, 60, 2);
+        let differs = (0..40).any(|_| a.next_request() != b.next_request());
+        assert!(differs);
+    }
+}

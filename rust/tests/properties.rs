@@ -273,12 +273,114 @@ fn scheduler_invariants_fuzz() {
     }
 }
 
+/// Prefix-page safety under pressure: preemption/eviction storms must
+/// never release a registered prefix's pages while any sequence of its
+/// group is queued or running — across 2+ prefix groups sharing a pool
+/// barely larger than the prefixes themselves.
+#[test]
+fn prefix_pages_survive_eviction_storms() {
+    use std::collections::HashMap;
+    use typhoon_mla::kvcache::PrefixId;
+
+    for seed in 0..12 {
+        let mut rng = Rng::new(9000 + seed);
+        let block_size = 16;
+        let n_groups = 2 + (seed as usize % 2);
+        let prefix_pages: Vec<usize> =
+            (0..n_groups).map(|_| rng.gen_range_usize(1, 3)).collect();
+        let total_prefix_pages: usize = prefix_pages.iter().sum();
+        // Pool barely larger than the prefixes: constant eviction churn.
+        let total_blocks = total_prefix_pages + rng.gen_range_usize(2, 5);
+        let max_batch = rng.gen_range_usize(2, 5).min(total_blocks);
+        let cfg = ServingConfig {
+            block_size,
+            max_batch,
+            max_seq_len: 64,
+            total_blocks,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Typhoon, 2);
+        let kv = KvCacheManager::new(sim(), total_blocks, block_size);
+        let mut c = Coordinator::new(cfg, policy, kv, NullEngine::default()).unwrap();
+
+        let mut prefixes: Vec<PrefixId> = Vec::new();
+        let mut expected_blocks = Vec::new();
+        for (g, &pages) in prefix_pages.iter().enumerate() {
+            // Disjoint token ranges: no page sharing between groups.
+            let lo = (g * 10_000) as u32;
+            let tokens: Vec<u32> = (lo..lo + (pages * block_size) as u32).collect();
+            let id = c.register_prefix_group(&tokens).unwrap();
+            expected_blocks.push(c.kv.prefix(id).unwrap().latent_blocks.clone());
+            prefixes.push(id);
+        }
+
+        let mut group_of: HashMap<u64, PrefixId> = HashMap::new();
+        let mut outstanding: HashMap<PrefixId, usize> =
+            prefixes.iter().map(|&p| (p, 0)).collect();
+        let n_reqs = rng.gen_range_usize(4, 20);
+        for i in 0..n_reqs {
+            let g = rng.gen_range_usize(0, n_groups);
+            let sid = c
+                .submit_to(
+                    &Request {
+                        id: i as u64,
+                        prompt_tokens: rng.gen_range_usize(1, block_size),
+                        max_new_tokens: rng.gen_range_usize(1, 30),
+                    },
+                    prefixes[g],
+                )
+                .unwrap();
+            group_of.insert(sid, prefixes[g]);
+            *outstanding.get_mut(&prefixes[g]).unwrap() += 1;
+        }
+
+        let mut guard = 0;
+        loop {
+            let more = c.step().unwrap();
+            for fin in c.take_finished() {
+                *outstanding.get_mut(&group_of[&fin]).unwrap() -= 1;
+            }
+            for (i, &p) in prefixes.iter().enumerate() {
+                let sp = c.kv.prefix(p).expect("prefix stays registered");
+                assert_eq!(
+                    sp.latent_blocks, expected_blocks[i],
+                    "seed {seed}: prefix pages must never be swapped out"
+                );
+                if outstanding[&p] > 0 {
+                    assert!(
+                        c.kv.release_shared_prefix(p).is_err(),
+                        "seed {seed}: release must refuse while group {p} is live"
+                    );
+                    assert!(
+                        c.kv.prefix(p).is_some(),
+                        "seed {seed}: failed release must not unregister"
+                    );
+                }
+            }
+            assert!(
+                c.kv.used_blocks() >= total_prefix_pages,
+                "seed {seed}: prefix pages freed under pressure"
+            );
+            if !more {
+                break;
+            }
+            guard += 1;
+            assert!(guard < 100_000, "seed {seed}: no progress");
+        }
+        assert!(outstanding.values().all(|&n| n == 0), "seed {seed}: {outstanding:?}");
+        for &p in &prefixes {
+            c.kv.release_shared_prefix(p).unwrap();
+        }
+        assert_eq!(c.kv.used_blocks(), 0, "seed {seed}: all pages returned");
+    }
+}
+
 /// Failure injection: engines that error must surface errors, not hang
 /// or corrupt state.
 #[test]
 fn failing_engine_surfaces_errors() {
     use anyhow::{bail, Result};
-    use typhoon_mla::coordinator::{DecodeBatch, Engine, IterationOutcome};
+    use typhoon_mla::coordinator::{DecodeBatch, Engine, IterationOutcome, PrefillRequest};
     use typhoon_mla::kvcache::{PrefixId, SeqId};
 
     struct FailAfter {
@@ -288,7 +390,7 @@ fn failing_engine_surfaces_errors() {
         fn prepare_shared(&mut self, _: PrefixId, _: &[u32], _: KernelKind) -> Result<f64> {
             Ok(0.0)
         }
-        fn prefill_requests(&mut self, _: &[(SeqId, usize)]) -> Result<f64> {
+        fn prefill_requests(&mut self, _: &[PrefillRequest]) -> Result<f64> {
             Ok(0.0)
         }
         fn decode(&mut self, _: &DecodeBatch) -> Result<IterationOutcome> {

@@ -1,0 +1,112 @@
+//! Multi-tenant integration regressions:
+//! * the single-tenant configuration must reduce to the classic
+//!   single-shared-prefix path **bit-for-bit** (so every pre-tenancy
+//!   figure/table artifact stays byte-identical);
+//! * the `tenants` sweep must be byte-identical serial vs parallel
+//!   under `SweepExecutor`;
+//! * grouped Typhoon must at least match the global-absorb baseline on
+//!   a skewed multi-tenant workload.
+
+use typhoon_mla::analysis::figures::format_tenants;
+use typhoon_mla::config::hardware::ascend_npu;
+use typhoon_mla::config::model::deepseek_v3;
+use typhoon_mla::config::{KernelKind, ServingConfig};
+use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
+use typhoon_mla::kvcache::KvCacheManager;
+use typhoon_mla::simulator::sweep::{run_tenant_sweep, tenant_cells, SweepExecutor};
+use typhoon_mla::simulator::{run_tenant_experiment, SimEngine, TenantSimParams};
+use typhoon_mla::workload::tenants::tenant_set;
+use typhoon_mla::workload::MultiTenantGenerator;
+
+fn sim_coordinator(kernel: KernelKind, batch: usize) -> Coordinator<SimEngine> {
+    let block_size = 128;
+    let max_seq_len = 2048;
+    let total_blocks = batch * (max_seq_len / block_size) + 512;
+    let cfg = ServingConfig {
+        block_size,
+        max_batch: batch,
+        max_seq_len,
+        total_blocks,
+        kernel,
+        ..Default::default()
+    };
+    let policy = KernelPolicy::with_threshold(kernel, 61);
+    let kv = KvCacheManager::new(deepseek_v3(), total_blocks, block_size);
+    let mut engine = SimEngine::new(deepseek_v3(), ascend_npu());
+    engine.include_prefill = false;
+    Coordinator::new(cfg, policy, kv, engine).unwrap()
+}
+
+/// The single-tenant regression: one prefix group registered via the
+/// tenancy API serves bitwise-identically to the classic
+/// `set_shared_prefix` + `submit` path on the same request stream.
+#[test]
+fn single_tenant_reduces_to_classic_path() {
+    let tenants = tenant_set(1, 0.0);
+    let prompt = tenants[0].prompt_token_ids(50_000);
+    let mut stream = MultiTenantGenerator::new(&tenants, 128, 7);
+
+    let mut classic = sim_coordinator(KernelKind::Typhoon, 64);
+    classic.set_shared_prefix(&prompt).unwrap();
+    let mut grouped = sim_coordinator(KernelKind::Typhoon, 64);
+    let pid = grouped.register_prefix_group(&prompt).unwrap();
+
+    while let Some(tr) = stream.next_request() {
+        assert_eq!(tr.tenant, 0);
+        classic.submit(&tr.request).unwrap();
+        grouped.submit_to(&tr.request, pid).unwrap();
+    }
+    classic.run_to_completion().unwrap();
+    grouped.run_to_completion().unwrap();
+
+    let (cm, gm) = (&classic.metrics, &grouped.metrics);
+    assert_eq!(cm.tokens_generated, gm.tokens_generated);
+    assert_eq!(cm.decode_iterations, gm.decode_iterations);
+    assert_eq!(cm.decode_seconds.to_bits(), gm.decode_seconds.to_bits());
+    assert_eq!(cm.typhoon_iters, gm.typhoon_iters);
+    assert_eq!(cm.absorb_iters, gm.absorb_iters);
+    assert_eq!(gm.mixed_iters, 0, "one group can never mix kernels");
+}
+
+/// The `tenants` sweep under `SweepExecutor`: serial and parallel runs
+/// must produce byte-identical artifacts (text and CSV).
+#[test]
+fn tenants_artifact_serial_parallel_identical() {
+    let hw = ascend_npu();
+    let cells = tenant_cells(&deepseek_v3(), &[1, 2, 4], &[0.0, 2.0], 64, 128);
+    let serial = run_tenant_sweep(&hw, &cells, &SweepExecutor::serial()).unwrap();
+    let par = run_tenant_sweep(&hw, &cells, &SweepExecutor::with_threads(4)).unwrap();
+    let a = format_tenants(&serial);
+    let b = format_tenants(&par);
+    assert_eq!(a.text, b.text, "text artifact must not drift");
+    assert_eq!(a.csv, b.csv, "csv artifact must not drift");
+    assert_eq!(a.csv.lines().count(), 7, "header + 6 cells");
+}
+
+/// Acceptance: on a skewed multi-tenant workload at a healthy batch,
+/// per-group Typhoon models at least the global-absorb throughput (the
+/// hot group clears B_theta; cold groups fall back and cost the same
+/// as the baseline).
+#[test]
+fn grouped_typhoon_at_least_matches_global_absorb() {
+    let mut p = TenantSimParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        KernelKind::Typhoon,
+        256,
+        4,
+        2.0,
+    );
+    p.total_requests = 512;
+    let t = run_tenant_experiment(&p).unwrap();
+    p.kernel = KernelKind::Absorb;
+    let a = run_tenant_experiment(&p).unwrap();
+    assert_eq!(t.tokens, a.tokens, "same workload, same tokens");
+    assert!(
+        t.throughput >= a.throughput,
+        "grouped typhoon {} < global absorb {}",
+        t.throughput,
+        a.throughput
+    );
+    assert!(t.mixed_iters > 0, "skewed workload must split kernels per group");
+}

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1 verify recipe (see ROADMAP.md).
+#
+# Core gate (what the CI driver runs):
+#   cargo build --release && cargo test -q
+# Extended gate (this script): the core gate plus formatting and lint
+# cleanliness — `cargo fmt --check` and `cargo clippy -- -D warnings`.
+# fmt/clippy run best-effort when their components are not installed
+# (some build containers ship no rustup components, or no toolchain at
+# all); the build+test gate is always hard.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: no Rust toolchain on PATH; tier-1 runs on the CI driver" >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "verify: rustfmt unavailable, skipping fmt check" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "verify: clippy unavailable, skipping lint" >&2
+fi
+
+echo "verify: OK"
