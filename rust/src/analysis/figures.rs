@@ -12,9 +12,10 @@ use crate::costmodel::exec_time::{time_breakdown, TimeBreakdown};
 use crate::costmodel::flops::{attention_cost, AttentionWorkload};
 use crate::costmodel::memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead};
 use crate::costmodel::roofline::roofline_point;
+use crate::simulator::cluster::RouterPolicy;
 use crate::simulator::sweep::{
-    run_tenant_sweep, run_throughput_sweep, tenant_cells, throughput_cells, SweepExecutor,
-    TenantCellResult, ThroughputCellResult,
+    cluster_cells, run_cluster_sweep, run_tenant_sweep, run_throughput_sweep, tenant_cells,
+    throughput_cells, ClusterCellResult, SweepExecutor, TenantCellResult, ThroughputCellResult,
 };
 
 use super::Artifact;
@@ -24,6 +25,12 @@ pub const PAPER_BATCHES: [usize; 5] = [64, 128, 256, 512, 1024];
 /// The `tenants` artifact grid: tenant count x arrival skew.
 pub const TENANT_COUNTS: [usize; 4] = [1, 2, 4, 8];
 pub const TENANT_SKEWS: [f64; 3] = [0.0, 1.0, 2.0];
+
+/// The `cluster` artifact grid: replica count x arrival skew (router
+/// policies compared inside each row).
+pub const CLUSTER_REPLICAS: [usize; 3] = [1, 2, 4];
+pub const CLUSTER_SKEWS: [f64; 2] = [0.0, 2.0];
+pub const CLUSTER_TENANTS: usize = 4;
 
 /// The Fig. 2/3 model pair.
 pub fn paper_models() -> Vec<crate::config::ModelConfig> {
@@ -191,6 +198,120 @@ pub fn fig_tenants(
     );
     let results = run_tenant_sweep(&ascend_npu(), &cells, exec)?;
     Ok(format_tenants(&results))
+}
+
+/// Format evaluated cluster-grid cells into the `cluster` artifact.
+/// Cells must be in `cluster_cells` order (router innermost, in
+/// `RouterPolicy::all()` order): each artifact row pivots one
+/// (replicas, skew) workload across the three routing policies.
+/// Byte-identical however the cells were evaluated — only their order
+/// matters.
+pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
+    let routers = RouterPolicy::all();
+    assert_eq!(
+        results.len() % routers.len(),
+        0,
+        "cluster results must tile into per-row policy triples"
+    );
+    let mut text = String::new();
+    let mut csv = String::from(
+        "replicas,skew,round_robin_tok_s,least_loaded_tok_s,prefix_affinity_tok_s,\
+         affinity_vs_round_robin,spills,affinity_ttft_p99_s,affinity_tpot_p99_s,\
+         affinity_makespan_s\n",
+    );
+    writeln!(
+        text,
+        "{:>8} {:>5} {:>14} {:>14} {:>14} {:>9} {:>7} {:>11} {:>11}",
+        "replicas", "skew", "rrobin tok/s", "least-ld tok/s", "affinity tok/s", "aff/rr",
+        "spills", "ttft p99", "tpot p99"
+    )
+    .unwrap();
+    for row in results.chunks(routers.len()) {
+        // Hard assert: a mis-ordered grid would silently swap policy
+        // columns (and invert the speedup) in release builds otherwise.
+        for (cell, &want) in row.iter().zip(&routers) {
+            assert_eq!(cell.cell.router, want, "rows must pivot in RouterPolicy::all() order");
+        }
+        let c = &row[0].cell;
+        let [rr, ll, aff] = [&row[0].report, &row[1].report, &row[2].report];
+        let speedup = if rr.goodput > 0.0 { aff.goodput / rr.goodput } else { 1.0 };
+        writeln!(
+            text,
+            "{:>8} {:>5.1} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x {:>7} {:>10.3}s {:>10.4}s",
+            c.replicas,
+            c.skew,
+            rr.goodput,
+            ll.goodput,
+            aff.goodput,
+            speedup,
+            aff.spills,
+            aff.ttft_p99,
+            aff.tpot_p99
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{:.1},{:.1},{:.1},{:.1},{:.3},{},{:.4},{:.5},{:.3}",
+            c.replicas,
+            c.skew,
+            rr.goodput,
+            ll.goodput,
+            aff.goodput,
+            speedup,
+            aff.spills,
+            aff.ttft_p99,
+            aff.tpot_p99,
+            aff.makespan
+        )
+        .unwrap();
+    }
+    text.push_str(
+        "(goodput = generated tokens per aggregate replica decode second; \
+         prefix-affinity concentrates each prefix group's occupancy on the \
+         replica holding its pages, spilling under pressure — round-robin \
+         pays every group's shared-stage stream on every replica)\n",
+    );
+    Artifact {
+        id: "cluster",
+        title: "Prefix-affinity routing across sharded replicas, DeepSeek-v3 (Ascend)"
+            .into(),
+        text,
+        csv,
+    }
+}
+
+/// `cluster` artifact: the (replicas x skew x router) grid under the
+/// sweep executor, one row per (replicas, skew) workload.  Asserts the
+/// headline: on the skewed multi-tenant cell at the largest fleet,
+/// prefix-affinity routing models at least round-robin's goodput.
+pub fn fig_cluster(
+    max_requests_factor: Option<usize>,
+    exec: &SweepExecutor,
+) -> Result<Artifact> {
+    let batch = 128;
+    let total_requests = max_requests_factor.unwrap_or(8) * batch;
+    let cells = cluster_cells(
+        &deepseek_v3(),
+        &CLUSTER_REPLICAS,
+        &CLUSTER_SKEWS,
+        &RouterPolicy::all(),
+        CLUSTER_TENANTS,
+        batch,
+        total_requests,
+    );
+    let results = run_cluster_sweep(&ascend_npu(), &cells, exec)?;
+    // The acceptance cell: max replicas x max skew (the last row).
+    let routers = RouterPolicy::all().len();
+    let last = &results[results.len() - routers..];
+    let (rr, aff) = (&last[0].report, &last[routers - 1].report);
+    anyhow::ensure!(
+        aff.goodput >= rr.goodput,
+        "prefix-affinity must not lose to round-robin on the skewed cell: \
+         affinity {} < round-robin {}",
+        aff.goodput,
+        rr.goodput
+    );
+    Ok(format_cluster(&results))
 }
 
 /// Fig. 4: latency breakdown, Kimi K2, Ls=4096, Ln=512, B in 128..1024,
@@ -541,6 +662,36 @@ mod tests {
         assert!(speedup >= 0.99, "grouped typhoon should win: {row}");
         let mixed: u64 = fields[6].parse().unwrap();
         assert!(mixed > 0, "skewed cell must mix kernels: {row}");
+    }
+
+    #[test]
+    fn cluster_artifact_shapes_and_affinity_wins() {
+        // A small slice of the cluster grid: the skewed 2-replica row.
+        let cells = cluster_cells(
+            &deepseek_v3(),
+            &[2],
+            &[2.0],
+            &RouterPolicy::all(),
+            4,
+            128,
+            256,
+        );
+        let results =
+            run_cluster_sweep(&ascend_npu(), &cells, &SweepExecutor::from_env()).unwrap();
+        let a = format_cluster(&results);
+        assert_eq!(a.id, "cluster");
+        assert_eq!(a.csv.lines().count(), 2, "header + 1 row");
+        let row = a.csv.lines().last().unwrap();
+        assert!(row.starts_with("2,2.0"), "{row}");
+        let fields: Vec<&str> = row.split(',').collect();
+        let speedup: f64 = fields[5].parse().unwrap();
+        assert!(
+            speedup >= 0.999,
+            "prefix-affinity must at least match round-robin: {row}"
+        );
+        // Same workload under every policy: identical token totals.
+        assert_eq!(results[0].report.tokens, results[1].report.tokens);
+        assert_eq!(results[0].report.tokens, results[2].report.tokens);
     }
 
     #[test]

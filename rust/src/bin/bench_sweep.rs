@@ -17,19 +17,27 @@
 //!
 //! Emits `BENCH_sweep.json` with schema
 //! `{wall_seconds, cells, tokens_simulated}` (plus serial baseline and
-//! speedup fields when measured) via util::bench-style JSON — to
-//! `--out` (default `target/bench/`) *and* to the tracked repo-root
+//! speedup fields when measured, plus `cluster_*` fields for the
+//! replicas x skew x router grid, which is timed and
+//! byte-identity-asserted the same way) via util::bench-style JSON —
+//! to `--out` (default `target/bench/`) *and* to the tracked repo-root
 //! copy `BENCH_sweep.json`, so the perf trajectory survives PRs.
 
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
-use typhoon_mla::analysis::figures::{format_throughput, paper_models, PAPER_BATCHES};
+use typhoon_mla::analysis::figures::{
+    format_cluster, format_throughput, paper_models, CLUSTER_REPLICAS, CLUSTER_SKEWS,
+    CLUSTER_TENANTS, PAPER_BATCHES,
+};
 use typhoon_mla::analysis::Artifact;
 use typhoon_mla::config::hardware::{ascend_npu, gpu_h800};
+use typhoon_mla::config::model::deepseek_v3;
 use typhoon_mla::simulator::sweep::{
-    run_throughput_sweep, throughput_cells, SweepExecutor, ThroughputCell,
+    cluster_cells, run_cluster_sweep, run_throughput_sweep, throughput_cells, ClusterCell,
+    SweepExecutor, ThroughputCell,
 };
+use typhoon_mla::simulator::RouterPolicy;
 use typhoon_mla::util::cli::Args;
 use typhoon_mla::util::json::Json;
 
@@ -64,6 +72,17 @@ fn run_sweep(
     })
 }
 
+/// Run the cluster (replicas x skew x router) grid under one executor.
+fn run_cluster_grid(
+    cells: &[ClusterCell],
+    exec: &SweepExecutor,
+) -> Result<(f64, u64, Artifact)> {
+    let t0 = Instant::now();
+    let results = run_cluster_sweep(&ascend_npu(), cells, exec)?;
+    let tokens: u64 = results.iter().map(|r| r.report.tokens).sum();
+    Ok((t0.elapsed().as_secs_f64(), tokens, format_cluster(&results)))
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(&["quick", "full", "skip-serial"])?;
     args.reject_unknown(&["quick", "full", "skip-serial", "threads", "out"])?;
@@ -95,12 +114,35 @@ fn main() -> Result<()> {
         par.wall_seconds, par.cells, par.tokens
     );
 
+    // The cluster grid: timed and byte-identity-asserted like the
+    // figure sweeps (smaller request budget in --quick mode).
+    let cluster_requests = if args.flag("quick") { 256 } else { 512 };
+    let cl_cells = cluster_cells(
+        &deepseek_v3(),
+        &CLUSTER_REPLICAS,
+        &CLUSTER_SKEWS,
+        &RouterPolicy::all(),
+        CLUSTER_TENANTS,
+        128,
+        cluster_requests,
+    );
+    let (cl_wall, cl_tokens, cl_artifact) = run_cluster_grid(&cl_cells, &parallel)?;
+    println!(
+        "cluster:  {:.3}s wall, {} cells, {} tokens simulated",
+        cl_wall,
+        cl_cells.len(),
+        cl_tokens
+    );
+
     let mut fields: Vec<(&str, Json)> = vec![
         ("wall_seconds", Json::num(par.wall_seconds)),
         ("cells", Json::num(par.cells as f64)),
         ("tokens_simulated", Json::num(par.tokens as f64)),
         ("threads", Json::num(parallel.threads as f64)),
         ("quick", Json::Bool(args.flag("quick"))),
+        ("cluster_wall_seconds", Json::num(cl_wall)),
+        ("cluster_cells", Json::num(cl_cells.len() as f64)),
+        ("cluster_tokens_simulated", Json::num(cl_tokens as f64)),
     ];
 
     if !args.flag("skip-serial") {
@@ -132,6 +174,24 @@ fn main() -> Result<()> {
         fields.push(("serial_wall_seconds", Json::num(serial.wall_seconds)));
         fields.push(("speedup", Json::num(speedup)));
         fields.push(("artifacts_identical", Json::Bool(true)));
+
+        // Cluster grid byte-identity: serial run of the same cells must
+        // reproduce the parallel artifact exactly.
+        let (cl_serial_wall, cl_serial_tokens, cl_serial_artifact) =
+            run_cluster_grid(&cl_cells, &SweepExecutor::serial())?;
+        ensure!(
+            cl_serial_artifact.text == cl_artifact.text,
+            "cluster: text artifact diverged"
+        );
+        ensure!(
+            cl_serial_artifact.csv == cl_artifact.csv,
+            "cluster: csv artifact diverged"
+        );
+        ensure!(cl_serial_tokens == cl_tokens, "cluster token totals diverged");
+        let cl_speedup = cl_serial_wall / cl_wall.max(1e-12);
+        println!("cluster speedup:   {cl_speedup:.2}x (artifacts byte-identical)");
+        fields.push(("cluster_serial_wall_seconds", Json::num(cl_serial_wall)));
+        fields.push(("cluster_speedup", Json::num(cl_speedup)));
     }
 
     let json = Json::obj(fields);

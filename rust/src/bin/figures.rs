@@ -2,7 +2,7 @@
 //!
 //! Usage:
 //!   figures all [--out DIR] [--full]      # everything
-//!   figures table1|eq1|table3|fig2|...|fig8|tenants
+//!   figures table1|eq1|table3|fig2|...|fig8|tenants|cluster
 //!
 //! `--full` runs the throughput sweeps over whole dataset splits (the
 //! paper's protocol); the default caps requests at 4x batch per cell so
@@ -55,8 +55,11 @@ fn main() -> Result<()> {
     if all || which == "tenants" {
         artifacts.push(figures::fig_tenants(cap, &SweepExecutor::from_env())?);
     }
+    if all || which == "cluster" {
+        artifacts.push(figures::fig_cluster(cap, &SweepExecutor::from_env())?);
+    }
     if artifacts.is_empty() {
-        bail!("unknown artifact {which:?} (all|table1|eq1|table3|fig2..fig8|tenants)");
+        bail!("unknown artifact {which:?} (all|table1|eq1|table3|fig2..fig8|tenants|cluster)");
     }
 
     let dir = std::path::Path::new(&out);

@@ -84,6 +84,17 @@ impl<E: Engine> Coordinator<E> {
         self.now
     }
 
+    /// Fast-forward the clock to an external event time (a cluster
+    /// router delivering a timed arrival to an idle replica).  Never
+    /// moves backward; the idle span counts toward elapsed wall time
+    /// but not decode time.
+    pub fn advance_clock(&mut self, to: f64) {
+        if to > self.now {
+            self.metrics.advance_sim_time(to - self.now);
+            self.now = to;
+        }
+    }
+
     /// Register a prefix group (one tenant's system prompt) and run its
     /// prefill.  For Typhoon/Naive the uncompressed copy is
     /// materialized too.  The first registered group becomes the
@@ -140,6 +151,20 @@ impl<E: Engine> Coordinator<E> {
     /// running — `KvCacheManager::release_shared_prefix` refuses until
     /// every sequence of the group has retired.
     pub fn submit_to(&mut self, req: &Request, prefix: PrefixId) -> Result<SeqId> {
+        self.submit_to_at(req, prefix, self.now)
+    }
+
+    /// `submit_to` with an explicit submission timestamp — a cluster
+    /// router delivering a timed arrival that occurred while this
+    /// replica was mid-iteration anchors TTFT/latency at the *arrival*
+    /// time, so queueing delay is not silently dropped.  Clamped to the
+    /// current clock (a submission cannot postdate it).
+    pub fn submit_to_at(
+        &mut self,
+        req: &Request,
+        prefix: PrefixId,
+        submitted_at: f64,
+    ) -> Result<SeqId> {
         if self.prefix_len(prefix).is_none() {
             return Err(anyhow!("unknown prefix group {prefix}"));
         }
@@ -148,7 +173,7 @@ impl<E: Engine> Coordinator<E> {
         self.next_seq += 1;
         let prompt = req.prompt_tokens.min(self.cfg.max_seq_len.saturating_sub(1));
         let budget = req.max_new_tokens.min(self.cfg.max_seq_len - prompt);
-        let seq = Sequence::new(id, prefix, prompt, budget, self.now);
+        let seq = Sequence::new(id, prefix, prompt, budget, submitted_at.min(self.now));
         self.queue.push_back(seq);
         Ok(id)
     }
@@ -159,6 +184,23 @@ impl<E: Engine> Coordinator<E> {
 
     pub fn running(&self) -> usize {
         self.running.len()
+    }
+
+    /// Router probe: total outstanding work on this replica (queued
+    /// behind the batch + resident in it).
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.running.len()
+    }
+
+    /// Router probe: fraction of decode-batch slots occupied.
+    pub fn occupancy(&self) -> f64 {
+        self.running.len() as f64 / self.effective_max_batch() as f64
+    }
+
+    /// Router probe: can the KV pool admit a request with this many
+    /// non-shared context tokens right now?
+    pub fn can_admit_now(&self, context_len: usize) -> bool {
+        self.kv.can_admit(context_len)
     }
 
     pub fn sequence(&self, id: SeqId) -> Option<&Sequence> {
@@ -253,6 +295,24 @@ impl<E: Engine> Coordinator<E> {
         Ok(force_finished)
     }
 
+    /// Book a finished request in the metrics: completion count,
+    /// end-to-end latency, TTFT and TPOT (the latter only when
+    /// defined).  Shared by the normal and force-finish paths.
+    fn record_completion(&mut self, id: SeqId) {
+        self.metrics.requests_completed += 1;
+        let seq = &self.seqs[&id];
+        if let Some(lat) = seq.latency() {
+            self.metrics.request_latency.push(lat);
+        }
+        if let Some(t) = seq.ttft() {
+            self.metrics.ttft.push(t);
+        }
+        if let Some(t) = seq.tpot() {
+            self.metrics.tpot.push(t);
+        }
+        self.recently_finished.push(id);
+    }
+
     /// Partition the running set into prefix groups, preserving
     /// admission order inside each group; groups appear in prefix
     /// registration order (deterministic; modeled times are
@@ -332,13 +392,9 @@ impl<E: Engine> Coordinator<E> {
             let seq = self.seqs.get_mut(&id).unwrap();
             seq.state = SeqState::Finished;
             seq.finished_at = Some(self.now);
-            self.metrics.requests_completed += 1;
             // Out-of-pool completions are completions too: their
             // latency counts like any normally-finished request's.
-            if let Some(lat) = self.seqs[&id].latency() {
-                self.metrics.request_latency.push(lat);
-            }
-            self.recently_finished.push(id);
+            self.record_completion(id);
         }
         if self.running.is_empty() {
             return Ok(!self.queue.is_empty());
@@ -375,11 +431,7 @@ impl<E: Engine> Coordinator<E> {
         for id in &finished {
             self.kv.remove_sequence(*id)?;
             self.engine.release(*id);
-            self.metrics.requests_completed += 1;
-            if let Some(lat) = self.seqs[id].latency() {
-                self.metrics.request_latency.push(lat);
-            }
-            self.recently_finished.push(*id);
+            self.record_completion(*id);
         }
         self.metrics
             .record_iteration(outcome.seconds, batch.seqs.len(), batch.seqs.len() as u64);
@@ -661,6 +713,38 @@ mod tests {
             1,
             "force-finished request latency must be recorded"
         );
+    }
+
+    #[test]
+    fn ttft_tpot_recorded_per_completion() {
+        let mut c = coordinator(4, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        c.submit(&req(0, 4, 3)).unwrap();
+        c.submit(&req(1, 4, 1)).unwrap();
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.ttft.len(), 2, "one TTFT per completed request");
+        assert_eq!(c.metrics.tpot.len(), 1, "TPOT only for multi-token requests");
+        assert!(c.metrics.ttft.values().iter().all(|&t| t > 0.0));
+        assert!(c.metrics.tpot.values().iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn router_probes_and_clock_advance() {
+        let mut c = coordinator(2, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        let t0 = c.now();
+        c.advance_clock(t0 + 5.0);
+        assert_eq!(c.now(), t0 + 5.0);
+        c.advance_clock(t0); // never backward
+        assert_eq!(c.now(), t0 + 5.0);
+        assert_eq!(c.load(), 0);
+        c.submit(&req(0, 4, 2)).unwrap();
+        assert_eq!(c.load(), 1, "queued counts toward load");
+        assert_eq!(c.occupancy(), 0.0);
+        assert!(c.can_admit_now(4));
+        c.step().unwrap();
+        assert_eq!(c.load(), 1, "running counts toward load");
+        assert_eq!(c.occupancy(), 0.5);
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub struct Sequence {
     /// Simulated/wall time at submission and completion (seconds).
     pub submitted_at: f64,
     pub finished_at: Option<f64>,
+    /// Time the first token was generated (TTFT anchor).
+    pub first_token_at: Option<f64>,
 }
 
 impl Sequence {
@@ -48,6 +50,7 @@ impl Sequence {
             state: SeqState::Queued,
             submitted_at: now,
             finished_at: None,
+            first_token_at: None,
         }
     }
 
@@ -66,6 +69,9 @@ impl Sequence {
     pub fn advance(&mut self, now: f64) -> bool {
         debug_assert_eq!(self.state, SeqState::Decoding);
         self.generated += 1;
+        if self.generated == 1 {
+            self.first_token_at = Some(now);
+        }
         if self.generated >= self.max_new_tokens {
             self.state = SeqState::Finished;
             self.finished_at = Some(now);
@@ -78,6 +84,22 @@ impl Sequence {
     pub fn latency(&self) -> Option<f64> {
         self.finished_at.map(|t| t - self.submitted_at)
     }
+
+    /// Time-to-first-token (None until a token was generated).
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.submitted_at)
+    }
+
+    /// Mean inter-token time after the first token; defined only for
+    /// finished sequences that generated at least two tokens.
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token_at, self.finished_at) {
+            (Some(first), Some(end)) if self.generated >= 2 => {
+                Some((end - first) / (self.generated - 1) as f64)
+            }
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -89,12 +111,25 @@ mod tests {
         let mut s = Sequence::new(1, 0, 10, 3, 0.0);
         assert_eq!(s.state, SeqState::Queued);
         s.state = SeqState::Decoding;
+        assert_eq!(s.ttft(), None, "no token yet");
         assert!(!s.advance(1.0));
         assert!(!s.advance(2.0));
         assert_eq!(s.context_len(), 12);
         assert!(s.advance(3.0));
         assert_eq!(s.state, SeqState::Finished);
         assert_eq!(s.latency(), Some(3.0));
+        assert_eq!(s.ttft(), Some(1.0));
+        // 3 tokens over [1.0, 3.0]: two gaps of 1.0 each.
+        assert_eq!(s.tpot(), Some(1.0));
+    }
+
+    #[test]
+    fn tpot_undefined_for_single_token() {
+        let mut s = Sequence::new(1, 0, 4, 1, 0.5);
+        s.state = SeqState::Decoding;
+        assert!(s.advance(2.0));
+        assert_eq!(s.ttft(), Some(1.5));
+        assert_eq!(s.tpot(), None, "one token has no inter-token gap");
     }
 
     #[test]

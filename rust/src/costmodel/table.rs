@@ -19,6 +19,7 @@ use std::collections::HashMap;
 use crate::config::{KernelKind, ModelConfig};
 
 use super::flops::{attention_cost, AttentionWorkload, CostBreakdown};
+use super::parallel::{parallel_attention_cost, ParallelismConfig};
 
 /// Cache key: (kernel, batch, shared_len, nonshared_len) with s_q = 1
 /// (plain decode; speculative s_q > 1 bypasses the table).
@@ -32,6 +33,11 @@ const MAX_ENTRIES: usize = 1 << 20;
 #[derive(Debug)]
 pub struct CostTable {
     cfg: ModelConfig,
+    /// TP/SP sharding the cached costs are evaluated under.  `single()`
+    /// routes through `parallel_attention_cost` with one rank, which is
+    /// definitionally `attention_cost` — bit-identical to the
+    /// pre-parallelism table.
+    par: ParallelismConfig,
     map: HashMap<CostKey, CostBreakdown>,
     pub hits: u64,
     pub misses: u64,
@@ -39,11 +45,21 @@ pub struct CostTable {
 
 impl CostTable {
     pub fn new(cfg: ModelConfig) -> Self {
-        CostTable { cfg, map: HashMap::new(), hits: 0, misses: 0 }
+        Self::with_parallelism(cfg, ParallelismConfig::single())
+    }
+
+    /// A table evaluating per-rank costs under (TP, SP).  TP must
+    /// divide the model's head count (asserted on first evaluation).
+    pub fn with_parallelism(cfg: ModelConfig, par: ParallelismConfig) -> Self {
+        CostTable { cfg, par, map: HashMap::new(), hits: 0, misses: 0 }
     }
 
     pub fn model(&self) -> &ModelConfig {
         &self.cfg
+    }
+
+    pub fn parallelism(&self) -> ParallelismConfig {
+        self.par
     }
 
     pub fn len(&self) -> usize {
@@ -63,7 +79,7 @@ impl CostTable {
         }
         self.misses += 1;
         let wl = AttentionWorkload::decode(batch, l_s, l_n);
-        let c = attention_cost(&self.cfg, kernel, &wl);
+        let c = parallel_attention_cost(&self.cfg, kernel, &wl, &self.par);
         if self.map.len() >= MAX_ENTRIES {
             self.map.clear();
         }
@@ -142,6 +158,39 @@ mod tests {
         let direct = table.cost(KernelKind::Typhoon, 64, 1000, 0);
         assert_eq!(single.shared, direct.shared);
         assert_eq!(single.combine, direct.combine);
+    }
+
+    #[test]
+    fn single_parallelism_is_identity() {
+        // `new` and an explicit single() table agree with direct
+        // `attention_cost` to the bit — the pre-parallelism behavior.
+        let cfg = deepseek_v3();
+        let mut a = CostTable::new(cfg.clone());
+        let mut b = CostTable::with_parallelism(cfg.clone(), ParallelismConfig::single());
+        for kernel in KernelKind::all() {
+            let direct =
+                attention_cost(&cfg, kernel, &AttentionWorkload::decode(128, 4096, 256));
+            assert_eq!(a.cost(kernel, 128, 4096, 256), direct);
+            assert_eq!(b.cost(kernel, 128, 4096, 256), direct);
+        }
+    }
+
+    #[test]
+    fn sharded_table_matches_parallel_cost_model() {
+        let cfg = deepseek_v3();
+        let par = ParallelismConfig { tp: 4, sp: 2 };
+        let mut table = CostTable::with_parallelism(cfg.clone(), par);
+        assert_eq!(table.parallelism(), par);
+        for kernel in KernelKind::all() {
+            let wl = AttentionWorkload::decode(256, 8192, 512);
+            let direct = parallel_attention_cost(&cfg, kernel, &wl, &par);
+            assert_eq!(table.cost(kernel, 256, 8192, 512), direct);
+            // Cached hit stays identical.
+            assert_eq!(table.cost(kernel, 256, 8192, 512), direct);
+            // Sharding must change the numbers vs a single device.
+            let single = attention_cost(&cfg, kernel, &wl);
+            assert_ne!(direct.total(), single.total(), "{kernel:?}");
+        }
     }
 
     #[test]

@@ -14,8 +14,12 @@ use typhoon_mla::config::{KernelKind, ServingConfig};
 use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
 use typhoon_mla::costmodel::threshold::batch_threshold;
 use typhoon_mla::kvcache::KvCacheManager;
+use typhoon_mla::costmodel::ParallelismConfig;
 use typhoon_mla::runtime::{default_artifacts_dir, Manifest, TinyModelEngine};
-use typhoon_mla::simulator::{run_experiment, run_tenant_experiment, SimParams, TenantSimParams};
+use typhoon_mla::simulator::{
+    run_cluster_experiment, run_experiment, run_tenant_experiment, ClusterParams, RouterPolicy,
+    SimParams, TenantSimParams,
+};
 use typhoon_mla::util::cli::Args;
 use typhoon_mla::workload::{datasets, prompts, Request};
 
@@ -36,6 +40,8 @@ fn main() -> Result<()> {
                  simulate --model deepseek-v3|kimi-k2 --hw ascend-npu|gpu \
                  --kernel K --batch B --dataset mmlu|gsm8k|simpleqa --prompt a|b|c \
                  [--tenants N --skew S]\n\
+                 simulate --replicas N --router round-robin|least-loaded|prefix-affinity \
+                 [--tenants N --skew S --rate R --tp N --sp N]\n\
                  threshold --model M --hw H"
             );
             Ok(())
@@ -84,6 +90,74 @@ fn simulate(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 256)?;
     // Multi-tenant mode: N prefix groups with Zipf(skew) arrivals.
     let tenants = args.get_usize("tenants", 1)?;
+    // Cluster mode: N replicas behind a router.  --rate/--tp/--sp also
+    // select it (a 1-replica cluster is the single device with timed
+    // arrivals and TP/SP sharding) so those flags are never silently
+    // dropped by the plain simulation branches.
+    let replicas = args.get_usize("replicas", 1)?;
+    let cluster_mode =
+        ["replicas", "router", "rate", "tp", "sp"].iter().any(|k| args.get(k).is_some());
+    if cluster_mode {
+        let router = RouterPolicy::parse(args.get_or("router", "prefix-affinity"))?;
+        // Cluster mode defaults to a multi-tenant workload (that is
+        // what routing concentration is for); --tenants still wins.
+        let cluster_tenants = if args.get("tenants").is_some() { tenants } else { 4 };
+        let mut p = ClusterParams::new(
+            model,
+            hw,
+            replicas,
+            router,
+            batch,
+            cluster_tenants,
+            args.get_f64("skew", 1.0)?,
+        );
+        p.kernel = kernel;
+        p.parallelism = ParallelismConfig {
+            tp: args.get_usize("tp", 1)? as u64,
+            sp: args.get_usize("sp", 1)? as u64,
+        };
+        let default_requests =
+            if args.flag("full") { batch * replicas * 16 } else { batch * replicas * 4 };
+        p.total_requests = args.get_usize("requests", default_requests)?;
+        if args.get("rate").is_some() {
+            p.arrival_rate = Some(args.get_f64("rate", 0.0)?);
+        }
+        let r = run_cluster_experiment(&p)?;
+        println!(
+            "[simulate] cluster: {} replicas ({}), {} tenants: {} tokens, {} requests \
+             -> goodput {:.0} tok/s/layer over {:.3}s aggregate decode \
+             (makespan {:.3}s, spills {})",
+            replicas,
+            router.as_str(),
+            p.tenants,
+            r.tokens,
+            r.requests_completed,
+            r.goodput,
+            r.decode_seconds,
+            r.makespan,
+            r.spills
+        );
+        println!(
+            "[simulate] ttft p50/p95/p99 = {:.4}/{:.4}/{:.4}s, \
+             tpot p50/p95/p99 = {:.5}/{:.5}/{:.5}s",
+            r.ttft_p50, r.ttft_p95, r.ttft_p99, r.tpot_p50, r.tpot_p95, r.tpot_p99
+        );
+        for (i, rep) in r.replicas.iter().enumerate() {
+            println!(
+                "[simulate]   replica {i}: {} routed, {} tokens, {} groups hosted, \
+                 mean batch {:.1}, group-iters t/a/n {}/{}/{} (mixed {})",
+                rep.routed,
+                rep.tokens,
+                rep.prefix_groups,
+                rep.mean_batch,
+                rep.typhoon_iters,
+                rep.absorb_iters,
+                rep.naive_iters,
+                rep.mixed_iters
+            );
+        }
+        return Ok(());
+    }
     if tenants > 1 {
         let mut p = TenantSimParams::new(
             model,

@@ -58,6 +58,13 @@ pub struct Metrics {
     pub iteration_time: Summary,
     pub batch_occupancy: Summary,
     pub request_latency: Percentiles,
+    /// Time-to-first-token per completed request (submission to the
+    /// first generated token, modeled/wall seconds).
+    pub ttft: Percentiles,
+    /// Time-per-output-token per completed request (mean inter-token
+    /// gap after the first token; recorded only for requests that
+    /// generated at least two tokens).
+    pub tpot: Percentiles,
     pub breakdown: BreakdownTimers,
     /// Exact accumulated decode seconds (sum of iteration times, no
     /// mean x count reconstruction — reports use this directly).
@@ -88,6 +95,8 @@ impl Metrics {
             iteration_time: Summary::new(),
             batch_occupancy: Summary::new(),
             request_latency: Percentiles::default(),
+            ttft: Percentiles::default(),
+            tpot: Percentiles::default(),
             breakdown: BreakdownTimers::default(),
             decode_seconds: 0.0,
             typhoon_iters: 0,

@@ -1,0 +1,665 @@
+//! Cluster-scale serving: N replicas — each a full `Coordinator` +
+//! `SimEngine` + `KvCacheManager` stack, optionally TP/SP-sharded —
+//! fed by a timed (Poisson) arrival process through a router with
+//! pluggable policies.
+//!
+//! The paper's Typhoon win comes from *concentrating* sequences that
+//! share a prefix into one batch (Eq. 1 amortizes the shared stage
+//! over group occupancy).  At fleet scale that concentration is a
+//! **routing** decision: round-robin sprays every prefix group across
+//! all replicas (each replica pays every group's shared-stage stream
+//! at a fraction of the occupancy), while **prefix-affinity** sticks
+//! each group to the replica already holding its pages — full
+//! occupancy per group, one stream per prefix fleet-wide — and spills
+//! to the least-loaded peer only under pressure (recorded, so the
+//! "one group, one replica" invariant is auditable).
+//!
+//! The simulation is event-driven over modeled time: each replica owns
+//! an independent clock (its coordinator's `now`), and the cluster
+//! repeatedly processes the earliest event — the next arrival, or one
+//! decode step of the earliest-clock busy replica.  Idle replicas
+//! fast-forward to the arrival that wakes them.  With one replica,
+//! round-robin routing and `ParallelismConfig::single()`, the whole
+//! machinery reduces bit-for-bit to the single-device tenancy path
+//! (pinned by `tests/cluster.rs`).
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::coordinator::Coordinator;
+use crate::costmodel::parallel::ParallelismConfig;
+use crate::kvcache::PrefixId;
+use crate::metrics::Metrics;
+use crate::util::stats::{p50, p95, p99};
+use crate::workload::tenants::{tenant_set, timed_arrivals, TenantSpec, TimedArrival};
+
+use super::engine::SimEngine;
+use super::tenancy::tenant_serving_stack;
+
+/// Pluggable routing policy of the cluster front door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Arrival i goes to replica i mod N.
+    RoundRobin,
+    /// Fewest outstanding requests (queued + running), lowest index on
+    /// ties.
+    LeastLoaded,
+    /// Stick each prefix group to the replica already holding its
+    /// pages; spill to the least-loaded peer under queue/KV pressure.
+    PrefixAffinity,
+}
+
+impl RouterPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "round-robin" | "rr" => RouterPolicy::RoundRobin,
+            "least-loaded" | "ll" => RouterPolicy::LeastLoaded,
+            "prefix-affinity" | "affinity" => RouterPolicy::PrefixAffinity,
+            _ => bail!(
+                "unknown router policy {s:?} (round-robin|least-loaded|prefix-affinity)"
+            ),
+        })
+    }
+
+    /// Artifact/grid order: baselines first, affinity last.
+    pub fn all() -> [RouterPolicy; 3] {
+        [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PrefixAffinity,
+        ]
+    }
+}
+
+/// Parameters of one cluster experiment.
+#[derive(Clone, Debug)]
+pub struct ClusterParams {
+    pub model: ModelConfig,
+    pub hw: HardwareSpec,
+    /// Requested kernel (per-group fall-back applies to Typhoon).
+    pub kernel: KernelKind,
+    /// Number of serving replicas.
+    pub replicas: usize,
+    pub router: RouterPolicy,
+    /// TP/SP sharding of every replica (`single()` = one device each).
+    pub parallelism: ParallelismConfig,
+    /// Per-replica decode batch capacity.
+    pub batch: usize,
+    /// Number of tenants (prefix groups) in the workload.
+    pub tenants: usize,
+    /// Zipf exponent of the arrival shares (0 = uniform).
+    pub skew: f64,
+    /// Total request budget across the cluster.
+    pub total_requests: usize,
+    /// Poisson arrival rate, requests/second; `None` drops the whole
+    /// stream at t = 0 (the paper's batch protocol).
+    pub arrival_rate: Option<f64>,
+    pub seed: u64,
+    /// Include prefill time in the modeled clocks (decode-only by
+    /// default, matching the paper's throughput protocol).
+    pub include_prefill: bool,
+    /// Prefix-affinity spill threshold: abandon stickiness for one
+    /// request when the home replica's queue depth reaches this.
+    pub spill_queue_depth: usize,
+}
+
+impl ClusterParams {
+    pub fn new(
+        model: ModelConfig,
+        hw: HardwareSpec,
+        replicas: usize,
+        router: RouterPolicy,
+        batch: usize,
+        tenants: usize,
+        skew: f64,
+    ) -> Self {
+        ClusterParams {
+            model,
+            hw,
+            kernel: KernelKind::Typhoon,
+            replicas,
+            router,
+            parallelism: ParallelismConfig::single(),
+            batch,
+            tenants,
+            skew,
+            total_requests: batch * replicas.max(1) * 4,
+            arrival_rate: None,
+            seed: 42,
+            include_prefill: false,
+            spill_queue_depth: (2 * batch).max(1),
+        }
+    }
+}
+
+/// One replica: a full single-device serving stack plus the router's
+/// view of which tenants it hosts.
+struct Replica {
+    coord: Coordinator<SimEngine>,
+    /// Tenant -> prefix group registered on this replica (pages held).
+    prefix_of: HashMap<usize, PrefixId>,
+    /// Requests routed here.
+    routed: u64,
+}
+
+/// Router state (policy + stickiness bookkeeping).
+struct Router {
+    policy: RouterPolicy,
+    rr_next: usize,
+    /// Prefix-affinity home replica per tenant.
+    home: HashMap<usize, usize>,
+    spills: u64,
+    spilled: HashSet<usize>,
+}
+
+impl Router {
+    fn new(policy: RouterPolicy) -> Self {
+        Router {
+            policy,
+            rr_next: 0,
+            home: HashMap::new(),
+            spills: 0,
+            spilled: HashSet::new(),
+        }
+    }
+
+    fn least_loaded(replicas: &[Replica]) -> usize {
+        Self::least_loaded_except(replicas, None)
+    }
+
+    /// Least-loaded replica, optionally excluding one index (spill
+    /// target selection); lowest index wins ties.
+    fn least_loaded_except(replicas: &[Replica], exclude: Option<usize>) -> usize {
+        let mut best: Option<usize> = None;
+        for (i, r) in replicas.iter().enumerate() {
+            if Some(i) == exclude {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => r.coord.load() < replicas[b].coord.load(),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best.expect("at least one candidate replica")
+    }
+
+    /// Pick the replica for one arrival, probing replica queue depth,
+    /// load and KV headroom.
+    fn route(
+        &mut self,
+        tenant: usize,
+        context_len: usize,
+        replicas: &[Replica],
+        spill_queue_depth: usize,
+    ) -> usize {
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let r = self.rr_next % replicas.len();
+                self.rr_next += 1;
+                r
+            }
+            RouterPolicy::LeastLoaded => Self::least_loaded(replicas),
+            RouterPolicy::PrefixAffinity => match self.home.get(&tenant).copied() {
+                None => {
+                    // First sighting: adopt the least-loaded replica as
+                    // the group's home (it will hold the pages).
+                    let r = Self::least_loaded(replicas);
+                    self.home.insert(tenant, r);
+                    r
+                }
+                Some(home) => {
+                    let h = &replicas[home].coord;
+                    let pressured = h.queued() >= spill_queue_depth
+                        || !h.can_admit_now(context_len);
+                    if pressured && replicas.len() > 1 {
+                        // Spill this one request around the pressured
+                        // home — the group's pages stay where they are,
+                        // and the spill is recorded for the invariant
+                        // audit (a group on two replicas implies a
+                        // recorded spill).
+                        let alt = Self::least_loaded_except(replicas, Some(home));
+                        if replicas[alt].coord.load() < h.load() {
+                            self.spills += 1;
+                            self.spilled.insert(tenant);
+                            return alt;
+                        }
+                    }
+                    home
+                }
+            },
+        }
+    }
+}
+
+/// Per-replica slice of a finished cluster run.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub tokens: u64,
+    pub requests_completed: u64,
+    pub decode_seconds: f64,
+    pub iterations: u64,
+    pub mean_batch: f64,
+    pub typhoon_iters: u64,
+    pub absorb_iters: u64,
+    pub naive_iters: u64,
+    pub mixed_iters: u64,
+    pub preemptions: u64,
+    /// Prefix groups hosted (pages held) on this replica.
+    pub prefix_groups: usize,
+    /// Requests the router sent here.
+    pub routed: u64,
+    /// The replica's final clock (arrival-to-drain span).
+    pub final_clock: f64,
+}
+
+/// Aggregate result of one cluster experiment.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub replicas: Vec<ReplicaReport>,
+    pub tokens: u64,
+    pub requests_completed: u64,
+    /// Aggregate busy decode seconds across replicas.
+    pub decode_seconds: f64,
+    /// Cluster goodput: generated tokens per aggregate replica decode
+    /// second — the paper's decode-time throughput metric lifted to the
+    /// fleet (it prices the shared-stage streams every replica pays,
+    /// which is exactly what routing concentration buys back).
+    pub goodput: f64,
+    /// Latest replica clock: the wall span from first arrival to drain.
+    pub makespan: f64,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p95: f64,
+    pub tpot_p99: f64,
+    /// Prefix-affinity requests routed off their home replica.
+    pub spills: u64,
+}
+
+/// The event-driven N-replica serving simulation.
+pub struct ClusterSim {
+    params: ClusterParams,
+    tenants: Vec<TenantSpec>,
+    arrivals: Vec<TimedArrival>,
+    next_arrival: usize,
+    replicas: Vec<Replica>,
+    router: Router,
+}
+
+impl ClusterSim {
+    pub fn new(params: &ClusterParams) -> Result<Self> {
+        if params.replicas == 0 {
+            bail!("cluster needs at least one replica");
+        }
+        if params.tenants == 0 {
+            bail!("cluster needs at least one tenant");
+        }
+        let par = params.parallelism;
+        if par.tp == 0 || par.sp == 0 {
+            bail!("TP/SP ranks must be >= 1, got tp={} sp={}", par.tp, par.sp);
+        }
+        if params.model.n_heads as u64 % par.tp != 0 {
+            bail!(
+                "TP {} must divide the model's {} attention heads",
+                par.tp,
+                params.model.n_heads
+            );
+        }
+        // (A non-positive arrival rate is rejected by `timed_arrivals`.)
+        let tenants = tenant_set(params.tenants, params.skew);
+        let arrivals = timed_arrivals(
+            &tenants,
+            params.total_requests,
+            params.arrival_rate,
+            params.seed,
+        )?;
+        // Per-replica stack: the canonical single-device tenancy sizing
+        // (any replica may end up hosting every group, so each pool
+        // budgets for all prefixes).
+        let mut replicas = Vec::with_capacity(params.replicas);
+        for _ in 0..params.replicas {
+            let coord = tenant_serving_stack(
+                &params.model,
+                &params.hw,
+                params.kernel,
+                params.batch,
+                &tenants,
+                params.include_prefill,
+                params.parallelism,
+            )?;
+            replicas.push(Replica { coord, prefix_of: HashMap::new(), routed: 0 });
+        }
+        Ok(ClusterSim {
+            params: params.clone(),
+            tenants,
+            arrivals,
+            next_arrival: 0,
+            replicas,
+            router: Router::new(params.router),
+        })
+    }
+
+    /// The generated arrival stream (inspection/conservation checks).
+    pub fn arrivals(&self) -> &[TimedArrival] {
+        &self.arrivals
+    }
+
+    /// Per-replica clocks (monotonicity audits).
+    pub fn replica_clocks(&self) -> Vec<f64> {
+        self.replicas.iter().map(|r| r.coord.now()).collect()
+    }
+
+    /// A replica's coordinator (probes for tests and reports).
+    pub fn coordinator(&self, replica: usize) -> &Coordinator<SimEngine> {
+        &self.replicas[replica].coord
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Requests the prefix-affinity router sent off their home replica.
+    pub fn spills(&self) -> u64 {
+        self.router.spills
+    }
+
+    /// Did this tenant ever spill off its home replica?
+    pub fn tenant_spilled(&self, tenant: usize) -> bool {
+        self.router.spilled.contains(&tenant)
+    }
+
+    /// Number of replicas holding this tenant's prefix pages.
+    pub fn replicas_hosting(&self, tenant: usize) -> usize {
+        self.replicas.iter().filter(|r| r.prefix_of.contains_key(&tenant)).count()
+    }
+
+    /// The earliest busy replica (has queued or running work), by
+    /// clock, lowest index on ties.
+    fn earliest_busy(&self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.coord.running() > 0 || r.coord.queued() > 0 {
+                let t = r.coord.now();
+                let earlier = match best {
+                    None => true,
+                    Some((_, bt)) => t < bt,
+                };
+                if earlier {
+                    best = Some((i, t));
+                }
+            }
+        }
+        best
+    }
+
+    /// Process one event: deliver the next arrival if it is due no
+    /// later than every busy replica's clock (router probe + submit,
+    /// fast-forwarding an idle replica), otherwise run one decode step
+    /// of the earliest-clock busy replica.  Returns false when the
+    /// stream is exhausted and every replica has drained.
+    pub fn step_event(&mut self) -> Result<bool> {
+        let busy = self.earliest_busy();
+        if self.next_arrival < self.arrivals.len() {
+            let due = match busy {
+                None => true,
+                Some((_, t)) => self.arrivals[self.next_arrival].at <= t,
+            };
+            if due {
+                let a = self.arrivals[self.next_arrival].clone();
+                self.next_arrival += 1;
+                let r = self.router.route(
+                    a.tenant,
+                    a.request.prompt_tokens,
+                    &self.replicas,
+                    self.params.spill_queue_depth,
+                );
+                let rep = &mut self.replicas[r];
+                rep.coord.advance_clock(a.at);
+                let pid = match rep.prefix_of.get(&a.tenant) {
+                    Some(&p) => p,
+                    None => {
+                        // First request of this group here: the replica
+                        // prefills + pages the tenant's prefix (this is
+                        // the state prefix-affinity preserves).
+                        let tokens = self.tenants[a.tenant].prompt_token_ids(50_000);
+                        let p = rep.coord.register_prefix_group(&tokens)?;
+                        rep.prefix_of.insert(a.tenant, p);
+                        p
+                    }
+                };
+                // Anchor the submission at the *arrival* time: a busy
+                // replica's clock may already be past `a.at` (arrivals
+                // are only deliverable between decode iterations), and
+                // that wait is real queueing delay TTFT must include.
+                rep.coord.submit_to_at(&a.request, pid, a.at)?;
+                rep.routed += 1;
+                return Ok(true);
+            }
+        }
+        if let Some((i, _)) = busy {
+            self.replicas[i].coord.step()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Drive arrivals and replicas until everything drains.
+    pub fn run(&mut self) -> Result<()> {
+        while self.step_event()? {}
+        Ok(())
+    }
+
+    /// Aggregate the per-replica metrics into the cluster report.
+    pub fn report(&self) -> ClusterReport {
+        let mut reps = Vec::with_capacity(self.replicas.len());
+        let mut ttft: Vec<f64> = Vec::new();
+        let mut tpot: Vec<f64> = Vec::new();
+        let mut tokens = 0u64;
+        let mut completed = 0u64;
+        let mut decode_seconds = 0.0f64;
+        let mut makespan = 0.0f64;
+        for r in &self.replicas {
+            let m: &Metrics = &r.coord.metrics;
+            tokens += m.tokens_generated;
+            completed += m.requests_completed;
+            decode_seconds += m.decode_seconds;
+            makespan = makespan.max(r.coord.now());
+            ttft.extend_from_slice(m.ttft.values());
+            tpot.extend_from_slice(m.tpot.values());
+            reps.push(ReplicaReport {
+                tokens: m.tokens_generated,
+                requests_completed: m.requests_completed,
+                decode_seconds: m.decode_seconds,
+                iterations: m.decode_iterations,
+                mean_batch: m.batch_occupancy.mean(),
+                typhoon_iters: m.typhoon_iters,
+                absorb_iters: m.absorb_iters,
+                naive_iters: m.naive_iters,
+                mixed_iters: m.mixed_iters,
+                preemptions: m.preemptions,
+                prefix_groups: r.prefix_of.len(),
+                routed: r.routed,
+                final_clock: r.coord.now(),
+            });
+        }
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ClusterReport {
+            replicas: reps,
+            tokens,
+            requests_completed: completed,
+            decode_seconds,
+            goodput: if decode_seconds > 0.0 {
+                tokens as f64 / decode_seconds
+            } else {
+                0.0
+            },
+            makespan,
+            ttft_p50: p50(&ttft),
+            ttft_p95: p95(&ttft),
+            ttft_p99: p99(&ttft),
+            tpot_p50: p50(&tpot),
+            tpot_p95: p95(&tpot),
+            tpot_p99: p99(&tpot),
+            spills: self.router.spills,
+        }
+    }
+}
+
+/// Run one cluster experiment end to end.
+pub fn run_cluster_experiment(params: &ClusterParams) -> Result<ClusterReport> {
+    let mut sim = ClusterSim::new(params)?;
+    sim.run()?;
+    Ok(sim.report())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+
+    fn quick_params(replicas: usize, router: RouterPolicy) -> ClusterParams {
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            replicas,
+            router,
+            32,
+            3,
+            1.0,
+        );
+        p.total_requests = 48;
+        p
+    }
+
+    #[test]
+    fn round_robin_spreads_requests() {
+        let mut sim = ClusterSim::new(&quick_params(3, RouterPolicy::RoundRobin)).unwrap();
+        sim.run().unwrap();
+        let report = sim.report();
+        assert_eq!(report.requests_completed as usize, sim.arrivals().len());
+        for r in &report.replicas {
+            assert!(r.routed > 0, "round-robin leaves no replica idle");
+        }
+        assert!(report.tokens > 0);
+        assert!(report.goodput > 0.0);
+        assert!(report.makespan > 0.0);
+    }
+
+    #[test]
+    fn least_loaded_balances_queue_depth() {
+        let mut p = quick_params(2, RouterPolicy::LeastLoaded);
+        p.arrival_rate = Some(1000.0); // near-simultaneous arrivals
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+        let report = sim.report();
+        let routed: Vec<u64> = report.replicas.iter().map(|r| r.routed).collect();
+        let spread = routed.iter().max().unwrap() - routed.iter().min().unwrap();
+        assert!(
+            spread * 4 <= *routed.iter().max().unwrap(),
+            "least-loaded keeps routing near-even: {routed:?}"
+        );
+    }
+
+    #[test]
+    fn affinity_concentrates_groups() {
+        let mut sim =
+            ClusterSim::new(&quick_params(3, RouterPolicy::PrefixAffinity)).unwrap();
+        sim.run().unwrap();
+        for t in 0..3 {
+            if !sim.tenant_spilled(t) {
+                assert!(
+                    sim.replicas_hosting(t) <= 1,
+                    "unspilled tenant {t} must stay on one replica"
+                );
+            }
+        }
+        // Fewer prefix registrations fleet-wide than round-robin, which
+        // pages every group on every replica it touches.
+        let hosted: usize = (0..sim.replica_count())
+            .map(|i| sim.coordinator(i).prefix_groups().len())
+            .sum();
+        let mut rr = ClusterSim::new(&quick_params(3, RouterPolicy::RoundRobin)).unwrap();
+        rr.run().unwrap();
+        let rr_hosted: usize = (0..rr.replica_count())
+            .map(|i| rr.coordinator(i).prefix_groups().len())
+            .sum();
+        assert!(hosted <= rr_hosted, "affinity {hosted} vs round-robin {rr_hosted}");
+    }
+
+    #[test]
+    fn ttft_tpot_percentiles_populated() {
+        let mut sim = ClusterSim::new(&quick_params(2, RouterPolicy::RoundRobin)).unwrap();
+        sim.run().unwrap();
+        let r = sim.report();
+        assert!(r.ttft_p50 >= 0.0 && r.ttft_p50.is_finite());
+        assert!(r.ttft_p99 >= r.ttft_p50, "p99 dominates p50");
+        assert!(r.tpot_p99 >= r.tpot_p50);
+    }
+
+    #[test]
+    fn poisson_arrivals_advance_clocks_monotonically() {
+        let mut p = quick_params(2, RouterPolicy::LeastLoaded);
+        p.arrival_rate = Some(5.0);
+        let mut sim = ClusterSim::new(&p).unwrap();
+        let mut prev = sim.replica_clocks();
+        while sim.step_event().unwrap() {
+            let now = sim.replica_clocks();
+            for (a, b) in prev.iter().zip(&now) {
+                assert!(b >= a, "replica clock went backward: {prev:?} -> {now:?}");
+            }
+            prev = now;
+        }
+        assert!(prev.iter().any(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn router_policy_parse_roundtrip() {
+        for p in RouterPolicy::all() {
+            assert_eq!(RouterPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(RouterPolicy::parse("rr").unwrap(), RouterPolicy::RoundRobin);
+        assert_eq!(RouterPolicy::parse("ll").unwrap(), RouterPolicy::LeastLoaded);
+        assert_eq!(
+            RouterPolicy::parse("affinity").unwrap(),
+            RouterPolicy::PrefixAffinity
+        );
+        assert!(RouterPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        let mut p = quick_params(1, RouterPolicy::RoundRobin);
+        p.replicas = 0;
+        assert!(ClusterSim::new(&p).is_err());
+    }
+
+    /// Bad TP/SP/rate configurations surface as errors, not panics
+    /// deep inside the cost model.
+    #[test]
+    fn invalid_parallelism_and_rate_rejected() {
+        let mut p = quick_params(1, RouterPolicy::RoundRobin);
+        p.parallelism = ParallelismConfig { tp: 0, sp: 1 };
+        assert!(ClusterSim::new(&p).is_err(), "tp = 0 rejected");
+        p.parallelism = ParallelismConfig { tp: 7, sp: 1 }; // 7 does not divide H
+        assert!(ClusterSim::new(&p).is_err(), "tp must divide heads");
+        p.parallelism = ParallelismConfig::single();
+        p.arrival_rate = Some(0.0);
+        assert!(ClusterSim::new(&p).is_err(), "rate must be positive");
+    }
+}

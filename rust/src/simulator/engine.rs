@@ -27,6 +27,7 @@ use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 use crate::coordinator::{DecodeBatch, Engine, IterationOutcome, PrefillRequest};
 use crate::costmodel::exec_time::component_time;
 use crate::costmodel::flops::Component;
+use crate::costmodel::parallel::ParallelismConfig;
 use crate::costmodel::table::CostTable;
 use crate::kvcache::PrefixId;
 use crate::metrics::BreakdownTimers;
@@ -44,6 +45,10 @@ pub struct SimEngine {
     pub memoized: bool,
     /// Memoized Table-1 evaluations, shared across all iterations.
     table: CostTable,
+    /// TP/SP sharding of the modeled device group.  `single()` (the
+    /// default) is bit-identical to the pre-parallelism engine; set via
+    /// `with_parallelism` so the memoized table stays consistent.
+    par: ParallelismConfig,
     /// Counting-sort scratch: `len_counts[l]` = sequences at length `l`
     /// this iteration; `touched` lists the distinct lengths to reset.
     len_counts: Vec<u64>,
@@ -52,16 +57,29 @@ pub struct SimEngine {
 
 impl SimEngine {
     pub fn new(cfg: ModelConfig, hw: HardwareSpec) -> Self {
-        let table = CostTable::new(cfg.clone());
+        Self::with_parallelism(cfg, hw, ParallelismConfig::single())
+    }
+
+    /// An engine modeling each decode iteration per TP/SP rank via
+    /// `costmodel::parallel::parallel_attention_cost`; prefill compute
+    /// splits across ranks.  TP must divide the model's head count.
+    pub fn with_parallelism(cfg: ModelConfig, hw: HardwareSpec, par: ParallelismConfig) -> Self {
+        let table = CostTable::with_parallelism(cfg.clone(), par);
         SimEngine {
             cfg,
             hw,
             include_prefill: true,
             memoized: true,
             table,
+            par,
             len_counts: Vec::new(),
             touched: Vec::new(),
         }
+    }
+
+    /// The engine's TP/SP configuration.
+    pub fn parallelism(&self) -> ParallelismConfig {
+        self.par
     }
 
     /// Cache statistics of the memoized cost table: (hits, misses).
@@ -121,21 +139,23 @@ impl SimEngine {
             (shared_cost, non_shared)
         } else {
             // Reference path: direct Table-1 evaluation per group and
-            // per sequence (the pre-optimization formulation).
-            use crate::costmodel::flops::{attention_cost, AttentionWorkload, CostBreakdown};
+            // per sequence (the pre-optimization formulation), routed
+            // through the same per-rank cost model as the table.
+            use crate::costmodel::flops::{AttentionWorkload, CostBreakdown};
+            use crate::costmodel::parallel::parallel_attention_cost;
             let mut shared_cost = CostBreakdown::default();
             let mut non_shared = Component::default();
             for g in &batch.groups {
                 let wl = AttentionWorkload::decode(g.len as u64, g.shared_len as u64, 0);
-                let c = attention_cost(&self.cfg, g.kernel, &wl);
+                let c = parallel_attention_cost(&self.cfg, g.kernel, &wl, &self.par);
                 shared_cost.shared = shared_cost.shared.add(c.shared);
                 shared_cost.proj_kvb1 = shared_cost.proj_kvb1.add(c.proj_kvb1);
                 shared_cost.proj_kvb2 = shared_cost.proj_kvb2.add(c.proj_kvb2);
                 shared_cost.combine = shared_cost.combine.add(c.combine);
                 for &l in batch.group_lens(g) {
                     let wl = AttentionWorkload::decode(1, 0, l as u64 + 1);
-                    non_shared =
-                        non_shared.add(attention_cost(&self.cfg, g.kernel, &wl).non_shared);
+                    let c = parallel_attention_cost(&self.cfg, g.kernel, &wl, &self.par);
+                    non_shared = non_shared.add(c.non_shared);
                 }
             }
             (shared_cost, non_shared)
@@ -163,10 +183,12 @@ impl Engine for SimEngine {
         // Causal prefill over Ls tokens: ~Ls^2/2 context pairs, naive
         // formulation (compute-bound).  The typhoon expansion is free —
         // K/V are computed by the naive prefill anyway (paper §3.1).
-        // Called once per registered prefix group.
+        // Called once per registered prefix group.  Prefill is
+        // compute-bound and shards over TP/SP ranks (`/ ranks` is a
+        // bit-exact no-op for a single device).
         let ls = tokens.len() as f64;
         let macs = 0.5 * ls * ls * self.cfg.naive_factor() as f64;
-        Ok(macs / self.hw.macs_per_sec())
+        Ok(macs / self.par.ranks() as f64 / self.hw.macs_per_sec())
     }
 
     fn prefill_requests(&mut self, seqs: &[PrefillRequest]) -> Result<f64> {
@@ -180,7 +202,7 @@ impl Engine for SimEngine {
             let q = r.context_len as f64;
             macs += q * (r.shared_len as f64 + 0.5 * q) * self.cfg.naive_factor() as f64;
         }
-        Ok(macs / self.hw.macs_per_sec())
+        Ok(macs / self.par.ranks() as f64 / self.hw.macs_per_sec())
     }
 
     fn decode(&mut self, batch: &DecodeBatch) -> Result<IterationOutcome> {
@@ -378,6 +400,43 @@ mod tests {
             })
             .unwrap();
         assert!(split.seconds >= single.seconds, "{} < {}", split.seconds, single.seconds);
+    }
+
+    /// TP/SP-sharded engines: per-rank iteration time differs from the
+    /// single-device model, the memoized and reference paths agree to
+    /// the bit under sharding, and `single()` is the identity.
+    #[test]
+    fn sharded_engine_matches_reference_and_single_is_identity() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let par = ParallelismConfig { tp: 4, sp: 4 };
+        let b = batch(KernelKind::Typhoon, 512, 26472, 512);
+
+        let mut single = SimEngine::new(cfg.clone(), hw.clone());
+        let mut explicit_single = SimEngine::with_parallelism(
+            cfg.clone(),
+            hw.clone(),
+            ParallelismConfig::single(),
+        );
+        let s = single.decode(&b).unwrap();
+        let es = explicit_single.decode(&b).unwrap();
+        assert_eq!(s.seconds.to_bits(), es.seconds.to_bits());
+
+        let mut sharded = SimEngine::with_parallelism(cfg.clone(), hw.clone(), par);
+        let mut sharded_ref = SimEngine::with_parallelism(cfg, hw, par);
+        sharded_ref.memoized = false;
+        assert_eq!(sharded.parallelism(), par);
+        let p = sharded.decode(&b).unwrap();
+        let pr = sharded_ref.decode(&b).unwrap();
+        assert_eq!(p.seconds.to_bits(), pr.seconds.to_bits(), "memoized == reference");
+        assert!(p.seconds < s.seconds, "16 ranks beat one device: {} vs {}", p.seconds, s.seconds);
+
+        // Prefill shards too (compute-bound: ~ranks-x faster).
+        let mut e1 = SimEngine::new(deepseek_v3(), ascend_npu());
+        let mut e16 = SimEngine::with_parallelism(deepseek_v3(), ascend_npu(), par);
+        let t1 = e1.prepare_shared(0, &vec![0; 4096], KernelKind::Typhoon).unwrap();
+        let t16 = e16.prepare_shared(0, &vec![0; 4096], KernelKind::Typhoon).unwrap();
+        assert!((t1 / t16 - 16.0).abs() < 1e-9);
     }
 
     /// Repeated identical batches do O(distinct lengths) model

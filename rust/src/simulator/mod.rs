@@ -2,19 +2,24 @@
 //! cost-model timing on NPU/GPU hardware specs (the testbed
 //! substitution of DESIGN.md §6).
 
+pub mod cluster;
 pub mod e2e;
 pub mod engine;
 pub mod serving_sim;
 pub mod sweep;
 pub mod tenancy;
 
+pub use cluster::{
+    run_cluster_experiment, ClusterParams, ClusterReport, ClusterSim, ReplicaReport, RouterPolicy,
+};
 pub use e2e::{gpu_h800_calibrated, tgr_row, TgrEntry, TgrRow};
 pub use engine::SimEngine;
 pub use serving_sim::{run_experiment, run_kernel_comparison, SimParams, SimReport};
 pub use sweep::{
-    run_throughput_sweep, throughput_cells, SweepExecutor, ThroughputCell, ThroughputCellResult,
+    cluster_cells, run_cluster_sweep, run_throughput_sweep, throughput_cells, ClusterCell,
+    ClusterCellResult, SweepExecutor, ThroughputCell, ThroughputCellResult,
 };
 pub use tenancy::{
-    run_tenant_comparison, run_tenant_experiment, run_tenant_experiment_with, TenantSimParams,
-    TenantSimReport,
+    run_tenant_comparison, run_tenant_experiment, run_tenant_experiment_with,
+    tenant_serving_stack, TenantSimParams, TenantSimReport,
 };

@@ -7,6 +7,7 @@ use anyhow::Result;
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig, ServingConfig};
 use crate::coordinator::{Coordinator, KernelPolicy};
+use crate::costmodel::parallel::ParallelismConfig;
 use crate::costmodel::threshold::batch_threshold;
 use crate::kvcache::KvCacheManager;
 use crate::metrics::BreakdownTimers;
@@ -32,6 +33,10 @@ pub struct SimParams {
     /// `false` selects the per-sequence reference evaluation — slower,
     /// bit-identical results; `bench_sweep` uses it as the baseline.
     pub memoized_engine: bool,
+    /// TP/SP sharding of the modeled device (paper §3.1): per-iteration
+    /// costs route through `costmodel::parallel`.  `single()` (default)
+    /// is bit-identical to the unsharded engine.
+    pub parallelism: ParallelismConfig,
 }
 
 impl SimParams {
@@ -45,6 +50,7 @@ impl SimParams {
             seed: 42,
             include_prefill: false,
             memoized_engine: true,
+            parallelism: ParallelismConfig::single(),
         }
     }
 }
@@ -87,7 +93,11 @@ pub fn run_experiment(
     let b_theta = batch_threshold(&params.model, &params.hw, 1);
     let policy = KernelPolicy::with_threshold(params.kernel, b_theta);
     let kv = KvCacheManager::new(params.model.clone(), total_blocks, block_size);
-    let mut engine = SimEngine::new(params.model.clone(), params.hw.clone());
+    let mut engine = SimEngine::with_parallelism(
+        params.model.clone(),
+        params.hw.clone(),
+        params.parallelism,
+    );
     engine.include_prefill = params.include_prefill;
     engine.memoized = params.memoized_engine;
     let mut coord = Coordinator::new(cfg, policy, kv, engine)?;
@@ -181,6 +191,24 @@ mod tests {
             t.throughput,
             a.throughput,
             n.throughput
+        );
+    }
+
+    /// TP/SP sharding routes iteration costs through the per-rank
+    /// model: same workload/tokens, faster modeled decode.
+    #[test]
+    fn tp_sp_sharding_raises_modeled_throughput() {
+        let mut p = SimParams::new(deepseek_v3(), ascend_npu(), KernelKind::Typhoon, 128);
+        p.max_requests = Some(128);
+        let single = run_experiment(&p, &mmlu(), &PROMPT_C).unwrap();
+        p.parallelism = ParallelismConfig { tp: 4, sp: 4 };
+        let sharded = run_experiment(&p, &mmlu(), &PROMPT_C).unwrap();
+        assert_eq!(single.tokens, sharded.tokens, "same workload either way");
+        assert!(
+            sharded.throughput > single.throughput,
+            "16 ranks must model faster decode: {} vs {}",
+            sharded.throughput,
+            single.throughput
         );
     }
 

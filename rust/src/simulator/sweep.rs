@@ -22,6 +22,7 @@ use crate::workload::datasets::all_datasets;
 use crate::workload::prompts::all_prompts;
 use crate::workload::{Dataset, SystemPrompt};
 
+use super::cluster::{run_cluster_experiment, ClusterParams, ClusterReport, RouterPolicy};
 use super::serving_sim::{run_experiment, SimParams, SimReport};
 use super::tenancy::{run_tenant_comparison, TenantSimParams, TenantSimReport};
 
@@ -249,6 +250,88 @@ pub fn run_tenant_sweep(
     })
 }
 
+/// One cell of the `cluster` grid: (replicas x skew x router), with the
+/// router innermost so the formatter can pivot one artifact row per
+/// (replicas, skew) out of `RouterPolicy::all().len()` consecutive
+/// cells.
+#[derive(Clone, Debug)]
+pub struct ClusterCell {
+    pub model: ModelConfig,
+    pub replicas: usize,
+    pub skew: f64,
+    pub router: RouterPolicy,
+    pub tenants: usize,
+    pub batch: usize,
+    pub total_requests: usize,
+    /// Poisson arrival rate (None = batch arrivals at t = 0).
+    pub arrival_rate: Option<f64>,
+}
+
+/// The cluster grid in row order: replicas (outer) x skew x router
+/// (inner).  Every cell of one (replicas, skew) row runs the *same*
+/// workload — only the routing decision differs.
+pub fn cluster_cells(
+    model: &ModelConfig,
+    replica_counts: &[usize],
+    skews: &[f64],
+    routers: &[RouterPolicy],
+    tenants: usize,
+    batch: usize,
+    total_requests: usize,
+) -> Vec<ClusterCell> {
+    let mut cells = Vec::new();
+    for &replicas in replica_counts {
+        for &skew in skews {
+            for &router in routers {
+                cells.push(ClusterCell {
+                    model: model.clone(),
+                    replicas,
+                    skew,
+                    router,
+                    tenants,
+                    batch,
+                    total_requests,
+                    arrival_rate: None,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// One evaluated cluster cell.
+#[derive(Clone, Debug)]
+pub struct ClusterCellResult {
+    pub cell: ClusterCell,
+    pub report: ClusterReport,
+}
+
+/// Evaluate the cluster grid on `hw` under the executor; results come
+/// back in cell order regardless of scheduling (byte-identical
+/// artifacts serial vs parallel, same discipline as every other grid).
+pub fn run_cluster_sweep(
+    hw: &HardwareSpec,
+    cells: &[ClusterCell],
+    exec: &SweepExecutor,
+) -> Result<Vec<ClusterCellResult>> {
+    exec.run(cells.len(), |i| {
+        let c = &cells[i];
+        let mut p = ClusterParams::new(
+            c.model.clone(),
+            hw.clone(),
+            c.replicas,
+            c.router,
+            c.batch,
+            c.tenants,
+            c.skew,
+        );
+        p.total_requests = c.total_requests;
+        p.arrival_rate = c.arrival_rate;
+        let report = run_cluster_experiment(&p)?;
+        Ok(ClusterCellResult { cell: c.clone(), report })
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +374,54 @@ mod tests {
         assert_eq!(cells[1].batch, 128);
         assert_eq!(cells[0].prompt.name, cells[5].prompt.name);
         assert_eq!(cells[0].max_requests, Some(128));
+    }
+
+    #[test]
+    fn cluster_cell_enumeration_row_order() {
+        let cells = cluster_cells(
+            &deepseek_v3(),
+            &[1, 2],
+            &[0.0, 2.0],
+            &RouterPolicy::all(),
+            4,
+            32,
+            64,
+        );
+        // 2 replica counts x 2 skews x 3 routers, router innermost.
+        assert_eq!(cells.len(), 12);
+        assert_eq!(
+            (cells[0].replicas, cells[0].skew, cells[0].router),
+            (1, 0.0, RouterPolicy::RoundRobin)
+        );
+        assert_eq!(cells[2].router, RouterPolicy::PrefixAffinity);
+        assert_eq!((cells[3].replicas, cells[3].skew), (1, 2.0));
+        assert_eq!((cells[11].replicas, cells[11].skew), (2, 2.0));
+    }
+
+    /// Cluster sweep determinism: serial and parallel executors produce
+    /// bitwise-equal reports per cell.
+    #[test]
+    fn cluster_sweep_deterministic_across_executors() {
+        let hw = ascend_npu();
+        let cells = cluster_cells(
+            &deepseek_v3(),
+            &[2],
+            &[1.0],
+            &RouterPolicy::all(),
+            3,
+            16,
+            32,
+        );
+        let serial = run_cluster_sweep(&hw, &cells, &SweepExecutor::serial()).unwrap();
+        let par = run_cluster_sweep(&hw, &cells, &SweepExecutor::with_threads(3)).unwrap();
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.report.tokens, p.report.tokens);
+            assert_eq!(s.report.requests_completed, p.report.requests_completed);
+            assert_eq!(s.report.goodput.to_bits(), p.report.goodput.to_bits());
+            assert_eq!(s.report.makespan.to_bits(), p.report.makespan.to_bits());
+            assert_eq!(s.report.ttft_p99.to_bits(), p.report.ttft_p99.to_bits());
+            assert_eq!(s.report.spills, p.report.spills);
+        }
     }
 
     #[test]

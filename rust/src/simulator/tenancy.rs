@@ -14,11 +14,48 @@ use anyhow::Result;
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig, ServingConfig};
 use crate::coordinator::{Coordinator, KernelPolicy};
+use crate::costmodel::parallel::ParallelismConfig;
 use crate::costmodel::threshold::batch_threshold;
 use crate::kvcache::{KvCacheManager, PrefixId};
 use crate::workload::tenants::{tenant_set, MultiTenantGenerator, TenantSpec};
 
 use super::engine::SimEngine;
+
+/// Build one single-device serving stack for a tenant workload — the
+/// canonical sizing (paper-paged KV at block 128, full batch at max
+/// length + every tenant's prefix + slack, Eq. 1 threshold policy)
+/// shared by the tenancy experiment and every cluster replica.
+/// `tests/cluster.rs` pins the 1-replica reduction against a
+/// hand-built copy of this wiring, so changes here are caught there.
+pub fn tenant_serving_stack(
+    model: &ModelConfig,
+    hw: &HardwareSpec,
+    kernel: KernelKind,
+    batch: usize,
+    tenants: &[TenantSpec],
+    include_prefill: bool,
+    parallelism: ParallelismConfig,
+) -> Result<Coordinator<SimEngine>> {
+    let block_size = 128; // paper: paged KV with block size 128
+    let max_seq_len = 2048;
+    let prefix_blocks: usize =
+        tenants.iter().map(|t| t.prompt_tokens.div_ceil(block_size)).sum();
+    let total_blocks = batch * (max_seq_len / block_size) + prefix_blocks + 64;
+    let cfg = ServingConfig {
+        block_size,
+        max_batch: batch,
+        max_seq_len,
+        total_blocks,
+        kernel,
+        ..Default::default()
+    };
+    let b_theta = batch_threshold(model, hw, 1);
+    let policy = KernelPolicy::with_threshold(kernel, b_theta);
+    let kv = KvCacheManager::new(model.clone(), total_blocks, block_size);
+    let mut engine = SimEngine::with_parallelism(model.clone(), hw.clone(), parallelism);
+    engine.include_prefill = include_prefill;
+    Coordinator::new(cfg, policy, kv, engine)
+}
 
 /// Parameters of one multi-tenant experiment.
 #[derive(Clone, Debug)]
@@ -95,26 +132,15 @@ pub fn run_tenant_experiment_with(
     params: &TenantSimParams,
     tenants: &[TenantSpec],
 ) -> Result<TenantSimReport> {
-    let block_size = 128; // paper: paged KV with block size 128
-    let max_seq_len = 2048;
-    // Pool: full batch at max length + every tenant's prefix + slack.
-    let prefix_blocks: usize =
-        tenants.iter().map(|t| t.prompt_tokens.div_ceil(block_size)).sum();
-    let total_blocks = params.batch * (max_seq_len / block_size) + prefix_blocks + 64;
-    let cfg = ServingConfig {
-        block_size,
-        max_batch: params.batch,
-        max_seq_len,
-        total_blocks,
-        kernel: params.kernel,
-        ..Default::default()
-    };
-    let b_theta = batch_threshold(&params.model, &params.hw, 1);
-    let policy = KernelPolicy::with_threshold(params.kernel, b_theta);
-    let kv = KvCacheManager::new(params.model.clone(), total_blocks, block_size);
-    let mut engine = SimEngine::new(params.model.clone(), params.hw.clone());
-    engine.include_prefill = params.include_prefill;
-    let mut coord = Coordinator::new(cfg, policy, kv, engine)?;
+    let mut coord = tenant_serving_stack(
+        &params.model,
+        &params.hw,
+        params.kernel,
+        params.batch,
+        tenants,
+        params.include_prefill,
+        ParallelismConfig::single(),
+    )?;
 
     let mut prefix_of: Vec<PrefixId> = Vec::with_capacity(tenants.len());
     for t in tenants {

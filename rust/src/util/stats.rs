@@ -53,6 +53,35 @@ impl Summary {
     }
 }
 
+/// Exact nearest-rank percentile over a **pre-sorted** buffer: the
+/// smallest element whose cumulative rank covers `q`% of the sample
+/// (rank `ceil(q/100 * n)`, 1-based).  Unlike the interpolated
+/// `Percentiles::percentile`, the result is always an element of the
+/// sample — the convention tail-latency SLOs (p95/p99) are quoted in.
+/// `q = 0` returns the minimum; an empty buffer returns NaN.
+pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q), "percentile out of range: {q}");
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let n = sorted.len();
+    let rank = (q / 100.0 * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Median via nearest rank (lower median for even n).
+pub fn p50(sorted: &[f64]) -> f64 {
+    percentile_nearest_rank(sorted, 50.0)
+}
+
+pub fn p95(sorted: &[f64]) -> f64 {
+    percentile_nearest_rank(sorted, 95.0)
+}
+
+pub fn p99(sorted: &[f64]) -> f64 {
+    percentile_nearest_rank(sorted, 99.0)
+}
+
 /// Percentile over a sample set (kept in full; sizes here are small).
 #[derive(Clone, Debug, Default)]
 pub struct Percentiles {
@@ -97,6 +126,26 @@ impl Percentiles {
 
     pub fn median(&mut self) -> f64 {
         self.percentile(50.0)
+    }
+
+    /// Exact nearest-rank percentile of the sample (sorts on demand).
+    pub fn nearest_rank(&mut self, q: f64) -> f64 {
+        percentile_nearest_rank(self.sorted_values(), q)
+    }
+
+    /// The raw sample values, in push order (cluster reports merge the
+    /// per-replica buffers before ranking).
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// The sample values, sorted ascending.
+    pub fn sorted_values(&mut self) -> &[f64] {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        &self.xs
     }
 }
 
@@ -152,6 +201,62 @@ mod tests {
         assert!((p.percentile(100.0) - 100.0).abs() < 1e-12);
         assert!((p.median() - 50.5).abs() < 1e-12);
         assert!((p.percentile(99.0) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nearest_rank_singleton() {
+        // n = 1: every percentile is the lone sample.
+        let xs = [7.5];
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile_nearest_rank(&xs, q), 7.5, "q={q}");
+        }
+    }
+
+    #[test]
+    fn nearest_rank_two_elements() {
+        // n = 2: rank ceil(q/100 * 2) — p50 is the lower element (rank
+        // 1), everything above 50% is the upper one.
+        let xs = [1.0, 2.0];
+        assert_eq!(p50(&xs), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 50.1), 2.0);
+        assert_eq!(p95(&xs), 2.0);
+        assert_eq!(p99(&xs), 2.0);
+        assert_eq!(percentile_nearest_rank(&xs, 0.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 100.0), 2.0);
+    }
+
+    #[test]
+    fn nearest_rank_ties_and_all_equal() {
+        let ties = [1.0, 2.0, 2.0, 2.0, 9.0];
+        assert_eq!(p50(&ties), 2.0); // rank ceil(2.5) = 3
+        assert_eq!(p95(&ties), 9.0); // rank ceil(4.75) = 5
+        let equal = [4.0; 8];
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile_nearest_rank(&equal, q), 4.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn nearest_rank_is_always_a_sample_element() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        // Nearest rank on 1..=100: pXX is exactly element XX.
+        assert_eq!(p50(&xs), 50.0);
+        assert_eq!(p95(&xs), 95.0);
+        assert_eq!(p99(&xs), 99.0);
+        assert!(percentile_nearest_rank(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentiles_struct_nearest_rank() {
+        let mut p = Percentiles::default();
+        for x in [3.0, 1.0, 2.0] {
+            p.push(x);
+        }
+        assert_eq!(p.values().len(), 3);
+        assert_eq!(p.nearest_rank(50.0), 2.0);
+        assert_eq!(p.sorted_values(), &[1.0, 2.0, 3.0]);
+        p.push(0.5); // re-sorts lazily after a push
+        assert_eq!(p.nearest_rank(50.0), 1.0);
     }
 
     #[test]

@@ -10,4 +10,6 @@ pub mod tenants;
 pub use datasets::{all_datasets, Dataset, Example};
 pub use generator::{Request, RequestGenerator};
 pub use prompts::{all_prompts, SystemPrompt, PROMPT_A, PROMPT_B, PROMPT_C};
-pub use tenants::{tenant_set, MultiTenantGenerator, TenantRequest, TenantSpec};
+pub use tenants::{
+    tenant_set, timed_arrivals, MultiTenantGenerator, TenantRequest, TenantSpec, TimedArrival,
+};

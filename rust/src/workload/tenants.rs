@@ -152,6 +152,47 @@ impl MultiTenantGenerator {
     }
 }
 
+/// One timed arrival of the interleaved multi-tenant stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedArrival {
+    /// Arrival time, seconds since the start of the run.
+    pub at: f64,
+    pub tenant: usize,
+    pub request: Request,
+}
+
+/// Poisson arrival process layered on `MultiTenantGenerator`:
+/// exponential inter-arrival gaps at `rate` requests/second from a
+/// seeded RNG, so arrival times are non-decreasing and fully
+/// deterministic per seed.  `rate = None` drops the whole stream at
+/// `t = 0` — the paper's batch protocol (and the shape the 1-replica
+/// cluster reduction pins against the classic serving path).
+pub fn timed_arrivals(
+    tenants: &[TenantSpec],
+    total_requests: usize,
+    rate: Option<f64>,
+    seed: u64,
+) -> anyhow::Result<Vec<TimedArrival>> {
+    if let Some(r) = rate {
+        if r.is_nan() || r <= 0.0 {
+            anyhow::bail!("arrival rate must be positive, got {r}");
+        }
+    }
+    let mut gen = MultiTenantGenerator::new(tenants, total_requests, seed);
+    // Independent clock stream: timing draws must not perturb the
+    // request interleaving (same stream as the untimed generator).
+    let mut clock_rng = Rng::new(seed.wrapping_mul(0x9E6D_62D0_6F6A_9A21).wrapping_add(3));
+    let mut now = 0.0f64;
+    let mut out = Vec::with_capacity(gen.total());
+    while let Some(tr) = gen.next_request() {
+        if let Some(rate) = rate {
+            now += clock_rng.next_exp(rate);
+        }
+        out.push(TimedArrival { at: now, tenant: tr.tenant, request: tr.request });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +251,46 @@ mod tests {
         let ts = tenant_set(8, 3.0); // tail shares are tiny
         let g = MultiTenantGenerator::new(&ts, 10, 1);
         assert!(g.total() >= 8, "floor of 1 per tenant");
+    }
+
+    #[test]
+    fn timed_arrivals_monotone_deterministic_and_same_stream() {
+        let ts = tenant_set(3, 1.0);
+        let a = timed_arrivals(&ts, 60, Some(10.0), 7).unwrap();
+        let b = timed_arrivals(&ts, 60, Some(10.0), 7).unwrap();
+        assert_eq!(a, b, "deterministic per seed");
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "non-decreasing times");
+        assert!(a[0].at > 0.0, "first gap drawn from the process");
+        // Timing is layered on top: the (tenant, request) stream equals
+        // the untimed generator's exactly.
+        let mut gen = MultiTenantGenerator::new(&ts, 60, 7);
+        for ta in &a {
+            let tr = gen.next_request().unwrap();
+            assert_eq!((ta.tenant, &ta.request), (tr.tenant, &tr.request));
+        }
+        assert!(gen.is_exhausted());
+    }
+
+    #[test]
+    fn timed_arrivals_batch_mode_all_at_zero() {
+        let ts = tenant_set(2, 0.0);
+        let a = timed_arrivals(&ts, 20, None, 3).unwrap();
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|t| t.at == 0.0));
+        assert!(timed_arrivals(&ts, 20, Some(0.0), 3).is_err(), "bad rate is an error");
+    }
+
+    #[test]
+    fn timed_arrivals_mean_gap_tracks_rate() {
+        let ts = tenant_set(2, 1.0);
+        let rate = 50.0;
+        let a = timed_arrivals(&ts, 2000, Some(rate), 11).unwrap();
+        let mean_gap = a.last().unwrap().at / a.len() as f64;
+        assert!(
+            (mean_gap - 1.0 / rate).abs() / (1.0 / rate) < 0.15,
+            "mean gap {mean_gap} vs expected {}",
+            1.0 / rate
+        );
     }
 
     #[test]

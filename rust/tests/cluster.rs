@@ -1,0 +1,313 @@
+//! Cluster-scale serving regressions:
+//! * **reduction** — a 1-replica cluster with round-robin routing and
+//!   `ParallelismConfig::single()` is bit-identical to the pre-cluster
+//!   serving path on the same request stream (same pattern as
+//!   `single_tenant_reduces_to_classic_path`);
+//! * **router conservation** — across random policy/seed/replica-count
+//!   draws, every generated request completes exactly once across the
+//!   fleet, token budgets conserve, no replica leaks KV pages, and
+//!   every replica's clock is monotone;
+//! * **prefix-affinity invariant** — a prefix group never occupies two
+//!   replicas unless a spill was recorded.
+
+use typhoon_mla::config::hardware::ascend_npu;
+use typhoon_mla::config::model::deepseek_v3;
+use typhoon_mla::config::{KernelKind, ServingConfig};
+use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
+use typhoon_mla::costmodel::{batch_threshold, ParallelismConfig};
+use typhoon_mla::kvcache::KvCacheManager;
+use typhoon_mla::simulator::{
+    run_tenant_experiment, ClusterParams, ClusterSim, RouterPolicy, SimEngine, TenantSimParams,
+};
+use typhoon_mla::util::rng::Rng;
+use typhoon_mla::workload::tenants::{tenant_set, timed_arrivals};
+
+fn cluster_params(replicas: usize, router: RouterPolicy) -> ClusterParams {
+    ClusterParams::new(deepseek_v3(), ascend_npu(), replicas, router, 64, 1, 0.0)
+}
+
+/// The reduction: with one replica, round-robin routing and no TP/SP
+/// sharding, the cluster machinery must serve the stream **bit-for-bit**
+/// like the single-device serving path — both the tenancy experiment
+/// entry point and a hand-built classic coordinator fed the same
+/// requests.
+#[test]
+fn one_replica_round_robin_reduces_to_serving_sim() {
+    let batch = 64;
+    let total_requests = 128;
+    let seed = 7;
+
+    let mut p = cluster_params(1, RouterPolicy::RoundRobin);
+    p.batch = batch;
+    p.total_requests = total_requests;
+    p.seed = seed;
+    p.parallelism = ParallelismConfig::single();
+    let mut sim = ClusterSim::new(&p).unwrap();
+    sim.run().unwrap();
+    let cluster = sim.report();
+    assert_eq!(cluster.replicas.len(), 1);
+    assert_eq!(cluster.spills, 0);
+
+    // Today's serving path #1: the tenancy experiment on the same
+    // (tenants, seed, budget) draw.
+    let mut tp = TenantSimParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        KernelKind::Typhoon,
+        batch,
+        1,
+        0.0,
+    );
+    tp.total_requests = total_requests;
+    tp.seed = seed;
+    let tenancy = run_tenant_experiment(&tp).unwrap();
+    assert_eq!(cluster.tokens, tenancy.tokens);
+    assert_eq!(cluster.replicas[0].iterations, tenancy.iterations);
+    assert_eq!(
+        cluster.decode_seconds.to_bits(),
+        tenancy.decode_seconds.to_bits(),
+        "1-replica cluster must be bit-identical to the tenancy path"
+    );
+    assert_eq!(cluster.replicas[0].typhoon_iters, tenancy.typhoon_iters);
+    assert_eq!(cluster.replicas[0].absorb_iters, tenancy.absorb_iters);
+    assert_eq!(cluster.replicas[0].mixed_iters, 0);
+
+    // Today's serving path #2: a hand-built classic coordinator (the
+    // pre-cluster `set_shared_prefix` + `submit` loop) on the same
+    // stream, sized exactly like a cluster replica.
+    let tenants = tenant_set(1, 0.0);
+    let block_size = 128;
+    let max_seq_len = 2048;
+    let prefix_blocks: usize =
+        tenants.iter().map(|t| t.prompt_tokens.div_ceil(block_size)).sum();
+    let total_blocks = batch * (max_seq_len / block_size) + prefix_blocks + 64;
+    let cfg = ServingConfig {
+        block_size,
+        max_batch: batch,
+        max_seq_len,
+        total_blocks,
+        kernel: KernelKind::Typhoon,
+        ..Default::default()
+    };
+    let b_theta = batch_threshold(&deepseek_v3(), &ascend_npu(), 1);
+    let policy = KernelPolicy::with_threshold(KernelKind::Typhoon, b_theta);
+    let kv = KvCacheManager::new(deepseek_v3(), total_blocks, block_size);
+    let mut engine = SimEngine::new(deepseek_v3(), ascend_npu());
+    engine.include_prefill = false;
+    let mut classic = Coordinator::new(cfg, policy, kv, engine).unwrap();
+    classic.set_shared_prefix(&tenants[0].prompt_token_ids(50_000)).unwrap();
+    for a in timed_arrivals(&tenants, total_requests, None, seed).unwrap() {
+        assert_eq!(a.at, 0.0, "batch protocol arrives at t = 0");
+        classic.submit(&a.request).unwrap();
+    }
+    classic.run_to_completion().unwrap();
+    let cm = &classic.metrics;
+    assert_eq!(cluster.tokens, cm.tokens_generated);
+    assert_eq!(cluster.requests_completed, cm.requests_completed);
+    assert_eq!(cluster.replicas[0].iterations, cm.decode_iterations);
+    assert_eq!(
+        cluster.decode_seconds.to_bits(),
+        cm.decode_seconds.to_bits(),
+        "1-replica cluster must be bit-identical to the classic path"
+    );
+    assert_eq!(cluster.makespan.to_bits(), classic.now().to_bits());
+}
+
+/// Router conservation across random policy/seed/replica-count draws:
+/// every request completes exactly once somewhere, token budgets
+/// conserve exactly, KV pages return to each replica's prefix
+/// baseline, and per-replica clocks never move backward.
+#[test]
+fn router_conservation_fuzz() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let replicas = rng.gen_range_usize(1, 4);
+        let policy = *rng.choose(&RouterPolicy::all());
+        let tenants = rng.gen_range_usize(1, 4);
+        let skew = [0.0, 1.0, 2.0][rng.gen_range_usize(0, 3)];
+        let batch = rng.gen_range_usize(4, 13);
+        let total_requests = rng.gen_range_usize(8, 33);
+        let mut p =
+            ClusterParams::new(deepseek_v3(), ascend_npu(), replicas, policy, batch, tenants, skew);
+        p.total_requests = total_requests;
+        p.seed = seed * 31 + 5;
+        if rng.next_f64() < 0.5 {
+            p.arrival_rate = Some(0.5 + rng.next_f64() * 50.0);
+        }
+        let mut sim = ClusterSim::new(&p).unwrap();
+
+        // Expected totals from the arrival stream (cluster pools are
+        // sized so no request is ever force-finished short).
+        let max_seq_len = 2048usize;
+        let n_arrivals = sim.arrivals().len();
+        let expected_tokens: usize = sim
+            .arrivals()
+            .iter()
+            .map(|a| {
+                let prompt = a.request.prompt_tokens.min(max_seq_len - 1);
+                a.request.max_new_tokens.min(max_seq_len - prompt).max(1)
+            })
+            .sum();
+
+        let mut prev = sim.replica_clocks();
+        let mut guard = 0u64;
+        while sim.step_event().unwrap() {
+            let now = sim.replica_clocks();
+            for (r, (a, b)) in prev.iter().zip(&now).enumerate() {
+                assert!(b >= a, "seed {seed}: replica {r} clock went backward");
+            }
+            prev = now;
+            guard += 1;
+            assert!(guard < 2_000_000, "seed {seed}: no progress");
+        }
+
+        let report = sim.report();
+        assert_eq!(
+            report.requests_completed as usize, n_arrivals,
+            "seed {seed}: every request completes exactly once across the fleet"
+        );
+        let routed: u64 = report.replicas.iter().map(|r| r.routed).sum();
+        assert_eq!(routed as usize, n_arrivals, "seed {seed}: no request routed twice");
+        assert_eq!(
+            report.tokens as usize, expected_tokens,
+            "seed {seed}: token conservation"
+        );
+        assert!(
+            report.ttft_p50.is_finite(),
+            "seed {seed}: completed requests must report TTFT"
+        );
+        // No cross-replica page leaks: after drain, each replica holds
+        // exactly its hosted prefixes' pages and nothing else.
+        for i in 0..sim.replica_count() {
+            let coord = sim.coordinator(i);
+            let hosted_pages: usize = coord
+                .prefix_groups()
+                .iter()
+                .map(|&(id, _)| coord.kv.prefix(id).unwrap().latent_blocks.len())
+                .sum();
+            assert_eq!(
+                coord.kv.used_blocks(),
+                hosted_pages,
+                "seed {seed}: replica {i} leaked KV pages"
+            );
+            assert_eq!(coord.running(), 0, "seed {seed}: replica {i} drained");
+            assert_eq!(coord.queued(), 0, "seed {seed}: replica {i} drained");
+        }
+    }
+}
+
+/// The prefix-affinity invariant: a prefix group's pages exist on at
+/// most one replica unless the router recorded a spill for that group
+/// — across random seeds, fleet sizes and arrival patterns.
+#[test]
+fn prefix_affinity_invariant_fuzz() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(6000 + seed);
+        let replicas = rng.gen_range_usize(2, 5);
+        let tenants = rng.gen_range_usize(1, 5);
+        let skew = [0.0, 1.0, 2.0][rng.gen_range_usize(0, 3)];
+        let batch = rng.gen_range_usize(4, 10);
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            replicas,
+            RouterPolicy::PrefixAffinity,
+            batch,
+            tenants,
+            skew,
+        );
+        p.total_requests = rng.gen_range_usize(8, 40);
+        p.seed = seed * 17 + 3;
+        // Half the draws use a tight spill threshold so pressure spills
+        // actually occur; half use a loose one (no spills expected).
+        let tight = rng.next_f64() < 0.5;
+        p.spill_queue_depth = if tight { 1 } else { 10_000 };
+        if rng.next_f64() < 0.5 {
+            p.arrival_rate = Some(1.0 + rng.next_f64() * 20.0);
+        }
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+
+        for t in 0..tenants {
+            let hosting = sim.replicas_hosting(t);
+            if hosting > 1 {
+                assert!(
+                    sim.tenant_spilled(t),
+                    "seed {seed}: tenant {t} on {hosting} replicas without a spill"
+                );
+            }
+        }
+        if !tight {
+            assert_eq!(
+                sim.spills(),
+                0,
+                "seed {seed}: loose threshold must never spill"
+            );
+            for t in 0..tenants {
+                assert!(
+                    sim.replicas_hosting(t) <= 1,
+                    "seed {seed}: unspilled tenant {t} concentrated on one replica"
+                );
+            }
+        }
+        let report = sim.report();
+        assert_eq!(report.spills, sim.spills(), "report mirrors the router count");
+    }
+}
+
+/// A deliberately tight spill threshold on a 2-replica fleet forces the
+/// hot group off its home replica: spills are recorded and the group
+/// legitimately occupies both replicas.
+#[test]
+fn forced_spill_is_recorded_and_audited() {
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        2,
+        RouterPolicy::PrefixAffinity,
+        8,
+        1,
+        0.0,
+    );
+    p.total_requests = 32;
+    p.spill_queue_depth = 1; // queue depth 1 already counts as pressure
+    let mut sim = ClusterSim::new(&p).unwrap();
+    sim.run().unwrap();
+    assert!(sim.spills() > 0, "tight threshold must spill the hot group");
+    assert!(sim.tenant_spilled(0));
+    assert_eq!(sim.replicas_hosting(0), 2, "spilled group pages on both replicas");
+    let report = sim.report();
+    assert_eq!(report.requests_completed, 32, "spilled requests still complete");
+}
+
+/// Prefix-affinity on a skewed multi-tenant workload must model at
+/// least round-robin's goodput (the acceptance headline behind the
+/// `cluster` artifact).
+#[test]
+fn affinity_goodput_at_least_round_robin_on_skewed_cell() {
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        4,
+        RouterPolicy::RoundRobin,
+        128,
+        4,
+        2.0,
+    );
+    p.total_requests = 512;
+    let rr = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    p.router = RouterPolicy::PrefixAffinity;
+    let aff = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    assert_eq!(rr.tokens, aff.tokens, "same workload either way");
+    assert!(
+        aff.goodput >= rr.goodput,
+        "prefix-affinity {} < round-robin {}",
+        aff.goodput,
+        rr.goodput
+    );
+    assert!(
+        aff.replicas.iter().map(|r| r.prefix_groups).sum::<usize>()
+            <= rr.replicas.iter().map(|r| r.prefix_groups).sum::<usize>(),
+        "affinity hosts no more prefix copies than round-robin"
+    );
+}
