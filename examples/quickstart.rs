@@ -13,6 +13,7 @@ use typhoon_mla::coordinator::KernelPolicy;
 use typhoon_mla::costmodel::exec_time::attention_time;
 use typhoon_mla::costmodel::flops::{attention_cost, AttentionWorkload};
 use typhoon_mla::costmodel::threshold::batch_threshold;
+use typhoon_mla::costmodel::ParallelismConfig;
 use typhoon_mla::simulator::{run_experiment, SimParams};
 use typhoon_mla::workload::datasets::mmlu;
 use typhoon_mla::workload::prompts::PROMPT_A;
@@ -41,8 +42,15 @@ fn main() -> anyhow::Result<()> {
     let b_theta = batch_threshold(&model, &hw, 1);
     println!("\n== fall-back threshold ==\n  B_theta = {b_theta} (paper: 61)");
 
-    // 3. The policy in action.
-    let policy = KernelPolicy::from_cost_model(KernelKind::Typhoon, &model, &hw);
+    // 3. The policy in action (single device; a TP/SP-sharded stack
+    //    would pass its own `ParallelismConfig` for the per-rank Eq. 1).
+    let policy = KernelPolicy::from_parallelism(
+        KernelKind::Typhoon,
+        &model,
+        &hw,
+        1,
+        &ParallelismConfig::single(),
+    );
     for b in [16usize, 61, 256] {
         println!(
             "  batch {b:>4} -> {}",

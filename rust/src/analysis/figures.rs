@@ -14,8 +14,9 @@ use crate::costmodel::memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead}
 use crate::costmodel::roofline::roofline_point;
 use crate::simulator::cluster::RouterPolicy;
 use crate::simulator::sweep::{
-    cluster_cells, run_cluster_sweep, run_tenant_sweep, run_throughput_sweep, tenant_cells,
-    throughput_cells, ClusterCellResult, SweepExecutor, TenantCellResult, ThroughputCellResult,
+    cluster_cells, cluster_row_configs, run_cluster_sweep, run_tenant_sweep,
+    run_throughput_sweep, tenant_cells, throughput_cells, ClusterCellResult, SweepExecutor,
+    TenantCellResult, ThroughputCellResult,
 };
 
 use super::Artifact;
@@ -201,64 +202,78 @@ pub fn fig_tenants(
 }
 
 /// Format evaluated cluster-grid cells into the `cluster` artifact.
-/// Cells must be in `cluster_cells` order (router innermost, in
-/// `RouterPolicy::all()` order): each artifact row pivots one
-/// (replicas, skew) workload across the three routing policies.
-/// Byte-identical however the cells were evaluated — only their order
-/// matters.
+/// Cells must be in `cluster_cells` order (router configuration
+/// innermost, in `cluster_row_configs()` order): each artifact row
+/// pivots one (replicas, skew) workload across round-robin,
+/// least-loaded, spill-only prefix-affinity and migrate-enabled
+/// prefix-affinity.  Byte-identical however the cells were evaluated —
+/// only their order matters.
 pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
-    let routers = RouterPolicy::all();
+    let configs = cluster_row_configs();
     assert_eq!(
-        results.len() % routers.len(),
+        results.len() % configs.len(),
         0,
-        "cluster results must tile into per-row policy triples"
+        "cluster results must tile into per-row config quadruples"
     );
     let mut text = String::new();
     let mut csv = String::from(
         "replicas,skew,round_robin_tok_s,least_loaded_tok_s,prefix_affinity_tok_s,\
-         affinity_vs_round_robin,spills,affinity_ttft_p99_s,affinity_tpot_p99_s,\
-         affinity_makespan_s\n",
+         affinity_migrate_tok_s,affinity_vs_round_robin,migrate_vs_spill,spills,\
+         migrations,affinity_ttft_p99_s,affinity_tpot_p99_s,affinity_makespan_s\n",
     );
     writeln!(
         text,
-        "{:>8} {:>5} {:>14} {:>14} {:>14} {:>9} {:>7} {:>11} {:>11}",
-        "replicas", "skew", "rrobin tok/s", "least-ld tok/s", "affinity tok/s", "aff/rr",
-        "spills", "ttft p99", "tpot p99"
+        "{:>8} {:>5} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9} {:>7} {:>5} {:>11} {:>11}",
+        "replicas", "skew", "rrobin tok/s", "least-ld tok/s", "affinity tok/s",
+        "aff+mig tok/s", "aff/rr", "mig/aff", "spills", "migs", "ttft p99", "tpot p99"
     )
     .unwrap();
-    for row in results.chunks(routers.len()) {
+    for row in results.chunks(configs.len()) {
         // Hard assert: a mis-ordered grid would silently swap policy
-        // columns (and invert the speedup) in release builds otherwise.
-        for (cell, &want) in row.iter().zip(&routers) {
-            assert_eq!(cell.cell.router, want, "rows must pivot in RouterPolicy::all() order");
+        // columns (and invert the speedups) in release builds otherwise.
+        for (cell, &(router, migrate)) in row.iter().zip(&configs) {
+            assert_eq!(
+                (cell.cell.router, cell.cell.migrate),
+                (router, migrate),
+                "rows must pivot in cluster_row_configs() order"
+            );
         }
         let c = &row[0].cell;
-        let [rr, ll, aff] = [&row[0].report, &row[1].report, &row[2].report];
+        let [rr, ll, aff, mig] =
+            [&row[0].report, &row[1].report, &row[2].report, &row[3].report];
         let speedup = if rr.goodput > 0.0 { aff.goodput / rr.goodput } else { 1.0 };
+        let mig_speedup = if aff.goodput > 0.0 { mig.goodput / aff.goodput } else { 1.0 };
         writeln!(
             text,
-            "{:>8} {:>5.1} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x {:>7} {:>10.3}s {:>10.4}s",
+            "{:>8} {:>5.1} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x {:>8.2}x {:>7} \
+             {:>5} {:>10.3}s {:>10.4}s",
             c.replicas,
             c.skew,
             rr.goodput,
             ll.goodput,
             aff.goodput,
+            mig.goodput,
             speedup,
+            mig_speedup,
             aff.spills,
+            mig.migrations,
             aff.ttft_p99,
             aff.tpot_p99
         )
         .unwrap();
         writeln!(
             csv,
-            "{},{:.1},{:.1},{:.1},{:.1},{:.3},{},{:.4},{:.5},{:.3}",
+            "{},{:.1},{:.1},{:.1},{:.1},{:.1},{:.3},{:.3},{},{},{:.4},{:.5},{:.3}",
             c.replicas,
             c.skew,
             rr.goodput,
             ll.goodput,
             aff.goodput,
+            mig.goodput,
             speedup,
+            mig_speedup,
             aff.spills,
+            mig.migrations,
             aff.ttft_p99,
             aff.tpot_p99,
             aff.makespan
@@ -268,8 +283,11 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
     text.push_str(
         "(goodput = generated tokens per aggregate replica decode second; \
          prefix-affinity concentrates each prefix group's occupancy on the \
-         replica holding its pages, spilling under pressure — round-robin \
-         pays every group's shared-stage stream on every replica)\n",
+         replica holding its pages — spill-only relief scatters a pressured \
+         group's overflow one request at a time, while migrate re-homes the \
+         group's pages over the interconnect so the overflow stays one \
+         group; round-robin pays every group's shared-stage stream on every \
+         replica)\n",
     );
     Artifact {
         id: "cluster",
@@ -280,10 +298,12 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
     }
 }
 
-/// `cluster` artifact: the (replicas x skew x router) grid under the
-/// sweep executor, one row per (replicas, skew) workload.  Asserts the
-/// headline: on the skewed multi-tenant cell at the largest fleet,
-/// prefix-affinity routing models at least round-robin's goodput.
+/// `cluster` artifact: the (replicas x skew x router-config) grid
+/// under the sweep executor, one row per (replicas, skew) workload.
+/// Asserts the headlines on the skewed multi-tenant cell at the
+/// largest fleet: prefix-affinity models at least round-robin's
+/// goodput, and migrate-enabled affinity at least spill-only
+/// affinity's.
 pub fn fig_cluster(
     max_requests_factor: Option<usize>,
     exec: &SweepExecutor,
@@ -294,22 +314,38 @@ pub fn fig_cluster(
         &deepseek_v3(),
         &CLUSTER_REPLICAS,
         &CLUSTER_SKEWS,
-        &RouterPolicy::all(),
         CLUSTER_TENANTS,
         batch,
         total_requests,
     );
     let results = run_cluster_sweep(&ascend_npu(), &cells, exec)?;
-    // The acceptance cell: max replicas x max skew (the last row).
-    let routers = RouterPolicy::all().len();
-    let last = &results[results.len() - routers..];
-    let (rr, aff) = (&last[0].report, &last[routers - 1].report);
+    // The acceptance cell: max replicas x max skew (the last row),
+    // with columns located by config rather than position so a
+    // reordered `cluster_row_configs` cannot silently swap reports.
+    let configs = cluster_row_configs();
+    let last = &results[results.len() - configs.len()..];
+    let col = |router, migrate| {
+        configs
+            .iter()
+            .position(|&c| c == (router, migrate))
+            .expect("row config present")
+    };
+    let rr = &last[col(RouterPolicy::RoundRobin, false)].report;
+    let aff = &last[col(RouterPolicy::PrefixAffinity, false)].report;
+    let mig = &last[col(RouterPolicy::PrefixAffinity, true)].report;
     anyhow::ensure!(
         aff.goodput >= rr.goodput,
         "prefix-affinity must not lose to round-robin on the skewed cell: \
          affinity {} < round-robin {}",
         aff.goodput,
         rr.goodput
+    );
+    anyhow::ensure!(
+        mig.goodput >= aff.goodput,
+        "migrate-enabled affinity must not lose to spill-only affinity on the \
+         skewed cell: migrate {} < spill-only {}",
+        mig.goodput,
+        aff.goodput
     );
     Ok(format_cluster(&results))
 }
@@ -667,15 +703,7 @@ mod tests {
     #[test]
     fn cluster_artifact_shapes_and_affinity_wins() {
         // A small slice of the cluster grid: the skewed 2-replica row.
-        let cells = cluster_cells(
-            &deepseek_v3(),
-            &[2],
-            &[2.0],
-            &RouterPolicy::all(),
-            4,
-            128,
-            256,
-        );
+        let cells = cluster_cells(&deepseek_v3(), &[2], &[2.0], 4, 128, 256);
         let results =
             run_cluster_sweep(&ascend_npu(), &cells, &SweepExecutor::from_env()).unwrap();
         let a = format_cluster(&results);
@@ -684,14 +712,20 @@ mod tests {
         let row = a.csv.lines().last().unwrap();
         assert!(row.starts_with("2,2.0"), "{row}");
         let fields: Vec<&str> = row.split(',').collect();
-        let speedup: f64 = fields[5].parse().unwrap();
+        let speedup: f64 = fields[6].parse().unwrap();
         assert!(
             speedup >= 0.999,
             "prefix-affinity must at least match round-robin: {row}"
         );
-        // Same workload under every policy: identical token totals.
-        assert_eq!(results[0].report.tokens, results[1].report.tokens);
-        assert_eq!(results[0].report.tokens, results[2].report.tokens);
+        let mig_speedup: f64 = fields[7].parse().unwrap();
+        assert!(
+            mig_speedup >= 0.999,
+            "migrate-enabled affinity must at least match spill-only: {row}"
+        );
+        // Same workload under every router config: identical tokens.
+        for r in &results[1..] {
+            assert_eq!(results[0].report.tokens, r.report.tokens);
+        }
     }
 
     #[test]

@@ -34,10 +34,9 @@ use typhoon_mla::analysis::Artifact;
 use typhoon_mla::config::hardware::{ascend_npu, gpu_h800};
 use typhoon_mla::config::model::deepseek_v3;
 use typhoon_mla::simulator::sweep::{
-    cluster_cells, run_cluster_sweep, run_throughput_sweep, throughput_cells, ClusterCell,
-    SweepExecutor, ThroughputCell,
+    cluster_cells, cluster_row_configs, run_cluster_sweep, run_throughput_sweep,
+    throughput_cells, ClusterCell, SweepExecutor, ThroughputCell,
 };
-use typhoon_mla::simulator::RouterPolicy;
 use typhoon_mla::util::cli::Args;
 use typhoon_mla::util::json::Json;
 
@@ -72,15 +71,17 @@ fn run_sweep(
     })
 }
 
-/// Run the cluster (replicas x skew x router) grid under one executor.
+/// Run the cluster (replicas x skew x router-config) grid under one
+/// executor.  Returns (wall seconds, tokens, migrations, artifact).
 fn run_cluster_grid(
     cells: &[ClusterCell],
     exec: &SweepExecutor,
-) -> Result<(f64, u64, Artifact)> {
+) -> Result<(f64, u64, u64, Artifact)> {
     let t0 = Instant::now();
     let results = run_cluster_sweep(&ascend_npu(), cells, exec)?;
     let tokens: u64 = results.iter().map(|r| r.report.tokens).sum();
-    Ok((t0.elapsed().as_secs_f64(), tokens, format_cluster(&results)))
+    let migrations: u64 = results.iter().map(|r| r.report.migrations).sum();
+    Ok((t0.elapsed().as_secs_f64(), tokens, migrations, format_cluster(&results)))
 }
 
 fn main() -> Result<()> {
@@ -114,24 +115,26 @@ fn main() -> Result<()> {
         par.wall_seconds, par.cells, par.tokens
     );
 
-    // The cluster grid: timed and byte-identity-asserted like the
-    // figure sweeps (smaller request budget in --quick mode).
+    // The cluster grid (now including the migrate-enabled affinity
+    // column): timed and byte-identity-asserted like the figure sweeps
+    // (smaller request budget in --quick mode).
     let cluster_requests = if args.flag("quick") { 256 } else { 512 };
     let cl_cells = cluster_cells(
         &deepseek_v3(),
         &CLUSTER_REPLICAS,
         &CLUSTER_SKEWS,
-        &RouterPolicy::all(),
         CLUSTER_TENANTS,
         128,
         cluster_requests,
     );
-    let (cl_wall, cl_tokens, cl_artifact) = run_cluster_grid(&cl_cells, &parallel)?;
+    let (cl_wall, cl_tokens, cl_migrations, cl_artifact) =
+        run_cluster_grid(&cl_cells, &parallel)?;
     println!(
-        "cluster:  {:.3}s wall, {} cells, {} tokens simulated",
+        "cluster:  {:.3}s wall, {} cells, {} tokens simulated, {} migrations",
         cl_wall,
         cl_cells.len(),
-        cl_tokens
+        cl_tokens,
+        cl_migrations
     );
 
     let mut fields: Vec<(&str, Json)> = vec![
@@ -142,7 +145,9 @@ fn main() -> Result<()> {
         ("quick", Json::Bool(args.flag("quick"))),
         ("cluster_wall_seconds", Json::num(cl_wall)),
         ("cluster_cells", Json::num(cl_cells.len() as f64)),
+        ("cluster_row_width", Json::num(cluster_row_configs().len() as f64)),
         ("cluster_tokens_simulated", Json::num(cl_tokens as f64)),
+        ("cluster_migrations", Json::num(cl_migrations as f64)),
     ];
 
     if !args.flag("skip-serial") {
@@ -177,7 +182,7 @@ fn main() -> Result<()> {
 
         // Cluster grid byte-identity: serial run of the same cells must
         // reproduce the parallel artifact exactly.
-        let (cl_serial_wall, cl_serial_tokens, cl_serial_artifact) =
+        let (cl_serial_wall, cl_serial_tokens, cl_serial_migrations, cl_serial_artifact) =
             run_cluster_grid(&cl_cells, &SweepExecutor::serial())?;
         ensure!(
             cl_serial_artifact.text == cl_artifact.text,
@@ -188,6 +193,10 @@ fn main() -> Result<()> {
             "cluster: csv artifact diverged"
         );
         ensure!(cl_serial_tokens == cl_tokens, "cluster token totals diverged");
+        ensure!(
+            cl_serial_migrations == cl_migrations,
+            "cluster migration counts diverged"
+        );
         let cl_speedup = cl_serial_wall / cl_wall.max(1e-12);
         println!("cluster speedup:   {cl_speedup:.2}x (artifacts byte-identical)");
         fields.push(("cluster_serial_wall_seconds", Json::num(cl_serial_wall)));

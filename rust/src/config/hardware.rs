@@ -18,6 +18,11 @@ pub struct HardwareSpec {
     pub hbm_bw: f64,
     /// HBM capacity, bytes.
     pub hbm_bytes: u64,
+    /// Device-to-device interconnect bandwidth, bytes/second (the
+    /// per-device share of the scale-up fabric: CloudMatrix unified bus
+    /// / NVLink class).  Prices cross-replica page migration in the
+    /// cluster simulator.
+    pub interconnect_bw: f64,
     /// Bytes per element of the KV-cache/activation dtype (2 = FP16).
     pub bytes_per_word: f64,
     /// Fraction of peak actually achievable by a well-tuned kernel
@@ -56,6 +61,8 @@ pub fn ascend_npu() -> HardwareSpec {
         peak_ops: 376e12,
         hbm_bw: 1.8e12,
         hbm_bytes: 64 * (1u64 << 30),
+        // CloudMatrix-class unified bus, per-NPU share.
+        interconnect_bw: 392e9,
         bytes_per_word: 2.0,
         compute_efficiency: 1.0,
         bandwidth_efficiency: 1.0,
@@ -69,6 +76,8 @@ pub fn gpu_h800() -> HardwareSpec {
         peak_ops: 1.0e15,
         hbm_bw: 3.3e12,
         hbm_bytes: 80 * (1u64 << 30),
+        // H800 NVLink (export-trimmed): 400 GB/s.
+        interconnect_bw: 400e9,
         bytes_per_word: 2.0,
         compute_efficiency: 1.0,
         bandwidth_efficiency: 1.0,
@@ -82,6 +91,7 @@ pub fn roofline_npu() -> HardwareSpec {
         peak_ops: 400e12,
         hbm_bw: 1.8e12,
         hbm_bytes: 64 * (1u64 << 30),
+        interconnect_bw: 392e9,
         bytes_per_word: 2.0,
         compute_efficiency: 1.0,
         bandwidth_efficiency: 1.0,
@@ -96,6 +106,8 @@ pub fn host_cpu() -> HardwareSpec {
         peak_ops: 2e11,
         hbm_bw: 2e10,
         hbm_bytes: 16 * (1u64 << 30),
+        // PCIe-class host link.
+        interconnect_bw: 1e9,
         bytes_per_word: 4.0, // f32 on CPU
         compute_efficiency: 1.0,
         bandwidth_efficiency: 1.0,

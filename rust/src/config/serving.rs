@@ -117,11 +117,18 @@ mod tests {
         assert!(c.validate().is_err());
     }
 
+    /// Round-trip every kernel through its string form, and pin the
+    /// parse failure mode (error names the accepted forms; matching is
+    /// exact, no case folding).
     #[test]
     fn kernel_kind_roundtrip() {
         for k in KernelKind::all() {
             assert_eq!(KernelKind::parse(k.as_str()).unwrap(), k);
+            assert_eq!(KernelKind::parse(k.as_str()).unwrap().as_str(), k.as_str());
         }
-        assert!(KernelKind::parse("x").is_err());
+        let err = KernelKind::parse("x").unwrap_err().to_string();
+        assert!(err.contains("typhoon|absorb|naive"), "{err}");
+        assert!(KernelKind::parse("Typhoon").is_err(), "matching is exact");
+        assert!(KernelKind::parse("").is_err());
     }
 }

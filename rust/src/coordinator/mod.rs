@@ -17,7 +17,6 @@
 //! protocol bit-for-bit.
 
 pub mod engine;
-pub mod policy;
 pub mod running;
 pub mod sequence;
 
@@ -26,12 +25,12 @@ use std::collections::{HashMap, VecDeque};
 use anyhow::{anyhow, Result};
 
 use crate::config::{KernelKind, ServingConfig};
-use crate::kvcache::{KvCacheManager, PrefixId, SeqId};
+use crate::kvcache::{KvCacheManager, PrefixExport, PrefixId, SeqId};
 use crate::metrics::{Clock, Metrics};
 use crate::workload::Request;
 
+pub use crate::policy::KernelPolicy;
 pub use engine::{BatchGroup, DecodeBatch, Engine, IterationOutcome, PrefillRequest};
-pub use policy::KernelPolicy;
 pub use running::RunningSet;
 pub use sequence::{SeqState, Sequence};
 
@@ -49,6 +48,10 @@ pub struct Coordinator<E: Engine> {
     /// Target of group-less `submit` calls: the prefix installed by
     /// `set_shared_prefix` (or the first registered group).
     default_prefix: Option<PrefixId>,
+    /// Prefix groups retired by the router (migrated away): kept
+    /// registered while any of their sequences is queued or running,
+    /// released as soon as the group drains.
+    draining: Vec<PrefixId>,
     recently_finished: Vec<SeqId>,
     next_seq: SeqId,
     /// Canonical run clock: accumulated engine-reported seconds.
@@ -74,6 +77,7 @@ impl<E: Engine> Coordinator<E> {
             metrics: Metrics::new(Clock::Simulated),
             prefixes: Vec::new(),
             default_prefix: None,
+            draining: Vec::new(),
             recently_finished: Vec::new(),
             next_seq: 0,
             now: 0.0,
@@ -107,11 +111,101 @@ impl<E: Engine> Coordinator<E> {
         }
         self.now += secs;
         self.metrics.advance_sim_time(secs);
+        self.metrics.shared_prefills += 1;
         self.prefixes.push((id, tokens.len()));
         if self.default_prefix.is_none() {
             self.default_prefix = Some(id);
         }
         Ok(id)
+    }
+
+    /// Adopt a prefix group whose pages arrive over the interconnect
+    /// (cross-replica migration): the KV payload — latent pages plus
+    /// the uncompressed copy when the source held one — is installed
+    /// as-is, so **no prefill runs** and no engine time is charged; the
+    /// cluster charges the modeled transfer separately via
+    /// `charge_transfer`.  A Typhoon/Naive stack refuses an unexpanded
+    /// export: materializing the uncompressed copy here would be
+    /// unpriced work — expand at the source so the transfer carries
+    /// (and prices) it.
+    pub fn import_prefix_group(&mut self, export: &PrefixExport) -> Result<PrefixId> {
+        let needs_expansion =
+            self.cfg.kernel == KernelKind::Typhoon || self.cfg.kernel == KernelKind::Naive;
+        if needs_expansion && !export.expanded {
+            return Err(anyhow!(
+                "cannot adopt an unexpanded prefix into a {} stack: expand it at \
+                 the source so the transfer prices the uncompressed copy",
+                self.cfg.kernel.as_str()
+            ));
+        }
+        let id = self.kv.import_prefix(export)?;
+        self.metrics.prefix_imports += 1;
+        self.prefixes.push((id, export.tokens.len()));
+        if self.default_prefix.is_none() {
+            self.default_prefix = Some(id);
+        }
+        Ok(id)
+    }
+
+    /// Retire a prefix group this replica no longer homes (its pages
+    /// migrated away): the group stops being a valid `submit_to`
+    /// target's long-term home but stays registered while any of its
+    /// sequences is queued or running; its pages are released the
+    /// moment it drains.  Returns true when the release happened
+    /// immediately.
+    pub fn retire_prefix_group(&mut self, prefix: PrefixId) -> Result<bool> {
+        if self.prefix_len(prefix).is_none() {
+            return Err(anyhow!("unknown prefix group {prefix}"));
+        }
+        if !self.draining.contains(&prefix) {
+            self.draining.push(prefix);
+        }
+        self.release_drained()?;
+        Ok(self.prefix_len(prefix).is_none())
+    }
+
+    /// Release every draining group whose last sequence has retired.
+    fn release_drained(&mut self) -> Result<()> {
+        let mut i = 0;
+        while i < self.draining.len() {
+            let pid = self.draining[i];
+            let drained = self.kv.prefix(pid).map(|p| p.users == 0 && p.pending == 0);
+            if drained == Some(false) {
+                i += 1;
+                continue;
+            }
+            if drained == Some(true) {
+                self.kv.release_shared_prefix(pid)?;
+            }
+            // (`None`: already released out-of-band through the public
+            // `kv` handle — drop the registry bookkeeping only.)
+            self.prefixes.retain(|&(id, _)| id != pid);
+            if self.default_prefix == Some(pid) {
+                self.default_prefix = self.prefixes.first().map(|&(id, _)| id);
+            }
+            self.draining.swap_remove(i);
+        }
+        Ok(())
+    }
+
+    /// Charge modeled interconnect time (an inbound page migration) to
+    /// this replica's clock.  Like idle fast-forwarding it counts
+    /// toward elapsed wall time, never toward decode time.
+    pub fn charge_transfer(&mut self, seconds: f64) {
+        self.now += seconds;
+        self.metrics.advance_sim_time(seconds);
+        self.metrics.transfer_seconds += seconds;
+    }
+
+    /// Router probe: observed completions per busy decode second (0
+    /// until the replica has history) — the service rate SLO admission
+    /// converts a TTFT target into a queue-depth threshold with.
+    pub fn service_rate(&self) -> f64 {
+        if self.metrics.decode_seconds > 0.0 {
+            self.metrics.requests_completed as f64 / self.metrics.decode_seconds
+        } else {
+            0.0
+        }
     }
 
     /// Install the shared prefix (system prompt) and run its prefill —
@@ -396,6 +490,9 @@ impl<E: Engine> Coordinator<E> {
             // latency counts like any normally-finished request's.
             self.record_completion(id);
         }
+        if !self.draining.is_empty() {
+            self.release_drained()?;
+        }
         if self.running.is_empty() {
             return Ok(!self.queue.is_empty());
         }
@@ -432,6 +529,9 @@ impl<E: Engine> Coordinator<E> {
             self.kv.remove_sequence(*id)?;
             self.engine.release(*id);
             self.record_completion(*id);
+        }
+        if !self.draining.is_empty() {
+            self.release_drained()?;
         }
         self.metrics
             .record_iteration(outcome.seconds, batch.seqs.len(), batch.seqs.len() as u64);
@@ -810,6 +910,105 @@ mod tests {
             assert_eq!((groups[0].start, groups[0].len), (0, b));
         }
         assert_eq!(c.metrics.mixed_iters, 0);
+    }
+
+    /// Importing a migrated prefix adopts pages and expansion without a
+    /// prefill: no engine time, no `shared_prefills` count.
+    #[test]
+    fn import_adopts_without_prefill() {
+        let mut src = coordinator(4, 1);
+        let pid = src.register_prefix_group(&(0..32u32).collect::<Vec<_>>()).unwrap();
+        assert_eq!(src.metrics.shared_prefills, 1);
+        let export = src.kv.export_prefix(pid).unwrap();
+
+        let mut dst = coordinator(4, 1);
+        let t0 = dst.now();
+        let did = dst.import_prefix_group(&export).unwrap();
+        assert_eq!(dst.now(), t0, "no prefill time charged");
+        assert_eq!(dst.metrics.shared_prefills, 0);
+        assert_eq!(dst.metrics.prefix_imports, 1);
+        assert_eq!(dst.prefix_len(did), Some(32));
+        assert!(dst.kv.prefix(did).unwrap().expanded, "typhoon config expands");
+        // The imported group serves requests like a registered one.
+        dst.submit_to(&req(0, 4, 2), did).unwrap();
+        dst.run_to_completion().unwrap();
+        assert_eq!(dst.metrics.requests_completed, 1);
+    }
+
+    /// A Typhoon stack refuses to adopt an unexpanded export — the
+    /// expansion must be materialized (and priced) at the source.
+    #[test]
+    fn import_rejects_unexpanded_export_into_typhoon() {
+        let cfg = ServingConfig {
+            max_batch: 4,
+            block_size: 16,
+            max_seq_len: 256,
+            total_blocks: 64,
+            kernel: KernelKind::Absorb,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Absorb, 1);
+        let kv = KvCacheManager::new(sim(), 64, 16);
+        let mut absorb_src = Coordinator::new(cfg, policy, kv, MockEngine::new()).unwrap();
+        let pid = absorb_src
+            .register_prefix_group(&(0..32u32).collect::<Vec<_>>())
+            .unwrap();
+        let export = absorb_src.kv.export_prefix(pid).unwrap();
+        assert!(!export.expanded, "absorb stacks keep latent-only prefixes");
+
+        let mut typhoon_dst = coordinator(4, 1);
+        assert!(typhoon_dst.import_prefix_group(&export).is_err());
+        // An absorb destination adopts it fine.
+        let cfg = ServingConfig {
+            max_batch: 4,
+            block_size: 16,
+            max_seq_len: 256,
+            total_blocks: 64,
+            kernel: KernelKind::Absorb,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Absorb, 1);
+        let kv = KvCacheManager::new(sim(), 64, 16);
+        let mut absorb_dst = Coordinator::new(cfg, policy, kv, MockEngine::new()).unwrap();
+        let did = absorb_dst.import_prefix_group(&export).unwrap();
+        assert!(!absorb_dst.kv.prefix(did).unwrap().expanded);
+    }
+
+    /// Retiring a migrated-away group defers the page release until its
+    /// last sequence drains, then frees everything.
+    #[test]
+    fn retire_releases_after_drain() {
+        let mut c = coordinator(2, 1);
+        let pid = c.register_prefix_group(&(0..32u32).collect::<Vec<_>>()).unwrap();
+        c.submit_to(&req(0, 4, 3), pid).unwrap();
+        c.step().unwrap(); // admit + decode one token
+        assert!(!c.retire_prefix_group(pid).unwrap(), "live group defers release");
+        assert!(c.prefix_len(pid).is_some(), "still registered while draining");
+        c.run_to_completion().unwrap();
+        assert!(c.prefix_len(pid).is_none(), "released at drain");
+        assert_eq!(c.kv.used_blocks(), 0, "prefix pages returned");
+        assert!(c.retire_prefix_group(pid).is_err(), "unknown after release");
+    }
+
+    #[test]
+    fn retire_unused_group_releases_immediately() {
+        let mut c = coordinator(2, 1);
+        let pid = c.register_prefix_group(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        assert!(c.retire_prefix_group(pid).unwrap());
+        assert_eq!(c.kv.used_blocks(), 0);
+        assert!(c.prefix_len(pid).is_none());
+    }
+
+    /// Inbound migration transfer time is wall time, never decode time.
+    #[test]
+    fn charge_transfer_advances_wall_not_decode() {
+        let mut c = coordinator(2, 1);
+        let t0 = c.now();
+        c.charge_transfer(0.25);
+        assert_eq!(c.now(), t0 + 0.25);
+        assert_eq!(c.metrics.transfer_seconds, 0.25);
+        assert_eq!(c.metrics.decode_seconds, 0.0);
+        assert_eq!(c.service_rate(), 0.0, "no completions yet");
     }
 
     /// A registered group's pages cannot be freed while any of its

@@ -9,11 +9,16 @@ pub mod parallel;
 pub mod roofline;
 pub mod table;
 pub mod threshold;
+pub mod transfer;
 
 pub use exec_time::{attention_time, time_breakdown, tokens_per_sec, TimeBreakdown};
 pub use flops::{attention_cost, AttentionWorkload, Component, CostBreakdown};
 pub use table::CostTable;
-pub use parallel::{parallel_attention_time, scaling_efficiency, ParallelismConfig};
+pub use parallel::{
+    parallel_attention_time, parallel_batch_threshold, parallel_batch_threshold_exact,
+    scaling_efficiency, ParallelismConfig,
+};
 pub use memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead, ClusterConfig};
 pub use roofline::{ridge_batch, roofline_curve, roofline_point, RooflinePoint};
 pub use threshold::{batch_threshold, batch_threshold_exact, use_typhoon};
+pub use transfer::{prefix_transfer_bytes, prefix_transfer_seconds, shared_prefill_seconds};

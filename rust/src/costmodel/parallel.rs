@@ -15,6 +15,7 @@ use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 
 use super::exec_time::component_time;
 use super::flops::{attention_cost, AttentionWorkload, Component};
+use super::threshold::batch_threshold_exact;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ParallelismConfig {
@@ -30,6 +31,53 @@ impl ParallelismConfig {
     pub fn ranks(&self) -> u64 {
         self.tp * self.sp
     }
+}
+
+/// Per-rank Eq. 1 threshold under (TP, SP), exact (real-valued).
+///
+/// Derivation from the per-rank roofline: the naive (typhoon stage-1)
+/// shared stream carries a head dimension — each rank reads
+/// `(H/tp)(D_qk+D_v)` words per shared token — while absorb's latent
+/// stream is *head-shared*, so every rank reads the full `D_l+D_r`
+/// words (TP replicates it; only SP shards it, paper §3.1).  Two
+/// regimes follow:
+///
+/// * `(H/tp)(D_qk+D_v) > D_l+D_r` (every realistic TP): the crossover
+///   sits where absorb's growing per-rank compute overtakes naive's
+///   flat per-rank memory time.  Both sides carry the same `H/tp` and
+///   `L_s/sp` factors, which cancel — the threshold *is* the classic
+///   Eq. 1 value, and `ranks = 1` reproduces `batch_threshold_exact`
+///   bit-identically.
+/// * TP deep enough that the replicated latent stream costs at least
+///   the per-rank naive stream: absorb's shared stage can never
+///   undercut naive's (its memory floor alone already loses), so the
+///   threshold collapses to 1 — the shifted-crossover regime of the
+///   Hardware-Centric Analysis of MLA (Geens & Verhelst, 2025).
+pub fn parallel_batch_threshold_exact(
+    cfg: &ModelConfig,
+    hw: &HardwareSpec,
+    s_q: u64,
+    par: &ParallelismConfig,
+) -> f64 {
+    assert!(par.tp > 0 && par.sp > 0, "TP/SP ranks must be >= 1");
+    let h_rank = cfg.n_heads as f64 / par.tp as f64;
+    let naive_words_per_token = h_rank * (cfg.d_qk() + cfg.d_v) as f64;
+    let latent_words_per_token = cfg.latent_words() as f64;
+    if naive_words_per_token <= latent_words_per_token {
+        return 1.0;
+    }
+    batch_threshold_exact(cfg, hw, s_q)
+}
+
+/// Integer per-rank threshold (floor, at least 1), the form
+/// `KernelPolicy` consumes.
+pub fn parallel_batch_threshold(
+    cfg: &ModelConfig,
+    hw: &HardwareSpec,
+    s_q: u64,
+    par: &ParallelismConfig,
+) -> usize {
+    (parallel_batch_threshold_exact(cfg, hw, s_q, par).floor() as usize).max(1)
 }
 
 /// Per-rank cost of one decode attention iteration under (TP, SP).
@@ -164,6 +212,80 @@ mod tests {
         let eff = scaling_efficiency(&cfg, KernelKind::Typhoon, &wl(), &hw, &par);
         assert!(eff > 0.80, "typhoon SP efficiency {eff}");
         assert!(eff <= 1.0 + 1e-9);
+    }
+
+    /// `ranks = 1` reproduces the classic Eq. 1 threshold to the bit —
+    /// the reduction every pre-parallelism artifact depends on.
+    #[test]
+    fn ranks_one_threshold_is_eq1_bitwise() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        for s_q in [1u64, 2, 4] {
+            let single =
+                parallel_batch_threshold_exact(&cfg, &hw, s_q, &ParallelismConfig::single());
+            assert_eq!(single.to_bits(), batch_threshold_exact(&cfg, &hw, s_q).to_bits());
+        }
+        assert_eq!(
+            parallel_batch_threshold(&cfg, &hw, 1, &ParallelismConfig::single()),
+            61
+        );
+    }
+
+    /// Realistic sharding leaves the crossover unchanged (both sides of
+    /// Eq. 1 shard by the same `H/tp` and `L_s/sp` factors); TP deep
+    /// enough that the replicated latent stream dominates the per-rank
+    /// naive stream collapses the threshold to 1.
+    #[test]
+    fn threshold_shifts_only_in_the_replication_regime() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        for (tp, sp) in [(1u64, 4u64), (4, 1), (4, 4), (8, 2), (64, 1)] {
+            let par = ParallelismConfig { tp, sp };
+            assert_eq!(
+                parallel_batch_threshold(&cfg, &hw, 1, &par),
+                61,
+                "tp={tp} sp={sp}"
+            );
+        }
+        // H = 128, tp = 128: one head per rank — the per-rank naive
+        // stream (320 words/token) undercuts the replicated latent
+        // stream (576 words/token), so naive wins at any batch.
+        let deep = ParallelismConfig { tp: 128, sp: 1 };
+        assert_eq!(parallel_batch_threshold(&cfg, &hw, 1, &deep), 1);
+    }
+
+    /// The analytic per-rank threshold agrees with a numeric crossover
+    /// scan over the same parallel cost model the engines run: the
+    /// smallest batch where typhoon's modeled time undercuts absorb's
+    /// is within one of the analytic value (Eq. 1 floors the exact
+    /// crossover; the scan ceils it).
+    #[test]
+    fn analytic_threshold_brackets_cost_model_crossover() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        for par in [
+            ParallelismConfig::single(),
+            ParallelismConfig { tp: 4, sp: 1 },
+            ParallelismConfig { tp: 4, sp: 4 },
+            ParallelismConfig { tp: 128, sp: 1 },
+        ] {
+            let analytic = parallel_batch_threshold(&cfg, &hw, 1, &par);
+            // Shared-only workload, Ls divisible by sp so div_ceil is
+            // exact; typhoon vs absorb differ only in the shared stage.
+            let numeric = (1..=256u64)
+                .find(|&b| {
+                    let wl = AttentionWorkload::decode(b, 4096, 0);
+                    parallel_attention_time(&cfg, KernelKind::Typhoon, &wl, &hw, &par)
+                        <= parallel_attention_time(&cfg, KernelKind::Absorb, &wl, &hw, &par)
+                })
+                .expect("crossover within scan range") as usize;
+            assert!(
+                numeric == analytic || numeric == analytic + 1,
+                "tp={} sp={}: numeric {numeric} vs analytic {analytic}",
+                par.tp,
+                par.sp
+            );
+        }
     }
 
     #[test]

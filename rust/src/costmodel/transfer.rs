@@ -1,0 +1,154 @@
+//! Cross-replica prefix movement costs: what it takes to re-home a
+//! prefix group's pages over the scale-up interconnect versus
+//! rebuilding them with a fresh prefill.
+//!
+//! The cluster router's migrate-vs-spill rule compares exactly these
+//! two quantities: spilling a hot group's overflow re-prefills the
+//! shared prefix on the peer (quadratic compute in `L_s`), while
+//! migration streams the already-materialized pages (linear bytes over
+//! `HardwareSpec::interconnect_bw`).  For paper-scale prefixes the
+//! transfer is milliseconds where the re-prefill is tens — but the rule
+//! stays cost-driven, so a slow interconnect flips it back to spilling.
+
+use crate::config::{HardwareSpec, ModelConfig};
+
+use super::parallel::ParallelismConfig;
+
+/// Bytes each rank pair must stream to re-home a prefix group: every
+/// source rank sends its shard to the matching destination rank over
+/// its own link, so the wall clock sees the *per-pair* payload.  SP
+/// shards both cache forms by length; the uncompressed naive-stage
+/// copy (present when the group is expanded) additionally shards by
+/// heads under TP, while the latent copy is head-shared — every TP
+/// rank holds (and therefore streams) its full-length share.  At
+/// `single()` this is simply the whole group's bytes, matching the
+/// `/ ranks` sharding `shared_prefill_seconds` applies to the
+/// competing re-prefill — the migrate-vs-spill rule compares like with
+/// like on sharded fleets.
+pub fn prefix_transfer_bytes(
+    cfg: &ModelConfig,
+    hw: &HardwareSpec,
+    tokens: usize,
+    expanded: bool,
+    par: &ParallelismConfig,
+) -> f64 {
+    let latent = tokens as f64 * cfg.latent_words() as f64 / par.sp as f64;
+    let uncompressed = if expanded {
+        tokens as f64 * cfg.uncompressed_words() as f64 / par.ranks() as f64
+    } else {
+        0.0
+    };
+    (latent + uncompressed) * hw.bytes_per_word
+}
+
+/// Modeled seconds to stream a prefix group's pages replica-to-replica
+/// (rank pairs transfer concurrently; the per-pair payload bounds the
+/// wall time).
+pub fn prefix_transfer_seconds(
+    cfg: &ModelConfig,
+    hw: &HardwareSpec,
+    tokens: usize,
+    expanded: bool,
+    par: &ParallelismConfig,
+) -> f64 {
+    prefix_transfer_bytes(cfg, hw, tokens, expanded, par) / hw.interconnect_bw
+}
+
+/// Modeled seconds to rebuild a shared prefix from its tokens: causal
+/// naive prefill over `L_s` tokens (~L_s^2/2 context pairs), sharded
+/// over the stack's ranks — the same formulation
+/// `SimEngine::prepare_shared` charges, so the migrate-vs-spill rule
+/// prices the spill path with the engine's own prefill model.
+pub fn shared_prefill_seconds(
+    cfg: &ModelConfig,
+    hw: &HardwareSpec,
+    tokens: usize,
+    ranks: u64,
+) -> f64 {
+    let ls = tokens as f64;
+    0.5 * ls * ls * cfg.naive_factor() as f64 / ranks as f64 / hw.macs_per_sec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+
+    fn single() -> ParallelismConfig {
+        ParallelismConfig::single()
+    }
+
+    #[test]
+    fn transfer_bytes_count_both_cache_forms() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let latent_only = prefix_transfer_bytes(&cfg, &hw, 1000, false, &single());
+        let both = prefix_transfer_bytes(&cfg, &hw, 1000, true, &single());
+        assert_eq!(latent_only, 1000.0 * 576.0 * 2.0);
+        assert_eq!(both, 1000.0 * (576.0 + 40960.0) * 2.0);
+    }
+
+    /// Sharding the transfer mirrors the cache layout: SP shards both
+    /// forms by length, TP shards only the head-carrying uncompressed
+    /// copy (the latent stream is head-shared and stays replicated).
+    #[test]
+    fn transfer_shards_like_the_caches() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let sp4 = ParallelismConfig { tp: 1, sp: 4 };
+        assert_eq!(
+            prefix_transfer_bytes(&cfg, &hw, 1000, true, &sp4) * 4.0,
+            prefix_transfer_bytes(&cfg, &hw, 1000, true, &single())
+        );
+        let tp4 = ParallelismConfig { tp: 4, sp: 1 };
+        let latent = 1000.0 * 576.0 * 2.0;
+        let unc = 1000.0 * 40960.0 * 2.0;
+        assert_eq!(
+            prefix_transfer_bytes(&cfg, &hw, 1000, true, &tp4),
+            latent + unc / 4.0,
+            "TP replicates latent, shards uncompressed"
+        );
+    }
+
+    /// Paper-scale Prompt A (26472 tokens, expanded): the page transfer
+    /// is milliseconds where the re-prefill is tens of milliseconds —
+    /// the structural reason migration beats per-request spilling.
+    /// The ordering survives TP/SP sharding because both sides shard.
+    #[test]
+    fn transfer_beats_reprefill_at_paper_scale() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let transfer = prefix_transfer_seconds(&cfg, &hw, 26472, true, &single());
+        let prefill = shared_prefill_seconds(&cfg, &hw, 26472, 1);
+        assert!(transfer < 0.02, "transfer {transfer}s");
+        assert!(prefill > 0.05, "prefill {prefill}s");
+        assert!(transfer < prefill);
+        let par = ParallelismConfig { tp: 4, sp: 4 };
+        let transfer16 = prefix_transfer_seconds(&cfg, &hw, 26472, true, &par);
+        let prefill16 = shared_prefill_seconds(&cfg, &hw, 26472, par.ranks());
+        assert!(transfer16 < prefill16, "{transfer16} vs {prefill16} at TP4xSP4");
+    }
+
+    /// A slow interconnect flips the rule: on a PCIe-class link the
+    /// stream of a short prefix costs more than recomputing it.
+    #[test]
+    fn slow_interconnect_flips_to_reprefill() {
+        let cfg = deepseek_v3();
+        let mut hw = ascend_npu();
+        hw.interconnect_bw = 1e6; // pathologically slow link
+        let transfer = prefix_transfer_seconds(&cfg, &hw, 64, false, &single());
+        let prefill = shared_prefill_seconds(&cfg, &hw, 64, 1);
+        assert!(transfer > prefill);
+    }
+
+    /// Prefill shards over ranks exactly like the engine's model.
+    #[test]
+    fn prefill_shards_over_ranks() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let one = shared_prefill_seconds(&cfg, &hw, 4096, 1);
+        let sixteen = shared_prefill_seconds(&cfg, &hw, 4096, 16);
+        assert!((one / sixteen - 16.0).abs() < 1e-9);
+    }
+}

@@ -45,6 +45,29 @@ impl SharedPrefix {
     }
 }
 
+/// A prefix group's cache content packaged for cross-replica
+/// migration: `tokens` identify the radix run (and size the transfer),
+/// `expanded` says whether the uncompressed naive-stage copy travels
+/// too, and `spans` records the source page layout for audits and
+/// span-count diagnostics — the importer allocates its own pages.
+#[derive(Clone, Debug)]
+pub struct PrefixExport {
+    pub tokens: Vec<u32>,
+    pub expanded: bool,
+    /// Source-side page spans covering `tokens`.
+    pub spans: Vec<PageSpan>,
+}
+
+impl PrefixExport {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
 /// Per-sequence cache state: the non-shared suffix in latent form.
 #[derive(Debug)]
 pub struct SequenceCache {
@@ -176,6 +199,34 @@ impl KvCacheManager {
 
     pub fn prefix(&self, id: PrefixId) -> Option<&SharedPrefix> {
         self.prefixes.get(&id)
+    }
+
+    /// Package a prefix group for migration to a peer replica: tokens,
+    /// expansion state, and the source page-span layout from the radix
+    /// tree.
+    pub fn export_prefix(&self, id: PrefixId) -> Result<PrefixExport> {
+        let p = self
+            .prefixes
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown prefix {id}"))?;
+        let spans = self
+            .radix
+            .export_spans(&p.tokens)
+            .ok_or_else(|| anyhow!("prefix {id} is not fully resident in the radix tree"))?;
+        Ok(PrefixExport { tokens: p.tokens.clone(), expanded: p.expanded, spans })
+    }
+
+    /// Destination side of a migration: install the exported group on
+    /// freshly allocated local pages (the KV payload arrives over the
+    /// interconnect; an identical run already cached here is reused via
+    /// the radix tree, exactly like registration).  No prefill is
+    /// implied — that is the whole point of migrating.
+    pub fn import_prefix(&mut self, export: &PrefixExport) -> Result<PrefixId> {
+        let id = self.register_shared_prefix(&export.tokens)?;
+        if export.expanded {
+            self.expand_shared_prefix(id)?;
+        }
+        Ok(id)
     }
 
     /// Number of registered shared prefixes (prefix groups).
@@ -451,6 +502,37 @@ mod tests {
         assert_eq!(m.expanded_bytes(), bb);
         assert_eq!(m.registered_prefixes(), 1);
         assert_eq!(m.prefix_expanded_bytes(a), 0, "released prefix reports 0");
+    }
+
+    #[test]
+    fn export_import_round_trip() {
+        let mut src = mgr(32);
+        let id = src.register_shared_prefix(&prefix_tokens(40)).unwrap();
+        src.expand_shared_prefix(id).unwrap();
+        let ex = src.export_prefix(id).unwrap();
+        assert_eq!(ex.len(), 40);
+        assert!(ex.expanded);
+        assert_eq!(ex.spans.iter().map(|s| s.tokens as usize).sum::<usize>(), 40);
+        let mut dst = mgr(32);
+        let did = dst.import_prefix(&ex).unwrap();
+        let p = dst.prefix(did).unwrap();
+        assert_eq!(p.len(), 40);
+        assert!(p.expanded, "expansion state travels with the export");
+        assert_eq!(dst.used_blocks(), src.used_blocks());
+        assert_eq!(dst.expanded_bytes(), src.expanded_bytes());
+        assert!(src.export_prefix(999).is_err());
+    }
+
+    #[test]
+    fn unexpanded_export_imports_latent_only() {
+        let mut src = mgr(8);
+        let id = src.register_shared_prefix(&prefix_tokens(16)).unwrap();
+        let ex = src.export_prefix(id).unwrap();
+        assert!(!ex.expanded);
+        let mut dst = mgr(8);
+        let did = dst.import_prefix(&ex).unwrap();
+        assert!(!dst.prefix(did).unwrap().expanded);
+        assert_eq!(dst.expanded_bytes(), 0);
     }
 
     #[test]

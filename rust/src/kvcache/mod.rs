@@ -7,5 +7,5 @@ pub mod manager;
 pub mod radix;
 
 pub use block::{BlockAllocator, BlockId, BlockTable};
-pub use manager::{KvCacheManager, PrefixId, SeqId, SharedPrefix};
+pub use manager::{KvCacheManager, PrefixExport, PrefixId, SeqId, SharedPrefix};
 pub use radix::{spans_from_pages, spans_from_per_token, MatchResult, PageSpan, RadixTree};

@@ -334,6 +334,15 @@ impl RadixTree {
         self.for_each_edge(tokens, |n| n.expanded = true);
     }
 
+    /// Export the page spans covering a fully-cached token run (a
+    /// prefix group about to migrate): the canonical span layout a peer
+    /// needs to size and stream the transfer.  `None` when the run is
+    /// not fully resident.
+    pub fn export_spans(&self, tokens: &[u32]) -> Option<Vec<PageSpan>> {
+        let m = self.match_prefix(tokens);
+        (m.matched == tokens.len()).then_some(m.spans)
+    }
+
     /// Evict all unpinned leaves (transitively), returning the page ids
     /// they held — one entry per span run (dedup before releasing
     /// refcounts once per page; the manager owns that policy, and a
@@ -472,6 +481,18 @@ mod tests {
         let m = t.match_prefix(&toks("sysq1"));
         assert_eq!(m.matched, 5);
         assert_eq!(m.expanded_len, 3, "only the marked prefix is expanded");
+    }
+
+    #[test]
+    fn export_spans_requires_full_residency() {
+        let mut t = RadixTree::new();
+        let s = toks("system prompt");
+        t.insert(&s, &spans(s.len(), 0));
+        let ex = t.export_spans(&s).unwrap();
+        assert_eq!(ex.iter().map(|x| x.tokens as usize).sum::<usize>(), s.len());
+        assert_eq!(ex, t.match_prefix(&s).spans);
+        assert!(t.export_spans(&toks("system prompt tail")).is_none());
+        assert_eq!(t.export_spans(&[]), Some(vec![]));
     }
 
     #[test]

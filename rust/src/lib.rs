@@ -23,6 +23,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod kvcache;
 pub mod metrics;
+pub mod policy;
 pub mod runtime;
 pub mod server;
 pub mod simulator;

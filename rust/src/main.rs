@@ -24,7 +24,7 @@ use typhoon_mla::util::cli::Args;
 use typhoon_mla::workload::{datasets, prompts, Request};
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["full"])?;
+    let args = Args::parse(&["full", "migrate"])?;
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
         Some("simulate") => simulate(&args),
@@ -41,7 +41,7 @@ fn main() -> Result<()> {
                  --kernel K --batch B --dataset mmlu|gsm8k|simpleqa --prompt a|b|c \
                  [--tenants N --skew S]\n\
                  simulate --replicas N --router round-robin|least-loaded|prefix-affinity \
-                 [--tenants N --skew S --rate R --tp N --sp N]\n\
+                 [--tenants N --skew S --rate R --tp N --sp N --migrate --slo-ttft S]\n\
                  threshold --model M --hw H"
             );
             Ok(())
@@ -95,8 +95,10 @@ fn simulate(args: &Args) -> Result<()> {
     // arrivals and TP/SP sharding) so those flags are never silently
     // dropped by the plain simulation branches.
     let replicas = args.get_usize("replicas", 1)?;
-    let cluster_mode =
-        ["replicas", "router", "rate", "tp", "sp"].iter().any(|k| args.get(k).is_some());
+    let cluster_mode = ["replicas", "router", "rate", "tp", "sp", "slo-ttft"]
+        .iter()
+        .any(|k| args.get(k).is_some())
+        || args.flag("migrate");
     if cluster_mode {
         let router = RouterPolicy::parse(args.get_or("router", "prefix-affinity"))?;
         // Cluster mode defaults to a multi-tenant workload (that is
@@ -122,11 +124,15 @@ fn simulate(args: &Args) -> Result<()> {
         if args.get("rate").is_some() {
             p.arrival_rate = Some(args.get_f64("rate", 0.0)?);
         }
+        p.migrate = args.flag("migrate");
+        if args.get("slo-ttft").is_some() {
+            p.slo_ttft = Some(args.get_f64("slo-ttft", 0.0)?);
+        }
         let r = run_cluster_experiment(&p)?;
         println!(
             "[simulate] cluster: {} replicas ({}), {} tenants: {} tokens, {} requests \
              -> goodput {:.0} tok/s/layer over {:.3}s aggregate decode \
-             (makespan {:.3}s, spills {})",
+             (makespan {:.3}s, spills {}, migrations {})",
             replicas,
             router.as_str(),
             p.tenants,
@@ -135,7 +141,8 @@ fn simulate(args: &Args) -> Result<()> {
             r.goodput,
             r.decode_seconds,
             r.makespan,
-            r.spills
+            r.spills,
+            r.migrations
         );
         println!(
             "[simulate] ttft p50/p95/p99 = {:.4}/{:.4}/{:.4}s, \
@@ -144,11 +151,12 @@ fn simulate(args: &Args) -> Result<()> {
         );
         for (i, rep) in r.replicas.iter().enumerate() {
             println!(
-                "[simulate]   replica {i}: {} routed, {} tokens, {} groups hosted, \
-                 mean batch {:.1}, group-iters t/a/n {}/{}/{} (mixed {})",
+                "[simulate]   replica {i}: {} routed, {} tokens, {} groups hosted \
+                 ({} imported), mean batch {:.1}, group-iters t/a/n {}/{}/{} (mixed {})",
                 rep.routed,
                 rep.tokens,
                 rep.prefix_groups,
+                rep.prefix_imports,
                 rep.mean_batch,
                 rep.typhoon_iters,
                 rep.absorb_iters,

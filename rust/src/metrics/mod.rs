@@ -78,6 +78,16 @@ pub struct Metrics {
     /// Decode iterations whose groups selected more than one kernel
     /// (a hot group on Typhoon while a cold one fell back to absorb).
     pub mixed_iters: u64,
+    /// Shared prefixes prefilled locally (`register_prefix_group`) —
+    /// migration adoptions do NOT count, which is what the
+    /// never-re-prefilled audit leans on.
+    pub shared_prefills: u64,
+    /// Prefix groups adopted from a peer replica without a prefill
+    /// (cross-replica page migration).
+    pub prefix_imports: u64,
+    /// Modeled interconnect seconds spent receiving migrated pages
+    /// (wall time on the replica clock, never decode time).
+    pub transfer_seconds: f64,
 }
 
 impl Metrics {
@@ -103,6 +113,9 @@ impl Metrics {
             absorb_iters: 0,
             naive_iters: 0,
             mixed_iters: 0,
+            shared_prefills: 0,
+            prefix_imports: 0,
+            transfer_seconds: 0.0,
         }
     }
 

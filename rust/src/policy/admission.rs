@@ -1,0 +1,80 @@
+//! SLO-driven admission: derive the router's pressure threshold from a
+//! TTFT target and observed rates instead of a fixed queue-depth
+//! constant.
+//!
+//! A replica with backlog `d` and service rate `mu` (completions per
+//! busy second) admits a newly arrived request after roughly `d / mu`
+//! seconds of queueing — the dominant TTFT term once the batch is
+//! full.  Holding that delay under the TTFT target bounds the backlog
+//! at `floor(target * mu)`; arrivals that would push past it are
+//! spilled/migrated instead.  Before the replica has any completion
+//! history, the observed fleet arrival rate stands in for `mu` (in
+//! steady state a keeping-up replica completes as fast as its share
+//! arrives).
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloAdmission {
+    /// TTFT target in seconds; `None` falls back to the caller's fixed
+    /// queue-depth threshold (the PR 3 behavior, bit-identical).
+    pub ttft_target: Option<f64>,
+}
+
+impl SloAdmission {
+    pub fn new(ttft_target: Option<f64>) -> Self {
+        SloAdmission { ttft_target }
+    }
+
+    /// The queue depth at which a replica counts as pressured.
+    ///
+    /// `service_rate` is the replica's observed completions per busy
+    /// second (0 when it has no history yet); `arrival_rate` is the
+    /// observed per-replica arrival rate (may be 0/inf early in a run
+    /// or under the batch protocol).  Returns `fallback` when no target
+    /// is set or neither rate is usable yet; never returns 0 (a zero
+    /// threshold would spill every request unconditionally).
+    pub fn spill_depth(&self, service_rate: f64, arrival_rate: f64, fallback: usize) -> usize {
+        let Some(target) = self.ttft_target else {
+            return fallback;
+        };
+        let mu = if service_rate > 0.0 { service_rate } else { arrival_rate };
+        if !mu.is_finite() || mu <= 0.0 {
+            return fallback;
+        }
+        ((target * mu).floor() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_target_returns_fallback() {
+        let a = SloAdmission::new(None);
+        assert_eq!(a.spill_depth(100.0, 50.0, 7), 7);
+    }
+
+    #[test]
+    fn depth_scales_with_target_and_service_rate() {
+        let a = SloAdmission::new(Some(0.5));
+        // mu = 100 req/s, target 0.5 s -> 50 queued tolerable.
+        assert_eq!(a.spill_depth(100.0, 0.0, 7), 50);
+        let tight = SloAdmission::new(Some(0.01));
+        assert_eq!(tight.spill_depth(100.0, 0.0, 7), 1);
+    }
+
+    #[test]
+    fn arrival_rate_stands_in_before_history() {
+        let a = SloAdmission::new(Some(1.0));
+        assert_eq!(a.spill_depth(0.0, 20.0, 7), 20);
+        // Neither rate usable yet: fall back.
+        assert_eq!(a.spill_depth(0.0, 0.0, 7), 7);
+        assert_eq!(a.spill_depth(0.0, f64::INFINITY, 7), 7);
+    }
+
+    #[test]
+    fn depth_never_zero() {
+        let a = SloAdmission::new(Some(1e-9));
+        assert_eq!(a.spill_depth(100.0, 0.0, 7), 1);
+    }
+}

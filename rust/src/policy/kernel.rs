@@ -11,9 +11,15 @@
 //! called with the group's occupancy and the group's shared length —
 //! a cold tenant falls back to absorb while a hot tenant runs Typhoon
 //! in the same decode iteration.
+//!
+//! B_theta is **parallelism-aware**: a TP/SP-sharded stack derives the
+//! per-rank threshold via `costmodel::parallel::parallel_batch_threshold`
+//! (`from_parallelism`), which reproduces the single-device Eq. 1 value
+//! bit-identically at `ranks = 1` and collapses in the deep-TP latent
+//! replication regime.
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
-use crate::costmodel::threshold::batch_threshold;
+use crate::costmodel::parallel::{parallel_batch_threshold, ParallelismConfig};
 
 #[derive(Clone, Debug)]
 pub struct KernelPolicy {
@@ -27,17 +33,35 @@ pub struct KernelPolicy {
 }
 
 impl KernelPolicy {
+    /// Derive the per-rank B_theta from model + hardware + the stack's
+    /// TP/SP sharding via the parallel Eq. 1.  The query length is
+    /// explicit (`s_q = 1` for plain decode; speculative/tree decode
+    /// lowers the threshold proportionally).
+    pub fn from_parallelism(
+        requested: KernelKind,
+        cfg: &ModelConfig,
+        hw: &HardwareSpec,
+        s_q: u64,
+        par: &ParallelismConfig,
+    ) -> Self {
+        KernelPolicy {
+            requested,
+            b_theta: parallel_batch_threshold(cfg, hw, s_q, par),
+            min_shared_len: 1,
+        }
+    }
+
     /// Derive B_theta from the model + hardware via Eq. 1.
+    #[deprecated(
+        note = "hard-codes s_q = 1 and ranks = 1; use from_parallelism so \
+                sharded stacks get the per-rank threshold"
+    )]
     pub fn from_cost_model(
         requested: KernelKind,
         cfg: &ModelConfig,
         hw: &HardwareSpec,
     ) -> Self {
-        KernelPolicy {
-            requested,
-            b_theta: batch_threshold(cfg, hw, 1),
-            min_shared_len: 1,
-        }
+        Self::from_parallelism(requested, cfg, hw, 1, &ParallelismConfig::single())
     }
 
     pub fn with_threshold(requested: KernelKind, b_theta: usize) -> Self {
@@ -89,14 +113,52 @@ mod tests {
         }
     }
 
+    /// The satellite pin: the explicit `single()` derivation reproduces
+    /// the paper's B_theta = 61 on Ascend, and the deprecated implicit
+    /// constructor delegates to it.
     #[test]
-    fn derived_threshold_matches_eq1() {
-        let p = KernelPolicy::from_cost_model(
+    fn single_parallelism_reproduces_eq1() {
+        let p = KernelPolicy::from_parallelism(
+            KernelKind::Typhoon,
+            &deepseek_v3(),
+            &ascend_npu(),
+            1,
+            &ParallelismConfig::single(),
+        );
+        assert_eq!(p.b_theta, 61);
+        #[allow(deprecated)]
+        let implicit = KernelPolicy::from_cost_model(
             KernelKind::Typhoon,
             &deepseek_v3(),
             &ascend_npu(),
         );
-        assert_eq!(p.b_theta, 61);
+        assert_eq!(implicit.b_theta, p.b_theta);
+        assert_eq!(implicit.min_shared_len, p.min_shared_len);
+    }
+
+    /// The per-rank derivation reaches the sharded regimes: realistic
+    /// TP/SP reproduce the single-device value, deep TP collapses it.
+    #[test]
+    fn sharded_derivation_tracks_per_rank_eq1() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let tp4sp4 = KernelPolicy::from_parallelism(
+            KernelKind::Typhoon,
+            &cfg,
+            &hw,
+            1,
+            &ParallelismConfig { tp: 4, sp: 4 },
+        );
+        assert_eq!(tp4sp4.b_theta, 61, "paper deployment keeps Eq. 1");
+        let deep = KernelPolicy::from_parallelism(
+            KernelKind::Typhoon,
+            &cfg,
+            &hw,
+            1,
+            &ParallelismConfig { tp: 128, sp: 1 },
+        );
+        assert_eq!(deep.b_theta, 1, "latent replication regime");
+        assert_eq!(deep.select(1, 4096), KernelKind::Typhoon);
     }
 
     /// Per-group semantics: one policy instance makes independent
@@ -104,8 +166,10 @@ mod tests {
     #[test]
     fn per_group_decisions_independent() {
         let p = KernelPolicy::with_threshold(KernelKind::Typhoon, 61);
-        let picks: Vec<_> =
-            [(100usize, 4096usize), (8, 4096), (61, 0)].iter().map(|&(b, s)| p.select(b, s)).collect();
+        let picks: Vec<_> = [(100usize, 4096usize), (8, 4096), (61, 0)]
+            .iter()
+            .map(|&(b, s)| p.select(b, s))
+            .collect();
         assert_eq!(
             picks,
             vec![KernelKind::Typhoon, KernelKind::Absorb, KernelKind::Absorb]

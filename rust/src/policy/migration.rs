@@ -1,0 +1,74 @@
+//! Migrate-vs-spill: when a prefix group's home replica is pressured,
+//! move the group's pages to a peer (one interconnect stream, after
+//! which the whole overflow lands on a replica that already holds the
+//! prefix) or keep spilling single requests around the home (each
+//! fresh spill target re-prefills the prefix and serves the group at
+//! fragment occupancy).
+//!
+//! The rule is cost-driven: migrate exactly when the modeled page
+//! transfer is cheaper than the modeled re-prefill the spill stream
+//! would trigger on its target.  This replaces PR 3's fixed
+//! `spill_queue_depth`-only behavior — the *trigger* is owned by
+//! `SloAdmission`; this policy owns the *response*.
+//!
+//! The comparison prices the *deployment-real* costs.  Under the
+//! paper's decode-only throughput protocol (`include_prefill = false`)
+//! neither side is debited to goodput — prefill never is, and an
+//! inbound transfer lands on the destination clock as wall time, not
+//! decode time — so in that protocol the rule's goodput effect comes
+//! entirely from keeping the re-homed group's overflow concentrated
+//! (one typhoon-eligible group instead of scattered absorb-fallback
+//! fragments), which the `cluster` artifact asserts directly.
+
+/// What the router should do with a pressured prefix group's overflow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationDecision {
+    /// Route this one request around the home; pages stay put.
+    Spill,
+    /// Re-home the group's pages to the peer, then route there.
+    Migrate,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigrationPolicy {
+    /// Master switch: disabled reproduces the PR 3 spill-only router
+    /// bit-for-bit (the reduction tests pin this).
+    pub enabled: bool,
+}
+
+impl MigrationPolicy {
+    pub fn new(enabled: bool) -> Self {
+        MigrationPolicy { enabled }
+    }
+
+    /// The cost rule: migrate when streaming the pages beats
+    /// recomputing the prefix at the spill target.  Ties spill (the
+    /// cheaper-to-undo action).
+    pub fn decide(&self, transfer_seconds: f64, reprefill_seconds: f64) -> MigrationDecision {
+        if self.enabled && transfer_seconds < reprefill_seconds {
+            MigrationDecision::Migrate
+        } else {
+            MigrationDecision::Spill
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_always_spills() {
+        let p = MigrationPolicy::new(false);
+        assert_eq!(p.decide(0.0, 1.0), MigrationDecision::Spill);
+        assert_eq!(p.decide(1.0, 0.0), MigrationDecision::Spill);
+    }
+
+    #[test]
+    fn enabled_follows_the_cost_comparison() {
+        let p = MigrationPolicy::new(true);
+        assert_eq!(p.decide(0.001, 0.1), MigrationDecision::Migrate);
+        assert_eq!(p.decide(0.1, 0.001), MigrationDecision::Spill);
+        assert_eq!(p.decide(0.5, 0.5), MigrationDecision::Spill, "ties spill");
+    }
+}

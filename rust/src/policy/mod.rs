@@ -1,0 +1,270 @@
+//! The unified cost-driven decision layer (DESIGN.md §12).
+//!
+//! Every runtime decision the serving stack makes — which kernel a
+//! prefix group runs (Eq. 1 fall-back), whether a pressured group's
+//! overflow spills or its pages migrate, and *when* a replica counts
+//! as pressured at all — lives here, priced by the same cost model the
+//! engines execute:
+//!
+//! * [`KernelPolicy`] — the per-group naive/absorb fall-back, with a
+//!   **parallelism-aware** B_theta derived per rank
+//!   (`costmodel::parallel::parallel_batch_threshold`);
+//! * [`MigrationPolicy`] — migrate-vs-spill, comparing the modeled
+//!   interconnect transfer of a group's pages against the modeled
+//!   re-prefill a spill stream triggers;
+//! * [`SloAdmission`] — spill/migrate pressure thresholds derived from
+//!   a TTFT target and observed arrival/service rates instead of a
+//!   fixed queue-depth constant.
+//!
+//! [`PolicyEngine`] bundles the three with a memoized [`CostTable`]
+//! and per-quantity memos, so a router probing costs on every arrival
+//! pays hash lookups, not cost-model evaluations.  Consistency with
+//! the engines is pinned by tests: the analytic per-rank threshold
+//! brackets the `CostTable` crossover, and the prefill pricing is the
+//! exact `SimEngine::prepare_shared` formulation.
+
+pub mod admission;
+pub mod kernel;
+pub mod migration;
+
+use std::collections::HashMap;
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::costmodel::exec_time::component_time;
+use crate::costmodel::parallel::ParallelismConfig;
+use crate::costmodel::table::CostTable;
+use crate::costmodel::transfer::{prefix_transfer_seconds, shared_prefill_seconds};
+
+pub use admission::SloAdmission;
+pub use kernel::KernelPolicy;
+pub use migration::{MigrationDecision, MigrationPolicy};
+
+/// The decision registry one serving stack (or cluster router) owns.
+#[derive(Debug)]
+pub struct PolicyEngine {
+    hw: HardwareSpec,
+    par: ParallelismConfig,
+    /// Memoized Table-1 pricing shared by every decision that needs a
+    /// shared-stage cost (same exactness discipline as the engines).
+    table: CostTable,
+    pub kernel: KernelPolicy,
+    pub migration: MigrationPolicy,
+    pub admission: SloAdmission,
+    /// Memoized modeled prefill seconds per shared length.
+    prefill_memo: HashMap<u64, f64>,
+    /// Memoized modeled transfer seconds per (tokens, expanded).
+    transfer_memo: HashMap<(u64, bool), f64>,
+}
+
+impl PolicyEngine {
+    /// Build the registry for a stack running `requested` under
+    /// (TP, SP) sharding: the kernel threshold is the per-rank Eq. 1;
+    /// migration and SLO admission start disabled (the PR 3 behavior)
+    /// until configured via the public fields.
+    pub fn new(
+        model: ModelConfig,
+        hw: HardwareSpec,
+        requested: KernelKind,
+        par: ParallelismConfig,
+    ) -> Self {
+        let kernel = KernelPolicy::from_parallelism(requested, &model, &hw, 1, &par);
+        PolicyEngine {
+            table: CostTable::with_parallelism(model, par),
+            hw,
+            par,
+            kernel,
+            migration: MigrationPolicy::default(),
+            admission: SloAdmission::default(),
+            prefill_memo: HashMap::new(),
+            transfer_memo: HashMap::new(),
+        }
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        self.table.model()
+    }
+
+    pub fn parallelism(&self) -> ParallelismConfig {
+        self.par
+    }
+
+    /// The per-group kernel decision (delegates to the fall-back rule).
+    pub fn select(&self, occupancy: usize, shared_len: usize) -> KernelKind {
+        self.kernel.select(occupancy, shared_len)
+    }
+
+    /// Modeled per-rank seconds of one group's shared stage at a given
+    /// occupancy — the quantity Eq. 1 trades off, priced through the
+    /// shared memoized `CostTable`.  The kernel decision itself uses
+    /// the precomputed threshold; this probe is the pricing surface
+    /// follow-up policies (replica autoscaling, migration batching —
+    /// see ROADMAP) query, and tests pin it against the crossover.
+    pub fn shared_stage_seconds(
+        &mut self,
+        kernel: KernelKind,
+        occupancy: u64,
+        shared_len: u64,
+    ) -> f64 {
+        let c = self.table.cost(kernel, occupancy, shared_len, 0);
+        [c.shared, c.proj_kvb1, c.proj_kvb2, c.combine]
+            .iter()
+            .map(|comp| component_time(comp, &self.hw))
+            .sum()
+    }
+
+    /// Memoized modeled seconds to stream a prefix group's pages to a
+    /// peer replica over the interconnect (rank pairs stream their
+    /// shards concurrently, mirroring the `/ ranks` sharding of the
+    /// competing re-prefill price).
+    pub fn prefix_transfer_seconds(&mut self, tokens: usize, expanded: bool) -> f64 {
+        let key = (tokens as u64, expanded);
+        if let Some(&s) = self.transfer_memo.get(&key) {
+            return s;
+        }
+        let s =
+            prefix_transfer_seconds(self.table.model(), &self.hw, tokens, expanded, &self.par);
+        self.transfer_memo.insert(key, s);
+        s
+    }
+
+    /// Memoized modeled seconds to rebuild a shared prefix from
+    /// scratch on this stack (what a spill stream triggers on a fresh
+    /// target).
+    pub fn shared_prefill_seconds(&mut self, tokens: usize) -> f64 {
+        let key = tokens as u64;
+        if let Some(&s) = self.prefill_memo.get(&key) {
+            return s;
+        }
+        let s = shared_prefill_seconds(self.table.model(), &self.hw, tokens, self.par.ranks());
+        self.prefill_memo.insert(key, s);
+        s
+    }
+
+    /// The migrate-vs-spill call for one pressured prefix group.
+    /// `dst_hosts_pages` says whether the candidate peer already holds
+    /// the group's pages (from an earlier spill): then both priced
+    /// costs are sunk — no transfer crosses the wire and no re-prefill
+    /// would run — and re-homing is pure consolidation, so migration
+    /// wins outright; the cost comparison only arbitrates fresh
+    /// destinations.
+    pub fn migrate_or_spill(
+        &mut self,
+        tokens: usize,
+        expanded: bool,
+        dst_hosts_pages: bool,
+    ) -> MigrationDecision {
+        if !self.migration.enabled {
+            return MigrationDecision::Spill;
+        }
+        if dst_hosts_pages {
+            return MigrationDecision::Migrate;
+        }
+        let transfer = self.prefix_transfer_seconds(tokens, expanded);
+        let reprefill = self.shared_prefill_seconds(tokens);
+        self.migration.decide(transfer, reprefill)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+    use crate::costmodel::transfer;
+
+    fn engine() -> PolicyEngine {
+        PolicyEngine::new(
+            deepseek_v3(),
+            ascend_npu(),
+            KernelKind::Typhoon,
+            ParallelismConfig::single(),
+        )
+    }
+
+    #[test]
+    fn registry_derives_eq1_and_selects_per_group() {
+        let p = engine();
+        assert_eq!(p.kernel.b_theta, 61);
+        assert_eq!(p.select(100, 4096), KernelKind::Typhoon);
+        assert_eq!(p.select(8, 4096), KernelKind::Absorb);
+    }
+
+    #[test]
+    fn migrate_or_spill_disabled_then_cost_driven() {
+        let mut p = engine();
+        assert_eq!(p.migrate_or_spill(26472, true, false), MigrationDecision::Spill);
+        p.migration.enabled = true;
+        assert_eq!(
+            p.migrate_or_spill(26472, true, false),
+            MigrationDecision::Migrate,
+            "paper-scale prefix: transfer beats re-prefill"
+        );
+        // Memoized second call agrees.
+        assert_eq!(p.migrate_or_spill(26472, true, false), MigrationDecision::Migrate);
+    }
+
+    /// Residency short-circuits the cost comparison: a peer that
+    /// already holds the pages makes re-homing free even when a fresh
+    /// transfer would lose to the re-prefill (slow interconnect).
+    #[test]
+    fn resident_destination_migrates_even_on_a_slow_link() {
+        let mut hw = ascend_npu();
+        hw.interconnect_bw = 1e-3; // fresh transfers always lose
+        let mut p = PolicyEngine::new(
+            deepseek_v3(),
+            hw,
+            KernelKind::Typhoon,
+            ParallelismConfig::single(),
+        );
+        p.migration.enabled = true;
+        assert_eq!(p.migrate_or_spill(26472, true, false), MigrationDecision::Spill);
+        assert_eq!(p.migrate_or_spill(26472, true, true), MigrationDecision::Migrate);
+    }
+
+    #[test]
+    fn memoized_pricing_matches_direct() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let mut p = engine();
+        let a = p.prefix_transfer_seconds(7069, false);
+        assert_eq!(
+            a.to_bits(),
+            transfer::prefix_transfer_seconds(
+                &cfg,
+                &hw,
+                7069,
+                false,
+                &ParallelismConfig::single()
+            )
+            .to_bits()
+        );
+        assert_eq!(a.to_bits(), p.prefix_transfer_seconds(7069, false).to_bits());
+        let b = p.shared_prefill_seconds(7069);
+        assert_eq!(
+            b.to_bits(),
+            transfer::shared_prefill_seconds(&cfg, &hw, 7069, 1).to_bits()
+        );
+        assert_eq!(b.to_bits(), p.shared_prefill_seconds(7069).to_bits());
+    }
+
+    /// The shared-stage pricing goes through the memoized table and
+    /// reflects the Eq. 1 trade-off: at the threshold occupancy the
+    /// typhoon stage stops losing to absorb.
+    #[test]
+    fn shared_stage_pricing_reflects_the_crossover() {
+        let mut p = engine();
+        let b = p.kernel.b_theta as u64;
+        let t_above = p.shared_stage_seconds(KernelKind::Typhoon, b + 1, 4096);
+        let a_above = p.shared_stage_seconds(KernelKind::Absorb, b + 1, 4096);
+        assert!(t_above <= a_above, "above B_theta typhoon wins: {t_above} vs {a_above}");
+        let t_below = p.shared_stage_seconds(KernelKind::Typhoon, b / 2, 4096);
+        let a_below = p.shared_stage_seconds(KernelKind::Absorb, b / 2, 4096);
+        assert!(a_below < t_below, "below B_theta absorb wins");
+    }
+
+    #[test]
+    fn slo_admission_defaults_off() {
+        let p = engine();
+        assert_eq!(p.admission.spill_depth(100.0, 100.0, 13), 13);
+    }
+}

@@ -25,13 +25,14 @@
 
 use std::collections::{HashMap, HashSet};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 use crate::coordinator::Coordinator;
 use crate::costmodel::parallel::ParallelismConfig;
 use crate::kvcache::PrefixId;
 use crate::metrics::Metrics;
+use crate::policy::{MigrationDecision, PolicyEngine};
 use crate::util::stats::{p50, p95, p99};
 use crate::workload::tenants::{tenant_set, timed_arrivals, TenantSpec, TimedArrival};
 
@@ -109,8 +110,20 @@ pub struct ClusterParams {
     /// default, matching the paper's throughput protocol).
     pub include_prefill: bool,
     /// Prefix-affinity spill threshold: abandon stickiness for one
-    /// request when the home replica's queue depth reaches this.
+    /// request when the home replica's queue depth reaches this.  When
+    /// `slo_ttft` is set the threshold is instead derived per arrival
+    /// from the TTFT target and observed rates (`policy::SloAdmission`);
+    /// this constant stays the fallback before rates are observable.
     pub spill_queue_depth: usize,
+    /// Enable cost-driven prefix migration: a pressured home re-homes
+    /// the whole group's pages to the least-loaded peer (modeled
+    /// interconnect transfer, no re-prefill) when that beats spilling
+    /// the overflow one request at a time.  Off reproduces the PR 3
+    /// spill-only router bit-for-bit.
+    pub migrate: bool,
+    /// TTFT target in seconds for SLO-driven admission; `None` keeps
+    /// the fixed `spill_queue_depth` trigger.
+    pub slo_ttft: Option<f64>,
 }
 
 impl ClusterParams {
@@ -138,6 +151,8 @@ impl ClusterParams {
             seed: 42,
             include_prefill: false,
             spill_queue_depth: (2 * batch).max(1),
+            migrate: false,
+            slo_ttft: None,
         }
     }
 }
@@ -148,11 +163,18 @@ struct Replica {
     coord: Coordinator<SimEngine>,
     /// Tenant -> prefix group registered on this replica (pages held).
     prefix_of: HashMap<usize, PrefixId>,
+    /// Tenants whose group arrived here via migration import (adopted
+    /// pages, never locally prefilled).
+    imported: HashSet<usize>,
+    /// Prefix copies retired by an outbound migration (released once
+    /// their last sequence drains) — kept for the page audit.
+    retired: Vec<(usize, PrefixId)>,
     /// Requests routed here.
     routed: u64,
 }
 
-/// Router state (policy + stickiness bookkeeping).
+/// Router state (stickiness + spill/migration bookkeeping; the
+/// decisions themselves live in `policy::PolicyEngine`).
 struct Router {
     policy: RouterPolicy,
     rr_next: usize,
@@ -160,6 +182,12 @@ struct Router {
     home: HashMap<usize, usize>,
     spills: u64,
     spilled: HashSet<usize>,
+    /// Tenants spilled since their last migration — the escape hatch
+    /// the one-replica page audit allows (a re-homed group fragments
+    /// again only through a recorded spill).
+    spilled_since_migration: HashSet<usize>,
+    migrations: u64,
+    migrated: HashSet<usize>,
 }
 
 impl Router {
@@ -170,6 +198,9 @@ impl Router {
             home: HashMap::new(),
             spills: 0,
             spilled: HashSet::new(),
+            spilled_since_migration: HashSet::new(),
+            migrations: 0,
+            migrated: HashSet::new(),
         }
     }
 
@@ -195,53 +226,21 @@ impl Router {
         }
         best.expect("at least one candidate replica")
     }
+}
 
-    /// Pick the replica for one arrival, probing replica queue depth,
-    /// load and KV headroom.
-    fn route(
-        &mut self,
-        tenant: usize,
-        context_len: usize,
-        replicas: &[Replica],
-        spill_queue_depth: usize,
-    ) -> usize {
-        match self.policy {
-            RouterPolicy::RoundRobin => {
-                let r = self.rr_next % replicas.len();
-                self.rr_next += 1;
-                r
-            }
-            RouterPolicy::LeastLoaded => Self::least_loaded(replicas),
-            RouterPolicy::PrefixAffinity => match self.home.get(&tenant).copied() {
-                None => {
-                    // First sighting: adopt the least-loaded replica as
-                    // the group's home (it will hold the pages).
-                    let r = Self::least_loaded(replicas);
-                    self.home.insert(tenant, r);
-                    r
-                }
-                Some(home) => {
-                    let h = &replicas[home].coord;
-                    let pressured = h.queued() >= spill_queue_depth
-                        || !h.can_admit_now(context_len);
-                    if pressured && replicas.len() > 1 {
-                        // Spill this one request around the pressured
-                        // home — the group's pages stay where they are,
-                        // and the spill is recorded for the invariant
-                        // audit (a group on two replicas implies a
-                        // recorded spill).
-                        let alt = Self::least_loaded_except(replicas, Some(home));
-                        if replicas[alt].coord.load() < h.load() {
-                            self.spills += 1;
-                            self.spilled.insert(tenant);
-                            return alt;
-                        }
-                    }
-                    home
-                }
-            },
-        }
-    }
+/// Audit record of one prefix migration.
+#[derive(Clone, Debug)]
+pub struct MigrationEvent {
+    pub tenant: usize,
+    pub from: usize,
+    pub to: usize,
+    /// Modeled interconnect seconds charged to the destination clock
+    /// (0 when an earlier spill already paged the group there).
+    pub transfer_seconds: f64,
+    /// Destination `shared_prefills` before/after adoption.  Equal —
+    /// or the destination re-prefilled, which the fuzz audit forbids.
+    pub dst_prefills_before: u64,
+    pub dst_prefills_after: u64,
 }
 
 /// Per-replica slice of a finished cluster run.
@@ -259,6 +258,8 @@ pub struct ReplicaReport {
     pub preemptions: u64,
     /// Prefix groups hosted (pages held) on this replica.
     pub prefix_groups: usize,
+    /// Prefix groups adopted via migration import (no local prefill).
+    pub prefix_imports: u64,
     /// Requests the router sent here.
     pub routed: u64,
     /// The replica's final clock (arrival-to-drain span).
@@ -288,6 +289,11 @@ pub struct ClusterReport {
     pub tpot_p99: f64,
     /// Prefix-affinity requests routed off their home replica.
     pub spills: u64,
+    /// Prefix groups re-homed by the migrate-vs-spill rule.
+    pub migrations: u64,
+    /// Modeled interconnect seconds spent moving pages (fleet total;
+    /// wall time on the receiving clocks, never decode time).
+    pub transfer_seconds: f64,
 }
 
 /// The event-driven N-replica serving simulation.
@@ -298,6 +304,10 @@ pub struct ClusterSim {
     next_arrival: usize,
     replicas: Vec<Replica>,
     router: Router,
+    /// The unified decision layer: kernel fall-back pricing, the
+    /// migrate-vs-spill rule, and SLO-driven admission thresholds.
+    policy: PolicyEngine,
+    migration_log: Vec<MigrationEvent>,
 }
 
 impl ClusterSim {
@@ -317,6 +327,20 @@ impl ClusterSim {
                 "TP {} must divide the model's {} attention heads",
                 par.tp,
                 params.model.n_heads
+            );
+        }
+        if let Some(t) = params.slo_ttft {
+            if !t.is_finite() || t <= 0.0 {
+                bail!("TTFT target must be positive seconds, got {t}");
+            }
+        }
+        if (params.migrate || params.slo_ttft.is_some())
+            && params.router != RouterPolicy::PrefixAffinity
+        {
+            bail!(
+                "migration / SLO admission act on prefix-affinity pressure \
+                 relief; router {} never consults them",
+                params.router.as_str()
             );
         }
         // (A non-positive arrival rate is rejected by `timed_arrivals`.)
@@ -341,8 +365,22 @@ impl ClusterSim {
                 params.include_prefill,
                 params.parallelism,
             )?;
-            replicas.push(Replica { coord, prefix_of: HashMap::new(), routed: 0 });
+            replicas.push(Replica {
+                coord,
+                prefix_of: HashMap::new(),
+                imported: HashSet::new(),
+                retired: Vec::new(),
+                routed: 0,
+            });
         }
+        let mut policy = PolicyEngine::new(
+            params.model.clone(),
+            params.hw.clone(),
+            params.kernel,
+            params.parallelism,
+        );
+        policy.migration.enabled = params.migrate;
+        policy.admission.ttft_target = params.slo_ttft;
         Ok(ClusterSim {
             params: params.clone(),
             tenants,
@@ -350,6 +388,8 @@ impl ClusterSim {
             next_arrival: 0,
             replicas,
             router: Router::new(params.router),
+            policy,
+            migration_log: Vec::new(),
         })
     }
 
@@ -380,6 +420,41 @@ impl ClusterSim {
     /// Did this tenant ever spill off its home replica?
     pub fn tenant_spilled(&self, tenant: usize) -> bool {
         self.router.spilled.contains(&tenant)
+    }
+
+    /// Prefix groups re-homed by the migrate-vs-spill rule.
+    pub fn migrations(&self) -> u64 {
+        self.router.migrations
+    }
+
+    /// Was this tenant's group ever migrated?
+    pub fn tenant_migrated(&self, tenant: usize) -> bool {
+        self.router.migrated.contains(&tenant)
+    }
+
+    /// Did this tenant spill after its most recent migration?  (The
+    /// only way a migrated group legitimately fragments again.)
+    pub fn tenant_spilled_since_migration(&self, tenant: usize) -> bool {
+        self.router.spilled_since_migration.contains(&tenant)
+    }
+
+    /// Per-migration audit records (destination prefill counters,
+    /// modeled transfer time).
+    pub fn migration_log(&self) -> &[MigrationEvent] {
+        &self.migration_log
+    }
+
+    /// Did this replica adopt the tenant's group via migration import?
+    pub fn tenant_imported(&self, replica: usize, tenant: usize) -> bool {
+        self.replicas[replica].imported.contains(&tenant)
+    }
+
+    /// Every prefix copy retired by an outbound migration whose pages
+    /// have actually been released (true once their groups drained).
+    pub fn retired_copies_released(&self) -> bool {
+        self.replicas
+            .iter()
+            .all(|r| r.retired.iter().all(|&(_, pid)| r.coord.kv.prefix(pid).is_none()))
     }
 
     /// Number of replicas holding this tenant's prefix pages.
@@ -421,12 +496,7 @@ impl ClusterSim {
             if due {
                 let a = self.arrivals[self.next_arrival].clone();
                 self.next_arrival += 1;
-                let r = self.router.route(
-                    a.tenant,
-                    a.request.prompt_tokens,
-                    &self.replicas,
-                    self.params.spill_queue_depth,
-                );
+                let r = self.route_arrival(&a)?;
                 let rep = &mut self.replicas[r];
                 rep.coord.advance_clock(a.at);
                 let pid = match rep.prefix_of.get(&a.tenant) {
@@ -457,6 +527,156 @@ impl ClusterSim {
         Ok(false)
     }
 
+    /// Pick the replica for one arrival, probing replica queue depth,
+    /// load and KV headroom; prefix-affinity pressure relief goes
+    /// through the policy layer's migrate-vs-spill rule.
+    fn route_arrival(&mut self, a: &TimedArrival) -> Result<usize> {
+        match self.router.policy {
+            RouterPolicy::RoundRobin => {
+                let r = self.router.rr_next % self.replicas.len();
+                self.router.rr_next += 1;
+                Ok(r)
+            }
+            RouterPolicy::LeastLoaded => Ok(Router::least_loaded(&self.replicas)),
+            RouterPolicy::PrefixAffinity => self.route_affinity(a),
+        }
+    }
+
+    fn route_affinity(&mut self, a: &TimedArrival) -> Result<usize> {
+        let tenant = a.tenant;
+        let Some(home) = self.router.home.get(&tenant).copied() else {
+            // First sighting: adopt the least-loaded replica as the
+            // group's home (it will hold the pages).
+            let r = Router::least_loaded(&self.replicas);
+            self.router.home.insert(tenant, r);
+            return Ok(r);
+        };
+        let h = &self.replicas[home].coord;
+        // Pressure threshold: SLO-derived when a TTFT target is set,
+        // the fixed queue-depth constant otherwise (bit-identical to
+        // the pre-SLO router).
+        let depth = if self.policy.admission.ttft_target.is_some() {
+            self.policy.admission.spill_depth(
+                h.service_rate(),
+                self.observed_arrival_rate(),
+                self.params.spill_queue_depth,
+            )
+        } else {
+            self.params.spill_queue_depth
+        };
+        let pressured =
+            h.queued() >= depth || !h.can_admit_now(a.request.prompt_tokens);
+        if pressured && self.replicas.len() > 1 {
+            let alt = Router::least_loaded_except(&self.replicas, Some(home));
+            if self.replicas[alt].coord.load() < self.replicas[home].coord.load() {
+                let len = self.tenants[tenant].prompt_tokens;
+                let expanded = self.replicas[home]
+                    .prefix_of
+                    .get(&tenant)
+                    .and_then(|&p| self.replicas[home].coord.kv.prefix(p))
+                    .is_some_and(|p| p.expanded);
+                // Residency at the peer (an earlier spill re-prefilled
+                // it there) makes re-homing free — the policy layer
+                // short-circuits the cost comparison for that case, so
+                // the decision matches what `migrate_group` will
+                // actually charge.
+                let alt_hosts = self.replicas[alt].prefix_of.contains_key(&tenant);
+                return match self.policy.migrate_or_spill(len, expanded, alt_hosts) {
+                    MigrationDecision::Migrate => {
+                        // Re-home the whole group: the overflow (and
+                        // everything after it) lands on a replica that
+                        // now holds the pages.
+                        self.migrate_group(tenant, home, alt, a.at)?;
+                        Ok(alt)
+                    }
+                    MigrationDecision::Spill => {
+                        // Route this one request around the pressured
+                        // home — the pages stay where they are, and the
+                        // spill is recorded for the invariant audit (a
+                        // group on two replicas implies a recorded
+                        // spill).
+                        self.router.spills += 1;
+                        self.router.spilled.insert(tenant);
+                        self.router.spilled_since_migration.insert(tenant);
+                        Ok(alt)
+                    }
+                };
+            }
+        }
+        Ok(home)
+    }
+
+    /// Observed fleet arrival rate over the delivered stream so far,
+    /// per replica (the admission policy's lambda-hat).  Infinite
+    /// under the batch protocol (everything at t = 0) — the admission
+    /// policy falls back to the fixed depth then.
+    fn observed_arrival_rate(&self) -> f64 {
+        if self.next_arrival == 0 {
+            return 0.0;
+        }
+        let span = self.arrivals[self.next_arrival - 1].at;
+        if span > 0.0 {
+            self.next_arrival as f64 / span / self.replicas.len() as f64
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Re-home `tenant`'s prefix group from `src` to `dst`: the
+    /// destination adopts the pages over the interconnect (no
+    /// re-prefill — the audit log records its prefill counter around
+    /// the adoption), every other replica's copy is retired (released
+    /// the moment its last sequence drains), and the router's
+    /// stickiness follows the pages.
+    fn migrate_group(&mut self, tenant: usize, src: usize, dst: usize, at: f64) -> Result<()> {
+        let src_pid = *self.replicas[src]
+            .prefix_of
+            .get(&tenant)
+            .ok_or_else(|| anyhow!("migration source does not host tenant {tenant}"))?;
+        let before = self.replicas[dst].coord.metrics.shared_prefills;
+        let transfer = if self.replicas[dst].prefix_of.contains_key(&tenant) {
+            // An earlier spill already paged the group here: adopt the
+            // resident copy, nothing crosses the interconnect (and
+            // nothing needs exporting).
+            0.0
+        } else {
+            let export = self.replicas[src].coord.kv.export_prefix(src_pid)?;
+            let pid = self.replicas[dst].coord.import_prefix_group(&export)?;
+            let secs = self
+                .policy
+                .prefix_transfer_seconds(export.tokens.len(), export.expanded);
+            let rep = &mut self.replicas[dst];
+            rep.prefix_of.insert(tenant, pid);
+            rep.imported.insert(tenant);
+            rep.coord.advance_clock(at);
+            rep.coord.charge_transfer(secs);
+            secs
+        };
+        let after = self.replicas[dst].coord.metrics.shared_prefills;
+        for (i, rep) in self.replicas.iter_mut().enumerate() {
+            if i == dst {
+                continue;
+            }
+            if let Some(pid) = rep.prefix_of.remove(&tenant) {
+                rep.coord.retire_prefix_group(pid)?;
+                rep.retired.push((tenant, pid));
+            }
+        }
+        self.router.home.insert(tenant, dst);
+        self.router.migrations += 1;
+        self.router.migrated.insert(tenant);
+        self.router.spilled_since_migration.remove(&tenant);
+        self.migration_log.push(MigrationEvent {
+            tenant,
+            from: src,
+            to: dst,
+            transfer_seconds: transfer,
+            dst_prefills_before: before,
+            dst_prefills_after: after,
+        });
+        Ok(())
+    }
+
     /// Drive arrivals and replicas until everything drains.
     pub fn run(&mut self) -> Result<()> {
         while self.step_event()? {}
@@ -472,11 +692,13 @@ impl ClusterSim {
         let mut completed = 0u64;
         let mut decode_seconds = 0.0f64;
         let mut makespan = 0.0f64;
+        let mut transfer_seconds = 0.0f64;
         for r in &self.replicas {
             let m: &Metrics = &r.coord.metrics;
             tokens += m.tokens_generated;
             completed += m.requests_completed;
             decode_seconds += m.decode_seconds;
+            transfer_seconds += m.transfer_seconds;
             makespan = makespan.max(r.coord.now());
             ttft.extend_from_slice(m.ttft.values());
             tpot.extend_from_slice(m.tpot.values());
@@ -492,6 +714,7 @@ impl ClusterSim {
                 mixed_iters: m.mixed_iters,
                 preemptions: m.preemptions,
                 prefix_groups: r.prefix_of.len(),
+                prefix_imports: m.prefix_imports,
                 routed: r.routed,
                 final_clock: r.coord.now(),
             });
@@ -516,6 +739,8 @@ impl ClusterSim {
             tpot_p95: p95(&tpot),
             tpot_p99: p99(&tpot),
             spills: self.router.spills,
+            migrations: self.router.migrations,
+            transfer_seconds,
         }
     }
 }
@@ -632,6 +857,7 @@ mod tests {
     fn router_policy_parse_roundtrip() {
         for p in RouterPolicy::all() {
             assert_eq!(RouterPolicy::parse(p.as_str()).unwrap(), p);
+            assert_eq!(RouterPolicy::parse(p.as_str()).unwrap().as_str(), p.as_str());
         }
         assert_eq!(RouterPolicy::parse("rr").unwrap(), RouterPolicy::RoundRobin);
         assert_eq!(RouterPolicy::parse("ll").unwrap(), RouterPolicy::LeastLoaded);
@@ -639,7 +865,128 @@ mod tests {
             RouterPolicy::parse("affinity").unwrap(),
             RouterPolicy::PrefixAffinity
         );
-        assert!(RouterPolicy::parse("random").is_err());
+        let err = RouterPolicy::parse("random").unwrap_err().to_string();
+        assert!(
+            err.contains("round-robin|least-loaded|prefix-affinity"),
+            "{err}"
+        );
+        assert!(RouterPolicy::parse("RR").is_err(), "matching is exact");
+    }
+
+    /// A pressured single-tenant fleet with migration enabled re-homes
+    /// the hot group instead of scattering requests; the adoption never
+    /// re-prefills and retired copies drain to zero replicas.
+    #[test]
+    fn migration_rehomes_hot_group_without_reprefill() {
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            2,
+            RouterPolicy::PrefixAffinity,
+            8,
+            1,
+            0.0,
+        );
+        p.total_requests = 32;
+        p.spill_queue_depth = 1; // queue depth 1 already counts as pressure
+        p.migrate = true;
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+        assert!(sim.migrations() > 0, "tight threshold must trigger migration");
+        assert!(sim.tenant_migrated(0));
+        for e in sim.migration_log() {
+            assert_eq!(
+                e.dst_prefills_before, e.dst_prefills_after,
+                "destination must adopt, never re-prefill"
+            );
+        }
+        assert!(sim.retired_copies_released(), "drained copies release their pages");
+        if !sim.tenant_spilled_since_migration(0) {
+            assert_eq!(sim.replicas_hosting(0), 1, "pages on exactly one replica");
+        }
+        let report = sim.report();
+        assert_eq!(report.requests_completed, 32, "migrated group still serves");
+        assert_eq!(report.migrations, sim.migrations());
+        assert!(report.transfer_seconds > 0.0, "page moves charge the interconnect");
+    }
+
+    /// Migration machinery that never fires changes nothing: with a
+    /// loose pressure threshold the migrate-enabled run is
+    /// bit-identical to the spill-only run (the PR 3 reduction pin).
+    #[test]
+    fn migrate_flag_without_pressure_is_bit_identical() {
+        let p = quick_params(3, RouterPolicy::PrefixAffinity); // loose depth
+        let mut a = ClusterSim::new(&p).unwrap();
+        a.run().unwrap();
+        let mut m = p.clone();
+        m.migrate = true;
+        let mut b = ClusterSim::new(&m).unwrap();
+        b.run().unwrap();
+        assert_eq!(a.spills(), 0, "loose threshold never pressures");
+        assert_eq!(b.migrations(), 0);
+        let (ra, rb) = (a.report(), b.report());
+        assert_eq!(ra.decode_seconds.to_bits(), rb.decode_seconds.to_bits());
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+        assert_eq!(ra.tokens, rb.tokens);
+    }
+
+    /// A slow interconnect confines migration to free re-homes: fresh
+    /// destinations lose the cost comparison (their overflow spills
+    /// instead), so every recorded migration is a residency
+    /// consolidation with zero transfer seconds.
+    #[test]
+    fn slow_interconnect_migrations_are_free_consolidations_only() {
+        let mut p = quick_params(3, RouterPolicy::PrefixAffinity);
+        p.spill_queue_depth = 1;
+        p.migrate = true;
+        p.hw.interconnect_bw = 1e-3; // fresh transfers never pay off
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+        assert!(sim.spills() > 0, "fresh destinations must spill on a slow link");
+        for e in sim.migration_log() {
+            assert_eq!(e.transfer_seconds, 0.0, "only resident peers re-home");
+        }
+        assert_eq!(sim.report().transfer_seconds, 0.0);
+    }
+
+    /// SLO-driven admission: a tight TTFT target spills under load that
+    /// a loose fixed queue-depth threshold would absorb.
+    #[test]
+    fn slo_target_tightens_the_spill_threshold() {
+        let mut p = quick_params(2, RouterPolicy::PrefixAffinity);
+        p.tenants = 1;
+        p.arrival_rate = Some(500.0);
+        p.spill_queue_depth = 10_000; // fixed trigger never fires
+        let mut fixed = ClusterSim::new(&p).unwrap();
+        fixed.run().unwrap();
+        assert_eq!(fixed.spills(), 0, "loose fixed threshold never spills");
+
+        p.slo_ttft = Some(1e-6);
+        let mut slo = ClusterSim::new(&p).unwrap();
+        slo.run().unwrap();
+        assert!(
+            slo.spills() > 0,
+            "a tight TTFT target must shed load the fixed threshold ignored"
+        );
+    }
+
+    /// Nonsense TTFT targets are configuration errors, and
+    /// migration/SLO flags on routers that never consult them are
+    /// rejected instead of silently ignored.
+    #[test]
+    fn invalid_slo_target_rejected() {
+        let mut p = quick_params(1, RouterPolicy::PrefixAffinity);
+        p.slo_ttft = Some(0.0);
+        assert!(ClusterSim::new(&p).is_err());
+        p.slo_ttft = Some(f64::NAN);
+        assert!(ClusterSim::new(&p).is_err());
+
+        let mut p = quick_params(2, RouterPolicy::LeastLoaded);
+        p.migrate = true;
+        assert!(ClusterSim::new(&p).is_err(), "migrate needs prefix-affinity");
+        let mut p = quick_params(2, RouterPolicy::RoundRobin);
+        p.slo_ttft = Some(0.5);
+        assert!(ClusterSim::new(&p).is_err(), "slo-ttft needs prefix-affinity");
     }
 
     #[test]

@@ -10,14 +10,16 @@ pub mod sweep;
 pub mod tenancy;
 
 pub use cluster::{
-    run_cluster_experiment, ClusterParams, ClusterReport, ClusterSim, ReplicaReport, RouterPolicy,
+    run_cluster_experiment, ClusterParams, ClusterReport, ClusterSim, MigrationEvent,
+    ReplicaReport, RouterPolicy,
 };
 pub use e2e::{gpu_h800_calibrated, tgr_row, TgrEntry, TgrRow};
 pub use engine::SimEngine;
 pub use serving_sim::{run_experiment, run_kernel_comparison, SimParams, SimReport};
 pub use sweep::{
-    cluster_cells, run_cluster_sweep, run_throughput_sweep, throughput_cells, ClusterCell,
-    ClusterCellResult, SweepExecutor, ThroughputCell, ThroughputCellResult,
+    cluster_cells, cluster_row_configs, run_cluster_sweep, run_throughput_sweep,
+    throughput_cells, ClusterCell, ClusterCellResult, SweepExecutor, ThroughputCell,
+    ThroughputCellResult,
 };
 pub use tenancy::{
     run_tenant_comparison, run_tenant_experiment, run_tenant_experiment_with,

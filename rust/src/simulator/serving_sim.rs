@@ -8,7 +8,6 @@ use anyhow::Result;
 use crate::config::{HardwareSpec, KernelKind, ModelConfig, ServingConfig};
 use crate::coordinator::{Coordinator, KernelPolicy};
 use crate::costmodel::parallel::ParallelismConfig;
-use crate::costmodel::threshold::batch_threshold;
 use crate::kvcache::KvCacheManager;
 use crate::metrics::BreakdownTimers;
 use crate::workload::{Dataset, RequestGenerator, SystemPrompt};
@@ -90,8 +89,15 @@ pub fn run_experiment(
         kernel: params.kernel,
         ..Default::default()
     };
-    let b_theta = batch_threshold(&params.model, &params.hw, 1);
-    let policy = KernelPolicy::with_threshold(params.kernel, b_theta);
+    // Per-rank Eq. 1: the threshold follows the stack's TP/SP sharding
+    // (ranks = 1 reproduces the classic single-device value exactly).
+    let policy = KernelPolicy::from_parallelism(
+        params.kernel,
+        &params.model,
+        &params.hw,
+        1,
+        &params.parallelism,
+    );
     let kv = KvCacheManager::new(params.model.clone(), total_blocks, block_size);
     let mut engine = SimEngine::with_parallelism(
         params.model.clone(),

@@ -250,16 +250,18 @@ pub fn run_tenant_sweep(
     })
 }
 
-/// One cell of the `cluster` grid: (replicas x skew x router), with the
-/// router innermost so the formatter can pivot one artifact row per
-/// (replicas, skew) out of `RouterPolicy::all().len()` consecutive
-/// cells.
+/// One cell of the `cluster` grid: (replicas x skew x router-config),
+/// with the router configuration innermost so the formatter can pivot
+/// one artifact row per (replicas, skew) out of
+/// `cluster_row_configs().len()` consecutive cells.
 #[derive(Clone, Debug)]
 pub struct ClusterCell {
     pub model: ModelConfig,
     pub replicas: usize,
     pub skew: f64,
     pub router: RouterPolicy,
+    /// Cost-driven prefix migration enabled (prefix-affinity only).
+    pub migrate: bool,
     pub tenants: usize,
     pub batch: usize,
     pub total_requests: usize,
@@ -267,14 +269,26 @@ pub struct ClusterCell {
     pub arrival_rate: Option<f64>,
 }
 
-/// The cluster grid in row order: replicas (outer) x skew x router
-/// (inner).  Every cell of one (replicas, skew) row runs the *same*
-/// workload — only the routing decision differs.
+/// The per-row router configurations of the `cluster` artifact, in
+/// column order: baselines, spill-only affinity, migrate-enabled
+/// affinity last.
+pub fn cluster_row_configs() -> [(RouterPolicy, bool); 4] {
+    [
+        (RouterPolicy::RoundRobin, false),
+        (RouterPolicy::LeastLoaded, false),
+        (RouterPolicy::PrefixAffinity, false),
+        (RouterPolicy::PrefixAffinity, true),
+    ]
+}
+
+/// The cluster grid in row order: replicas (outer) x skew x
+/// router-config (inner, `cluster_row_configs` order).  Every cell of
+/// one (replicas, skew) row runs the *same* workload — only the
+/// routing/migration decisions differ.
 pub fn cluster_cells(
     model: &ModelConfig,
     replica_counts: &[usize],
     skews: &[f64],
-    routers: &[RouterPolicy],
     tenants: usize,
     batch: usize,
     total_requests: usize,
@@ -282,12 +296,13 @@ pub fn cluster_cells(
     let mut cells = Vec::new();
     for &replicas in replica_counts {
         for &skew in skews {
-            for &router in routers {
+            for (router, migrate) in cluster_row_configs() {
                 cells.push(ClusterCell {
                     model: model.clone(),
                     replicas,
                     skew,
                     router,
+                    migrate,
                     tenants,
                     batch,
                     total_requests,
@@ -327,6 +342,7 @@ pub fn run_cluster_sweep(
         );
         p.total_requests = c.total_requests;
         p.arrival_rate = c.arrival_rate;
+        p.migrate = c.migrate;
         let report = run_cluster_experiment(&p)?;
         Ok(ClusterCellResult { cell: c.clone(), report })
     })
@@ -378,24 +394,27 @@ mod tests {
 
     #[test]
     fn cluster_cell_enumeration_row_order() {
-        let cells = cluster_cells(
-            &deepseek_v3(),
-            &[1, 2],
-            &[0.0, 2.0],
-            &RouterPolicy::all(),
-            4,
-            32,
-            64,
-        );
-        // 2 replica counts x 2 skews x 3 routers, router innermost.
-        assert_eq!(cells.len(), 12);
+        let cells = cluster_cells(&deepseek_v3(), &[1, 2], &[0.0, 2.0], 4, 32, 64);
+        // 2 replica counts x 2 skews x 4 router configs, config innermost.
+        assert_eq!(cells.len(), 16);
         assert_eq!(
-            (cells[0].replicas, cells[0].skew, cells[0].router),
-            (1, 0.0, RouterPolicy::RoundRobin)
+            (cells[0].replicas, cells[0].skew, cells[0].router, cells[0].migrate),
+            (1, 0.0, RouterPolicy::RoundRobin, false)
         );
-        assert_eq!(cells[2].router, RouterPolicy::PrefixAffinity);
-        assert_eq!((cells[3].replicas, cells[3].skew), (1, 2.0));
-        assert_eq!((cells[11].replicas, cells[11].skew), (2, 2.0));
+        assert_eq!(
+            (cells[2].router, cells[2].migrate),
+            (RouterPolicy::PrefixAffinity, false)
+        );
+        assert_eq!(
+            (cells[3].router, cells[3].migrate),
+            (RouterPolicy::PrefixAffinity, true)
+        );
+        assert_eq!((cells[4].replicas, cells[4].skew), (1, 2.0));
+        assert_eq!((cells[15].replicas, cells[15].skew), (2, 2.0));
+        // Baselines never migrate.
+        assert!(cells
+            .iter()
+            .all(|c| c.router == RouterPolicy::PrefixAffinity || !c.migrate));
     }
 
     /// Cluster sweep determinism: serial and parallel executors produce
@@ -403,15 +422,7 @@ mod tests {
     #[test]
     fn cluster_sweep_deterministic_across_executors() {
         let hw = ascend_npu();
-        let cells = cluster_cells(
-            &deepseek_v3(),
-            &[2],
-            &[1.0],
-            &RouterPolicy::all(),
-            3,
-            16,
-            32,
-        );
+        let cells = cluster_cells(&deepseek_v3(), &[2], &[1.0], 3, 16, 32);
         let serial = run_cluster_sweep(&hw, &cells, &SweepExecutor::serial()).unwrap();
         let par = run_cluster_sweep(&hw, &cells, &SweepExecutor::with_threads(3)).unwrap();
         for (s, p) in serial.iter().zip(&par) {
@@ -421,6 +432,7 @@ mod tests {
             assert_eq!(s.report.makespan.to_bits(), p.report.makespan.to_bits());
             assert_eq!(s.report.ttft_p99.to_bits(), p.report.ttft_p99.to_bits());
             assert_eq!(s.report.spills, p.report.spills);
+            assert_eq!(s.report.migrations, p.report.migrations);
         }
     }
 

@@ -15,7 +15,6 @@ use anyhow::Result;
 use crate::config::{HardwareSpec, KernelKind, ModelConfig, ServingConfig};
 use crate::coordinator::{Coordinator, KernelPolicy};
 use crate::costmodel::parallel::ParallelismConfig;
-use crate::costmodel::threshold::batch_threshold;
 use crate::kvcache::{KvCacheManager, PrefixId};
 use crate::workload::tenants::{tenant_set, MultiTenantGenerator, TenantSpec};
 
@@ -49,8 +48,9 @@ pub fn tenant_serving_stack(
         kernel,
         ..Default::default()
     };
-    let b_theta = batch_threshold(model, hw, 1);
-    let policy = KernelPolicy::with_threshold(kernel, b_theta);
+    // Per-rank Eq. 1: a TP/SP-sharded replica derives its own B_theta
+    // (ranks = 1 reproduces the classic single-device value exactly).
+    let policy = KernelPolicy::from_parallelism(kernel, model, hw, 1, &parallelism);
     let kv = KvCacheManager::new(model.clone(), total_blocks, block_size);
     let mut engine = SimEngine::with_parallelism(model.clone(), hw.clone(), parallelism);
     engine.include_prefill = include_prefill;

@@ -246,6 +246,36 @@ mod tests {
         assert!(percentile_nearest_rank(&[], 50.0).is_nan());
     }
 
+    /// Empty-sample behavior, documented and pinned: every percentile
+    /// form returns NaN on an empty buffer (a cluster report with zero
+    /// completed requests must not panic or fabricate a latency), and
+    /// NaN never compares equal — callers must gate on emptiness.
+    #[test]
+    fn empty_samples_yield_nan_everywhere() {
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert!(percentile_nearest_rank(&[], q).is_nan(), "q={q}");
+        }
+        assert!(p50(&[]).is_nan());
+        assert!(p95(&[]).is_nan());
+        assert!(p99(&[]).is_nan());
+        let mut p = Percentiles::default();
+        assert!(p.is_empty());
+        assert!(p.percentile(50.0).is_nan());
+        assert!(p.median().is_nan());
+        assert!(p.nearest_rank(99.0).is_nan());
+        assert_eq!(p.sorted_values(), &[] as &[f64]);
+        // One push ends the NaN regime.
+        p.push(3.25);
+        assert_eq!(p.nearest_rank(99.0), 3.25);
+    }
+
+    /// Out-of-range percentiles are caller bugs, not NaNs.
+    #[test]
+    #[should_panic(expected = "percentile out of range")]
+    fn out_of_range_percentile_panics() {
+        percentile_nearest_rank(&[1.0], 100.5);
+    }
+
     #[test]
     fn percentiles_struct_nearest_rank() {
         let mut p = Percentiles::default();

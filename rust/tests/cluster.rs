@@ -8,7 +8,12 @@
 //!   fleet, token budgets conserve, no replica leaks KV pages, and
 //!   every replica's clock is monotone;
 //! * **prefix-affinity invariant** — a prefix group never occupies two
-//!   replicas unless a spill was recorded.
+//!   replicas unless a spill was recorded;
+//! * **prefix-migration invariant** — with the cost-driven
+//!   migrate-vs-spill rule enabled, a migrated group's pages end on
+//!   exactly one replica (unless a post-migration spill was recorded),
+//!   its destination adopts without re-prefilling, and retired copies
+//!   release their pages at drain.
 
 use typhoon_mla::config::hardware::ascend_npu;
 use typhoon_mla::config::model::deepseek_v3;
@@ -253,6 +258,122 @@ fn prefix_affinity_invariant_fuzz() {
         let report = sim.report();
         assert_eq!(report.spills, sim.spills(), "report mirrors the router count");
     }
+}
+
+/// The migration fuzz (acceptance): across random fleets, pressures
+/// and arrival patterns with migration enabled, every request still
+/// completes exactly once; every migration's destination adopted the
+/// pages without a re-prefill (its `shared_prefills` counter is flat
+/// around the adoption); and once the fleet drains, a migrated group's
+/// pages exist on exactly one replica unless a post-migration spill
+/// was recorded — with every retired copy actually released.
+#[test]
+fn prefix_migration_invariant_fuzz() {
+    let mut saw_migration = false;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let replicas = rng.gen_range_usize(2, 5);
+        let tenants = rng.gen_range_usize(1, 5);
+        let skew = [0.0, 1.0, 2.0][rng.gen_range_usize(0, 3)];
+        let batch = rng.gen_range_usize(4, 10);
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            replicas,
+            RouterPolicy::PrefixAffinity,
+            batch,
+            tenants,
+            skew,
+        );
+        p.total_requests = rng.gen_range_usize(8, 40);
+        p.seed = seed * 13 + 1;
+        p.migrate = true;
+        // Mostly tight thresholds so the rule actually fires; a few
+        // loose draws pin the no-pressure no-op.
+        let tight = rng.next_f64() < 0.75;
+        p.spill_queue_depth = if tight { 1 } else { 10_000 };
+        if rng.next_f64() < 0.5 {
+            p.arrival_rate = Some(1.0 + rng.next_f64() * 20.0);
+        }
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+
+        let report = sim.report();
+        assert_eq!(
+            report.requests_completed as usize,
+            sim.arrivals().len(),
+            "seed {seed}: conservation under migration"
+        );
+        for e in sim.migration_log() {
+            assert_eq!(
+                e.dst_prefills_before, e.dst_prefills_after,
+                "seed {seed}: destination re-prefilled a migrated prefix"
+            );
+        }
+        assert!(
+            sim.retired_copies_released(),
+            "seed {seed}: a retired prefix copy still holds pages"
+        );
+        for t in 0..tenants {
+            if sim.tenant_migrated(t) {
+                saw_migration = true;
+                if !sim.tenant_spilled_since_migration(t) {
+                    assert_eq!(
+                        sim.replicas_hosting(t),
+                        1,
+                        "seed {seed}: migrated tenant {t} pages on multiple replicas"
+                    );
+                }
+            }
+        }
+        assert_eq!(report.migrations, sim.migrations());
+        if !tight {
+            assert_eq!(sim.migrations(), 0, "seed {seed}: loose threshold never migrates");
+        }
+    }
+    assert!(saw_migration, "fuzz draws must exercise migration");
+}
+
+/// Migrate-enabled affinity must not lose to spill-only affinity on
+/// the skewed multi-tenant cell (the new `cluster`-figure headline):
+/// re-homing the hot group keeps its overflow one typhoon-eligible
+/// group instead of scattering absorb-fallback fragments across the
+/// fleet.
+#[test]
+fn migration_goodput_at_least_spill_only_on_skewed_cell() {
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        4,
+        RouterPolicy::PrefixAffinity,
+        128,
+        4,
+        2.0,
+    );
+    p.total_requests = 512;
+    let spill_only = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    p.migrate = true;
+    let migrate = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    assert_eq!(spill_only.tokens, migrate.tokens, "same workload either way");
+    assert!(spill_only.spills > 0, "the cell must actually pressure the home");
+    assert!(migrate.migrations > 0, "the cost rule must fire");
+    assert!(
+        migrate.goodput >= spill_only.goodput,
+        "migrate {} < spill-only {}",
+        migrate.goodput,
+        spill_only.goodput
+    );
+}
+
+/// API-stability pin: `ClusterParams::new` defaults keep the PR 3
+/// router — migration off, SLO admission off, the fixed queue-depth
+/// trigger — so every pre-migration caller is bit-identical.
+#[test]
+fn cluster_defaults_preserve_spill_only_router() {
+    let p = cluster_params(2, RouterPolicy::PrefixAffinity);
+    assert!(!p.migrate);
+    assert!(p.slo_ttft.is_none());
+    assert_eq!(p.spill_queue_depth, 2 * p.batch);
 }
 
 /// A deliberately tight spill threshold on a 2-replica fleet forces the

@@ -10,7 +10,7 @@ use typhoon_mla::config::KernelKind;
 use typhoon_mla::simulator::sweep::{
     cluster_cells, run_cluster_sweep, run_throughput_sweep, throughput_cells, SweepExecutor,
 };
-use typhoon_mla::simulator::{run_experiment, RouterPolicy, SimParams};
+use typhoon_mla::simulator::{run_experiment, SimParams};
 use typhoon_mla::workload::datasets::mmlu;
 use typhoon_mla::workload::prompts::PROMPT_C;
 
@@ -65,21 +65,14 @@ fn sweep_reports_bitwise_stable() {
     }
 }
 
-/// The cluster (replicas x skew x router) grid under `SweepExecutor`:
-/// serial and parallel runs must produce byte-identical artifacts
-/// (text and CSV), the same discipline as the figure grids.
+/// The cluster (replicas x skew x router-config) grid under
+/// `SweepExecutor`: serial and parallel runs must produce
+/// byte-identical artifacts (text and CSV), the same discipline as the
+/// figure grids.
 #[test]
 fn cluster_artifacts_serial_parallel_identical() {
     let hw = ascend_npu();
-    let cells = cluster_cells(
-        &deepseek_v3(),
-        &[1, 2],
-        &[0.0, 2.0],
-        &RouterPolicy::all(),
-        3,
-        32,
-        64,
-    );
+    let cells = cluster_cells(&deepseek_v3(), &[1, 2], &[0.0, 2.0], 3, 32, 64);
     let serial = run_cluster_sweep(&hw, &cells, &SweepExecutor::serial()).unwrap();
     let par = run_cluster_sweep(&hw, &cells, &SweepExecutor::with_threads(4)).unwrap();
     let a = format_cluster(&serial);
