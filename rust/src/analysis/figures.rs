@@ -27,11 +27,17 @@ pub const PAPER_BATCHES: [usize; 5] = [64, 128, 256, 512, 1024];
 pub const TENANT_COUNTS: [usize; 4] = [1, 2, 4, 8];
 pub const TENANT_SKEWS: [f64; 3] = [0.0, 1.0, 2.0];
 
-/// The `cluster` artifact grid: replica count x arrival skew (router
-/// policies compared inside each row).
+/// The `cluster` artifact grid: replica count x arrival skew x arrival
+/// profile (router/migration/autoscale configurations compared inside
+/// each row).
 pub const CLUSTER_REPLICAS: [usize; 3] = [1, 2, 4];
 pub const CLUSTER_SKEWS: [f64; 2] = [0.0, 2.0];
 pub const CLUSTER_TENANTS: usize = 4;
+/// Arrival profiles: the paper's batch protocol (autoscaling holds —
+/// an infinite lambda is unobservable) and a bursty Poisson square
+/// wave (calm 200 req/s, bursts 50x) that exercises admission
+/// pressure and fleet resizing.
+pub const CLUSTER_ARRIVALS: [Option<(f64, f64)>; 2] = [None, Some((200.0, 50.0))];
 
 /// The Fig. 2/3 model pair.
 pub fn paper_models() -> Vec<crate::config::ModelConfig> {
@@ -204,76 +210,105 @@ pub fn fig_tenants(
 /// Format evaluated cluster-grid cells into the `cluster` artifact.
 /// Cells must be in `cluster_cells` order (router configuration
 /// innermost, in `cluster_row_configs()` order): each artifact row
-/// pivots one (replicas, skew) workload across round-robin,
-/// least-loaded, spill-only prefix-affinity and migrate-enabled
-/// prefix-affinity.  Byte-identical however the cells were evaluated —
-/// only their order matters.
+/// pivots one (replicas, skew, arrival-profile) workload across
+/// round-robin, least-loaded, spill-only prefix-affinity,
+/// migrate-enabled prefix-affinity and autoscaled prefix-affinity.
+/// Byte-identical however the cells were evaluated — only their order
+/// matters.
 pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
     let configs = cluster_row_configs();
     assert_eq!(
         results.len() % configs.len(),
         0,
-        "cluster results must tile into per-row config quadruples"
+        "cluster results must tile into per-row config groups"
     );
     let mut text = String::new();
     let mut csv = String::from(
-        "replicas,skew,round_robin_tok_s,least_loaded_tok_s,prefix_affinity_tok_s,\
-         affinity_migrate_tok_s,affinity_vs_round_robin,migrate_vs_spill,spills,\
-         migrations,affinity_ttft_p99_s,affinity_tpot_p99_s,affinity_makespan_s\n",
+        "replicas,skew,rate,burst,round_robin_tok_s,least_loaded_tok_s,\
+         prefix_affinity_tok_s,affinity_migrate_tok_s,autoscale_tok_s,\
+         affinity_vs_round_robin,migrate_vs_spill,autoscale_vs_fixed,spills,\
+         migrations,scale_ups,scale_downs,affinity_ttft_p99_s,\
+         affinity_tpot_p99_s,affinity_makespan_s\n",
     );
     writeln!(
         text,
-        "{:>8} {:>5} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9} {:>7} {:>5} {:>11} {:>11}",
-        "replicas", "skew", "rrobin tok/s", "least-ld tok/s", "affinity tok/s",
-        "aff+mig tok/s", "aff/rr", "mig/aff", "spills", "migs", "ttft p99", "tpot p99"
+        "{:>8} {:>5} {:>7} {:>14} {:>14} {:>14} {:>14} {:>14} {:>7} {:>7} {:>7} {:>7} \
+         {:>5} {:>5} {:>11}",
+        "replicas", "skew", "profile", "rrobin tok/s", "least-ld tok/s",
+        "affinity tok/s", "aff+mig tok/s", "autoscale t/s", "aff/rr", "mig/aff",
+        "auto/mig", "spills", "migs", "+/-", "ttft p99"
     )
     .unwrap();
     for row in results.chunks(configs.len()) {
         // Hard assert: a mis-ordered grid would silently swap policy
         // columns (and invert the speedups) in release builds otherwise.
-        for (cell, &(router, migrate)) in row.iter().zip(&configs) {
+        for (cell, &(router, migrate, autoscale)) in row.iter().zip(&configs) {
             assert_eq!(
-                (cell.cell.router, cell.cell.migrate),
-                (router, migrate),
+                (cell.cell.router, cell.cell.migrate, cell.cell.autoscale),
+                (router, migrate, autoscale),
                 "rows must pivot in cluster_row_configs() order"
             );
         }
         let c = &row[0].cell;
-        let [rr, ll, aff, mig] =
-            [&row[0].report, &row[1].report, &row[2].report, &row[3].report];
+        let (rate, burst) = c.arrival.unwrap_or((0.0, 1.0));
+        let profile = match c.arrival {
+            None => "batch",
+            Some((_, f)) if f > 1.0 => "bursty",
+            Some(_) => "poisson",
+        };
+        let [rr, ll, aff, mig, auto] = [
+            &row[0].report,
+            &row[1].report,
+            &row[2].report,
+            &row[3].report,
+            &row[4].report,
+        ];
         let speedup = if rr.goodput > 0.0 { aff.goodput / rr.goodput } else { 1.0 };
         let mig_speedup = if aff.goodput > 0.0 { mig.goodput / aff.goodput } else { 1.0 };
+        let auto_speedup =
+            if mig.goodput > 0.0 { auto.goodput / mig.goodput } else { 1.0 };
         writeln!(
             text,
-            "{:>8} {:>5.1} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x {:>8.2}x {:>7} \
-             {:>5} {:>10.3}s {:>10.4}s",
+            "{:>8} {:>5.1} {:>7} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>14.0} \
+             {:>6.2}x {:>6.2}x {:>6.2}x {:>7} {:>5} {:>2}/{:<2} {:>10.3}s",
             c.replicas,
             c.skew,
+            profile,
             rr.goodput,
             ll.goodput,
             aff.goodput,
             mig.goodput,
+            auto.goodput,
             speedup,
             mig_speedup,
+            auto_speedup,
             aff.spills,
             mig.migrations,
-            aff.ttft_p99,
-            aff.tpot_p99
+            auto.scale_ups,
+            auto.scale_downs,
+            aff.ttft_p99
         )
         .unwrap();
         writeln!(
             csv,
-            "{},{:.1},{:.1},{:.1},{:.1},{:.1},{:.3},{:.3},{},{},{:.4},{:.5},{:.3}",
+            "{},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.3},{:.3},{:.3},{},{},\
+             {},{},{:.4},{:.5},{:.3}",
             c.replicas,
             c.skew,
+            rate,
+            burst,
             rr.goodput,
             ll.goodput,
             aff.goodput,
             mig.goodput,
+            auto.goodput,
             speedup,
             mig_speedup,
+            auto_speedup,
             aff.spills,
             mig.migrations,
+            auto.scale_ups,
+            auto.scale_downs,
             aff.ttft_p99,
             aff.tpot_p99,
             aff.makespan
@@ -286,7 +321,11 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
          replica holding its pages — spill-only relief scatters a pressured \
          group's overflow one request at a time, while migrate re-homes the \
          group's pages over the interconnect so the overflow stays one \
-         group; round-robin pays every group's shared-stage stream on every \
+         group; autoscale additionally resizes the fleet against the \
+         observed arrival rate, bulk-migrating hot groups onto fresh \
+         replicas and consolidating idle ones; on batch-protocol rows the \
+         arrival rate is unobservable and autoscale reproduces the fixed \
+         fleet; round-robin pays every group's shared-stage stream on every \
          replica)\n",
     );
     Artifact {
@@ -298,12 +337,13 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
     }
 }
 
-/// `cluster` artifact: the (replicas x skew x router-config) grid
-/// under the sweep executor, one row per (replicas, skew) workload.
-/// Asserts the headlines on the skewed multi-tenant cell at the
-/// largest fleet: prefix-affinity models at least round-robin's
-/// goodput, and migrate-enabled affinity at least spill-only
-/// affinity's.
+/// `cluster` artifact: the (replicas x skew x arrival-profile x
+/// router-config) grid under the sweep executor, one row per
+/// (replicas, skew, profile) workload.  Asserts the headlines at the
+/// largest fleet and max skew: prefix-affinity models at least
+/// round-robin's goodput and migrate-enabled affinity at least
+/// spill-only affinity's (batch-protocol row), and autoscaled
+/// affinity at least the fixed migrate-enabled fleet's (bursty row).
 pub fn fig_cluster(
     max_requests_factor: Option<usize>,
     exec: &SweepExecutor,
@@ -314,25 +354,39 @@ pub fn fig_cluster(
         &deepseek_v3(),
         &CLUSTER_REPLICAS,
         &CLUSTER_SKEWS,
+        &CLUSTER_ARRIVALS,
         CLUSTER_TENANTS,
         batch,
         total_requests,
     );
     let results = run_cluster_sweep(&ascend_npu(), &cells, exec)?;
-    // The acceptance cell: max replicas x max skew (the last row),
-    // with columns located by config rather than position so a
-    // reordered `cluster_row_configs` cannot silently swap reports.
+    // The acceptance cells: max replicas x max skew, with columns
+    // located by config and rows by workload key rather than position,
+    // so a reordered grid cannot silently swap reports.
     let configs = cluster_row_configs();
-    let last = &results[results.len() - configs.len()..];
-    let col = |router, migrate| {
+    let col = |router, migrate, autoscale| {
         configs
             .iter()
-            .position(|&c| c == (router, migrate))
+            .position(|&c| c == (router, migrate, autoscale))
             .expect("row config present")
     };
-    let rr = &last[col(RouterPolicy::RoundRobin, false)].report;
-    let aff = &last[col(RouterPolicy::PrefixAffinity, false)].report;
-    let mig = &last[col(RouterPolicy::PrefixAffinity, true)].report;
+    let max_replicas = *CLUSTER_REPLICAS.iter().max().unwrap();
+    let max_skew = CLUSTER_SKEWS.iter().cloned().fold(f64::MIN, f64::max);
+    let row = |arrival: Option<(f64, f64)>| {
+        let start = results
+            .iter()
+            .position(|r| {
+                r.cell.replicas == max_replicas
+                    && r.cell.skew == max_skew
+                    && r.cell.arrival == arrival
+            })
+            .expect("acceptance row present");
+        &results[start..start + configs.len()]
+    };
+    let batch_row = row(None);
+    let rr = &batch_row[col(RouterPolicy::RoundRobin, false, false)].report;
+    let aff = &batch_row[col(RouterPolicy::PrefixAffinity, false, false)].report;
+    let mig = &batch_row[col(RouterPolicy::PrefixAffinity, true, false)].report;
     anyhow::ensure!(
         aff.goodput >= rr.goodput,
         "prefix-affinity must not lose to round-robin on the skewed cell: \
@@ -346,6 +400,22 @@ pub fn fig_cluster(
          skewed cell: migrate {} < spill-only {}",
         mig.goodput,
         aff.goodput
+    );
+    let bursty_row = row(CLUSTER_ARRIVALS[1]);
+    let fixed = &bursty_row[col(RouterPolicy::PrefixAffinity, true, false)].report;
+    let auto = &bursty_row[col(RouterPolicy::PrefixAffinity, true, true)].report;
+    anyhow::ensure!(
+        auto.tokens == fixed.tokens,
+        "autoscale must serve the same workload: {} vs {} tokens",
+        auto.tokens,
+        fixed.tokens
+    );
+    anyhow::ensure!(
+        auto.goodput >= fixed.goodput,
+        "autoscale must not lose to the fixed fleet on the bursty skewed cell: \
+         autoscale {} < fixed {}",
+        auto.goodput,
+        fixed.goodput
     );
     Ok(format_cluster(&results))
 }
@@ -702,26 +772,36 @@ mod tests {
 
     #[test]
     fn cluster_artifact_shapes_and_affinity_wins() {
-        // A small slice of the cluster grid: the skewed 2-replica row.
-        let cells = cluster_cells(&deepseek_v3(), &[2], &[2.0], 4, 128, 256);
+        // A small slice of the cluster grid: the skewed 2-replica row,
+        // batch protocol only (autoscale holds there — lambda is
+        // unobservable — so the column reproduces the fixed fleet).
+        let cells = cluster_cells(&deepseek_v3(), &[2], &[2.0], &[None], 4, 128, 256);
         let results =
             run_cluster_sweep(&ascend_npu(), &cells, &SweepExecutor::from_env()).unwrap();
         let a = format_cluster(&results);
         assert_eq!(a.id, "cluster");
         assert_eq!(a.csv.lines().count(), 2, "header + 1 row");
         let row = a.csv.lines().last().unwrap();
-        assert!(row.starts_with("2,2.0"), "{row}");
+        assert!(row.starts_with("2,2.0,0.0,1.0"), "{row}");
         let fields: Vec<&str> = row.split(',').collect();
-        let speedup: f64 = fields[6].parse().unwrap();
+        let speedup: f64 = fields[9].parse().unwrap();
         assert!(
             speedup >= 0.999,
             "prefix-affinity must at least match round-robin: {row}"
         );
-        let mig_speedup: f64 = fields[7].parse().unwrap();
+        let mig_speedup: f64 = fields[10].parse().unwrap();
         assert!(
             mig_speedup >= 0.999,
             "migrate-enabled affinity must at least match spill-only: {row}"
         );
+        let auto_speedup: f64 = fields[11].parse().unwrap();
+        assert!(
+            (auto_speedup - 1.0).abs() < 1e-9,
+            "never-triggered autoscale reproduces the fixed fleet: {row}"
+        );
+        let scale_events: u64 =
+            fields[14].parse::<u64>().unwrap() + fields[15].parse::<u64>().unwrap();
+        assert_eq!(scale_events, 0, "batch protocol never scales: {row}");
         // Same workload under every router config: identical tokens.
         for r in &results[1..] {
             assert_eq!(results[0].report.tokens, r.report.tokens);

@@ -27,8 +27,8 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 use typhoon_mla::analysis::figures::{
-    format_cluster, format_throughput, paper_models, CLUSTER_REPLICAS, CLUSTER_SKEWS,
-    CLUSTER_TENANTS, PAPER_BATCHES,
+    format_cluster, format_throughput, paper_models, CLUSTER_ARRIVALS, CLUSTER_REPLICAS,
+    CLUSTER_SKEWS, CLUSTER_TENANTS, PAPER_BATCHES,
 };
 use typhoon_mla::analysis::Artifact;
 use typhoon_mla::config::hardware::{ascend_npu, gpu_h800};
@@ -71,17 +71,33 @@ fn run_sweep(
     })
 }
 
-/// Run the cluster (replicas x skew x router-config) grid under one
-/// executor.  Returns (wall seconds, tokens, migrations, artifact).
-fn run_cluster_grid(
-    cells: &[ClusterCell],
-    exec: &SweepExecutor,
-) -> Result<(f64, u64, u64, Artifact)> {
+/// One timed cluster-grid run.
+struct ClusterOutcome {
+    wall_seconds: f64,
+    tokens: u64,
+    migrations: u64,
+    scale_events: u64,
+    artifact: Artifact,
+}
+
+/// Run the cluster (replicas x skew x arrival-profile x router-config)
+/// grid under one executor.
+fn run_cluster_grid(cells: &[ClusterCell], exec: &SweepExecutor) -> Result<ClusterOutcome> {
     let t0 = Instant::now();
     let results = run_cluster_sweep(&ascend_npu(), cells, exec)?;
     let tokens: u64 = results.iter().map(|r| r.report.tokens).sum();
     let migrations: u64 = results.iter().map(|r| r.report.migrations).sum();
-    Ok((t0.elapsed().as_secs_f64(), tokens, migrations, format_cluster(&results)))
+    let scale_events: u64 = results
+        .iter()
+        .map(|r| r.report.scale_ups + r.report.scale_downs)
+        .sum();
+    Ok(ClusterOutcome {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        tokens,
+        migrations,
+        scale_events,
+        artifact: format_cluster(&results),
+    })
 }
 
 fn main() -> Result<()> {
@@ -115,26 +131,28 @@ fn main() -> Result<()> {
         par.wall_seconds, par.cells, par.tokens
     );
 
-    // The cluster grid (now including the migrate-enabled affinity
-    // column): timed and byte-identity-asserted like the figure sweeps
-    // (smaller request budget in --quick mode).
+    // The cluster grid (now including the autoscaled affinity column
+    // and the bursty arrival rows): timed and byte-identity-asserted
+    // like the figure sweeps (smaller request budget in --quick mode).
     let cluster_requests = if args.flag("quick") { 256 } else { 512 };
     let cl_cells = cluster_cells(
         &deepseek_v3(),
         &CLUSTER_REPLICAS,
         &CLUSTER_SKEWS,
+        &CLUSTER_ARRIVALS,
         CLUSTER_TENANTS,
         128,
         cluster_requests,
     );
-    let (cl_wall, cl_tokens, cl_migrations, cl_artifact) =
-        run_cluster_grid(&cl_cells, &parallel)?;
+    let cl = run_cluster_grid(&cl_cells, &parallel)?;
     println!(
-        "cluster:  {:.3}s wall, {} cells, {} tokens simulated, {} migrations",
-        cl_wall,
+        "cluster:  {:.3}s wall, {} cells, {} tokens simulated, {} migrations, \
+         {} scale events",
+        cl.wall_seconds,
         cl_cells.len(),
-        cl_tokens,
-        cl_migrations
+        cl.tokens,
+        cl.migrations,
+        cl.scale_events
     );
 
     let mut fields: Vec<(&str, Json)> = vec![
@@ -143,11 +161,12 @@ fn main() -> Result<()> {
         ("tokens_simulated", Json::num(par.tokens as f64)),
         ("threads", Json::num(parallel.threads as f64)),
         ("quick", Json::Bool(args.flag("quick"))),
-        ("cluster_wall_seconds", Json::num(cl_wall)),
+        ("cluster_wall_seconds", Json::num(cl.wall_seconds)),
         ("cluster_cells", Json::num(cl_cells.len() as f64)),
         ("cluster_row_width", Json::num(cluster_row_configs().len() as f64)),
-        ("cluster_tokens_simulated", Json::num(cl_tokens as f64)),
-        ("cluster_migrations", Json::num(cl_migrations as f64)),
+        ("cluster_tokens_simulated", Json::num(cl.tokens as f64)),
+        ("cluster_migrations", Json::num(cl.migrations as f64)),
+        ("cluster_scale_events", Json::num(cl.scale_events as f64)),
     ];
 
     if !args.flag("skip-serial") {
@@ -181,25 +200,29 @@ fn main() -> Result<()> {
         fields.push(("artifacts_identical", Json::Bool(true)));
 
         // Cluster grid byte-identity: serial run of the same cells must
-        // reproduce the parallel artifact exactly.
-        let (cl_serial_wall, cl_serial_tokens, cl_serial_migrations, cl_serial_artifact) =
-            run_cluster_grid(&cl_cells, &SweepExecutor::serial())?;
+        // reproduce the parallel artifact exactly — including every
+        // migration and scale decision.
+        let cl_serial = run_cluster_grid(&cl_cells, &SweepExecutor::serial())?;
         ensure!(
-            cl_serial_artifact.text == cl_artifact.text,
+            cl_serial.artifact.text == cl.artifact.text,
             "cluster: text artifact diverged"
         );
         ensure!(
-            cl_serial_artifact.csv == cl_artifact.csv,
+            cl_serial.artifact.csv == cl.artifact.csv,
             "cluster: csv artifact diverged"
         );
-        ensure!(cl_serial_tokens == cl_tokens, "cluster token totals diverged");
+        ensure!(cl_serial.tokens == cl.tokens, "cluster token totals diverged");
         ensure!(
-            cl_serial_migrations == cl_migrations,
+            cl_serial.migrations == cl.migrations,
             "cluster migration counts diverged"
         );
-        let cl_speedup = cl_serial_wall / cl_wall.max(1e-12);
+        ensure!(
+            cl_serial.scale_events == cl.scale_events,
+            "cluster scale-event counts diverged"
+        );
+        let cl_speedup = cl_serial.wall_seconds / cl.wall_seconds.max(1e-12);
         println!("cluster speedup:   {cl_speedup:.2}x (artifacts byte-identical)");
-        fields.push(("cluster_serial_wall_seconds", Json::num(cl_serial_wall)));
+        fields.push(("cluster_serial_wall_seconds", Json::num(cl_serial.wall_seconds)));
         fields.push(("cluster_speedup", Json::num(cl_speedup)));
     }
 

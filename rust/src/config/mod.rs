@@ -6,4 +6,4 @@ pub mod serving;
 
 pub use hardware::HardwareSpec;
 pub use model::ModelConfig;
-pub use serving::{KernelKind, ServingConfig};
+pub use serving::{KernelKind, ScalingConfig, ServingConfig};

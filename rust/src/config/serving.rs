@@ -94,6 +94,84 @@ impl ServingConfig {
     }
 }
 
+/// Replica-autoscaling knobs (cluster mode).  The operator-facing
+/// configuration `policy::ScalingPolicy` adopts — validated here so a
+/// nonsense fleet shape is a configuration error, not a silent hold.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingConfig {
+    /// Master switch (`--autoscale`); disabled holds the fleet exactly
+    /// as configured.
+    pub enabled: bool,
+    /// Target utilization rho* in (0, 1] (`--scale-headroom`): scale up
+    /// when the observed arrival rate exceeds this fraction of the
+    /// fleet's observed service capacity.
+    pub headroom: f64,
+    /// Scale-down hysteresis in (0, 1): one fewer replica must still
+    /// sit under `down_factor * headroom` utilization before a replica
+    /// retires.
+    pub down_factor: f64,
+    /// The fleet never shrinks below this.
+    pub min_replicas: usize,
+    /// The fleet never grows past this.
+    pub max_replicas: usize,
+    /// Arrivals in the windowed arrival-rate estimate.
+    pub rate_window: usize,
+    /// Minimum arrivals between scale events.
+    pub cooldown_arrivals: usize,
+}
+
+impl ScalingConfig {
+    /// Defaults for a fleet starting at `replicas`: disabled, 80%
+    /// utilization target, 2x hysteresis gap, shrink to one replica,
+    /// grow to twice the starting size.
+    pub fn for_fleet(replicas: usize) -> Self {
+        ScalingConfig {
+            enabled: false,
+            headroom: 0.8,
+            down_factor: 0.5,
+            min_replicas: 1,
+            max_replicas: replicas.saturating_mul(2).max(1),
+            rate_window: 32,
+            cooldown_arrivals: 64,
+        }
+    }
+
+    /// Validate against the fleet's starting size.
+    pub fn validate(&self, replicas: usize) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if !self.headroom.is_finite() || self.headroom <= 0.0 || self.headroom > 1.0 {
+            bail!("scale headroom must be in (0, 1], got {}", self.headroom);
+        }
+        if !self.down_factor.is_finite() || self.down_factor <= 0.0 || self.down_factor >= 1.0
+        {
+            bail!(
+                "scale-down hysteresis factor must be in (0, 1), got {}",
+                self.down_factor
+            );
+        }
+        if self.min_replicas == 0 {
+            bail!("min_replicas must be at least 1");
+        }
+        if self.min_replicas > replicas || replicas > self.max_replicas {
+            bail!(
+                "starting fleet of {replicas} must sit inside [min_replicas, \
+                 max_replicas] = [{}, {}]",
+                self.min_replicas,
+                self.max_replicas
+            );
+        }
+        if self.rate_window < 2 {
+            bail!("rate_window needs at least 2 arrivals, got {}", self.rate_window);
+        }
+        if self.cooldown_arrivals == 0 {
+            bail!("cooldown_arrivals must be at least 1");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +179,47 @@ mod tests {
     #[test]
     fn default_is_valid() {
         ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn scaling_defaults_validate_and_disabled_skips_checks() {
+        for replicas in [1usize, 2, 4, 7] {
+            let mut c = ScalingConfig::for_fleet(replicas);
+            assert!(!c.enabled);
+            c.validate(replicas).unwrap(); // disabled: anything goes
+            c.enabled = true;
+            c.validate(replicas).unwrap();
+            assert!(c.max_replicas >= replicas.max(1));
+        }
+    }
+
+    #[test]
+    fn scaling_rejects_bad_shapes() {
+        let mut c = ScalingConfig::for_fleet(2);
+        c.enabled = true;
+        c.headroom = 0.0;
+        assert!(c.validate(2).is_err());
+        c.headroom = 1.5;
+        assert!(c.validate(2).is_err());
+        c.headroom = 0.8;
+        c.down_factor = 1.0;
+        assert!(c.validate(2).is_err());
+        c.down_factor = 0.5;
+        c.min_replicas = 0;
+        assert!(c.validate(2).is_err());
+        c.min_replicas = 3;
+        assert!(c.validate(2).is_err(), "floor above the starting fleet");
+        c.min_replicas = 1;
+        c.max_replicas = 1;
+        assert!(c.validate(2).is_err(), "cap below the starting fleet");
+        c.max_replicas = 4;
+        c.rate_window = 1;
+        assert!(c.validate(2).is_err());
+        c.rate_window = 32;
+        c.cooldown_arrivals = 0;
+        assert!(c.validate(2).is_err());
+        c.cooldown_arrivals = 64;
+        c.validate(2).unwrap();
     }
 
     #[test]

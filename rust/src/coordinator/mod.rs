@@ -34,6 +34,12 @@ pub use engine::{BatchGroup, DecodeBatch, Engine, IterationOutcome, PrefillReque
 pub use running::RunningSet;
 pub use sequence::{SeqState, Sequence};
 
+/// Completions kept for the windowed service-rate estimate: long
+/// enough to smooth one batch worth of simultaneous retirements, short
+/// enough that `service_rate` tracks the current regime instead of the
+/// whole run's history.
+const SERVICE_RATE_WINDOW: usize = 64;
+
 pub struct Coordinator<E: Engine> {
     cfg: ServingConfig,
     policy: KernelPolicy,
@@ -53,6 +59,9 @@ pub struct Coordinator<E: Engine> {
     /// released as soon as the group drains.
     draining: Vec<PrefixId>,
     recently_finished: Vec<SeqId>,
+    /// `metrics.decode_seconds` stamped at each of the last
+    /// `SERVICE_RATE_WINDOW` completions (the windowed mu estimate).
+    completion_marks: VecDeque<f64>,
     next_seq: SeqId,
     /// Canonical run clock: accumulated engine-reported seconds.
     now: f64,
@@ -79,6 +88,7 @@ impl<E: Engine> Coordinator<E> {
             default_prefix: None,
             draining: Vec::new(),
             recently_finished: Vec::new(),
+            completion_marks: VecDeque::new(),
             next_seq: 0,
             now: 0.0,
         })
@@ -199,8 +209,25 @@ impl<E: Engine> Coordinator<E> {
 
     /// Router probe: observed completions per busy decode second (0
     /// until the replica has history) — the service rate SLO admission
-    /// converts a TTFT target into a queue-depth threshold with.
+    /// converts a TTFT target into a queue-depth threshold with, and
+    /// replica autoscaling sums into the fleet's capacity estimate.
+    ///
+    /// The estimate is **windowed** over the last
+    /// `SERVICE_RATE_WINDOW` completions: a lifetime
+    /// `requests_completed / decode_seconds` ratio mixes every regime
+    /// the replica ever served (a replica that idled through a lull
+    /// keeps reporting its old burst-time mu, so the SLO threshold
+    /// never recovers).  With too little history — or when the whole
+    /// window retired inside one iteration — it falls back to the
+    /// lifetime ratio.
     pub fn service_rate(&self) -> f64 {
+        let n = self.completion_marks.len();
+        if n >= 2 {
+            let span = self.completion_marks[n - 1] - self.completion_marks[0];
+            if span > 0.0 {
+                return (n - 1) as f64 / span;
+            }
+        }
         if self.metrics.decode_seconds > 0.0 {
             self.metrics.requests_completed as f64 / self.metrics.decode_seconds
         } else {
@@ -403,6 +430,10 @@ impl<E: Engine> Coordinator<E> {
         }
         if let Some(t) = seq.tpot() {
             self.metrics.tpot.push(t);
+        }
+        self.completion_marks.push_back(self.metrics.decode_seconds);
+        if self.completion_marks.len() > SERVICE_RATE_WINDOW {
+            self.completion_marks.pop_front();
         }
         self.recently_finished.push(id);
     }
@@ -1009,6 +1040,81 @@ mod tests {
         assert_eq!(c.metrics.transfer_seconds, 0.25);
         assert_eq!(c.metrics.decode_seconds, 0.0);
         assert_eq!(c.service_rate(), 0.0, "no completions yet");
+    }
+
+    /// Engine whose decode pace changes mid-run: `slow_iters` slow
+    /// iterations, then fast ones — the two-regime history the
+    /// windowed service-rate estimate must track.
+    struct PacedEngine {
+        iters: usize,
+        slow_iters: usize,
+        slow: f64,
+        fast: f64,
+    }
+
+    impl Engine for PacedEngine {
+        fn prepare_shared(
+            &mut self,
+            _p: PrefixId,
+            _tokens: &[u32],
+            _k: KernelKind,
+        ) -> Result<f64> {
+            Ok(0.0)
+        }
+
+        fn prefill_requests(&mut self, _seqs: &[PrefillRequest]) -> Result<f64> {
+            Ok(0.0)
+        }
+
+        fn decode(&mut self, _batch: &DecodeBatch) -> Result<IterationOutcome> {
+            let seconds = if self.iters < self.slow_iters { self.slow } else { self.fast };
+            self.iters += 1;
+            Ok(IterationOutcome { seconds, breakdown: BreakdownTimers::default() })
+        }
+
+        fn release(&mut self, _seq: SeqId) {}
+    }
+
+    /// The windowed service rate recovers after a slow burst: once the
+    /// replica is back to fast completions, `service_rate` reports the
+    /// *recent* mu, not the lifetime mix, so the SLO threshold derived
+    /// from it recovers too.
+    #[test]
+    fn service_rate_window_recovers_after_a_burst() {
+        let cfg = ServingConfig {
+            max_batch: 1,
+            block_size: 16,
+            max_seq_len: 256,
+            total_blocks: 4096,
+            ..Default::default()
+        };
+        let policy = KernelPolicy::with_threshold(KernelKind::Typhoon, 1);
+        let kv = KvCacheManager::new(sim(), cfg.total_blocks, cfg.block_size);
+        let engine = PacedEngine { iters: 0, slow_iters: 100, slow: 1.0, fast: 1e-3 };
+        let mut c = Coordinator::new(cfg, policy, kv, engine).unwrap();
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        // One request per iteration (max_batch 1, one generated token).
+        for i in 0..200u64 {
+            c.submit(&req(i, 4, 1)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 200);
+        let lifetime = c.metrics.requests_completed as f64 / c.metrics.decode_seconds;
+        assert!(lifetime < 3.0, "lifetime mu is dominated by the slow burst: {lifetime}");
+        let windowed = c.service_rate();
+        assert!(
+            windowed > 100.0 * lifetime,
+            "windowed mu must track the fast regime: {windowed} vs lifetime {lifetime}"
+        );
+        // The SLO threshold recovers with it: a 0.1 s TTFT target
+        // tolerates a real backlog again instead of spilling everything.
+        let slo = crate::policy::SloAdmission::new(Some(0.1));
+        let recovered = slo.spill_depth(windowed, 0.0, 1);
+        let stale = slo.spill_depth(lifetime, 0.0, 1);
+        assert!(
+            recovered > stale,
+            "threshold must recover after the burst: {recovered} vs {stale}"
+        );
     }
 
     /// A registered group's pages cannot be freed while any of its

@@ -24,7 +24,7 @@ use typhoon_mla::util::cli::Args;
 use typhoon_mla::workload::{datasets, prompts, Request};
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["full", "migrate"])?;
+    let args = Args::parse(&["full", "migrate", "autoscale"])?;
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
         Some("simulate") => simulate(&args),
@@ -41,7 +41,9 @@ fn main() -> Result<()> {
                  --kernel K --batch B --dataset mmlu|gsm8k|simpleqa --prompt a|b|c \
                  [--tenants N --skew S]\n\
                  simulate --replicas N --router round-robin|least-loaded|prefix-affinity \
-                 [--tenants N --skew S --rate R --tp N --sp N --migrate --slo-ttft S]\n\
+                 [--tenants N --skew S --rate R --burst F --tp N --sp N --migrate \
+                 --slo-ttft S --autoscale --scale-headroom H --min-replicas N \
+                 --max-replicas N]\n\
                  threshold --model M --hw H"
             );
             Ok(())
@@ -95,10 +97,22 @@ fn simulate(args: &Args) -> Result<()> {
     // arrivals and TP/SP sharding) so those flags are never silently
     // dropped by the plain simulation branches.
     let replicas = args.get_usize("replicas", 1)?;
-    let cluster_mode = ["replicas", "router", "rate", "tp", "sp", "slo-ttft"]
-        .iter()
-        .any(|k| args.get(k).is_some())
-        || args.flag("migrate");
+    let cluster_mode = [
+        "replicas",
+        "router",
+        "rate",
+        "burst",
+        "tp",
+        "sp",
+        "slo-ttft",
+        "scale-headroom",
+        "min-replicas",
+        "max-replicas",
+    ]
+    .iter()
+    .any(|k| args.get(k).is_some())
+        || args.flag("migrate")
+        || args.flag("autoscale");
     if cluster_mode {
         let router = RouterPolicy::parse(args.get_or("router", "prefix-affinity"))?;
         // Cluster mode defaults to a multi-tenant workload (that is
@@ -124,15 +138,33 @@ fn simulate(args: &Args) -> Result<()> {
         if args.get("rate").is_some() {
             p.arrival_rate = Some(args.get_f64("rate", 0.0)?);
         }
+        if args.get("burst").is_some() {
+            p.arrival_burst = Some(args.get_f64("burst", 0.0)?);
+        }
         p.migrate = args.flag("migrate");
         if args.get("slo-ttft").is_some() {
             p.slo_ttft = Some(args.get_f64("slo-ttft", 0.0)?);
         }
+        p.scaling.enabled = args.flag("autoscale");
+        if !p.scaling.enabled
+            && ["scale-headroom", "min-replicas", "max-replicas"]
+                .iter()
+                .any(|k| args.get(k).is_some())
+        {
+            // Same convention as --migrate/--slo-ttft on the wrong
+            // router: a knob that would be silently ignored (and skip
+            // validation) is a configuration error.
+            bail!("--scale-headroom/--min-replicas/--max-replicas need --autoscale");
+        }
+        p.scaling.headroom = args.get_f64("scale-headroom", p.scaling.headroom)?;
+        p.scaling.min_replicas = args.get_usize("min-replicas", p.scaling.min_replicas)?;
+        p.scaling.max_replicas = args.get_usize("max-replicas", p.scaling.max_replicas)?;
         let r = run_cluster_experiment(&p)?;
         println!(
             "[simulate] cluster: {} replicas ({}), {} tenants: {} tokens, {} requests \
              -> goodput {:.0} tok/s/layer over {:.3}s aggregate decode \
-             (makespan {:.3}s, spills {}, migrations {})",
+             (makespan {:.3}s, spills {}, migrations {}, scale +{}/-{}, \
+             {} active at drain)",
             replicas,
             router.as_str(),
             p.tenants,
@@ -142,7 +174,10 @@ fn simulate(args: &Args) -> Result<()> {
             r.decode_seconds,
             r.makespan,
             r.spills,
-            r.migrations
+            r.migrations,
+            r.scale_ups,
+            r.scale_downs,
+            r.active_replicas
         );
         println!(
             "[simulate] ttft p50/p95/p99 = {:.4}/{:.4}/{:.4}s, \
@@ -151,8 +186,9 @@ fn simulate(args: &Args) -> Result<()> {
         );
         for (i, rep) in r.replicas.iter().enumerate() {
             println!(
-                "[simulate]   replica {i}: {} routed, {} tokens, {} groups hosted \
+                "[simulate]   replica {i} ({}): {} routed, {} tokens, {} groups hosted \
                  ({} imported), mean batch {:.1}, group-iters t/a/n {}/{}/{} (mixed {})",
+                rep.state.as_str(),
                 rep.routed,
                 rep.tokens,
                 rep.prefix_groups,

@@ -11,6 +11,22 @@
 //! `spill_queue_depth`-only behavior — the *trigger* is owned by
 //! `SloAdmission`; this policy owns the *response*.
 //!
+//! **Cool-down (hysteresis).**  Under sustained overload every replica
+//! is pressured, so an unconstrained rule re-homes the hot group on
+//! every overflowing arrival — bounded ping-pong, but each hop streams
+//! the pages again for no lasting concentration win.  The fix is
+//! priced on transfer amortization: after a re-home, the group may not
+//! re-home again until it has served enough tokens to amortize the
+//! transfer it just paid.  The budget is `transfer_seconds` divided by
+//! the modeled per-token saving concentration buys — the duplicated
+//! per-iteration shared-stage stream a fragmented group pays, which is
+//! exactly what the migration avoided (`PolicyEngine::
+//! migration_cooldown_tokens` evaluates it at the Eq. 1 threshold
+//! occupancy through the same memoized `CostTable` the engines run).
+//! A zero-cost re-home (the peer already held the pages) amortizes
+//! instantly; a transfer the cost model sees no saving for never does,
+//! so such a group re-homes at most once.
+//!
 //! The comparison prices the *deployment-real* costs.  Under the
 //! paper's decode-only throughput protocol (`include_prefill = false`)
 //! neither side is debited to goodput — prefill never is, and an
@@ -29,16 +45,26 @@ pub enum MigrationDecision {
     Migrate,
 }
 
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct MigrationPolicy {
     /// Master switch: disabled reproduces the PR 3 spill-only router
     /// bit-for-bit (the reduction tests pin this).
     pub enabled: bool,
+    /// Per-group re-home cool-down priced on transfer amortization
+    /// (see module docs).  On by default — off reproduces the eager
+    /// (ping-pong-prone) PR 4 rule.
+    pub cooldown: bool,
+}
+
+impl Default for MigrationPolicy {
+    fn default() -> Self {
+        MigrationPolicy { enabled: false, cooldown: true }
+    }
 }
 
 impl MigrationPolicy {
     pub fn new(enabled: bool) -> Self {
-        MigrationPolicy { enabled }
+        MigrationPolicy { enabled, ..Default::default() }
     }
 
     /// The cost rule: migrate when streaming the pages beats
@@ -50,6 +76,22 @@ impl MigrationPolicy {
         } else {
             MigrationDecision::Spill
         }
+    }
+
+    /// The served-token budget that amortizes a re-home which paid
+    /// `transfer_seconds`, given the modeled per-token saving of
+    /// staying concentrated.  Saturates: a saving the cost model
+    /// cannot see yields an effectively unbounded budget.
+    pub fn cooldown_tokens(&self, transfer_seconds: f64, saving_per_token: f64) -> u64 {
+        if !self.cooldown || transfer_seconds <= 0.0 {
+            return 0;
+        }
+        if saving_per_token.is_nan() || saving_per_token <= 0.0 {
+            return u64::MAX;
+        }
+        // f64 -> u64 casts saturate, so an astronomical ratio is MAX,
+        // not UB.
+        (transfer_seconds / saving_per_token).ceil() as u64
     }
 }
 
@@ -70,5 +112,20 @@ mod tests {
         assert_eq!(p.decide(0.001, 0.1), MigrationDecision::Migrate);
         assert_eq!(p.decide(0.1, 0.001), MigrationDecision::Spill);
         assert_eq!(p.decide(0.5, 0.5), MigrationDecision::Spill, "ties spill");
+    }
+
+    #[test]
+    fn cooldown_amortizes_the_transfer() {
+        let p = MigrationPolicy::new(true);
+        assert!(p.cooldown, "cool-down defaults on");
+        // 6 ms transfer at a 20 us/token saving: 300 tokens.
+        assert_eq!(p.cooldown_tokens(6e-3, 2e-5), 300);
+        assert_eq!(p.cooldown_tokens(0.0, 2e-5), 0, "free re-homes amortize instantly");
+        assert_eq!(p.cooldown_tokens(6e-3, 0.0), u64::MAX, "no saving never amortizes");
+        assert_eq!(p.cooldown_tokens(6e-3, -1.0), u64::MAX);
+        assert_eq!(p.cooldown_tokens(1e300, 1e-300), u64::MAX, "saturating cast");
+        let mut eager = p;
+        eager.cooldown = false;
+        assert_eq!(eager.cooldown_tokens(6e-3, 2e-5), 0, "PR 4 eager rule");
     }
 }

@@ -14,9 +14,13 @@
 //!   re-prefill a spill stream triggers;
 //! * [`SloAdmission`] — spill/migrate pressure thresholds derived from
 //!   a TTFT target and observed arrival/service rates instead of a
-//!   fixed queue-depth constant.
+//!   fixed queue-depth constant;
+//! * [`ScalingPolicy`] — replica autoscaling: spin replicas up/down
+//!   against the observed arrival rate and SLO headroom, with every
+//!   re-home of a prefix group priced here (bulk page migration over
+//!   the interconnect versus a fresh re-prefill).
 //!
-//! [`PolicyEngine`] bundles the three with a memoized [`CostTable`]
+//! [`PolicyEngine`] bundles the four with a memoized [`CostTable`]
 //! and per-quantity memos, so a router probing costs on every arrival
 //! pays hash lookups, not cost-model evaluations.  Consistency with
 //! the engines is pinned by tests: the analytic per-rank threshold
@@ -26,6 +30,7 @@
 pub mod admission;
 pub mod kernel;
 pub mod migration;
+pub mod scaling;
 
 use std::collections::HashMap;
 
@@ -38,6 +43,7 @@ use crate::costmodel::transfer::{prefix_transfer_seconds, shared_prefill_seconds
 pub use admission::SloAdmission;
 pub use kernel::KernelPolicy;
 pub use migration::{MigrationDecision, MigrationPolicy};
+pub use scaling::{ScalingDecision, ScalingPolicy};
 
 /// The decision registry one serving stack (or cluster router) owns.
 #[derive(Debug)]
@@ -50,6 +56,7 @@ pub struct PolicyEngine {
     pub kernel: KernelPolicy,
     pub migration: MigrationPolicy,
     pub admission: SloAdmission,
+    pub scaling: ScalingPolicy,
     /// Memoized modeled prefill seconds per shared length.
     prefill_memo: HashMap<u64, f64>,
     /// Memoized modeled transfer seconds per (tokens, expanded).
@@ -75,6 +82,7 @@ impl PolicyEngine {
             kernel,
             migration: MigrationPolicy::default(),
             admission: SloAdmission::default(),
+            scaling: ScalingPolicy::default(),
             prefill_memo: HashMap::new(),
             transfer_memo: HashMap::new(),
         }
@@ -156,12 +164,56 @@ impl PolicyEngine {
         if !self.migration.enabled {
             return MigrationDecision::Spill;
         }
+        if self.rehome_by_transfer(tokens, expanded, dst_hosts_pages) {
+            MigrationDecision::Migrate
+        } else {
+            MigrationDecision::Spill
+        }
+    }
+
+    /// The raw transfer-vs-prefill comparison, without the migration
+    /// master switch: true when streaming the group's pages beats
+    /// rebuilding them at the destination.  Replica autoscaling prices
+    /// every scale-event re-home through this (a spin-up/spin-down
+    /// must move or rebuild its groups regardless of whether pressure
+    /// migration is enabled).
+    pub fn rehome_by_transfer(
+        &mut self,
+        tokens: usize,
+        expanded: bool,
+        dst_hosts_pages: bool,
+    ) -> bool {
         if dst_hosts_pages {
-            return MigrationDecision::Migrate;
+            return true;
         }
         let transfer = self.prefix_transfer_seconds(tokens, expanded);
         let reprefill = self.shared_prefill_seconds(tokens);
-        self.migration.decide(transfer, reprefill)
+        MigrationPolicy::new(true).decide(transfer, reprefill) == MigrationDecision::Migrate
+    }
+
+    /// The served-token budget that amortizes one re-home of a group
+    /// with this prefix shape: the modeled transfer seconds divided by
+    /// the per-token cost of serving the group *fragmented* (two
+    /// shared-stage streams instead of one, evaluated at the Eq. 1
+    /// threshold occupancy — the regime the migration defends).  The
+    /// group may not re-home again until it has served this many
+    /// tokens (`MigrationPolicy::cooldown_tokens`).
+    pub fn migration_cooldown_tokens(&mut self, tokens: usize, expanded: bool) -> u64 {
+        if !self.migration.cooldown {
+            return 0;
+        }
+        let transfer = self.prefix_transfer_seconds(tokens, expanded);
+        // Clamped threshold occupancy: the saving is evaluated where
+        // Eq. 1 says concentration starts paying (never at a degenerate
+        // or astronomically large batch).
+        let b = self.kernel.b_theta.clamp(2, 4096) as u64;
+        let kernel = self.select(b as usize, tokens);
+        let l = tokens as u64;
+        let whole = self.shared_stage_seconds(kernel, b, l);
+        let frag = self.shared_stage_seconds(kernel, b / 2, l)
+            + self.shared_stage_seconds(kernel, b - b / 2, l);
+        let saving_per_token = (frag - whole) / b as f64;
+        self.migration.cooldown_tokens(transfer, saving_per_token)
     }
 }
 
@@ -266,5 +318,44 @@ mod tests {
     fn slo_admission_defaults_off() {
         let p = engine();
         assert_eq!(p.admission.spill_depth(100.0, 100.0, 13), 13);
+    }
+
+    #[test]
+    fn scaling_defaults_off() {
+        let p = engine();
+        assert!(!p.scaling.enabled);
+        assert_eq!(p.scaling.decide(1e9, 1.0, 2), scaling::ScalingDecision::Hold);
+    }
+
+    /// The cool-down budget is finite and meaningful for every Table-2
+    /// prefix shape on the default hardware: the transfer amortizes in
+    /// a bounded number of served tokens, and a longer transfer (same
+    /// saving structure) never amortizes faster.
+    #[test]
+    fn cooldown_budget_finite_for_paper_prefixes() {
+        let mut p = engine();
+        p.migration.enabled = true;
+        for tokens in crate::workload::tenants::TABLE2_LENGTHS {
+            let budget = p.migration_cooldown_tokens(tokens, true);
+            assert!(budget > 0, "tokens={tokens}: a paid transfer needs amortizing");
+            assert!(
+                budget < 100_000,
+                "tokens={tokens}: budget {budget} should be servable"
+            );
+        }
+        // Eager mode (the PR 4 rule) disables the budget entirely.
+        p.migration.cooldown = false;
+        assert_eq!(p.migration_cooldown_tokens(26472, true), 0);
+    }
+
+    /// `rehome_by_transfer` is `migrate_or_spill` without the master
+    /// switch: scaling consults it even when pressure migration is off.
+    #[test]
+    fn rehome_pricing_ignores_master_switch() {
+        let mut p = engine();
+        assert!(!p.migration.enabled);
+        assert_eq!(p.migrate_or_spill(26472, true, false), MigrationDecision::Spill);
+        assert!(p.rehome_by_transfer(26472, true, false), "transfer wins the pricing");
+        assert!(p.rehome_by_transfer(1, false, true), "residency is always free");
     }
 }

@@ -1,0 +1,197 @@
+//! Replica autoscaling: size the fleet to the observed load.
+//!
+//! TyphoonMLA's fleet-level win is *concentration* — prefix-affinity
+//! routing keeps each group's occupancy on the replica holding its
+//! pages.  Concentration only pays while the fleet matches the load:
+//! an over-provisioned fleet strands groups at fragment occupancy and
+//! an under-provisioned one sheds a hot group's overflow as spills
+//! (each spill fragments the group and duplicates its shared-stage
+//! stream).  This policy closes the loop: the router observes the
+//! arrival rate and the per-replica SLO headroom and spins replicas up
+//! or down mid-run, re-homing prefix groups over the migration path as
+//! the fleet resizes.
+//!
+//! The decision is a utilization rule over two *observed* rates — no
+//! workload-specific constants:
+//!
+//! * lambda-hat: the windowed fleet arrival rate (requests/second of
+//!   wall time over the last `rate_window` arrivals — windowed so a
+//!   burst is visible against a calm history);
+//! * mu-hat: the summed per-replica service rates (completions per
+//!   busy decode second, `Coordinator::service_rate`) of the *active*
+//!   replicas — each replica's saturated capacity.
+//!
+//! Scale **up** when `lambda > headroom * mu_fleet` (the fleet is past
+//! its target utilization, queueing delay will blow through the SLO);
+//! scale **down** when the fleet one replica smaller would still sit
+//! under `down_factor * headroom` utilization (the hysteresis gap
+//! keeps up/down from oscillating around one threshold).  Both rates
+//! must be observable and finite — the batch protocol (everything at
+//! t = 0, lambda infinite) and the cold start (no completions, mu = 0)
+//! hold the fleet exactly as configured, which is what the
+//! never-triggered bit-identity pin leans on.
+//!
+//! *Pricing* of a scale event is not here: the cluster prices each
+//! group's re-home through `PolicyEngine` (bulk page migration over
+//! the interconnect versus a fresh re-prefill at the destination) and
+//! executes it over the same `migrate_group` / `import_prefix_group`
+//! path pressure migration uses.
+
+use crate::config::ScalingConfig;
+
+/// What the fleet should do right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalingDecision {
+    /// The fleet matches the load (or the rates are not observable).
+    Hold,
+    /// Spin a replica up (utilization past the headroom target).
+    Up,
+    /// Spin a replica down (one fewer would still have headroom).
+    Down,
+}
+
+/// The utilization-driven autoscaling rule (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPolicy {
+    /// Master switch: disabled holds the fleet exactly as configured
+    /// (the fixed-fleet reduction tests pin this).
+    pub enabled: bool,
+    /// Target utilization rho* in (0, 1]: scale up past it.
+    pub headroom: f64,
+    /// Scale-down hysteresis in (0, 1): the shrunk fleet must sit under
+    /// `down_factor * headroom` utilization before a replica retires.
+    pub down_factor: f64,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Arrivals in the windowed lambda-hat estimate.
+    pub rate_window: usize,
+    /// Minimum arrivals between scale events (rate limiter, so one
+    /// burst triggers one resize, not one per arrival).
+    pub cooldown_arrivals: usize,
+}
+
+impl Default for ScalingPolicy {
+    fn default() -> Self {
+        Self::from_config(&ScalingConfig::for_fleet(1))
+    }
+}
+
+impl ScalingPolicy {
+    /// Adopt the validated operator-facing knobs.
+    pub fn from_config(cfg: &ScalingConfig) -> Self {
+        ScalingPolicy {
+            enabled: cfg.enabled,
+            headroom: cfg.headroom,
+            down_factor: cfg.down_factor,
+            min_replicas: cfg.min_replicas,
+            max_replicas: cfg.max_replicas,
+            rate_window: cfg.rate_window,
+            cooldown_arrivals: cfg.cooldown_arrivals,
+        }
+    }
+
+    /// The sizing rule.  `arrival_rate` is the windowed fleet
+    /// lambda-hat (wall requests/second); `fleet_service_rate` the
+    /// summed active-replica mu-hat (completions per busy second);
+    /// `active` the current active replica count.  Unobservable rates
+    /// (cold start, the batch protocol's infinite lambda) hold.
+    pub fn decide(
+        &self,
+        arrival_rate: f64,
+        fleet_service_rate: f64,
+        active: usize,
+    ) -> ScalingDecision {
+        if !self.enabled || active == 0 {
+            return ScalingDecision::Hold;
+        }
+        if !arrival_rate.is_finite() || arrival_rate <= 0.0 {
+            return ScalingDecision::Hold;
+        }
+        if !fleet_service_rate.is_finite() || fleet_service_rate <= 0.0 {
+            return ScalingDecision::Hold;
+        }
+        if active < self.max_replicas && arrival_rate > self.headroom * fleet_service_rate {
+            return ScalingDecision::Up;
+        }
+        if active > self.min_replicas {
+            // Capacity with one replica retired, assuming the mean
+            // per-replica rate (the victim is chosen idle, so this is
+            // conservative).
+            let shrunk = fleet_service_rate * (active - 1) as f64 / active as f64;
+            if arrival_rate < self.headroom * self.down_factor * shrunk {
+                return ScalingDecision::Down;
+            }
+        }
+        ScalingDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(min: usize, max: usize) -> ScalingPolicy {
+        let mut cfg = ScalingConfig::for_fleet(2);
+        cfg.enabled = true;
+        cfg.min_replicas = min;
+        cfg.max_replicas = max;
+        let mut p = ScalingPolicy::from_config(&cfg);
+        p.headroom = 0.8;
+        p.down_factor = 0.5;
+        p
+    }
+
+    #[test]
+    fn disabled_always_holds() {
+        let mut p = policy(1, 8);
+        p.enabled = false;
+        assert_eq!(p.decide(1e9, 1.0, 2), ScalingDecision::Hold);
+        assert_eq!(p.decide(1e-9, 1e9, 2), ScalingDecision::Hold);
+    }
+
+    #[test]
+    fn overload_scales_up_until_the_cap() {
+        let p = policy(1, 4);
+        // lambda 100 > 0.8 * mu 100 -> up.
+        assert_eq!(p.decide(100.0, 100.0, 2), ScalingDecision::Up);
+        assert_eq!(p.decide(100.0, 100.0, 4), ScalingDecision::Hold, "at the cap");
+    }
+
+    #[test]
+    fn deep_underload_scales_down_until_the_floor() {
+        let p = policy(2, 8);
+        // Shrunk capacity 100 * 3/4 = 75; threshold 0.8*0.5*75 = 30.
+        assert_eq!(p.decide(10.0, 100.0, 4), ScalingDecision::Down);
+        assert_eq!(p.decide(10.0, 100.0, 2), ScalingDecision::Hold, "at the floor");
+    }
+
+    /// The hysteresis gap: between the up and down thresholds the fleet
+    /// holds, so the rule cannot oscillate around one boundary.
+    #[test]
+    fn mid_band_holds() {
+        let p = policy(1, 8);
+        for lambda in [31.0, 50.0, 79.0] {
+            assert_eq!(p.decide(lambda, 100.0, 2), ScalingDecision::Hold, "{lambda}");
+        }
+    }
+
+    /// Unobservable rates hold: cold start (mu = 0), the batch
+    /// protocol's infinite lambda, and a not-yet-started stream.
+    #[test]
+    fn unobservable_rates_hold() {
+        let p = policy(1, 8);
+        assert_eq!(p.decide(f64::INFINITY, 100.0, 2), ScalingDecision::Hold);
+        assert_eq!(p.decide(100.0, 0.0, 2), ScalingDecision::Hold);
+        assert_eq!(p.decide(0.0, 100.0, 2), ScalingDecision::Hold);
+        assert_eq!(p.decide(f64::NAN, 100.0, 2), ScalingDecision::Hold);
+    }
+
+    /// Pinched bounds (min == max) hold regardless of load — the
+    /// configuration the never-triggered bit-identity test uses.
+    #[test]
+    fn pinched_bounds_never_scale() {
+        let p = policy(2, 2);
+        assert_eq!(p.decide(1e9, 1.0, 2), ScalingDecision::Hold);
+        assert_eq!(p.decide(1e-9, 1e9, 2), ScalingDecision::Hold);
+    }
+}

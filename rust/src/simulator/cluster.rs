@@ -1,7 +1,7 @@
 //! Cluster-scale serving: N replicas — each a full `Coordinator` +
 //! `SimEngine` + `KvCacheManager` stack, optionally TP/SP-sharded —
-//! fed by a timed (Poisson) arrival process through a router with
-//! pluggable policies.
+//! fed by a timed (Poisson, optionally bursty) arrival process through
+//! a router with pluggable policies.
 //!
 //! The paper's Typhoon win comes from *concentrating* sequences that
 //! share a prefix into one batch (Eq. 1 amortizes the shared stage
@@ -13,6 +13,20 @@
 //! occupancy per group, one stream per prefix fleet-wide — and spills
 //! to the least-loaded peer only under pressure (recorded, so the
 //! "one group, one replica" invariant is auditable).
+//!
+//! **Autoscaling.**  With `--autoscale` the fleet itself tracks the
+//! load: `policy::ScalingPolicy` watches the windowed arrival rate
+//! against the active replicas' summed service rates and spins
+//! replicas up (a fresh stack joins the fleet; the hottest *pressured*
+//! groups bulk-migrate onto it when the modeled page transfer beats a
+//! re-prefill, over the same `migrate_group` path pressure relief
+//! uses) or down (an *idle* victim drains — no new admissions, its
+//! prefix copies re-home by the same pricing and its pages release —
+//! then retires).  Replicas therefore have a lifecycle
+//! ([`ReplicaLifecycle`]); retired stacks stay in the report so every
+//! completion is accounted for.  A configuration whose bounds or
+//! observed rates never trigger a scale event is bit-identical to the
+//! fixed fleet (pinned by `tests/cluster.rs`).
 //!
 //! The simulation is event-driven over modeled time: each replica owns
 //! an independent clock (its coordinator's `now`), and the cluster
@@ -27,17 +41,23 @@ use std::collections::{HashMap, HashSet};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::config::{HardwareSpec, KernelKind, ModelConfig, ScalingConfig};
 use crate::coordinator::Coordinator;
 use crate::costmodel::parallel::ParallelismConfig;
 use crate::kvcache::PrefixId;
 use crate::metrics::Metrics;
-use crate::policy::{MigrationDecision, PolicyEngine};
+use crate::policy::{MigrationDecision, PolicyEngine, ScalingDecision, ScalingPolicy};
 use crate::util::stats::{p50, p95, p99};
-use crate::workload::tenants::{tenant_set, timed_arrivals, TenantSpec, TimedArrival};
+use crate::workload::tenants::{
+    tenant_set, timed_arrivals, timed_arrivals_bursty, TenantSpec, TimedArrival,
+};
 
 use super::engine::SimEngine;
 use super::tenancy::tenant_serving_stack;
+
+/// Phases of the square-wave bursty arrival profile (calm/burst
+/// alternation, starting calm).
+pub const BURST_PHASES: usize = 6;
 
 /// Pluggable routing policy of the cluster front door.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,6 +102,29 @@ impl RouterPolicy {
     }
 }
 
+/// Lifecycle of one replica in a (possibly autoscaled) fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaLifecycle {
+    /// Serving and admitting new arrivals.
+    Active,
+    /// Spin-down victim: no new admissions, in-flight work finishes,
+    /// prefix copies release at drain.
+    Draining,
+    /// Drained and decommissioned: zero pages, zero work; kept in the
+    /// report so its completions stay accounted for.
+    Retired,
+}
+
+impl ReplicaLifecycle {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplicaLifecycle::Active => "active",
+            ReplicaLifecycle::Draining => "draining",
+            ReplicaLifecycle::Retired => "retired",
+        }
+    }
+}
+
 /// Parameters of one cluster experiment.
 #[derive(Clone, Debug)]
 pub struct ClusterParams {
@@ -89,7 +132,8 @@ pub struct ClusterParams {
     pub hw: HardwareSpec,
     /// Requested kernel (per-group fall-back applies to Typhoon).
     pub kernel: KernelKind,
-    /// Number of serving replicas.
+    /// Number of serving replicas (the *starting* fleet when
+    /// autoscaling is enabled).
     pub replicas: usize,
     pub router: RouterPolicy,
     /// TP/SP sharding of every replica (`single()` = one device each).
@@ -105,6 +149,10 @@ pub struct ClusterParams {
     /// Poisson arrival rate, requests/second; `None` drops the whole
     /// stream at t = 0 (the paper's batch protocol).
     pub arrival_rate: Option<f64>,
+    /// Burst factor layered on `arrival_rate`: the stream alternates
+    /// calm (`rate`) and burst (`rate * factor`) phases
+    /// (`BURST_PHASES` square wave).  Requires an arrival rate.
+    pub arrival_burst: Option<f64>,
     pub seed: u64,
     /// Include prefill time in the modeled clocks (decode-only by
     /// default, matching the paper's throughput protocol).
@@ -119,11 +167,17 @@ pub struct ClusterParams {
     /// the whole group's pages to the least-loaded peer (modeled
     /// interconnect transfer, no re-prefill) when that beats spilling
     /// the overflow one request at a time.  Off reproduces the PR 3
-    /// spill-only router bit-for-bit.
+    /// spill-only router bit-for-bit.  Re-homes are rate-limited by a
+    /// per-group cool-down priced on transfer amortization
+    /// (`PolicyEngine::migration_cooldown_tokens`).
     pub migrate: bool,
     /// TTFT target in seconds for SLO-driven admission; `None` keeps
     /// the fixed `spill_queue_depth` trigger.
     pub slo_ttft: Option<f64>,
+    /// Replica autoscaling (prefix-affinity router only): spin
+    /// replicas up/down against the observed arrival rate and SLO
+    /// headroom, re-homing prefix groups via the migration path.
+    pub scaling: ScalingConfig,
 }
 
 impl ClusterParams {
@@ -148,29 +202,46 @@ impl ClusterParams {
             skew,
             total_requests: batch * replicas.max(1) * 4,
             arrival_rate: None,
+            arrival_burst: None,
             seed: 42,
             include_prefill: false,
             spill_queue_depth: (2 * batch).max(1),
             migrate: false,
             slo_ttft: None,
+            scaling: ScalingConfig::for_fleet(replicas),
         }
     }
 }
 
 /// One replica: a full single-device serving stack plus the router's
-/// view of which tenants it hosts.
+/// view of which tenants it hosts and its fleet lifecycle state.
 struct Replica {
     coord: Coordinator<SimEngine>,
+    state: ReplicaLifecycle,
     /// Tenant -> prefix group registered on this replica (pages held).
     prefix_of: HashMap<usize, PrefixId>,
     /// Tenants whose group arrived here via migration import (adopted
     /// pages, never locally prefilled).
     imported: HashSet<usize>,
-    /// Prefix copies retired by an outbound migration (released once
-    /// their last sequence drains) — kept for the page audit.
+    /// Prefix copies retired by an outbound migration or a spin-down
+    /// (released once their last sequence drains) — kept for the page
+    /// audit.
     retired: Vec<(usize, PrefixId)>,
     /// Requests routed here.
     routed: u64,
+}
+
+impl Replica {
+    fn fresh(coord: Coordinator<SimEngine>) -> Self {
+        Replica {
+            coord,
+            state: ReplicaLifecycle::Active,
+            prefix_of: HashMap::new(),
+            imported: HashSet::new(),
+            retired: Vec::new(),
+            routed: 0,
+        }
+    }
 }
 
 /// Router state (stickiness + spill/migration bookkeeping; the
@@ -188,6 +259,14 @@ struct Router {
     spilled_since_migration: HashSet<usize>,
     migrations: u64,
     migrated: HashSet<usize>,
+    /// Remaining served-token budget before each tenant's group may
+    /// re-home again (the migration cool-down; absent = no budget
+    /// outstanding).
+    cooldown_tokens: HashMap<usize, u64>,
+    /// Scale-event re-homes where the pricing said "re-prefill": the
+    /// source copy retires and the destination rebuilds the prefix on
+    /// its next arrival.
+    reprefill_rehomes: u64,
 }
 
 impl Router {
@@ -201,6 +280,8 @@ impl Router {
             spilled_since_migration: HashSet::new(),
             migrations: 0,
             migrated: HashSet::new(),
+            cooldown_tokens: HashMap::new(),
+            reprefill_rehomes: 0,
         }
     }
 
@@ -208,12 +289,12 @@ impl Router {
         Self::least_loaded_except(replicas, None)
     }
 
-    /// Least-loaded replica, optionally excluding one index (spill
-    /// target selection); lowest index wins ties.
+    /// Least-loaded **active** replica, optionally excluding one index
+    /// (spill target selection); lowest index wins ties.
     fn least_loaded_except(replicas: &[Replica], exclude: Option<usize>) -> usize {
         let mut best: Option<usize> = None;
         for (i, r) in replicas.iter().enumerate() {
-            if Some(i) == exclude {
+            if Some(i) == exclude || r.state != ReplicaLifecycle::Active {
                 continue;
             }
             let better = match best {
@@ -224,7 +305,7 @@ impl Router {
                 best = Some(i);
             }
         }
-        best.expect("at least one candidate replica")
+        best.expect("at least one active candidate replica")
     }
 }
 
@@ -234,13 +315,35 @@ pub struct MigrationEvent {
     pub tenant: usize,
     pub from: usize,
     pub to: usize,
+    /// Index (into the arrival stream) of the arrival whose routing
+    /// triggered this migration.
+    pub arrival_index: usize,
     /// Modeled interconnect seconds charged to the destination clock
     /// (0 when an earlier spill already paged the group there).
     pub transfer_seconds: f64,
+    /// Served-token budget the group must amortize before it may
+    /// re-home again (0 for free consolidations).
+    pub cooldown_tokens: u64,
     /// Destination `shared_prefills` before/after adoption.  Equal —
     /// or the destination re-prefilled, which the fuzz audit forbids.
     pub dst_prefills_before: u64,
     pub dst_prefills_after: u64,
+}
+
+/// Audit record of one fleet resize.
+#[derive(Clone, Debug)]
+pub struct ScaleEvent {
+    /// Modeled time of the triggering arrival.
+    pub at: f64,
+    /// Index (into the arrival stream) of the triggering arrival.
+    pub arrival_index: usize,
+    /// Spin-up (a fresh replica joined) or spin-down (a victim
+    /// started draining).
+    pub up: bool,
+    /// The replica that joined / started draining.
+    pub replica: usize,
+    /// Prefix groups re-homed as part of this event.
+    pub groups_moved: usize,
 }
 
 /// Per-replica slice of a finished cluster run.
@@ -264,6 +367,8 @@ pub struct ReplicaReport {
     pub routed: u64,
     /// The replica's final clock (arrival-to-drain span).
     pub final_clock: f64,
+    /// Fleet lifecycle state at the end of the run.
+    pub state: ReplicaLifecycle,
 }
 
 /// Aggregate result of one cluster experiment.
@@ -289,11 +394,17 @@ pub struct ClusterReport {
     pub tpot_p99: f64,
     /// Prefix-affinity requests routed off their home replica.
     pub spills: u64,
-    /// Prefix groups re-homed by the migrate-vs-spill rule.
+    /// Prefix groups re-homed by the migrate-vs-spill rule (pressure
+    /// and scale-event migrations alike).
     pub migrations: u64,
     /// Modeled interconnect seconds spent moving pages (fleet total;
     /// wall time on the receiving clocks, never decode time).
     pub transfer_seconds: f64,
+    /// Replicas spun up / down by the autoscaler.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Active replicas at the end of the run.
+    pub active_replicas: usize,
 }
 
 /// The event-driven N-replica serving simulation.
@@ -305,9 +416,13 @@ pub struct ClusterSim {
     replicas: Vec<Replica>,
     router: Router,
     /// The unified decision layer: kernel fall-back pricing, the
-    /// migrate-vs-spill rule, and SLO-driven admission thresholds.
+    /// migrate-vs-spill rule, SLO-driven admission thresholds and the
+    /// autoscaling rule.
     policy: PolicyEngine,
     migration_log: Vec<MigrationEvent>,
+    scale_log: Vec<ScaleEvent>,
+    /// Arrival index of the last scale event (the rate limiter).
+    last_scale_arrival: Option<usize>,
 }
 
 impl ClusterSim {
@@ -334,23 +449,38 @@ impl ClusterSim {
                 bail!("TTFT target must be positive seconds, got {t}");
             }
         }
-        if (params.migrate || params.slo_ttft.is_some())
+        if (params.migrate || params.slo_ttft.is_some() || params.scaling.enabled)
             && params.router != RouterPolicy::PrefixAffinity
         {
             bail!(
-                "migration / SLO admission act on prefix-affinity pressure \
-                 relief; router {} never consults them",
+                "migration / SLO admission / autoscaling act on prefix-affinity \
+                 pressure relief; router {} never consults them",
                 params.router.as_str()
             );
         }
-        // (A non-positive arrival rate is rejected by `timed_arrivals`.)
+        params.scaling.validate(params.replicas)?;
+        if params.arrival_burst.is_some() && params.arrival_rate.is_none() {
+            bail!("a burst factor needs an arrival rate (the batch protocol has no phases)");
+        }
+        // (A non-positive arrival rate / burst factor below one is
+        // rejected by the arrival generators.)
         let tenants = tenant_set(params.tenants, params.skew);
-        let arrivals = timed_arrivals(
-            &tenants,
-            params.total_requests,
-            params.arrival_rate,
-            params.seed,
-        )?;
+        let arrivals = match (params.arrival_rate, params.arrival_burst) {
+            (Some(rate), Some(factor)) => timed_arrivals_bursty(
+                &tenants,
+                params.total_requests,
+                rate,
+                factor,
+                BURST_PHASES,
+                params.seed,
+            )?,
+            _ => timed_arrivals(
+                &tenants,
+                params.total_requests,
+                params.arrival_rate,
+                params.seed,
+            )?,
+        };
         // Per-replica stack: the canonical single-device tenancy sizing
         // (any replica may end up hosting every group, so each pool
         // budgets for all prefixes).
@@ -365,13 +495,7 @@ impl ClusterSim {
                 params.include_prefill,
                 params.parallelism,
             )?;
-            replicas.push(Replica {
-                coord,
-                prefix_of: HashMap::new(),
-                imported: HashSet::new(),
-                retired: Vec::new(),
-                routed: 0,
-            });
+            replicas.push(Replica::fresh(coord));
         }
         let mut policy = PolicyEngine::new(
             params.model.clone(),
@@ -381,6 +505,7 @@ impl ClusterSim {
         );
         policy.migration.enabled = params.migrate;
         policy.admission.ttft_target = params.slo_ttft;
+        policy.scaling = ScalingPolicy::from_config(&params.scaling);
         Ok(ClusterSim {
             params: params.clone(),
             tenants,
@@ -390,6 +515,8 @@ impl ClusterSim {
             router: Router::new(params.router),
             policy,
             migration_log: Vec::new(),
+            scale_log: Vec::new(),
+            last_scale_arrival: None,
         })
     }
 
@@ -408,8 +535,19 @@ impl ClusterSim {
         &self.replicas[replica].coord
     }
 
+    /// Every replica ever part of the fleet (including retired ones).
     pub fn replica_count(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Replicas currently admitting new arrivals.
+    pub fn active_replica_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.state == ReplicaLifecycle::Active).count()
+    }
+
+    /// A replica's fleet lifecycle state.
+    pub fn replica_state(&self, replica: usize) -> ReplicaLifecycle {
+        self.replicas[replica].state
     }
 
     /// Requests the prefix-affinity router sent off their home replica.
@@ -439,9 +577,29 @@ impl ClusterSim {
     }
 
     /// Per-migration audit records (destination prefill counters,
-    /// modeled transfer time).
+    /// modeled transfer time, cool-down budgets).
     pub fn migration_log(&self) -> &[MigrationEvent] {
         &self.migration_log
+    }
+
+    /// Per-resize audit records.
+    pub fn scale_log(&self) -> &[ScaleEvent] {
+        &self.scale_log
+    }
+
+    /// Replicas spun up / down so far.
+    pub fn scale_ups(&self) -> u64 {
+        self.scale_log.iter().filter(|e| e.up).count() as u64
+    }
+
+    pub fn scale_downs(&self) -> u64 {
+        self.scale_log.iter().filter(|e| !e.up).count() as u64
+    }
+
+    /// Scale-event re-homes that retired the source copy and left the
+    /// destination to re-prefill (the pricing's "rebuild" branch).
+    pub fn reprefill_rehomes(&self) -> u64 {
+        self.router.reprefill_rehomes
     }
 
     /// Did this replica adopt the tenant's group via migration import?
@@ -463,7 +621,8 @@ impl ClusterSim {
     }
 
     /// The earliest busy replica (has queued or running work), by
-    /// clock, lowest index on ties.
+    /// clock, lowest index on ties.  Draining replicas stay in the loop
+    /// until their in-flight work finishes.
     fn earliest_busy(&self) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         for (i, r) in self.replicas.iter().enumerate() {
@@ -481,11 +640,26 @@ impl ClusterSim {
         best
     }
 
+    /// Flip drained spin-down victims to `Retired` (no work left, every
+    /// prefix copy released).  A no-op until a scale-down happened.
+    fn finalize_drained(&mut self) {
+        for r in &mut self.replicas {
+            if r.state == ReplicaLifecycle::Draining
+                && r.coord.running() == 0
+                && r.coord.queued() == 0
+                && r.coord.prefix_groups().is_empty()
+            {
+                r.state = ReplicaLifecycle::Retired;
+            }
+        }
+    }
+
     /// Process one event: deliver the next arrival if it is due no
-    /// later than every busy replica's clock (router probe + submit,
-    /// fast-forwarding an idle replica), otherwise run one decode step
-    /// of the earliest-clock busy replica.  Returns false when the
-    /// stream is exhausted and every replica has drained.
+    /// later than every busy replica's clock (autoscale check + router
+    /// probe + submit, fast-forwarding an idle replica), otherwise run
+    /// one decode step of the earliest-clock busy replica.  Returns
+    /// false when the stream is exhausted and every replica has
+    /// drained.
     pub fn step_event(&mut self) -> Result<bool> {
         let busy = self.earliest_busy();
         if self.next_arrival < self.arrivals.len() {
@@ -494,8 +668,13 @@ impl ClusterSim {
                 Some((_, t)) => self.arrivals[self.next_arrival].at <= t,
             };
             if due {
-                let a = self.arrivals[self.next_arrival].clone();
+                let idx = self.next_arrival;
+                let a = self.arrivals[idx].clone();
                 self.next_arrival += 1;
+                if self.policy.scaling.enabled {
+                    self.finalize_drained();
+                    self.maybe_scale(&a, idx)?;
+                }
                 let r = self.route_arrival(&a)?;
                 let rep = &mut self.replicas[r];
                 rep.coord.advance_clock(a.at);
@@ -517,6 +696,13 @@ impl ClusterSim {
                 // that wait is real queueing delay TTFT must include.
                 rep.coord.submit_to_at(&a.request, pid, a.at)?;
                 rep.routed += 1;
+                // This arrival's generation budget amortizes its
+                // group's outstanding re-home cool-down (served-token
+                // budget; pools are sized so budgets are served in
+                // full).
+                if let Some(c) = self.router.cooldown_tokens.get_mut(&a.tenant) {
+                    *c = c.saturating_sub(a.request.max_new_tokens as u64);
+                }
                 return Ok(true);
             }
         }
@@ -524,15 +710,26 @@ impl ClusterSim {
             self.replicas[i].coord.step()?;
             return Ok(true);
         }
+        if self.policy.scaling.enabled {
+            self.finalize_drained();
+        }
         Ok(false)
     }
 
     /// Pick the replica for one arrival, probing replica queue depth,
     /// load and KV headroom; prefix-affinity pressure relief goes
-    /// through the policy layer's migrate-vs-spill rule.
+    /// through the policy layer's migrate-vs-spill rule.  Only active
+    /// replicas admit.
     fn route_arrival(&mut self, a: &TimedArrival) -> Result<usize> {
         match self.router.policy {
             RouterPolicy::RoundRobin => {
+                // Autoscaling requires prefix-affinity, so under
+                // round-robin every replica is always Active and the
+                // plain modulo stays correct (no per-arrival filter).
+                debug_assert!(self
+                    .replicas
+                    .iter()
+                    .all(|r| r.state == ReplicaLifecycle::Active));
                 let r = self.router.rr_next % self.replicas.len();
                 self.router.rr_next += 1;
                 Ok(r)
@@ -542,31 +739,39 @@ impl ClusterSim {
         }
     }
 
-    fn route_affinity(&mut self, a: &TimedArrival) -> Result<usize> {
-        let tenant = a.tenant;
-        let Some(home) = self.router.home.get(&tenant).copied() else {
-            // First sighting: adopt the least-loaded replica as the
-            // group's home (it will hold the pages).
-            let r = Router::least_loaded(&self.replicas);
-            self.router.home.insert(tenant, r);
-            return Ok(r);
-        };
-        let h = &self.replicas[home].coord;
-        // Pressure threshold: SLO-derived when a TTFT target is set,
-        // the fixed queue-depth constant otherwise (bit-identical to
-        // the pre-SLO router).
-        let depth = if self.policy.admission.ttft_target.is_some() {
+    /// The queue depth at which a replica counts as pressured:
+    /// SLO-derived when a TTFT target is set, the fixed queue-depth
+    /// constant otherwise (bit-identical to the pre-SLO router).
+    fn pressure_depth(&self, replica: usize) -> usize {
+        if self.policy.admission.ttft_target.is_some() {
             self.policy.admission.spill_depth(
-                h.service_rate(),
+                self.replicas[replica].coord.service_rate(),
                 self.observed_arrival_rate(),
                 self.params.spill_queue_depth,
             )
         } else {
             self.params.spill_queue_depth
+        }
+    }
+
+    fn route_affinity(&mut self, a: &TimedArrival) -> Result<usize> {
+        let tenant = a.tenant;
+        let home = match self.router.home.get(&tenant).copied() {
+            Some(h) if self.replicas[h].state == ReplicaLifecycle::Active => h,
+            // First sighting (or a home lost to a spin-down that found
+            // nothing to re-home): adopt the least-loaded active
+            // replica as the group's home (it will hold the pages).
+            _ => {
+                let r = Router::least_loaded(&self.replicas);
+                self.router.home.insert(tenant, r);
+                return Ok(r);
+            }
         };
+        let depth = self.pressure_depth(home);
+        let h = &self.replicas[home].coord;
         let pressured =
             h.queued() >= depth || !h.can_admit_now(a.request.prompt_tokens);
-        if pressured && self.replicas.len() > 1 {
+        if pressured && self.active_replica_count() > 1 {
             let alt = Router::least_loaded_except(&self.replicas, Some(home));
             if self.replicas[alt].coord.load() < self.replicas[home].coord.load() {
                 let len = self.tenants[tenant].prompt_tokens;
@@ -579,14 +784,23 @@ impl ClusterSim {
                 // it there) makes re-homing free — the policy layer
                 // short-circuits the cost comparison for that case, so
                 // the decision matches what `migrate_group` will
-                // actually charge.
+                // actually charge.  A group still amortizing its last
+                // transfer may not re-home again (the ping-pong
+                // cool-down): its overflow spills instead.
                 let alt_hosts = self.replicas[alt].prefix_of.contains_key(&tenant);
-                return match self.policy.migrate_or_spill(len, expanded, alt_hosts) {
+                let cooling =
+                    self.router.cooldown_tokens.get(&tenant).copied().unwrap_or(0) > 0;
+                let decision = if cooling {
+                    MigrationDecision::Spill
+                } else {
+                    self.policy.migrate_or_spill(len, expanded, alt_hosts)
+                };
+                return match decision {
                     MigrationDecision::Migrate => {
                         // Re-home the whole group: the overflow (and
                         // everything after it) lands on a replica that
                         // now holds the pages.
-                        self.migrate_group(tenant, home, alt, a.at)?;
+                        self.migrate_group(tenant, home, alt, a.at, self.next_arrival - 1)?;
                         Ok(alt)
                     }
                     MigrationDecision::Spill => {
@@ -607,50 +821,259 @@ impl ClusterSim {
     }
 
     /// Observed fleet arrival rate over the delivered stream so far,
-    /// per replica (the admission policy's lambda-hat).  Infinite
-    /// under the batch protocol (everything at t = 0) — the admission
-    /// policy falls back to the fixed depth then.
-    fn observed_arrival_rate(&self) -> f64 {
+    /// per **active** replica (the admission policy's lambda-hat).
+    /// Dividing by the full fleet size would under-report the load the
+    /// moment the fleet resizes — a drained replica takes no arrivals,
+    /// so the survivors each see a larger share.  Infinite under the
+    /// batch protocol (everything at t = 0) — the admission policy
+    /// falls back to the fixed depth then.
+    pub fn observed_arrival_rate(&self) -> f64 {
         if self.next_arrival == 0 {
             return 0.0;
         }
         let span = self.arrivals[self.next_arrival - 1].at;
         if span > 0.0 {
-            self.next_arrival as f64 / span / self.replicas.len() as f64
+            self.next_arrival as f64 / span / self.active_replica_count().max(1) as f64
         } else {
             f64::INFINITY
         }
+    }
+
+    /// Windowed fleet arrival rate over the last `rate_window`
+    /// delivered arrivals — the autoscaler's lambda-hat (a burst must
+    /// be visible against a calm history, which the cumulative average
+    /// smooths away).  Infinite when the window collapsed to one
+    /// instant (batch protocol); 0 before two arrivals.
+    pub fn observed_burst_rate(&self) -> f64 {
+        let n = self.next_arrival;
+        if n < 2 {
+            return 0.0;
+        }
+        let w = self.policy.scaling.rate_window.max(2).min(n);
+        let span = self.arrivals[n - 1].at - self.arrivals[n - w].at;
+        if span > 0.0 {
+            (w - 1) as f64 / span
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// The autoscaling check, run as each arrival is delivered: observe
+    /// the windowed arrival rate against the active fleet's summed
+    /// service rates and spin a replica up or down.  Rate-limited to
+    /// one scale event per `cooldown_arrivals` arrivals.  A `Hold` (or
+    /// a down-decision with no idle victim) mutates nothing — the
+    /// never-triggered run is bit-identical to the fixed fleet.
+    fn maybe_scale(&mut self, a: &TimedArrival, idx: usize) -> Result<()> {
+        if let Some(last) = self.last_scale_arrival {
+            if idx - last < self.policy.scaling.cooldown_arrivals {
+                return Ok(());
+            }
+        }
+        let lambda = self.observed_burst_rate();
+        let mu: f64 = self
+            .replicas
+            .iter()
+            .filter(|r| r.state == ReplicaLifecycle::Active)
+            .map(|r| r.coord.service_rate())
+            .sum();
+        let active = self.active_replica_count();
+        match self.policy.scaling.decide(lambda, mu, active) {
+            ScalingDecision::Hold => Ok(()),
+            ScalingDecision::Up => self.scale_up(a.at, idx),
+            ScalingDecision::Down => self.scale_down(a.at, idx),
+        }
+    }
+
+    /// Spin a fresh replica up and bulk-migrate the hottest *pressured*
+    /// groups onto it: for every active replica whose queue has reached
+    /// the pressure depth, its hottest hosted group (largest arrival
+    /// share, lowest tenant id on ties) re-homes to the new replica —
+    /// by page transfer when `PolicyEngine` prices the interconnect
+    /// stream under a fresh re-prefill, by retire-and-rebuild
+    /// otherwise.  Scale-event re-homes bypass (and reset) the
+    /// per-group ping-pong cool-down: a capacity change is not thrash,
+    /// and the event itself is rate-limited.
+    fn scale_up(&mut self, at: f64, idx: usize) -> Result<()> {
+        let coord = tenant_serving_stack(
+            &self.params.model,
+            &self.params.hw,
+            self.params.kernel,
+            self.params.batch,
+            &self.tenants,
+            self.params.include_prefill,
+            self.params.parallelism,
+        )?;
+        let mut rep = Replica::fresh(coord);
+        rep.coord.advance_clock(at);
+        let new_idx = self.replicas.len();
+        self.replicas.push(rep);
+
+        let mut moves: Vec<(usize, usize)> = Vec::new(); // (src, tenant)
+        for src in 0..new_idx {
+            if self.replicas[src].state != ReplicaLifecycle::Active {
+                continue;
+            }
+            if self.replicas[src].coord.queued() < self.pressure_depth(src) {
+                continue;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for t in 0..self.tenants.len() {
+                if self.router.home.get(&t) != Some(&src)
+                    || !self.replicas[src].prefix_of.contains_key(&t)
+                {
+                    continue;
+                }
+                let share = self.tenants[t].share;
+                let better = match best {
+                    None => true,
+                    Some((s, _)) => share > s,
+                };
+                if better {
+                    best = Some((share, t));
+                }
+            }
+            if let Some((_, t)) = best {
+                moves.push((src, t));
+            }
+        }
+        let mut moved = 0usize;
+        for (src, tenant) in moves {
+            let len = self.tenants[tenant].prompt_tokens;
+            let expanded = self.replicas[src]
+                .prefix_of
+                .get(&tenant)
+                .and_then(|&p| self.replicas[src].coord.kv.prefix(p))
+                .is_some_and(|p| p.expanded);
+            if self.policy.rehome_by_transfer(len, expanded, false) {
+                self.migrate_group(tenant, src, new_idx, at, idx)?;
+            } else {
+                self.rehome_without_pages(tenant, src, new_idx)?;
+            }
+            moved += 1;
+        }
+        self.scale_log.push(ScaleEvent {
+            at,
+            arrival_index: idx,
+            up: true,
+            replica: new_idx,
+            groups_moved: moved,
+        });
+        self.last_scale_arrival = Some(idx);
+        Ok(())
+    }
+
+    /// Spin a replica down: the **idle** active replica hosting the
+    /// fewest groups (lowest index on ties) drains — every group it
+    /// hosts re-homes to the least-loaded survivor (page transfer or
+    /// retire-and-rebuild, by the same pricing), stray spilled copies
+    /// just retire, and the victim takes no further admissions.  No
+    /// idle victim means no event (draining a busy replica would
+    /// fragment its live groups, the exact cost concentration exists
+    /// to avoid).
+    fn scale_down(&mut self, at: f64, idx: usize) -> Result<()> {
+        let victim = (0..self.replicas.len())
+            .filter(|&i| {
+                self.replicas[i].state == ReplicaLifecycle::Active
+                    && self.replicas[i].coord.load() == 0
+            })
+            .min_by_key(|&i| (self.replicas[i].prefix_of.len(), i));
+        let Some(victim) = victim else {
+            return Ok(());
+        };
+        self.replicas[victim].state = ReplicaLifecycle::Draining;
+        let mut hosted: Vec<usize> = self.replicas[victim].prefix_of.keys().copied().collect();
+        hosted.sort_unstable();
+        let mut moved = 0usize;
+        for tenant in hosted {
+            if self.router.home.get(&tenant) == Some(&victim) {
+                let dst = Router::least_loaded(&self.replicas);
+                let len = self.tenants[tenant].prompt_tokens;
+                let expanded = self.replicas[victim]
+                    .prefix_of
+                    .get(&tenant)
+                    .and_then(|&p| self.replicas[victim].coord.kv.prefix(p))
+                    .is_some_and(|p| p.expanded);
+                let dst_hosts = self.replicas[dst].prefix_of.contains_key(&tenant);
+                if self.policy.rehome_by_transfer(len, expanded, dst_hosts) {
+                    self.migrate_group(tenant, victim, dst, at, idx)?;
+                } else {
+                    self.rehome_without_pages(tenant, victim, dst)?;
+                }
+                moved += 1;
+            } else if let Some(pid) = self.replicas[victim].prefix_of.remove(&tenant) {
+                // A stray spilled copy: retire it in place (released
+                // immediately — the victim is idle).
+                self.replicas[victim].coord.retire_prefix_group(pid)?;
+                self.replicas[victim].retired.push((tenant, pid));
+            }
+        }
+        self.scale_log.push(ScaleEvent {
+            at,
+            arrival_index: idx,
+            up: false,
+            replica: victim,
+            groups_moved: moved,
+        });
+        self.last_scale_arrival = Some(idx);
+        self.finalize_drained();
+        Ok(())
+    }
+
+    /// Scale-event re-home on the "rebuild" branch of the pricing: the
+    /// source copy retires (pages release at drain) and the stickiness
+    /// moves, so the destination re-prefills the prefix on the group's
+    /// next arrival.
+    fn rehome_without_pages(&mut self, tenant: usize, src: usize, dst: usize) -> Result<()> {
+        if let Some(pid) = self.replicas[src].prefix_of.remove(&tenant) {
+            self.replicas[src].coord.retire_prefix_group(pid)?;
+            self.replicas[src].retired.push((tenant, pid));
+        }
+        self.router.home.insert(tenant, dst);
+        self.router.reprefill_rehomes += 1;
+        Ok(())
     }
 
     /// Re-home `tenant`'s prefix group from `src` to `dst`: the
     /// destination adopts the pages over the interconnect (no
     /// re-prefill — the audit log records its prefill counter around
     /// the adoption), every other replica's copy is retired (released
-    /// the moment its last sequence drains), and the router's
-    /// stickiness follows the pages.
-    fn migrate_group(&mut self, tenant: usize, src: usize, dst: usize, at: f64) -> Result<()> {
+    /// the moment its last sequence drains), the router's stickiness
+    /// follows the pages, and the group starts a served-token cool-down
+    /// amortizing the transfer.
+    fn migrate_group(
+        &mut self,
+        tenant: usize,
+        src: usize,
+        dst: usize,
+        at: f64,
+        arrival_index: usize,
+    ) -> Result<()> {
         let src_pid = *self.replicas[src]
             .prefix_of
             .get(&tenant)
             .ok_or_else(|| anyhow!("migration source does not host tenant {tenant}"))?;
         let before = self.replicas[dst].coord.metrics.shared_prefills;
-        let transfer = if self.replicas[dst].prefix_of.contains_key(&tenant) {
+        let (transfer, cooldown) = if self.replicas[dst].prefix_of.contains_key(&tenant) {
             // An earlier spill already paged the group here: adopt the
             // resident copy, nothing crosses the interconnect (and
-            // nothing needs exporting).
-            0.0
+            // nothing needs exporting or amortizing).
+            (0.0, 0)
         } else {
             let export = self.replicas[src].coord.kv.export_prefix(src_pid)?;
             let pid = self.replicas[dst].coord.import_prefix_group(&export)?;
             let secs = self
                 .policy
                 .prefix_transfer_seconds(export.tokens.len(), export.expanded);
+            let cooldown = self
+                .policy
+                .migration_cooldown_tokens(export.tokens.len(), export.expanded);
             let rep = &mut self.replicas[dst];
             rep.prefix_of.insert(tenant, pid);
             rep.imported.insert(tenant);
             rep.coord.advance_clock(at);
             rep.coord.charge_transfer(secs);
-            secs
+            (secs, cooldown)
         };
         let after = self.replicas[dst].coord.metrics.shared_prefills;
         for (i, rep) in self.replicas.iter_mut().enumerate() {
@@ -666,11 +1089,18 @@ impl ClusterSim {
         self.router.migrations += 1;
         self.router.migrated.insert(tenant);
         self.router.spilled_since_migration.remove(&tenant);
+        if cooldown > 0 {
+            self.router.cooldown_tokens.insert(tenant, cooldown);
+        } else {
+            self.router.cooldown_tokens.remove(&tenant);
+        }
         self.migration_log.push(MigrationEvent {
             tenant,
             from: src,
             to: dst,
+            arrival_index,
             transfer_seconds: transfer,
+            cooldown_tokens: cooldown,
             dst_prefills_before: before,
             dst_prefills_after: after,
         });
@@ -717,6 +1147,7 @@ impl ClusterSim {
                 prefix_imports: m.prefix_imports,
                 routed: r.routed,
                 final_clock: r.coord.now(),
+                state: r.state,
             });
         }
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -741,6 +1172,9 @@ impl ClusterSim {
             spills: self.router.spills,
             migrations: self.router.migrations,
             transfer_seconds,
+            scale_ups: self.scale_ups(),
+            scale_downs: self.scale_downs(),
+            active_replicas: self.active_replica_count(),
         }
     }
 }
@@ -780,10 +1214,13 @@ mod tests {
         assert_eq!(report.requests_completed as usize, sim.arrivals().len());
         for r in &report.replicas {
             assert!(r.routed > 0, "round-robin leaves no replica idle");
+            assert_eq!(r.state, ReplicaLifecycle::Active, "fixed fleets never drain");
         }
         assert!(report.tokens > 0);
         assert!(report.goodput > 0.0);
         assert!(report.makespan > 0.0);
+        assert_eq!(report.scale_ups + report.scale_downs, 0);
+        assert_eq!(report.active_replicas, 3);
     }
 
     #[test]
@@ -933,7 +1370,8 @@ mod tests {
     /// A slow interconnect confines migration to free re-homes: fresh
     /// destinations lose the cost comparison (their overflow spills
     /// instead), so every recorded migration is a residency
-    /// consolidation with zero transfer seconds.
+    /// consolidation with zero transfer seconds — and zero cool-down
+    /// (nothing to amortize).
     #[test]
     fn slow_interconnect_migrations_are_free_consolidations_only() {
         let mut p = quick_params(3, RouterPolicy::PrefixAffinity);
@@ -945,6 +1383,7 @@ mod tests {
         assert!(sim.spills() > 0, "fresh destinations must spill on a slow link");
         for e in sim.migration_log() {
             assert_eq!(e.transfer_seconds, 0.0, "only resident peers re-home");
+            assert_eq!(e.cooldown_tokens, 0, "free re-homes amortize instantly");
         }
         assert_eq!(sim.report().transfer_seconds, 0.0);
     }
@@ -971,8 +1410,8 @@ mod tests {
     }
 
     /// Nonsense TTFT targets are configuration errors, and
-    /// migration/SLO flags on routers that never consult them are
-    /// rejected instead of silently ignored.
+    /// migration/SLO/autoscale flags on routers that never consult
+    /// them are rejected instead of silently ignored.
     #[test]
     fn invalid_slo_target_rejected() {
         let mut p = quick_params(1, RouterPolicy::PrefixAffinity);
@@ -987,6 +1426,31 @@ mod tests {
         let mut p = quick_params(2, RouterPolicy::RoundRobin);
         p.slo_ttft = Some(0.5);
         assert!(ClusterSim::new(&p).is_err(), "slo-ttft needs prefix-affinity");
+        let mut p = quick_params(2, RouterPolicy::LeastLoaded);
+        p.scaling.enabled = true;
+        assert!(ClusterSim::new(&p).is_err(), "autoscale needs prefix-affinity");
+    }
+
+    /// Nonsense scaling shapes and burst profiles are configuration
+    /// errors too.
+    #[test]
+    fn invalid_scaling_and_burst_rejected() {
+        let mut p = quick_params(2, RouterPolicy::PrefixAffinity);
+        p.scaling.enabled = true;
+        p.scaling.headroom = 0.0;
+        assert!(ClusterSim::new(&p).is_err(), "headroom must be positive");
+        let mut p = quick_params(2, RouterPolicy::PrefixAffinity);
+        p.scaling.enabled = true;
+        p.scaling.max_replicas = 1;
+        assert!(ClusterSim::new(&p).is_err(), "cap below the starting fleet");
+        let mut p = quick_params(2, RouterPolicy::PrefixAffinity);
+        p.arrival_burst = Some(8.0);
+        assert!(ClusterSim::new(&p).is_err(), "burst needs an arrival rate");
+        p.arrival_rate = Some(50.0);
+        p.arrival_burst = Some(0.5);
+        assert!(ClusterSim::new(&p).is_err(), "burst factor below one");
+        p.arrival_burst = Some(8.0);
+        ClusterSim::new(&p).unwrap();
     }
 
     #[test]
@@ -1008,5 +1472,49 @@ mod tests {
         p.parallelism = ParallelismConfig::single();
         p.arrival_rate = Some(0.0);
         assert!(ClusterSim::new(&p).is_err(), "rate must be positive");
+    }
+
+    /// Autoscale smoke: an over-provisioned fleet on a calm stream
+    /// consolidates (scale-downs fire, victims drain to zero pages and
+    /// retire), every request still completes, and the retired
+    /// replicas stay in the report.
+    #[test]
+    fn autoscale_consolidates_an_overprovisioned_fleet() {
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            3,
+            RouterPolicy::PrefixAffinity,
+            16,
+            3,
+            1.0,
+        );
+        p.total_requests = 256;
+        p.arrival_rate = Some(40.0); // far below fleet capacity
+        p.migrate = true;
+        p.scaling.enabled = true;
+        p.scaling.cooldown_arrivals = 32;
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+        let report = sim.report();
+        assert_eq!(report.requests_completed as usize, sim.arrivals().len());
+        assert!(report.scale_downs > 0, "calm stream must consolidate the fleet");
+        assert!(report.active_replicas < 3, "a replica must have retired");
+        assert_eq!(report.active_replicas, sim.active_replica_count());
+        for i in 0..sim.replica_count() {
+            if sim.replica_state(i) != ReplicaLifecycle::Active {
+                assert_eq!(
+                    sim.replica_state(i),
+                    ReplicaLifecycle::Retired,
+                    "victims finish draining by the end of the run"
+                );
+                assert_eq!(
+                    sim.coordinator(i).kv.used_blocks(),
+                    0,
+                    "decommissioned replica {i} must hold zero pages"
+                );
+            }
+        }
+        assert!(sim.retired_copies_released());
     }
 }

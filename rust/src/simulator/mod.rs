@@ -11,7 +11,7 @@ pub mod tenancy;
 
 pub use cluster::{
     run_cluster_experiment, ClusterParams, ClusterReport, ClusterSim, MigrationEvent,
-    ReplicaReport, RouterPolicy,
+    ReplicaLifecycle, ReplicaReport, RouterPolicy, ScaleEvent, BURST_PHASES,
 };
 pub use e2e::{gpu_h800_calibrated, tgr_row, TgrEntry, TgrRow};
 pub use engine::SimEngine;

@@ -250,10 +250,10 @@ pub fn run_tenant_sweep(
     })
 }
 
-/// One cell of the `cluster` grid: (replicas x skew x router-config),
-/// with the router configuration innermost so the formatter can pivot
-/// one artifact row per (replicas, skew) out of
-/// `cluster_row_configs().len()` consecutive cells.
+/// One cell of the `cluster` grid: (replicas x skew x arrival-profile
+/// x router-config), with the router configuration innermost so the
+/// formatter can pivot one artifact row per (replicas, skew, profile)
+/// out of `cluster_row_configs().len()` consecutive cells.
 #[derive(Clone, Debug)]
 pub struct ClusterCell {
     pub model: ModelConfig,
@@ -262,33 +262,47 @@ pub struct ClusterCell {
     pub router: RouterPolicy,
     /// Cost-driven prefix migration enabled (prefix-affinity only).
     pub migrate: bool,
+    /// Replica autoscaling enabled (prefix-affinity only; the fleet
+    /// starts at `replicas` and may resize within the default bounds).
+    pub autoscale: bool,
     pub tenants: usize,
     pub batch: usize,
     pub total_requests: usize,
-    /// Poisson arrival rate (None = batch arrivals at t = 0).
-    pub arrival_rate: Option<f64>,
+    /// Arrival profile: None = the paper's batch protocol (everything
+    /// at t = 0); Some((rate, factor)) = Poisson at `rate` with
+    /// calm/burst phases at `rate * factor` (factor 1 = plain Poisson).
+    pub arrival: Option<(f64, f64)>,
+    /// Prefix-affinity pressure threshold for this row's workload.
+    pub spill_queue_depth: usize,
 }
 
 /// The per-row router configurations of the `cluster` artifact, in
 /// column order: baselines, spill-only affinity, migrate-enabled
-/// affinity last.
-pub fn cluster_row_configs() -> [(RouterPolicy, bool); 4] {
+/// affinity, autoscaled migrate-enabled affinity last.
+pub fn cluster_row_configs() -> [(RouterPolicy, bool, bool); 5] {
     [
-        (RouterPolicy::RoundRobin, false),
-        (RouterPolicy::LeastLoaded, false),
-        (RouterPolicy::PrefixAffinity, false),
-        (RouterPolicy::PrefixAffinity, true),
+        (RouterPolicy::RoundRobin, false, false),
+        (RouterPolicy::LeastLoaded, false, false),
+        (RouterPolicy::PrefixAffinity, false, false),
+        (RouterPolicy::PrefixAffinity, true, false),
+        (RouterPolicy::PrefixAffinity, true, true),
     ]
 }
 
 /// The cluster grid in row order: replicas (outer) x skew x
-/// router-config (inner, `cluster_row_configs` order).  Every cell of
-/// one (replicas, skew) row runs the *same* workload — only the
-/// routing/migration decisions differ.
+/// arrival-profile x router-config (inner, `cluster_row_configs`
+/// order).  Every cell of one (replicas, skew, profile) row runs the
+/// *same* workload — only the routing/migration/scaling decisions
+/// differ.  Bursty rows tighten the pressure threshold to a quarter
+/// of the batch (a burst must actually pressure the home for the
+/// relief policies to differ); batch-protocol rows keep the
+/// `ClusterParams` default, so the pre-autoscale columns reproduce
+/// the PR 4 grid on those rows.
 pub fn cluster_cells(
     model: &ModelConfig,
     replica_counts: &[usize],
     skews: &[f64],
+    arrivals: &[Option<(f64, f64)>],
     tenants: usize,
     batch: usize,
     total_requests: usize,
@@ -296,18 +310,25 @@ pub fn cluster_cells(
     let mut cells = Vec::new();
     for &replicas in replica_counts {
         for &skew in skews {
-            for (router, migrate) in cluster_row_configs() {
-                cells.push(ClusterCell {
-                    model: model.clone(),
-                    replicas,
-                    skew,
-                    router,
-                    migrate,
-                    tenants,
-                    batch,
-                    total_requests,
-                    arrival_rate: None,
-                });
+            for &arrival in arrivals {
+                let bursty = arrival.is_some_and(|(_, f)| f > 1.0);
+                let spill_queue_depth =
+                    if bursty { (batch / 4).max(1) } else { (2 * batch).max(1) };
+                for (router, migrate, autoscale) in cluster_row_configs() {
+                    cells.push(ClusterCell {
+                        model: model.clone(),
+                        replicas,
+                        skew,
+                        router,
+                        migrate,
+                        autoscale,
+                        tenants,
+                        batch,
+                        total_requests,
+                        arrival,
+                        spill_queue_depth,
+                    });
+                }
             }
         }
     }
@@ -341,8 +362,11 @@ pub fn run_cluster_sweep(
             c.skew,
         );
         p.total_requests = c.total_requests;
-        p.arrival_rate = c.arrival_rate;
+        p.arrival_rate = c.arrival.map(|(rate, _)| rate);
+        p.arrival_burst = c.arrival.and_then(|(_, f)| (f > 1.0).then_some(f));
+        p.spill_queue_depth = c.spill_queue_depth;
         p.migrate = c.migrate;
+        p.scaling.enabled = c.autoscale;
         let report = run_cluster_experiment(&p)?;
         Ok(ClusterCellResult { cell: c.clone(), report })
     })
@@ -394,35 +418,58 @@ mod tests {
 
     #[test]
     fn cluster_cell_enumeration_row_order() {
-        let cells = cluster_cells(&deepseek_v3(), &[1, 2], &[0.0, 2.0], 4, 32, 64);
-        // 2 replica counts x 2 skews x 4 router configs, config innermost.
-        assert_eq!(cells.len(), 16);
+        let bursty = Some((200.0, 50.0));
+        let cells =
+            cluster_cells(&deepseek_v3(), &[1, 2], &[0.0, 2.0], &[None, bursty], 4, 32, 64);
+        // 2 replica counts x 2 skews x 2 profiles x 5 router configs,
+        // config innermost, profile next.
+        assert_eq!(cells.len(), 40);
         assert_eq!(
             (cells[0].replicas, cells[0].skew, cells[0].router, cells[0].migrate),
             (1, 0.0, RouterPolicy::RoundRobin, false)
         );
         assert_eq!(
-            (cells[2].router, cells[2].migrate),
-            (RouterPolicy::PrefixAffinity, false)
+            (cells[2].router, cells[2].migrate, cells[2].autoscale),
+            (RouterPolicy::PrefixAffinity, false, false)
         );
         assert_eq!(
-            (cells[3].router, cells[3].migrate),
-            (RouterPolicy::PrefixAffinity, true)
+            (cells[3].router, cells[3].migrate, cells[3].autoscale),
+            (RouterPolicy::PrefixAffinity, true, false)
         );
-        assert_eq!((cells[4].replicas, cells[4].skew), (1, 2.0));
-        assert_eq!((cells[15].replicas, cells[15].skew), (2, 2.0));
-        // Baselines never migrate.
+        assert_eq!(
+            (cells[4].router, cells[4].migrate, cells[4].autoscale),
+            (RouterPolicy::PrefixAffinity, true, true)
+        );
+        assert_eq!(cells[0].arrival, None);
+        assert_eq!(cells[5].arrival, bursty, "profile pivots inside one skew");
+        assert_eq!((cells[10].replicas, cells[10].skew), (1, 2.0));
+        assert_eq!((cells[39].replicas, cells[39].skew), (2, 2.0));
+        assert_eq!(cells[39].arrival, bursty);
+        // Batch rows keep the PR 4 threshold; bursty rows tighten it.
+        assert_eq!(cells[0].spill_queue_depth, 64);
+        assert_eq!(cells[5].spill_queue_depth, 8);
+        // Baselines never migrate or autoscale.
         assert!(cells
             .iter()
-            .all(|c| c.router == RouterPolicy::PrefixAffinity || !c.migrate));
+            .all(|c| c.router == RouterPolicy::PrefixAffinity
+                || (!c.migrate && !c.autoscale)));
     }
 
     /// Cluster sweep determinism: serial and parallel executors produce
-    /// bitwise-equal reports per cell.
+    /// bitwise-equal reports per cell — including the bursty autoscale
+    /// cells (scale decisions are pure functions of the modeled state).
     #[test]
     fn cluster_sweep_deterministic_across_executors() {
         let hw = ascend_npu();
-        let cells = cluster_cells(&deepseek_v3(), &[2], &[1.0], 3, 16, 32);
+        let cells = cluster_cells(
+            &deepseek_v3(),
+            &[2],
+            &[1.0],
+            &[None, Some((150.0, 40.0))],
+            3,
+            16,
+            32,
+        );
         let serial = run_cluster_sweep(&hw, &cells, &SweepExecutor::serial()).unwrap();
         let par = run_cluster_sweep(&hw, &cells, &SweepExecutor::with_threads(3)).unwrap();
         for (s, p) in serial.iter().zip(&par) {
@@ -433,6 +480,9 @@ mod tests {
             assert_eq!(s.report.ttft_p99.to_bits(), p.report.ttft_p99.to_bits());
             assert_eq!(s.report.spills, p.report.spills);
             assert_eq!(s.report.migrations, p.report.migrations);
+            assert_eq!(s.report.scale_ups, p.report.scale_ups);
+            assert_eq!(s.report.scale_downs, p.report.scale_downs);
+            assert_eq!(s.report.active_replicas, p.report.active_replicas);
         }
     }
 

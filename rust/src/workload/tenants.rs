@@ -193,6 +193,48 @@ pub fn timed_arrivals(
     Ok(out)
 }
 
+/// Bursty Poisson arrivals: the stream is cut into `phases` equal runs
+/// of arrivals whose rate alternates between `base_rate` (calm) and
+/// `base_rate * burst_factor` (burst), starting calm — a square-wave
+/// load profile (burst then lull) that exercises admission pressure
+/// and replica autoscaling.  Layered on the same request stream and
+/// the same clock RNG as [`timed_arrivals`], so `burst_factor = 1.0`
+/// reproduces the plain Poisson stream **bit-identically** and the
+/// (tenant, request) interleaving never depends on the timing draws.
+pub fn timed_arrivals_bursty(
+    tenants: &[TenantSpec],
+    total_requests: usize,
+    base_rate: f64,
+    burst_factor: f64,
+    phases: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<TimedArrival>> {
+    if base_rate.is_nan() || base_rate <= 0.0 {
+        anyhow::bail!("arrival rate must be positive, got {base_rate}");
+    }
+    if !burst_factor.is_finite() || burst_factor < 1.0 {
+        anyhow::bail!("burst factor must be >= 1, got {burst_factor}");
+    }
+    if phases == 0 {
+        anyhow::bail!("burst profile needs at least one phase");
+    }
+    let mut gen = MultiTenantGenerator::new(tenants, total_requests, seed);
+    // Same clock-stream salt as `timed_arrivals`: the exponential draws
+    // are identical, only the rate scaling differs per phase.
+    let mut clock_rng = Rng::new(seed.wrapping_mul(0x9E6D_62D0_6F6A_9A21).wrapping_add(3));
+    let phase_len = gen.total().div_ceil(phases).max(1);
+    let mut now = 0.0f64;
+    let mut out = Vec::with_capacity(gen.total());
+    let mut i = 0usize;
+    while let Some(tr) = gen.next_request() {
+        let rate = if (i / phase_len) % 2 == 1 { base_rate * burst_factor } else { base_rate };
+        now += clock_rng.next_exp(rate);
+        out.push(TimedArrival { at: now, tenant: tr.tenant, request: tr.request });
+        i += 1;
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +333,52 @@ mod tests {
             "mean gap {mean_gap} vs expected {}",
             1.0 / rate
         );
+    }
+
+    /// The bursty profile layers on the same streams: factor 1 is
+    /// bit-identical to the plain Poisson process, bursts only compress
+    /// the odd phases' gaps, and the request interleaving is untouched.
+    #[test]
+    fn bursty_arrivals_layer_on_the_same_streams() {
+        let ts = tenant_set(3, 1.0);
+        let plain = timed_arrivals(&ts, 64, Some(25.0), 9).unwrap();
+        let unit = timed_arrivals_bursty(&ts, 64, 25.0, 1.0, 6, 9).unwrap();
+        assert_eq!(plain.len(), unit.len());
+        for (a, b) in plain.iter().zip(&unit) {
+            assert_eq!(a.at.to_bits(), b.at.to_bits(), "factor 1 is the plain process");
+            assert_eq!((a.tenant, &a.request), (b.tenant, &b.request));
+        }
+
+        let bursty = timed_arrivals_bursty(&ts, 64, 25.0, 50.0, 6, 9).unwrap();
+        assert_eq!(bursty.len(), plain.len());
+        assert!(bursty.windows(2).all(|w| w[0].at <= w[1].at), "non-decreasing");
+        for (a, b) in plain.iter().zip(&bursty) {
+            assert_eq!((a.tenant, &a.request), (b.tenant, &b.request), "same stream");
+        }
+        // Burst phases compress: the bursty stream finishes earlier.
+        assert!(
+            bursty.last().unwrap().at < plain.last().unwrap().at,
+            "bursts compress the schedule"
+        );
+        // Mean gap inside a burst phase is ~factor-x shorter than in a
+        // calm phase.
+        let n = bursty.len();
+        let phase = n.div_ceil(6).max(1);
+        let gap = |w: &[TimedArrival]| {
+            (w.last().unwrap().at - w[0].at) / (w.len() - 1) as f64
+        };
+        let calm = gap(&bursty[..phase]);
+        let burst = gap(&bursty[phase..2 * phase]);
+        assert!(calm > 5.0 * burst, "calm {calm} vs burst {burst}");
+    }
+
+    #[test]
+    fn bursty_arrivals_reject_bad_profiles() {
+        let ts = tenant_set(2, 0.0);
+        assert!(timed_arrivals_bursty(&ts, 16, 0.0, 2.0, 4, 1).is_err());
+        assert!(timed_arrivals_bursty(&ts, 16, 10.0, 0.5, 4, 1).is_err());
+        assert!(timed_arrivals_bursty(&ts, 16, 10.0, f64::INFINITY, 4, 1).is_err());
+        assert!(timed_arrivals_bursty(&ts, 16, 10.0, 2.0, 0, 1).is_err());
     }
 
     #[test]

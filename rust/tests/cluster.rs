@@ -22,7 +22,8 @@ use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
 use typhoon_mla::costmodel::{batch_threshold, ParallelismConfig};
 use typhoon_mla::kvcache::KvCacheManager;
 use typhoon_mla::simulator::{
-    run_tenant_experiment, ClusterParams, ClusterSim, RouterPolicy, SimEngine, TenantSimParams,
+    run_tenant_experiment, ClusterParams, ClusterReport, ClusterSim, ReplicaLifecycle,
+    RouterPolicy, SimEngine, TenantSimParams,
 };
 use typhoon_mla::util::rng::Rng;
 use typhoon_mla::workload::tenants::{tenant_set, timed_arrivals};
@@ -366,13 +367,16 @@ fn migration_goodput_at_least_spill_only_on_skewed_cell() {
 }
 
 /// API-stability pin: `ClusterParams::new` defaults keep the PR 3
-/// router — migration off, SLO admission off, the fixed queue-depth
-/// trigger — so every pre-migration caller is bit-identical.
+/// router — migration off, SLO admission off, autoscaling off, the
+/// fixed queue-depth trigger — so every pre-migration caller is
+/// bit-identical.
 #[test]
 fn cluster_defaults_preserve_spill_only_router() {
     let p = cluster_params(2, RouterPolicy::PrefixAffinity);
     assert!(!p.migrate);
     assert!(p.slo_ttft.is_none());
+    assert!(!p.scaling.enabled);
+    assert!(p.arrival_burst.is_none());
     assert_eq!(p.spill_queue_depth, 2 * p.batch);
 }
 
@@ -431,4 +435,355 @@ fn affinity_goodput_at_least_round_robin_on_skewed_cell() {
             <= rr.replicas.iter().map(|r| r.prefix_groups).sum::<usize>(),
         "affinity hosts no more prefix copies than round-robin"
     );
+}
+
+/// Shared shape of the bursty/skewed acceptance cell (the `cluster`
+/// figure's autoscale row): a 4-replica fleet, one hot tenant (skew
+/// 2), calm 200 req/s with 50x bursts, a pressure threshold a burst
+/// actually reaches, migration on.
+fn bursty_cell_params() -> ClusterParams {
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        4,
+        RouterPolicy::PrefixAffinity,
+        128,
+        4,
+        2.0,
+    );
+    p.total_requests = 512;
+    p.arrival_rate = Some(200.0);
+    p.arrival_burst = Some(50.0);
+    p.spill_queue_depth = 32;
+    p.migrate = true;
+    p
+}
+
+/// The autoscaling acceptance pin behind the `cluster` figure: on the
+/// bursty skewed cell, the autoscaled fleet must model at least the
+/// fixed migrate-enabled fleet's goodput — scale-ups absorb burst
+/// overflow on fresh replicas (the whole hot group re-homes instead of
+/// fragmenting through spills) and scale-downs consolidate idle
+/// replicas between bursts.
+#[test]
+fn autoscale_goodput_at_least_fixed_fleet_on_bursty_cell() {
+    let p = bursty_cell_params();
+    let fixed = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    let mut a = p.clone();
+    a.scaling.enabled = true;
+    let auto = typhoon_mla::simulator::run_cluster_experiment(&a).unwrap();
+    assert_eq!(fixed.tokens, auto.tokens, "same workload either way");
+    assert_eq!(fixed.scale_ups + fixed.scale_downs, 0, "fixed fleet never resizes");
+    assert!(
+        auto.scale_ups + auto.scale_downs > 0,
+        "the bursty cell must actually exercise the autoscaler"
+    );
+    assert!(
+        auto.goodput >= fixed.goodput,
+        "autoscale {} < fixed fleet {}",
+        auto.goodput,
+        fixed.goodput
+    );
+}
+
+/// A fleet pinned at its floor (min_replicas = starting size) under
+/// bursty overload can only scale up — and must: fresh replicas join,
+/// every request still completes exactly once, and the report keeps
+/// the grown fleet visible.
+#[test]
+fn bursty_overload_forces_scale_up() {
+    let mut p = bursty_cell_params();
+    p.replicas = 2;
+    p.scaling.enabled = true;
+    p.scaling.min_replicas = 2;
+    p.scaling.max_replicas = 6;
+    let mut sim = ClusterSim::new(&p).unwrap();
+    sim.run().unwrap();
+    assert!(sim.scale_ups() > 0, "burst overload must spin replicas up");
+    assert!(sim.replica_count() > 2, "fresh stacks joined the fleet");
+    assert!(
+        sim.active_replica_count() >= 2,
+        "the fleet never shrinks below its floor"
+    );
+    let report = sim.report();
+    assert_eq!(report.requests_completed as usize, sim.arrivals().len());
+    assert_eq!(report.replicas.len(), sim.replica_count());
+    // Scale-up bulk-migrations adopt, never re-prefill (same audit as
+    // pressure migrations).
+    for e in sim.migration_log() {
+        assert_eq!(e.dst_prefills_before, e.dst_prefills_after);
+    }
+}
+
+/// Satellite regression: `observed_arrival_rate` divides by the
+/// *active* replica count at observation time, not the all-time fleet
+/// size — after a scale event the surviving replicas each see a larger
+/// share, and the admission threshold derived from lambda-hat moves
+/// with it.
+#[test]
+fn observed_arrival_rate_tracks_active_replica_count() {
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        3,
+        RouterPolicy::PrefixAffinity,
+        16,
+        3,
+        1.0,
+    );
+    p.total_requests = 256;
+    p.arrival_rate = Some(40.0); // far below capacity: consolidation fires
+    p.migrate = true;
+    p.scaling.enabled = true;
+    p.scaling.cooldown_arrivals = 32;
+    let mut sim = ClusterSim::new(&p).unwrap();
+    sim.run().unwrap();
+    assert!(sim.scale_downs() > 0, "calm stream must consolidate");
+    let active = sim.active_replica_count();
+    assert!(active < sim.replica_count(), "a replica must have left the fleet");
+
+    let n = sim.arrivals().len();
+    let span = sim.arrivals().last().unwrap().at;
+    let expected = n as f64 / span / active as f64;
+    let buggy = n as f64 / span / sim.replica_count() as f64;
+    assert_eq!(
+        sim.observed_arrival_rate().to_bits(),
+        expected.to_bits(),
+        "lambda-hat must divide by the active count"
+    );
+    assert!(
+        sim.observed_arrival_rate() > buggy,
+        "the all-time fleet size under-reports per-replica load"
+    );
+    // The threshold the admission policy derives from lambda-hat (its
+    // mu fallback before completion history) moves with the fleet:
+    // fewer active replicas -> larger per-replica share -> deeper
+    // tolerable backlog at the same TTFT target.
+    let slo = typhoon_mla::policy::SloAdmission::new(Some(1.0));
+    assert!(
+        slo.spill_depth(0.0, sim.observed_arrival_rate(), 1)
+            >= slo.spill_depth(0.0, buggy, 1),
+        "threshold pinned across the scale event"
+    );
+}
+
+/// Satellite regression: the migration cool-down bounds re-homing by
+/// transfer amortization — between two consecutive migrations of the
+/// same group, the group must have been routed at least the first
+/// migration's cool-down budget worth of generation tokens.  Fuzzed
+/// across seeds, fleets and arrival patterns (with conservation still
+/// holding).
+#[test]
+fn migration_cooldown_bounds_rehoming_fuzz() {
+    let mut saw_cooldown = false;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(11_000 + seed);
+        let replicas = rng.gen_range_usize(2, 5);
+        let tenants = rng.gen_range_usize(1, 4);
+        let skew = [0.0, 1.0, 2.0][rng.gen_range_usize(0, 3)];
+        let batch = rng.gen_range_usize(4, 10);
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            replicas,
+            RouterPolicy::PrefixAffinity,
+            batch,
+            tenants,
+            skew,
+        );
+        p.total_requests = rng.gen_range_usize(16, 64);
+        p.seed = seed * 29 + 7;
+        p.migrate = true;
+        p.spill_queue_depth = 1; // every queued request counts as pressure
+        if rng.next_f64() < 0.5 {
+            p.arrival_rate = Some(1.0 + rng.next_f64() * 20.0);
+        }
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+        assert_eq!(
+            sim.report().requests_completed as usize,
+            sim.arrivals().len(),
+            "seed {seed}: conservation under the cool-down"
+        );
+
+        // Group the log per tenant, in firing order.
+        for t in 0..tenants {
+            let events: Vec<_> =
+                sim.migration_log().iter().filter(|e| e.tenant == t).collect();
+            for pair in events.windows(2) {
+                let (e1, e2) = (pair[0], pair[1]);
+                assert!(e1.arrival_index <= e2.arrival_index, "seed {seed}: log ordered");
+                if e1.cooldown_tokens == 0 {
+                    continue; // free consolidation: nothing to amortize
+                }
+                saw_cooldown = true;
+                // Tokens the group was routed between the two re-homes
+                // (the triggering arrival of e1 counts: it is served
+                // post-migration; e2's does not: its routing decided
+                // before its own budget amortized anything).
+                let served: u64 = sim.arrivals()[e1.arrival_index..e2.arrival_index]
+                    .iter()
+                    .filter(|a| a.tenant == t)
+                    .map(|a| a.request.max_new_tokens as u64)
+                    .sum();
+                assert!(
+                    served >= e1.cooldown_tokens,
+                    "seed {seed}: tenant {t} re-homed after {served} of {} \
+                     amortization tokens",
+                    e1.cooldown_tokens
+                );
+            }
+        }
+    }
+    assert!(saw_cooldown, "fuzz draws must exercise a paid re-home followed by another");
+}
+
+/// Satellite fuzz: autoscaling invariants across seeds and rates —
+/// every request completes exactly once fleet-wide across
+/// scale-up/scale-down, a decommissioned replica holds zero pages
+/// after drain, and no replica leaks KV pages or work.
+#[test]
+fn autoscale_conservation_and_drain_fuzz() {
+    let mut saw_scale_event = false;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(13_000 + seed);
+        let replicas = rng.gen_range_usize(2, 5);
+        let tenants = rng.gen_range_usize(1, 4);
+        let skew = [0.0, 1.0, 2.0][rng.gen_range_usize(0, 3)];
+        let batch = rng.gen_range_usize(4, 13);
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            replicas,
+            RouterPolicy::PrefixAffinity,
+            batch,
+            tenants,
+            skew,
+        );
+        p.total_requests = rng.gen_range_usize(48, 160);
+        p.seed = seed * 37 + 11;
+        p.migrate = rng.next_f64() < 0.5;
+        p.scaling.enabled = true;
+        p.scaling.cooldown_arrivals = 16;
+        // Calm-to-overloaded rates, half with bursts layered on.
+        p.arrival_rate = Some(10.0 + rng.next_f64() * 400.0);
+        if rng.next_f64() < 0.5 {
+            p.arrival_burst = Some(2.0 + rng.next_f64() * 60.0);
+        }
+        let mut sim = ClusterSim::new(&p).unwrap();
+        let mut guard = 0u64;
+        while sim.step_event().unwrap() {
+            guard += 1;
+            assert!(guard < 4_000_000, "seed {seed}: no progress");
+        }
+        let report = sim.report();
+        assert_eq!(
+            report.requests_completed as usize,
+            sim.arrivals().len(),
+            "seed {seed}: every request completes exactly once across resizes"
+        );
+        let routed: u64 = report.replicas.iter().map(|r| r.routed).sum();
+        assert_eq!(routed as usize, sim.arrivals().len(), "seed {seed}: no double-route");
+        saw_scale_event |= report.scale_ups + report.scale_downs > 0;
+        assert_eq!(report.active_replicas, sim.active_replica_count());
+        for i in 0..sim.replica_count() {
+            let coord = sim.coordinator(i);
+            assert_eq!(coord.running(), 0, "seed {seed}: replica {i} drained");
+            assert_eq!(coord.queued(), 0, "seed {seed}: replica {i} drained");
+            let hosted_pages: usize = coord
+                .prefix_groups()
+                .iter()
+                .map(|&(id, _)| coord.kv.prefix(id).unwrap().latent_blocks.len())
+                .sum();
+            assert_eq!(
+                coord.kv.used_blocks(),
+                hosted_pages,
+                "seed {seed}: replica {i} leaked KV pages"
+            );
+            if sim.replica_state(i) != ReplicaLifecycle::Active {
+                assert_eq!(
+                    sim.replica_state(i),
+                    ReplicaLifecycle::Retired,
+                    "seed {seed}: spin-down victims finish draining"
+                );
+                assert_eq!(
+                    coord.kv.used_blocks(),
+                    0,
+                    "seed {seed}: decommissioned replica {i} holds pages"
+                );
+            }
+        }
+        assert!(sim.retired_copies_released(), "seed {seed}");
+        for e in sim.migration_log() {
+            assert_eq!(
+                e.dst_prefills_before, e.dst_prefills_after,
+                "seed {seed}: a re-home re-prefilled at the destination"
+            );
+        }
+    }
+    assert!(saw_scale_event, "fuzz draws must exercise the autoscaler");
+}
+
+/// Satellite pin: `--autoscale` that never triggers is bit-identical
+/// to the PR 4 fixed fleet — both with bounds pinched to the starting
+/// size under a live arrival stream, and with wide bounds under the
+/// batch protocol (infinite lambda is unobservable, the policy holds).
+#[test]
+fn autoscale_never_triggered_is_bit_identical() {
+    fn report_bits_equal(a: &ClusterReport, b: &ClusterReport) {
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.requests_completed, b.requests_completed);
+        assert_eq!(a.decode_seconds.to_bits(), b.decode_seconds.to_bits());
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits());
+        assert_eq!(a.spills, b.spills);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.transfer_seconds.to_bits(), b.transfer_seconds.to_bits());
+    }
+
+    // Pinched bounds, live stream: the decision runs on every arrival
+    // but min == start == max forbids both directions.
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        2,
+        RouterPolicy::PrefixAffinity,
+        16,
+        3,
+        1.0,
+    );
+    p.total_requests = 96;
+    p.arrival_rate = Some(50.0);
+    p.migrate = true;
+    p.spill_queue_depth = 2;
+    let fixed = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    let mut a = p.clone();
+    a.scaling.enabled = true;
+    a.scaling.min_replicas = 2;
+    a.scaling.max_replicas = 2;
+    let auto = typhoon_mla::simulator::run_cluster_experiment(&a).unwrap();
+    assert_eq!(auto.scale_ups + auto.scale_downs, 0, "pinched bounds never scale");
+    report_bits_equal(&fixed, &auto);
+
+    // Wide bounds, batch protocol: lambda is infinite, the policy
+    // holds on unobservable rates.
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        2,
+        RouterPolicy::PrefixAffinity,
+        16,
+        3,
+        1.0,
+    );
+    p.total_requests = 96;
+    p.migrate = true;
+    p.spill_queue_depth = 2;
+    let fixed = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    let mut a = p.clone();
+    a.scaling.enabled = true;
+    let auto = typhoon_mla::simulator::run_cluster_experiment(&a).unwrap();
+    assert_eq!(auto.scale_ups + auto.scale_downs, 0, "batch protocol never scales");
+    report_bits_equal(&fixed, &auto);
 }

@@ -65,21 +65,34 @@ fn sweep_reports_bitwise_stable() {
     }
 }
 
-/// The cluster (replicas x skew x router-config) grid under
-/// `SweepExecutor`: serial and parallel runs must produce
+/// The cluster (replicas x skew x arrival-profile x router-config)
+/// grid under `SweepExecutor`: serial and parallel runs must produce
 /// byte-identical artifacts (text and CSV), the same discipline as the
-/// figure grids.
+/// figure grids — including the bursty autoscale cells, whose scale
+/// decisions are pure functions of the modeled state.
 #[test]
 fn cluster_artifacts_serial_parallel_identical() {
     let hw = ascend_npu();
-    let cells = cluster_cells(&deepseek_v3(), &[1, 2], &[0.0, 2.0], 3, 32, 64);
+    let cells = cluster_cells(
+        &deepseek_v3(),
+        &[1, 2],
+        &[0.0, 2.0],
+        &[None, Some((150.0, 40.0))],
+        3,
+        32,
+        64,
+    );
     let serial = run_cluster_sweep(&hw, &cells, &SweepExecutor::serial()).unwrap();
     let par = run_cluster_sweep(&hw, &cells, &SweepExecutor::with_threads(4)).unwrap();
     let a = format_cluster(&serial);
     let b = format_cluster(&par);
     assert_eq!(a.text, b.text, "text artifact must not drift");
     assert_eq!(a.csv, b.csv, "csv artifact must not drift");
-    assert_eq!(a.csv.lines().count(), 5, "header + 4 (replicas x skew) rows");
+    assert_eq!(
+        a.csv.lines().count(),
+        9,
+        "header + 8 (replicas x skew x profile) rows"
+    );
 }
 
 /// The same experiment run twice in-process gives bitwise-equal output
