@@ -212,7 +212,8 @@ pub fn fig_tenants(
 /// innermost, in `cluster_row_configs()` order): each artifact row
 /// pivots one (replicas, skew, arrival-profile) workload across
 /// round-robin, least-loaded, spill-only prefix-affinity,
-/// migrate-enabled prefix-affinity and autoscaled prefix-affinity.
+/// migrate-enabled prefix-affinity, autoscaled prefix-affinity and
+/// fault-injected prefix-affinity (one mid-stream crash, recovered).
 /// Byte-identical however the cells were evaluated — only their order
 /// matters.
 pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
@@ -228,24 +229,25 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
          prefix_affinity_tok_s,affinity_migrate_tok_s,autoscale_tok_s,\
          affinity_vs_round_robin,migrate_vs_spill,autoscale_vs_fixed,spills,\
          migrations,scale_ups,scale_downs,affinity_ttft_p99_s,\
-         affinity_tpot_p99_s,affinity_makespan_s\n",
+         affinity_tpot_p99_s,affinity_makespan_s,fault_tok_s,fault_vs_migrate,\
+         crashes,failovers,requeued,lost_pages,recovery_p99_s\n",
     );
     writeln!(
         text,
-        "{:>8} {:>5} {:>7} {:>14} {:>14} {:>14} {:>14} {:>14} {:>7} {:>7} {:>7} {:>7} \
-         {:>5} {:>5} {:>11}",
+        "{:>8} {:>5} {:>7} {:>14} {:>14} {:>14} {:>14} {:>14} {:>14} {:>7} {:>7} \
+         {:>7} {:>7} {:>7} {:>5} {:>5} {:>11}",
         "replicas", "skew", "profile", "rrobin tok/s", "least-ld tok/s",
-        "affinity tok/s", "aff+mig tok/s", "autoscale t/s", "aff/rr", "mig/aff",
-        "auto/mig", "spills", "migs", "+/-", "ttft p99"
+        "affinity tok/s", "aff+mig tok/s", "autoscale t/s", "fault tok/s", "aff/rr",
+        "mig/aff", "auto/mig", "flt/mig", "spills", "migs", "+/-", "ttft p99"
     )
     .unwrap();
     for row in results.chunks(configs.len()) {
         // Hard assert: a mis-ordered grid would silently swap policy
         // columns (and invert the speedups) in release builds otherwise.
-        for (cell, &(router, migrate, autoscale)) in row.iter().zip(&configs) {
+        for (cell, &(router, migrate, autoscale, fault)) in row.iter().zip(&configs) {
             assert_eq!(
-                (cell.cell.router, cell.cell.migrate, cell.cell.autoscale),
-                (router, migrate, autoscale),
+                (cell.cell.router, cell.cell.migrate, cell.cell.autoscale, cell.cell.fault),
+                (router, migrate, autoscale, fault),
                 "rows must pivot in cluster_row_configs() order"
             );
         }
@@ -256,21 +258,25 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
             Some((_, f)) if f > 1.0 => "bursty",
             Some(_) => "poisson",
         };
-        let [rr, ll, aff, mig, auto] = [
+        let [rr, ll, aff, mig, auto, fault] = [
             &row[0].report,
             &row[1].report,
             &row[2].report,
             &row[3].report,
             &row[4].report,
+            &row[5].report,
         ];
         let speedup = if rr.goodput > 0.0 { aff.goodput / rr.goodput } else { 1.0 };
         let mig_speedup = if aff.goodput > 0.0 { mig.goodput / aff.goodput } else { 1.0 };
         let auto_speedup =
             if mig.goodput > 0.0 { auto.goodput / mig.goodput } else { 1.0 };
+        let fault_ratio =
+            if mig.goodput > 0.0 { fault.goodput / mig.goodput } else { 1.0 };
         writeln!(
             text,
             "{:>8} {:>5.1} {:>7} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>14.0} \
-             {:>6.2}x {:>6.2}x {:>6.2}x {:>7} {:>5} {:>2}/{:<2} {:>10.3}s",
+             {:>14.0} {:>6.2}x {:>6.2}x {:>6.2}x {:>6.2}x {:>7} {:>5} {:>2}/{:<2} \
+             {:>10.3}s",
             c.replicas,
             c.skew,
             profile,
@@ -279,9 +285,11 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
             aff.goodput,
             mig.goodput,
             auto.goodput,
+            fault.goodput,
             speedup,
             mig_speedup,
             auto_speedup,
+            fault_ratio,
             aff.spills,
             mig.migrations,
             auto.scale_ups,
@@ -292,7 +300,7 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
         writeln!(
             csv,
             "{},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.3},{:.3},{:.3},{},{},\
-             {},{},{:.4},{:.5},{:.3}",
+             {},{},{:.4},{:.5},{:.3},{:.1},{:.3},{},{},{},{},{:.4}",
             c.replicas,
             c.skew,
             rate,
@@ -311,7 +319,14 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
             auto.scale_downs,
             aff.ttft_p99,
             aff.tpot_p99,
-            aff.makespan
+            aff.makespan,
+            fault.goodput,
+            fault_ratio,
+            fault.crashes,
+            fault.failovers,
+            fault.requeued_requests,
+            fault.lost_pages,
+            fault.recovery_p99_s
         )
         .unwrap();
     }
@@ -326,7 +341,9 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
          replicas and consolidating idle ones; on batch-protocol rows the \
          arrival rate is unobservable and autoscale reproduces the fixed \
          fleet; round-robin pays every group's shared-stage stream on every \
-         replica)\n",
+         replica; the fault column injects one mid-stream replica crash into \
+         the migrate-enabled fleet — in-flight work re-queues on survivors, \
+         dead homes fail over, and goodput degrades gracefully)\n",
     );
     Artifact {
         id: "cluster",
@@ -342,8 +359,10 @@ pub fn format_cluster(results: &[ClusterCellResult]) -> Artifact {
 /// (replicas, skew, profile) workload.  Asserts the headlines at the
 /// largest fleet and max skew: prefix-affinity models at least
 /// round-robin's goodput and migrate-enabled affinity at least
-/// spill-only affinity's (batch-protocol row), and autoscaled
-/// affinity at least the fixed migrate-enabled fleet's (bursty row).
+/// spill-only affinity's (batch-protocol row), autoscaled affinity at
+/// least the fixed migrate-enabled fleet's (bursty row), and graceful
+/// degradation under a single-replica crash — zero requests lost and
+/// goodput within a bounded factor of the fault-free fleet.
 pub fn fig_cluster(
     max_requests_factor: Option<usize>,
     exec: &SweepExecutor,
@@ -364,10 +383,10 @@ pub fn fig_cluster(
     // located by config and rows by workload key rather than position,
     // so a reordered grid cannot silently swap reports.
     let configs = cluster_row_configs();
-    let col = |router, migrate, autoscale| {
+    let col = |router, migrate, autoscale, fault| {
         configs
             .iter()
-            .position(|&c| c == (router, migrate, autoscale))
+            .position(|&c| c == (router, migrate, autoscale, fault))
             .expect("row config present")
     };
     let max_replicas = *CLUSTER_REPLICAS.iter().max().unwrap();
@@ -384,9 +403,10 @@ pub fn fig_cluster(
         &results[start..start + configs.len()]
     };
     let batch_row = row(None);
-    let rr = &batch_row[col(RouterPolicy::RoundRobin, false, false)].report;
-    let aff = &batch_row[col(RouterPolicy::PrefixAffinity, false, false)].report;
-    let mig = &batch_row[col(RouterPolicy::PrefixAffinity, true, false)].report;
+    let rr = &batch_row[col(RouterPolicy::RoundRobin, false, false, false)].report;
+    let aff = &batch_row[col(RouterPolicy::PrefixAffinity, false, false, false)].report;
+    let mig = &batch_row[col(RouterPolicy::PrefixAffinity, true, false, false)].report;
+    let fault = &batch_row[col(RouterPolicy::PrefixAffinity, true, false, true)].report;
     anyhow::ensure!(
         aff.goodput >= rr.goodput,
         "prefix-affinity must not lose to round-robin on the skewed cell: \
@@ -401,9 +421,27 @@ pub fn fig_cluster(
         mig.goodput,
         aff.goodput
     );
+    anyhow::ensure!(
+        fault.crashes == 1,
+        "the fault column must deliver its scheduled crash on the {}-replica row",
+        max_replicas
+    );
+    anyhow::ensure!(
+        fault.requests_completed == mig.requests_completed,
+        "graceful degradation: zero requests lost under a crash ({} vs {})",
+        fault.requests_completed,
+        mig.requests_completed
+    );
+    anyhow::ensure!(
+        fault.goodput >= 0.25 * mig.goodput,
+        "graceful degradation: goodput under a single-replica crash must stay \
+         within a bounded factor of fault-free: {} < 0.25 x {}",
+        fault.goodput,
+        mig.goodput
+    );
     let bursty_row = row(CLUSTER_ARRIVALS[1]);
-    let fixed = &bursty_row[col(RouterPolicy::PrefixAffinity, true, false)].report;
-    let auto = &bursty_row[col(RouterPolicy::PrefixAffinity, true, true)].report;
+    let fixed = &bursty_row[col(RouterPolicy::PrefixAffinity, true, false, false)].report;
+    let auto = &bursty_row[col(RouterPolicy::PrefixAffinity, true, true, false)].report;
     anyhow::ensure!(
         auto.tokens == fixed.tokens,
         "autoscale must serve the same workload: {} vs {} tokens",
@@ -802,10 +840,28 @@ mod tests {
         let scale_events: u64 =
             fields[14].parse::<u64>().unwrap() + fields[15].parse::<u64>().unwrap();
         assert_eq!(scale_events, 0, "batch protocol never scales: {row}");
-        // Same workload under every router config: identical tokens.
+        // Same workload under every fault-free router config: identical
+        // tokens.  The fault column redoes whatever the crash threw
+        // away, so its total is the baseline plus the lost tokens.
         for r in &results[1..] {
+            if r.cell.fault {
+                continue;
+            }
             assert_eq!(results[0].report.tokens, r.report.tokens);
         }
+        let fault = &results.last().unwrap().report;
+        assert_eq!(fault.crashes, 1, "fault column crashes one replica: {row}");
+        assert_eq!(
+            fault.requests_completed, results[0].report.requests_completed,
+            "crash recovery loses zero requests: {row}"
+        );
+        assert_eq!(
+            fault.tokens,
+            results[0].report.tokens + fault.lost_tokens,
+            "crashed work is redone exactly once: {row}"
+        );
+        let csv_crashes: u64 = fields[21].parse().unwrap();
+        assert_eq!(csv_crashes, 1, "fault CSV column records the crash: {row}");
     }
 
     #[test]

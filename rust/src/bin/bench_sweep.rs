@@ -77,6 +77,10 @@ struct ClusterOutcome {
     tokens: u64,
     migrations: u64,
     scale_events: u64,
+    crashes: u64,
+    failovers: u64,
+    requeued: u64,
+    lost_pages: u64,
     artifact: Artifact,
 }
 
@@ -91,11 +95,19 @@ fn run_cluster_grid(cells: &[ClusterCell], exec: &SweepExecutor) -> Result<Clust
         .iter()
         .map(|r| r.report.scale_ups + r.report.scale_downs)
         .sum();
+    let crashes: u64 = results.iter().map(|r| r.report.crashes).sum();
+    let failovers: u64 = results.iter().map(|r| r.report.failovers).sum();
+    let requeued: u64 = results.iter().map(|r| r.report.requeued_requests).sum();
+    let lost_pages: u64 = results.iter().map(|r| r.report.lost_pages).sum();
     Ok(ClusterOutcome {
         wall_seconds: t0.elapsed().as_secs_f64(),
         tokens,
         migrations,
         scale_events,
+        crashes,
+        failovers,
+        requeued,
+        lost_pages,
         artifact: format_cluster(&results),
     })
 }
@@ -147,12 +159,16 @@ fn main() -> Result<()> {
     let cl = run_cluster_grid(&cl_cells, &parallel)?;
     println!(
         "cluster:  {:.3}s wall, {} cells, {} tokens simulated, {} migrations, \
-         {} scale events",
+         {} scale events, {} crashes ({} failovers, {} re-queued, {} pages lost)",
         cl.wall_seconds,
         cl_cells.len(),
         cl.tokens,
         cl.migrations,
-        cl.scale_events
+        cl.scale_events,
+        cl.crashes,
+        cl.failovers,
+        cl.requeued,
+        cl.lost_pages
     );
 
     let mut fields: Vec<(&str, Json)> = vec![
@@ -167,6 +183,10 @@ fn main() -> Result<()> {
         ("cluster_tokens_simulated", Json::num(cl.tokens as f64)),
         ("cluster_migrations", Json::num(cl.migrations as f64)),
         ("cluster_scale_events", Json::num(cl.scale_events as f64)),
+        ("cluster_crashes", Json::num(cl.crashes as f64)),
+        ("cluster_failovers", Json::num(cl.failovers as f64)),
+        ("cluster_requeued", Json::num(cl.requeued as f64)),
+        ("cluster_lost_pages", Json::num(cl.lost_pages as f64)),
     ];
 
     if !args.flag("skip-serial") {
@@ -219,6 +239,13 @@ fn main() -> Result<()> {
         ensure!(
             cl_serial.scale_events == cl.scale_events,
             "cluster scale-event counts diverged"
+        );
+        // Fault schedules are seeded off the cell, never the executor:
+        // every crash and failover must replay identically.
+        ensure!(cl_serial.crashes == cl.crashes, "cluster crash counts diverged");
+        ensure!(
+            cl_serial.failovers == cl.failovers,
+            "cluster failover counts diverged"
         );
         let cl_speedup = cl_serial.wall_seconds / cl.wall_seconds.max(1e-12);
         println!("cluster speedup:   {cl_speedup:.2}x (artifacts byte-identical)");

@@ -6,4 +6,4 @@ pub mod serving;
 
 pub use hardware::HardwareSpec;
 pub use model::ModelConfig;
-pub use serving::{KernelKind, ScalingConfig, ServingConfig};
+pub use serving::{FaultConfig, KernelKind, ScalingConfig, ServingConfig};

@@ -172,6 +172,85 @@ impl ScalingConfig {
     }
 }
 
+/// Fault-injection knobs (cluster mode; DESIGN.md §14).  Like
+/// `ScalingConfig` this is the operator-facing shape — the simulator
+/// materializes it into a seeded `simulator::faults::FaultPlan`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    /// Master switch (`--faults`); disabled takes the exact fault-free
+    /// code path (no RNG draws, bit-identical reports).
+    pub enabled: bool,
+    /// Seed for the fault schedule.  Independent of the workload seed
+    /// so the same traffic can be replayed under different fault draws.
+    pub seed: u64,
+    /// Replica crashes to schedule.  Must stay below the fleet size so
+    /// at least one survivor can absorb the failover.
+    pub crashes: usize,
+    /// Replica stall events to schedule (the replica goes silent for a
+    /// sampled window but keeps its state).
+    pub stalls: usize,
+    /// Interconnect degradation windows to schedule (per replica pair).
+    pub degradations: usize,
+    /// Probability in [0, 1) that one in-flight prefix transfer attempt
+    /// is lost or arrives truncated (and is then retried with backoff).
+    pub transfer_loss: f64,
+    /// Bandwidth multiplier inside a degradation window, in [0, 1]:
+    /// 0 partitions the pair, 1 is a no-op window.
+    pub degrade_factor: f64,
+}
+
+impl FaultConfig {
+    /// The fault-free default: disabled, nothing scheduled.
+    pub fn disabled() -> Self {
+        FaultConfig {
+            enabled: false,
+            seed: 0,
+            crashes: 0,
+            stalls: 0,
+            degradations: 0,
+            transfer_loss: 0.0,
+            degrade_factor: 1.0,
+        }
+    }
+
+    /// Validate against the fleet's starting size.
+    pub fn validate(&self, replicas: usize) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if replicas == 0 {
+            bail!("fault injection needs at least one replica");
+        }
+        if self.crashes >= replicas {
+            bail!(
+                "fault plan schedules {} crashes but the fleet only has {replicas} \
+                 replica(s); at least one survivor must remain",
+                self.crashes
+            );
+        }
+        if !self.transfer_loss.is_finite()
+            || !(0.0..1.0).contains(&self.transfer_loss)
+        {
+            bail!(
+                "transfer-loss probability must be in [0, 1), got {}",
+                self.transfer_loss
+            );
+        }
+        if !self.degrade_factor.is_finite()
+            || !(0.0..=1.0).contains(&self.degrade_factor)
+        {
+            bail!(
+                "interconnect degrade factor must be in [0, 1], got {}",
+                self.degrade_factor
+            );
+        }
+        if self.degradations > 0 && replicas < 2 {
+            bail!("interconnect degradation needs at least two replicas");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +258,32 @@ mod tests {
     #[test]
     fn default_is_valid() {
         ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn fault_config_disabled_skips_checks_and_enabled_validates() {
+        let mut f = FaultConfig::disabled();
+        f.crashes = 99; // nonsense, but disabled: anything goes
+        f.validate(1).unwrap();
+
+        let mut f = FaultConfig::disabled();
+        f.enabled = true;
+        f.crashes = 1;
+        f.validate(2).unwrap();
+        f.validate(1).unwrap_err(); // would kill the whole fleet
+        f.crashes = 0;
+        f.transfer_loss = 1.0;
+        assert!(f.validate(2).is_err(), "loss probability must stay below 1");
+        f.transfer_loss = f64::NAN;
+        assert!(f.validate(2).is_err());
+        f.transfer_loss = 0.25;
+        f.degrade_factor = -0.5;
+        assert!(f.validate(2).is_err());
+        f.degrade_factor = 0.0; // partition is legal
+        f.validate(2).unwrap();
+        f.degradations = 1;
+        assert!(f.validate(1).is_err(), "degradation needs a pair");
+        f.validate(2).unwrap();
     }
 
     #[test]

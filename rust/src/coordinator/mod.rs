@@ -40,6 +40,20 @@ pub use sequence::{SeqState, Sequence};
 /// whole run's history.
 const SERVICE_RATE_WINDOW: usize = 64;
 
+/// One sequence extracted from a failed replica for fleet-level
+/// re-queueing (DESIGN.md §14): enough to restart the request from
+/// scratch on a survivor.  `generated` tokens of work die with the
+/// replica's pages and will be redone — the cluster books them as
+/// `lost_tokens`, never silently drops the request.
+#[derive(Clone, Copy, Debug)]
+pub struct RequeuedWork {
+    pub prefix: PrefixId,
+    pub prompt_tokens: usize,
+    pub max_new_tokens: usize,
+    /// Tokens already generated when the replica died (lost work).
+    pub generated: usize,
+}
+
 pub struct Coordinator<E: Engine> {
     cfg: ServingConfig,
     policy: KernelPolicy,
@@ -567,6 +581,54 @@ impl<E: Engine> Coordinator<E> {
         self.metrics
             .record_iteration(outcome.seconds, batch.seqs.len(), batch.seqs.len() as u64);
         Ok(true)
+    }
+
+    /// Crash teardown (cluster failover, DESIGN.md §14): tear down
+    /// every running and queued sequence — releasing suffix pages,
+    /// engine slots, and pending pins — and hand back what a survivor
+    /// needs to redo the work.  In-flight requests are *re-queued*, not
+    /// dropped: each one's already-generated tokens are booked as
+    /// `lost_tokens` (the restart regenerates them elsewhere).  The
+    /// replica's prefix groups stay registered; after this they have no
+    /// users or pending pins, so a subsequent `retire_prefix_group`
+    /// releases their pages immediately.
+    pub fn fail_and_extract(&mut self) -> Result<Vec<RequeuedWork>> {
+        let mut out = Vec::with_capacity(self.running.len() + self.queue.len());
+        for id in self.running.snapshot() {
+            self.kv.remove_sequence(id)?;
+            self.engine.release(id);
+            self.running.remove(id);
+            let seq = self.seqs.remove(&id).expect("running seq exists");
+            self.metrics.lost_tokens += seq.generated as u64;
+            self.metrics.requeued_requests += 1;
+            out.push(RequeuedWork {
+                prefix: seq.prefix,
+                prompt_tokens: seq.prompt_tokens,
+                max_new_tokens: seq.max_new_tokens,
+                generated: seq.generated,
+            });
+        }
+        // Queued sequences hold only their pending pin (a preempted
+        // requeue may still carry regenerated tokens — lost too).
+        for seq in std::mem::take(&mut self.queue) {
+            self.kv.unpin_pending(seq.prefix)?;
+            self.metrics.lost_tokens += seq.generated as u64;
+            self.metrics.requeued_requests += 1;
+            out.push(RequeuedWork {
+                prefix: seq.prefix,
+                prompt_tokens: seq.prompt_tokens,
+                max_new_tokens: seq.max_new_tokens,
+                generated: seq.generated,
+            });
+        }
+        // Groups an outbound migration had already marked draining just
+        // lost their last users/pins, and nothing will step this
+        // coordinator again — sweep them now so a failed replica ends
+        // at zero live pages.
+        if !self.draining.is_empty() {
+            self.release_drained()?;
+        }
+        Ok(out)
     }
 
     /// Sequences that finished since the last call (drained).
@@ -1142,5 +1204,35 @@ mod tests {
         c.run_to_completion().unwrap();
         c.kv.release_shared_prefix(pb).unwrap();
         c.kv.release_shared_prefix(pa).unwrap();
+    }
+
+    /// Crash teardown re-queues every in-flight sequence (running and
+    /// queued), books the lost work, and leaves the prefix groups
+    /// releasable — the invariant the cluster failover path builds on.
+    #[test]
+    fn fail_and_extract_requeues_everything_and_unpins() {
+        let mut c = coordinator(2, 1);
+        let pid = c.register_prefix_group(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        c.submit_to(&req(0, 4, 10), pid).unwrap();
+        c.submit_to(&req(1, 4, 10), pid).unwrap();
+        c.submit_to(&req(2, 4, 10), pid).unwrap(); // stays queued (max_batch 2)
+        c.step().unwrap(); // admit two, decode one token each
+        assert_eq!(c.running(), 2);
+        assert_eq!(c.queued(), 1);
+        let work = c.fail_and_extract().unwrap();
+        assert_eq!(work.len(), 3, "running and queued both extracted");
+        assert_eq!(c.running(), 0);
+        assert_eq!(c.queued(), 0);
+        assert_eq!(c.metrics.requeued_requests, 3);
+        assert_eq!(
+            c.metrics.lost_tokens,
+            work.iter().map(|w| w.generated as u64).sum::<u64>()
+        );
+        assert!(c.metrics.lost_tokens >= 2, "the running pair had generated");
+        assert!(work.iter().all(|w| w.prefix == pid && w.prompt_tokens == 4));
+        assert!(work.iter().all(|w| w.max_new_tokens == 10));
+        // No users, no pending pins: the group releases immediately.
+        assert!(c.retire_prefix_group(pid).unwrap());
+        assert_eq!(c.kv.used_blocks(), 0, "a failed replica holds zero live pages");
     }
 }

@@ -24,7 +24,7 @@ use typhoon_mla::util::cli::Args;
 use typhoon_mla::workload::{datasets, prompts, Request};
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["full", "migrate", "autoscale"])?;
+    let args = Args::parse(&["full", "migrate", "autoscale", "faults"])?;
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
         Some("simulate") => simulate(&args),
@@ -43,7 +43,8 @@ fn main() -> Result<()> {
                  simulate --replicas N --router round-robin|least-loaded|prefix-affinity \
                  [--tenants N --skew S --rate R --burst F --tp N --sp N --migrate \
                  --slo-ttft S --autoscale --scale-headroom H --min-replicas N \
-                 --max-replicas N]\n\
+                 --max-replicas N --faults --fault-seed S --crashes N --stalls N \
+                 --degradations N --transfer-loss P --degrade-factor F]\n\
                  threshold --model M --hw H"
             );
             Ok(())
@@ -108,11 +109,18 @@ fn simulate(args: &Args) -> Result<()> {
         "scale-headroom",
         "min-replicas",
         "max-replicas",
+        "fault-seed",
+        "crashes",
+        "stalls",
+        "degradations",
+        "transfer-loss",
+        "degrade-factor",
     ]
     .iter()
     .any(|k| args.get(k).is_some())
         || args.flag("migrate")
-        || args.flag("autoscale");
+        || args.flag("autoscale")
+        || args.flag("faults");
     if cluster_mode {
         let router = RouterPolicy::parse(args.get_or("router", "prefix-affinity"))?;
         // Cluster mode defaults to a multi-tenant workload (that is
@@ -136,14 +144,14 @@ fn simulate(args: &Args) -> Result<()> {
             if args.flag("full") { batch * replicas * 16 } else { batch * replicas * 4 };
         p.total_requests = args.get_usize("requests", default_requests)?;
         if args.get("rate").is_some() {
-            p.arrival_rate = Some(args.get_f64("rate", 0.0)?);
+            p.arrival_rate = Some(args.get_positive_f64("rate", 1.0)?);
         }
         if args.get("burst").is_some() {
-            p.arrival_burst = Some(args.get_f64("burst", 0.0)?);
+            p.arrival_burst = Some(args.get_positive_f64("burst", 1.0)?);
         }
         p.migrate = args.flag("migrate");
         if args.get("slo-ttft").is_some() {
-            p.slo_ttft = Some(args.get_f64("slo-ttft", 0.0)?);
+            p.slo_ttft = Some(args.get_positive_f64("slo-ttft", 1.0)?);
         }
         p.scaling.enabled = args.flag("autoscale");
         if !p.scaling.enabled
@@ -156,9 +164,41 @@ fn simulate(args: &Args) -> Result<()> {
             // validation) is a configuration error.
             bail!("--scale-headroom/--min-replicas/--max-replicas need --autoscale");
         }
-        p.scaling.headroom = args.get_f64("scale-headroom", p.scaling.headroom)?;
+        p.scaling.headroom = args.get_positive_f64("scale-headroom", p.scaling.headroom)?;
         p.scaling.min_replicas = args.get_usize("min-replicas", p.scaling.min_replicas)?;
         p.scaling.max_replicas = args.get_usize("max-replicas", p.scaling.max_replicas)?;
+        p.faults.enabled = args.flag("faults");
+        if !p.faults.enabled
+            && [
+                "fault-seed",
+                "crashes",
+                "stalls",
+                "degradations",
+                "transfer-loss",
+                "degrade-factor",
+            ]
+            .iter()
+            .any(|k| args.get(k).is_some())
+        {
+            // Same convention as the scaling knobs: a fault knob that
+            // would be silently ignored is a configuration error.
+            bail!(
+                "--fault-seed/--crashes/--stalls/--degradations/--transfer-loss/\
+                 --degrade-factor need --faults"
+            );
+        }
+        if p.faults.enabled {
+            // Schedule seed defaults to the workload seed (replay the
+            // same traffic under different draws via --fault-seed).
+            p.faults.seed = args.get_u64("fault-seed", p.seed)?;
+            p.faults.crashes = args.get_usize("crashes", 1)?;
+            p.faults.stalls = args.get_usize("stalls", 0)?;
+            p.faults.degradations = args.get_usize("degradations", 0)?;
+            // Range/NaN checks live in FaultConfig::validate (run by
+            // the experiment) so the CLI and sweep share one error.
+            p.faults.transfer_loss = args.get_f64("transfer-loss", 0.0)?;
+            p.faults.degrade_factor = args.get_f64("degrade-factor", 1.0)?;
+        }
         let r = run_cluster_experiment(&p)?;
         println!(
             "[simulate] cluster: {} replicas ({}), {} tenants: {} tokens, {} requests \
@@ -184,6 +224,25 @@ fn simulate(args: &Args) -> Result<()> {
              tpot p50/p95/p99 = {:.5}/{:.5}/{:.5}s",
             r.ttft_p50, r.ttft_p95, r.ttft_p99, r.tpot_p50, r.tpot_p95, r.tpot_p99
         );
+        if p.faults.enabled {
+            println!(
+                "[simulate] faults: {} crashes, {} stalls, {} failovers, \
+                 {} re-queued, {} pages lost, {} tokens redone \
+                 ({} re-prefilled), retries {} (abandoned {}), \
+                 recovery p50/p99 = {:.3}/{:.3}s",
+                r.crashes,
+                r.stalls,
+                r.failovers,
+                r.requeued_requests,
+                r.lost_pages,
+                r.lost_tokens,
+                r.reprefilled_tokens,
+                r.transfer_retries,
+                r.transfers_abandoned,
+                r.recovery_p50_s,
+                r.recovery_p99_s
+            );
+        }
         for (i, rep) in r.replicas.iter().enumerate() {
             println!(
                 "[simulate]   replica {i} ({}): {} routed, {} tokens, {} groups hosted \

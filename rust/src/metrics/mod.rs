@@ -88,6 +88,30 @@ pub struct Metrics {
     /// Modeled interconnect seconds spent receiving migrated pages
     /// (wall time on the replica clock, never decode time).
     pub transfer_seconds: f64,
+    // ---- fault / recovery counters (DESIGN.md §14); all stay zero on
+    // ---- the fault-free path.
+    /// Transfer attempts lost or truncated in flight and retried with
+    /// backoff (charged to the receiving replica's clock).
+    pub transfer_retries: u64,
+    /// Retried transfers that exhausted their attempt budget and fell
+    /// back (the group stays home / is re-prefilled).
+    pub transfers_abandoned: u64,
+    /// Prefix groups this replica adopted as failover home for a dead
+    /// peer.
+    pub failovers: u64,
+    /// Tokens re-prefilled because a crash destroyed the only page copy
+    /// of a group (the cost-priced failover fallback).
+    pub reprefilled_tokens: u64,
+    /// KV pages destroyed by a crash on this replica.
+    pub lost_pages: u64,
+    /// Sequences re-queued off this replica when it failed (in-flight
+    /// work is never silently dropped).
+    pub requeued_requests: u64,
+    /// Generated tokens thrown away by a crash (the re-queued request
+    /// restarts from scratch on a survivor and redoes them).
+    pub lost_tokens: u64,
+    /// Injected stall events absorbed by this replica.
+    pub stalls: u64,
 }
 
 impl Metrics {
@@ -116,6 +140,14 @@ impl Metrics {
             shared_prefills: 0,
             prefix_imports: 0,
             transfer_seconds: 0.0,
+            transfer_retries: 0,
+            transfers_abandoned: 0,
+            failovers: 0,
+            reprefilled_tokens: 0,
+            lost_pages: 0,
+            requeued_requests: 0,
+            lost_tokens: 0,
+            stalls: 0,
         }
     }
 

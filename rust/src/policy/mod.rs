@@ -18,9 +18,13 @@
 //! * [`ScalingPolicy`] — replica autoscaling: spin replicas up/down
 //!   against the observed arrival rate and SLO headroom, with every
 //!   re-home of a prefix group priced here (bulk page migration over
-//!   the interconnect versus a fresh re-prefill).
+//!   the interconnect versus a fresh re-prefill);
+//! * [`RecoveryPolicy`] — what happens when the fault layer bites:
+//!   capped exponential-backoff retry for lost transfers, timeout
+//!   crash detection, and failover placement for a dead replica's
+//!   prefix groups (surviving copy first, priced re-prefill fallback).
 //!
-//! [`PolicyEngine`] bundles the four with a memoized [`CostTable`]
+//! [`PolicyEngine`] bundles the five with a memoized [`CostTable`]
 //! and per-quantity memos, so a router probing costs on every arrival
 //! pays hash lookups, not cost-model evaluations.  Consistency with
 //! the engines is pinned by tests: the analytic per-rank threshold
@@ -30,6 +34,7 @@
 pub mod admission;
 pub mod kernel;
 pub mod migration;
+pub mod recovery;
 pub mod scaling;
 
 use std::collections::HashMap;
@@ -43,6 +48,7 @@ use crate::costmodel::transfer::{prefix_transfer_seconds, shared_prefill_seconds
 pub use admission::SloAdmission;
 pub use kernel::KernelPolicy;
 pub use migration::{MigrationDecision, MigrationPolicy};
+pub use recovery::{RecoveryPolicy, RetryAttempt};
 pub use scaling::{ScalingDecision, ScalingPolicy};
 
 /// The decision registry one serving stack (or cluster router) owns.
@@ -57,6 +63,7 @@ pub struct PolicyEngine {
     pub migration: MigrationPolicy,
     pub admission: SloAdmission,
     pub scaling: ScalingPolicy,
+    pub recovery: RecoveryPolicy,
     /// Memoized modeled prefill seconds per shared length.
     prefill_memo: HashMap<u64, f64>,
     /// Memoized modeled transfer seconds per (tokens, expanded).
@@ -83,6 +90,7 @@ impl PolicyEngine {
             migration: MigrationPolicy::default(),
             admission: SloAdmission::default(),
             scaling: ScalingPolicy::default(),
+            recovery: RecoveryPolicy::default(),
             prefill_memo: HashMap::new(),
             transfer_memo: HashMap::new(),
         }

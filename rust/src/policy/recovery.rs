@@ -1,0 +1,180 @@
+//! Recovery policy: what the cluster does when the fault layer
+//! (`simulator::faults`) bites (DESIGN.md §14).
+//!
+//! Three decisions, all priced and deterministic:
+//!
+//! * **Transfer retry** — a lost or truncated `PrefixExport` is retried
+//!   with exponential backoff; every attempt burns the (degraded)
+//!   modeled transfer seconds plus the backoff wait, and the attempt
+//!   count is capped so a partitioned pair gives up instead of
+//!   spinning.
+//! * **Crash detection** — a replica is declared dead only after it has
+//!   been silent past `crash_timeout`; failover work is charged from
+//!   the detection time, not the crash time.
+//! * **Failover placement** — a dead replica's prefix groups re-home to
+//!   survivors, preferring a surviving page copy (free consolidation,
+//!   the pages are already resident) and falling back to a cost-priced
+//!   re-prefill when no copy exists anywhere in the fleet.
+
+use anyhow::{bail, Result};
+
+/// One recorded attempt of a retried transfer, for audits: `attempt`
+/// is 1-based, `transfer_seconds` is the (degradation-adjusted) time
+/// the attempt burned, `backoff_seconds` the wait before the next try
+/// (0 for the final/successful attempt).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryAttempt {
+    pub attempt: u32,
+    pub transfer_seconds: f64,
+    pub backoff_seconds: f64,
+}
+
+/// The recovery knobs one cluster owns (a `PolicyEngine` field, like
+/// migration/admission/scaling).
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryPolicy {
+    /// Total tries per transfer (first attempt included), at least 1.
+    pub max_attempts: u32,
+    /// Backoff before retry k+1 is `backoff_base * 2^(k-1)` seconds...
+    pub backoff_base: f64,
+    /// ...capped at this, so a long outage waits linearly, not
+    /// exponentially.
+    pub backoff_cap: f64,
+    /// A replica silent this long past its last heartbeat is declared
+    /// dead; failover is charged from crash time + this.
+    pub crash_timeout: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            max_attempts: 4,
+            backoff_base: 0.05,
+            backoff_cap: 2.0,
+            crash_timeout: 0.5,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_attempts == 0 {
+            bail!("recovery needs at least one transfer attempt");
+        }
+        if !self.backoff_base.is_finite() || self.backoff_base < 0.0 {
+            bail!("backoff base must be finite and nonnegative, got {}", self.backoff_base);
+        }
+        if !self.backoff_cap.is_finite() || self.backoff_cap < self.backoff_base {
+            bail!(
+                "backoff cap must be finite and at least the base, got {}",
+                self.backoff_cap
+            );
+        }
+        if !self.crash_timeout.is_finite() || self.crash_timeout < 0.0 {
+            bail!("crash timeout must be finite and nonnegative, got {}", self.crash_timeout);
+        }
+        Ok(())
+    }
+
+    /// Exponential backoff after failed attempt `attempt` (1-based):
+    /// `base * 2^(attempt-1)`, capped.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        let doublings = attempt.saturating_sub(1).min(32);
+        (self.backoff_base * (1u64 << doublings) as f64).min(self.backoff_cap)
+    }
+
+    /// May another attempt follow failed attempt `attempt` (1-based)?
+    pub fn should_retry(&self, attempt: u32) -> bool {
+        attempt < self.max_attempts
+    }
+
+    /// Priced cost of one *failed* attempt: the wire time burned plus
+    /// the backoff wait before the next try (no wait after the last).
+    pub fn attempt_seconds(&self, attempt: u32, transfer_seconds: f64) -> f64 {
+        let wait = if self.should_retry(attempt) { self.backoff(attempt) } else { 0.0 };
+        transfer_seconds + wait
+    }
+
+    /// Timeout-based crash detection: true once a replica has been
+    /// silent for `silent_for` seconds.
+    pub fn detects_crash(&self, silent_for: f64) -> bool {
+        silent_for >= self.crash_timeout
+    }
+
+    /// Failover placement: import the pages from a surviving copy when
+    /// any exists; otherwise the caller re-prefills at the new home.
+    pub fn prefer_copy_import(&self, surviving_copies: usize) -> bool {
+        surviving_copies > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RecoveryPolicy::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_knobs() {
+        let mut p = RecoveryPolicy::default();
+        p.max_attempts = 0;
+        assert!(p.validate().is_err());
+        p = RecoveryPolicy::default();
+        p.backoff_base = f64::NAN;
+        assert!(p.validate().is_err());
+        p = RecoveryPolicy::default();
+        p.backoff_cap = 0.01; // below the base
+        assert!(p.validate().is_err());
+        p = RecoveryPolicy::default();
+        p.crash_timeout = -1.0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let p = RecoveryPolicy {
+            max_attempts: 10,
+            backoff_base: 0.1,
+            backoff_cap: 0.5,
+            crash_timeout: 0.5,
+        };
+        assert_eq!(p.backoff(1), 0.1);
+        assert_eq!(p.backoff(2), 0.2);
+        assert_eq!(p.backoff(3), 0.4);
+        assert_eq!(p.backoff(4), 0.5, "capped");
+        assert_eq!(p.backoff(40), 0.5, "huge attempt counts stay capped");
+    }
+
+    #[test]
+    fn retry_budget_is_capped_and_priced() {
+        let p = RecoveryPolicy::default();
+        assert!(p.should_retry(1));
+        assert!(p.should_retry(3));
+        assert!(!p.should_retry(4), "max_attempts is a hard cap");
+        let first = p.attempt_seconds(1, 2.0);
+        assert_eq!(first, 2.0 + p.backoff(1), "failed attempt = wire time + wait");
+        let last = p.attempt_seconds(4, 2.0);
+        assert_eq!(last, 2.0, "the final attempt never waits");
+        assert!(p.attempt_seconds(3, 2.0) > first, "backoff grows per attempt");
+    }
+
+    #[test]
+    fn crash_detection_is_a_threshold() {
+        let p = RecoveryPolicy::default();
+        assert!(!p.detects_crash(0.0));
+        assert!(!p.detects_crash(0.49));
+        assert!(p.detects_crash(0.5));
+        assert!(p.detects_crash(10.0));
+    }
+
+    #[test]
+    fn failover_prefers_surviving_copies() {
+        let p = RecoveryPolicy::default();
+        assert!(p.prefer_copy_import(1));
+        assert!(p.prefer_copy_import(3));
+        assert!(!p.prefer_copy_import(0), "no copy anywhere: re-prefill");
+    }
+}

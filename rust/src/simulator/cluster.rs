@@ -28,6 +28,20 @@
 //! observed rates never trigger a scale event is bit-identical to the
 //! fixed fleet (pinned by `tests/cluster.rs`).
 //!
+//! **Faults and recovery.**  With `--faults` a seeded
+//! [`simulator::faults::FaultPlan`](super::faults) injects replica
+//! crashes and stalls, interconnect degradation windows, and in-flight
+//! transfer loss at arrival boundaries.  `policy::RecoveryPolicy`
+//! answers: lost transfers retry on capped exponential backoff (each
+//! attempt priced on the destination clock), a crashed replica is
+//! detected after a heartbeat timeout and fails over — its in-flight
+//! sequences re-queue on survivors (never dropped), its tenants re-home
+//! to a surviving page copy when one exists and to a cost-priced
+//! re-prefill otherwise — and the [`Failed`](ReplicaLifecycle::Failed)
+//! replica ends the run with zero live pages.  An empty plan is
+//! structurally inert: the fault-free path stays bit-identical
+//! (pinned by `tests/cluster.rs`).
+//!
 //! The simulation is event-driven over modeled time: each replica owns
 //! an independent clock (its coordinator's `now`), and the cluster
 //! repeatedly processes the earliest event — the next arrival, or one
@@ -41,7 +55,7 @@ use std::collections::{HashMap, HashSet};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{HardwareSpec, KernelKind, ModelConfig, ScalingConfig};
+use crate::config::{FaultConfig, HardwareSpec, KernelKind, ModelConfig, ScalingConfig};
 use crate::coordinator::Coordinator;
 use crate::costmodel::parallel::ParallelismConfig;
 use crate::kvcache::PrefixId;
@@ -51,8 +65,10 @@ use crate::util::stats::{p50, p95, p99};
 use crate::workload::tenants::{
     tenant_set, timed_arrivals, timed_arrivals_bursty, TenantSpec, TimedArrival,
 };
+use crate::workload::Request;
 
 use super::engine::SimEngine;
+use super::faults::{FaultKind, FaultPlan};
 use super::tenancy::tenant_serving_stack;
 
 /// Phases of the square-wave bursty arrival profile (calm/burst
@@ -113,6 +129,10 @@ pub enum ReplicaLifecycle {
     /// Drained and decommissioned: zero pages, zero work; kept in the
     /// report so its completions stay accounted for.
     Retired,
+    /// Crashed by the fault layer: pages lost, in-flight sequences
+    /// re-queued on survivors, no further admissions; kept in the
+    /// report so its pre-crash completions stay accounted for.
+    Failed,
 }
 
 impl ReplicaLifecycle {
@@ -121,6 +141,7 @@ impl ReplicaLifecycle {
             ReplicaLifecycle::Active => "active",
             ReplicaLifecycle::Draining => "draining",
             ReplicaLifecycle::Retired => "retired",
+            ReplicaLifecycle::Failed => "failed",
         }
     }
 }
@@ -178,6 +199,11 @@ pub struct ClusterParams {
     /// replicas up/down against the observed arrival rate and SLO
     /// headroom, re-homing prefix groups via the migration path.
     pub scaling: ScalingConfig,
+    /// Seeded fault injection (prefix-affinity router only): replica
+    /// crashes and stalls, interconnect degradation windows, transfer
+    /// loss.  `FaultConfig::disabled()` reproduces the fault-free
+    /// cluster bit-for-bit.
+    pub faults: FaultConfig,
 }
 
 impl ClusterParams {
@@ -209,6 +235,7 @@ impl ClusterParams {
             migrate: false,
             slo_ttft: None,
             scaling: ScalingConfig::for_fleet(replicas),
+            faults: FaultConfig::disabled(),
         }
     }
 }
@@ -229,6 +256,10 @@ struct Replica {
     retired: Vec<(usize, PrefixId)>,
     /// Requests routed here.
     routed: u64,
+    /// Requests re-submitted here after a peer crashed (failover
+    /// re-queue; kept apart from `routed` so the arrival-conservation
+    /// audit `sum(routed) == arrivals` stays exact under faults).
+    requeued: u64,
 }
 
 impl Replica {
@@ -240,6 +271,7 @@ impl Replica {
             imported: HashSet::new(),
             retired: Vec::new(),
             routed: 0,
+            requeued: 0,
         }
     }
 }
@@ -365,6 +397,10 @@ pub struct ReplicaReport {
     pub prefix_imports: u64,
     /// Requests the router sent here.
     pub routed: u64,
+    /// Requests re-submitted here after a peer crashed.
+    pub requeued: u64,
+    /// KV pages destroyed here by a crash.
+    pub lost_pages: u64,
     /// The replica's final clock (arrival-to-drain span).
     pub final_clock: f64,
     /// Fleet lifecycle state at the end of the run.
@@ -405,6 +441,30 @@ pub struct ClusterReport {
     pub scale_downs: u64,
     /// Active replicas at the end of the run.
     pub active_replicas: usize,
+    // ---- fault / recovery aggregates (DESIGN.md §14); all zero on the
+    // ---- fault-free path.
+    /// Replica crashes delivered by the fault plan.
+    pub crashes: u64,
+    /// Injected stall events absorbed.
+    pub stalls: u64,
+    /// Transfer attempts lost in flight and retried with backoff.
+    pub transfer_retries: u64,
+    /// Transfers that exhausted their retry budget.
+    pub transfers_abandoned: u64,
+    /// Prefix groups re-homed by crash failover.
+    pub failovers: u64,
+    /// Tokens re-prefilled because a crash destroyed the only copy.
+    pub reprefilled_tokens: u64,
+    /// KV pages destroyed by crashes, fleet-wide.
+    pub lost_pages: u64,
+    /// Sequences re-queued off crashed replicas (never dropped).
+    pub requeued_requests: u64,
+    /// Generated tokens redone because a crash threw them away.
+    pub lost_tokens: u64,
+    /// Time-to-recovery percentiles over crashes (crash instant to the
+    /// last re-queued sequence re-submitted on a survivor), seconds.
+    pub recovery_p50_s: f64,
+    pub recovery_p99_s: f64,
 }
 
 /// The event-driven N-replica serving simulation.
@@ -423,6 +483,14 @@ pub struct ClusterSim {
     scale_log: Vec<ScaleEvent>,
     /// Arrival index of the last scale event (the rate limiter).
     last_scale_arrival: Option<usize>,
+    /// The materialized fault schedule (empty = structurally inert).
+    faults: FaultPlan,
+    /// Crashes actually delivered (a scheduled crash that would kill
+    /// the last active replica is skipped, not delivered).
+    crashes: u64,
+    /// Per-crash recovery spans, seconds (crash instant to the last
+    /// re-queued sequence re-submitted on a survivor).
+    recovery_times: Vec<f64>,
 }
 
 impl ClusterSim {
@@ -449,16 +517,20 @@ impl ClusterSim {
                 bail!("TTFT target must be positive seconds, got {t}");
             }
         }
-        if (params.migrate || params.slo_ttft.is_some() || params.scaling.enabled)
+        if (params.migrate
+            || params.slo_ttft.is_some()
+            || params.scaling.enabled
+            || params.faults.enabled)
             && params.router != RouterPolicy::PrefixAffinity
         {
             bail!(
-                "migration / SLO admission / autoscaling act on prefix-affinity \
-                 pressure relief; router {} never consults them",
+                "migration / SLO admission / autoscaling / fault recovery act on \
+                 prefix-affinity pressure relief; router {} never consults them",
                 params.router.as_str()
             );
         }
         params.scaling.validate(params.replicas)?;
+        params.faults.validate(params.replicas)?;
         if params.arrival_burst.is_some() && params.arrival_rate.is_none() {
             bail!("a burst factor needs an arrival rate (the batch protocol has no phases)");
         }
@@ -506,6 +578,7 @@ impl ClusterSim {
         policy.migration.enabled = params.migrate;
         policy.admission.ttft_target = params.slo_ttft;
         policy.scaling = ScalingPolicy::from_config(&params.scaling);
+        let faults = FaultPlan::build(&params.faults, params.replicas, arrivals.len());
         Ok(ClusterSim {
             params: params.clone(),
             tenants,
@@ -517,6 +590,9 @@ impl ClusterSim {
             migration_log: Vec::new(),
             scale_log: Vec::new(),
             last_scale_arrival: None,
+            faults,
+            crashes: 0,
+            recovery_times: Vec::new(),
         })
     }
 
@@ -602,6 +678,21 @@ impl ClusterSim {
         self.router.reprefill_rehomes
     }
 
+    /// Crashes actually delivered by the fault plan so far.
+    pub fn crashes(&self) -> u64 {
+        self.crashes
+    }
+
+    /// Per-crash recovery spans recorded so far, seconds.
+    pub fn recovery_times(&self) -> &[f64] {
+        &self.recovery_times
+    }
+
+    /// The materialized fault schedule (audits).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.faults
+    }
+
     /// Did this replica adopt the tenant's group via migration import?
     pub fn tenant_imported(&self, replica: usize, tenant: usize) -> bool {
         self.replicas[replica].imported.contains(&tenant)
@@ -671,6 +762,9 @@ impl ClusterSim {
                 let idx = self.next_arrival;
                 let a = self.arrivals[idx].clone();
                 self.next_arrival += 1;
+                if !self.faults.is_empty() {
+                    self.deliver_faults(idx, a.at)?;
+                }
                 if self.policy.scaling.enabled {
                     self.finalize_drained();
                     self.maybe_scale(&a, idx)?;
@@ -799,8 +893,15 @@ impl ClusterSim {
                     MigrationDecision::Migrate => {
                         // Re-home the whole group: the overflow (and
                         // everything after it) lands on a replica that
-                        // now holds the pages.
-                        self.migrate_group(tenant, home, alt, a.at, self.next_arrival - 1)?;
+                        // now holds the pages.  A refused transfer (the
+                        // fault layer lost it beyond the retry budget)
+                        // leaves the pages home — this one request
+                        // degrades to a recorded spill instead.
+                        if !self.migrate_group(tenant, home, alt, a.at, self.next_arrival - 1)? {
+                            self.router.spills += 1;
+                            self.router.spilled.insert(tenant);
+                            self.router.spilled_since_migration.insert(tenant);
+                        }
                         Ok(alt)
                     }
                     MigrationDecision::Spill => {
@@ -945,9 +1046,11 @@ impl ClusterSim {
                 .get(&tenant)
                 .and_then(|&p| self.replicas[src].coord.kv.prefix(p))
                 .is_some_and(|p| p.expanded);
-            if self.policy.rehome_by_transfer(len, expanded, false) {
-                self.migrate_group(tenant, src, new_idx, at, idx)?;
-            } else {
+            if !(self.policy.rehome_by_transfer(len, expanded, false)
+                && self.migrate_group(tenant, src, new_idx, at, idx)?)
+            {
+                // Pricing said rebuild — or the fault layer refused the
+                // transfer: the re-home still happens, by re-prefill.
                 self.rehome_without_pages(tenant, src, new_idx)?;
             }
             moved += 1;
@@ -995,9 +1098,11 @@ impl ClusterSim {
                     .and_then(|&p| self.replicas[victim].coord.kv.prefix(p))
                     .is_some_and(|p| p.expanded);
                 let dst_hosts = self.replicas[dst].prefix_of.contains_key(&tenant);
-                if self.policy.rehome_by_transfer(len, expanded, dst_hosts) {
-                    self.migrate_group(tenant, victim, dst, at, idx)?;
-                } else {
+                if !(self.policy.rehome_by_transfer(len, expanded, dst_hosts)
+                    && self.migrate_group(tenant, victim, dst, at, idx)?)
+                {
+                    // The victim must still vacate: fall back to the
+                    // re-prefill re-home when the transfer is refused.
                     self.rehome_without_pages(tenant, victim, dst)?;
                 }
                 moved += 1;
@@ -1041,6 +1146,12 @@ impl ClusterSim {
     /// the moment its last sequence drains), the router's stickiness
     /// follows the pages, and the group starts a served-token cool-down
     /// amortizing the transfer.
+    ///
+    /// Returns whether the group actually re-homed.  `false` means the
+    /// migration was refused — the destination is no longer admitting
+    /// (drain/crash raced the decision) or the fault layer lost the
+    /// transfer beyond its retry budget — and nothing moved: the caller
+    /// spills or falls back to a re-prefill re-home instead.
     fn migrate_group(
         &mut self,
         tenant: usize,
@@ -1048,7 +1159,13 @@ impl ClusterSim {
         dst: usize,
         at: f64,
         arrival_index: usize,
-    ) -> Result<()> {
+    ) -> Result<bool> {
+        if self.replicas[dst].state != ReplicaLifecycle::Active {
+            // A draining (or failed) replica refuses imports: its pages
+            // are on their way out, adopting new ones would wedge the
+            // drain.  Refuse cleanly and let the caller re-route.
+            return Ok(false);
+        }
         let src_pid = *self.replicas[src]
             .prefix_of
             .get(&tenant)
@@ -1057,22 +1174,34 @@ impl ClusterSim {
         let (transfer, cooldown) = if self.replicas[dst].prefix_of.contains_key(&tenant) {
             // An earlier spill already paged the group here: adopt the
             // resident copy, nothing crosses the interconnect (and
-            // nothing needs exporting or amortizing).
+            // nothing needs exporting, amortizing, or losing in
+            // flight).
             (0.0, 0)
         } else {
             let export = self.replicas[src].coord.kv.export_prefix(src_pid)?;
-            let pid = self.replicas[dst].coord.import_prefix_group(&export)?;
             let secs = self
                 .policy
                 .prefix_transfer_seconds(export.tokens.len(), export.expanded);
             let cooldown = self
                 .policy
                 .migration_cooldown_tokens(export.tokens.len(), export.expanded);
+            let (delivered, secs) = if self.faults.is_empty() {
+                (true, secs)
+            } else {
+                self.fault_adjusted_transfer(src, dst, arrival_index, secs)
+            };
             let rep = &mut self.replicas[dst];
-            rep.prefix_of.insert(tenant, pid);
-            rep.imported.insert(tenant);
             rep.coord.advance_clock(at);
             rep.coord.charge_transfer(secs);
+            if !delivered {
+                // Every attempt was lost (or the pair is partitioned)
+                // and the retry budget ran out: the time was spent, but
+                // the pages never landed — the group stays home.
+                return Ok(false);
+            }
+            let pid = rep.coord.import_prefix_group(&export)?;
+            rep.prefix_of.insert(tenant, pid);
+            rep.imported.insert(tenant);
             (secs, cooldown)
         };
         let after = self.replicas[dst].coord.metrics.shared_prefills;
@@ -1104,6 +1233,177 @@ impl ClusterSim {
             dst_prefills_before: before,
             dst_prefills_after: after,
         });
+        Ok(true)
+    }
+
+    /// Realized cost of one prefix transfer under the fault layer:
+    /// degradation windows scale the wire time, and each lost attempt
+    /// is retried on capped exponential backoff (priced and recorded on
+    /// the destination).  Returns `(delivered, seconds_to_charge)`.  A
+    /// partitioned pair (`bw_factor == 0`) times out on every attempt,
+    /// each priced at the nominal wire time.
+    fn fault_adjusted_transfer(
+        &mut self,
+        src: usize,
+        dst: usize,
+        arrival_index: usize,
+        base: f64,
+    ) -> (bool, f64) {
+        let factor = self.faults.bw_factor(src, dst, arrival_index);
+        let partitioned = factor <= 0.0;
+        let eff = if partitioned { base } else { base / factor };
+        let mut total = 0.0;
+        let mut attempt = 1u32;
+        loop {
+            if !(partitioned || self.faults.transfer_lost()) {
+                return (true, total + eff);
+            }
+            self.replicas[dst].coord.metrics.transfer_retries += 1;
+            total += self.policy.recovery.attempt_seconds(attempt, eff);
+            if !self.policy.recovery.should_retry(attempt) {
+                self.replicas[dst].coord.metrics.transfers_abandoned += 1;
+                return (false, total);
+            }
+            attempt += 1;
+        }
+    }
+
+    /// Deliver every fault event due at this arrival boundary.  Stalls
+    /// push the target's clock forward (queued work really waits behind
+    /// the silence); crashes run detection, failover and re-queue.
+    fn deliver_faults(&mut self, idx: usize, now: f64) -> Result<()> {
+        while let Some(ev) = self.faults.pop_due(idx) {
+            match ev.kind {
+                FaultKind::Stall { replica, seconds } => {
+                    let rep = &mut self.replicas[replica];
+                    if matches!(
+                        rep.state,
+                        ReplicaLifecycle::Active | ReplicaLifecycle::Draining
+                    ) {
+                        let t = rep.coord.now().max(now) + seconds;
+                        rep.coord.advance_clock(t);
+                        rep.coord.metrics.stalls += 1;
+                    }
+                }
+                FaultKind::Crash { replica } => self.fail_replica(replica, now)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill one replica and survive it: its pages are counted lost and
+    /// destroyed, its in-flight sequences are extracted for re-queue
+    /// (never dropped), every tenant it homed fails over — to a
+    /// surviving page copy when one exists, to a cost-priced re-prefill
+    /// on the least-loaded survivor otherwise — and the extracted work
+    /// re-submits on the new homes once the crash is detected
+    /// (`RecoveryPolicy::crash_timeout` after the crash instant).
+    fn fail_replica(&mut self, victim: usize, now: f64) -> Result<()> {
+        if self.replicas[victim].state != ReplicaLifecycle::Active {
+            return Ok(());
+        }
+        if self.active_replica_count() < 2 {
+            // Never kill the last admitting replica: validation caps
+            // *scheduled* crashes below the fleet size, but autoscaling
+            // or earlier crashes may have thinned the fleet since.
+            return Ok(());
+        }
+        self.crashes += 1;
+        let crash_time = self.replicas[victim].coord.now().max(now);
+        let detect_at = crash_time + self.policy.recovery.crash_timeout;
+
+        // Tear the victim down: count the destroyed pages, extract the
+        // in-flight sequences, retire every hosted prefix copy (its
+        // users and pins are gone, so the pages release immediately — a
+        // failed replica ends at zero live pages).
+        let rep = &mut self.replicas[victim];
+        rep.state = ReplicaLifecycle::Failed;
+        rep.coord.metrics.lost_pages += rep.coord.kv.used_blocks() as u64;
+        let work = rep.coord.fail_and_extract()?;
+        let mut tenant_of: HashMap<PrefixId, usize> =
+            rep.retired.iter().map(|&(t, p)| (p, t)).collect();
+        tenant_of.extend(rep.prefix_of.iter().map(|(&t, &p)| (p, t)));
+        let mut hosted: Vec<(usize, PrefixId)> = rep.prefix_of.drain().collect();
+        hosted.sort_unstable();
+        for &(tenant, pid) in &hosted {
+            rep.coord.retire_prefix_group(pid)?;
+            rep.retired.push((tenant, pid));
+        }
+
+        // Fail the dead homes over: prefer a surviving page copy (free
+        // adoption, nothing crosses the wire), fall back to the
+        // least-loaded survivor — which re-prefills the prefix on the
+        // group's next arrival through the normal lazy registration
+        // path — when the crash destroyed the only copy.
+        let mut dead_homes: Vec<usize> = self
+            .router
+            .home
+            .iter()
+            .filter(|&(_, &h)| h == victim)
+            .map(|(&t, _)| t)
+            .collect();
+        dead_homes.sort_unstable();
+        for tenant in dead_homes {
+            let copies: Vec<usize> = (0..self.replicas.len())
+                .filter(|&i| {
+                    self.replicas[i].state == ReplicaLifecycle::Active
+                        && self.replicas[i].prefix_of.contains_key(&tenant)
+                })
+                .collect();
+            let dst = if self.policy.recovery.prefer_copy_import(copies.len()) {
+                *copies
+                    .iter()
+                    .min_by_key(|&&i| (self.replicas[i].coord.load(), i))
+                    .unwrap()
+            } else {
+                let d = Router::least_loaded(&self.replicas);
+                self.replicas[d].coord.metrics.reprefilled_tokens +=
+                    self.tenants[tenant].prompt_tokens as u64;
+                self.router.reprefill_rehomes += 1;
+                d
+            };
+            self.router.home.insert(tenant, dst);
+            self.replicas[dst].coord.metrics.failovers += 1;
+        }
+
+        // Re-queue the extracted work on the survivors at detection
+        // time: each request re-submits exactly once, restarting from
+        // its prompt (the tokens it had generated are booked lost on
+        // the victim and redone here).
+        let mut recovered_at = detect_at;
+        for w in &work {
+            let tenant = *tenant_of.get(&w.prefix).ok_or_else(|| {
+                anyhow!("re-queued sequence references a prefix the victim never hosted")
+            })?;
+            let dst = match self.router.home.get(&tenant).copied() {
+                Some(h) if self.replicas[h].state == ReplicaLifecycle::Active => h,
+                _ => {
+                    let d = Router::least_loaded(&self.replicas);
+                    self.router.home.insert(tenant, d);
+                    d
+                }
+            };
+            let rep = &mut self.replicas[dst];
+            rep.coord.advance_clock(detect_at);
+            let pid = match rep.prefix_of.get(&tenant) {
+                Some(&p) => p,
+                None => {
+                    let tokens = self.tenants[tenant].prompt_token_ids(50_000);
+                    let p = rep.coord.register_prefix_group(&tokens)?;
+                    rep.prefix_of.insert(tenant, p);
+                    p
+                }
+            };
+            let req = Request {
+                id: u64::MAX,
+                prompt_tokens: w.prompt_tokens,
+                max_new_tokens: w.max_new_tokens,
+            };
+            rep.coord.submit_to_at(&req, pid, detect_at)?;
+            rep.requeued += 1;
+            recovered_at = recovered_at.max(rep.coord.now());
+        }
+        self.recovery_times.push(recovered_at - crash_time);
         Ok(())
     }
 
@@ -1123,12 +1423,28 @@ impl ClusterSim {
         let mut decode_seconds = 0.0f64;
         let mut makespan = 0.0f64;
         let mut transfer_seconds = 0.0f64;
+        let mut stalls = 0u64;
+        let mut transfer_retries = 0u64;
+        let mut transfers_abandoned = 0u64;
+        let mut failovers = 0u64;
+        let mut reprefilled_tokens = 0u64;
+        let mut lost_pages = 0u64;
+        let mut requeued_requests = 0u64;
+        let mut lost_tokens = 0u64;
         for r in &self.replicas {
             let m: &Metrics = &r.coord.metrics;
             tokens += m.tokens_generated;
             completed += m.requests_completed;
             decode_seconds += m.decode_seconds;
             transfer_seconds += m.transfer_seconds;
+            stalls += m.stalls;
+            transfer_retries += m.transfer_retries;
+            transfers_abandoned += m.transfers_abandoned;
+            failovers += m.failovers;
+            reprefilled_tokens += m.reprefilled_tokens;
+            lost_pages += m.lost_pages;
+            requeued_requests += m.requeued_requests;
+            lost_tokens += m.lost_tokens;
             makespan = makespan.max(r.coord.now());
             ttft.extend_from_slice(m.ttft.values());
             tpot.extend_from_slice(m.tpot.values());
@@ -1146,10 +1462,14 @@ impl ClusterSim {
                 prefix_groups: r.prefix_of.len(),
                 prefix_imports: m.prefix_imports,
                 routed: r.routed,
+                requeued: r.requeued,
+                lost_pages: m.lost_pages,
                 final_clock: r.coord.now(),
                 state: r.state,
             });
         }
+        let mut recovery = self.recovery_times.clone();
+        recovery.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
         tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ClusterReport {
@@ -1175,6 +1495,17 @@ impl ClusterSim {
             scale_ups: self.scale_ups(),
             scale_downs: self.scale_downs(),
             active_replicas: self.active_replica_count(),
+            crashes: self.crashes,
+            stalls,
+            transfer_retries,
+            transfers_abandoned,
+            failovers,
+            reprefilled_tokens,
+            lost_pages,
+            requeued_requests,
+            lost_tokens,
+            recovery_p50_s: if recovery.is_empty() { 0.0 } else { p50(&recovery) },
+            recovery_p99_s: if recovery.is_empty() { 0.0 } else { p99(&recovery) },
         }
     }
 }
@@ -1472,6 +1803,73 @@ mod tests {
         p.parallelism = ParallelismConfig::single();
         p.arrival_rate = Some(0.0);
         assert!(ClusterSim::new(&p).is_err(), "rate must be positive");
+    }
+
+    /// A draining replica refuses migration imports: the transfer is
+    /// refused cleanly (nothing moves, no pages land, stickiness stays
+    /// put) and the same migration completes once the destination is
+    /// active again — the drain-while-migrating regression.
+    #[test]
+    fn draining_replica_refuses_migration_imports() {
+        let mut p = quick_params(2, RouterPolicy::PrefixAffinity);
+        p.migrate = true;
+        let mut sim = ClusterSim::new(&p).unwrap();
+        while sim.replicas_hosting(0) == 0 {
+            assert!(sim.step_event().unwrap(), "tenant 0 must arrive before drain");
+        }
+        let home = *sim.router.home.get(&0).unwrap();
+        let other = 1 - home;
+        sim.replicas[other].state = ReplicaLifecycle::Draining;
+        let groups_before = sim.coordinator(other).prefix_groups().len();
+        let moved = sim.migrate_group(0, home, other, 0.0, 0).unwrap();
+        assert!(!moved, "draining destination must refuse the import");
+        assert_eq!(sim.coordinator(other).prefix_groups().len(), groups_before);
+        assert_eq!(sim.router.home.get(&0), Some(&home), "stickiness unchanged");
+        assert_eq!(sim.migrations(), 0, "a refused migration is not a migration");
+        sim.replicas[other].state = ReplicaLifecycle::Active;
+        let moved = sim.migrate_group(0, home, other, 0.0, 0).unwrap();
+        assert!(moved, "the re-issued migration completes on an active destination");
+        assert_eq!(sim.router.home.get(&0), Some(&other));
+    }
+
+    /// Fault smoke: a mid-stream crash on a two-replica fleet destroys
+    /// pages and re-queues in-flight work, yet every request completes
+    /// and the dead replica ends at zero live pages.
+    #[test]
+    fn crash_failover_requeues_and_completes_everything() {
+        let mut p = quick_params(2, RouterPolicy::PrefixAffinity);
+        p.total_requests = 64;
+        p.migrate = true;
+        p.faults.enabled = true;
+        p.faults.seed = 9;
+        p.faults.crashes = 1;
+        let mut sim = ClusterSim::new(&p).unwrap();
+        sim.run().unwrap();
+        assert_eq!(sim.crashes(), 1, "the scheduled crash must fire");
+        let report = sim.report();
+        assert_eq!(report.crashes, 1);
+        assert_eq!(
+            report.requests_completed as usize,
+            sim.arrivals().len(),
+            "every request completes exactly once despite the crash"
+        );
+        let failed: Vec<usize> = (0..sim.replica_count())
+            .filter(|&i| sim.replica_state(i) == ReplicaLifecycle::Failed)
+            .collect();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(
+            sim.coordinator(failed[0]).kv.used_blocks(),
+            0,
+            "a failed replica must end at zero live pages"
+        );
+        assert!(report.lost_pages > 0, "the crash destroyed live pages");
+        assert!(report.failovers > 0, "the dead home must fail over");
+        assert_eq!(report.active_replicas, 1);
+        assert_eq!(report.recovery_p50_s, report.recovery_p99_s, "one sample");
+        assert!(
+            report.recovery_p50_s >= sim.policy.recovery.crash_timeout,
+            "recovery includes the detection timeout"
+        );
     }
 
     /// Autoscale smoke: an over-provisioned fleet on a calm stream

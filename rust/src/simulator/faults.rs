@@ -1,0 +1,317 @@
+//! Deterministic fault injection for the cluster simulator.
+//!
+//! A [`FaultPlan`] is materialized once from a seeded [`FaultConfig`]
+//! (via `util::rng`, so the schedule replays byte-identically across
+//! serial and parallel sweep executors) and then consumed by
+//! `simulator::cluster` at arrival boundaries.  Three fault families:
+//!
+//! * **Crash / stall events** — a replica dies (lifecycle `Failed`,
+//!   recovered by `policy::recovery` failover) or goes silent for a
+//!   sampled window while keeping its state.
+//! * **Interconnect degradation windows** — the realized bandwidth of a
+//!   replica pair is scaled by `degrade_factor` (0 = partition) for a
+//!   span of arrivals; applied to transfer pricing at the call site so
+//!   `PolicyEngine` memos are never poisoned by transient conditions.
+//! * **Transfer loss** — a dedicated coin stream decides whether an
+//!   in-flight `PrefixExport` arrives truncated or not at all, driving
+//!   the recovery layer's retry-with-backoff path.
+//!
+//! An empty plan (disabled config, or an enabled config that schedules
+//! nothing) is structurally inert: `is_empty()` gates every fault hook
+//! in the cluster, so the fault-free path stays bit-identical.
+
+use crate::config::FaultConfig;
+use crate::util::rng::Rng;
+
+/// Fraction of the arrival stream before the first fault may fire and
+/// after the last may fire: faults land in the middle three fifths so
+/// every schedule has traffic both before and after the disruption.
+const SPAN_LEAD: usize = 5;
+
+/// What a scheduled fault does when delivered.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The replica dies: in-flight sequences are re-queued by the
+    /// recovery layer, its pages are lost, lifecycle becomes `Failed`.
+    Crash { replica: usize },
+    /// The replica goes silent for `seconds` (clock advances, no work).
+    Stall { replica: usize, seconds: f64 },
+}
+
+/// A fault scheduled at an arrival boundary: delivered just before the
+/// arrival with index `at_arrival` is routed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at_arrival: usize,
+    pub kind: FaultKind,
+}
+
+/// One interconnect degradation window: transfers between replicas
+/// `a` and `b` (unordered pair) see their bandwidth scaled by `factor`
+/// while the routed arrival index sits in `[from_arrival, to_arrival)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegradeWindow {
+    pub a: usize,
+    pub b: usize,
+    pub from_arrival: usize,
+    pub to_arrival: usize,
+    pub factor: f64,
+}
+
+/// A fully materialized, replayable fault schedule.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Crash/stall events sorted by `at_arrival` (stable order).
+    events: Vec<FaultEvent>,
+    windows: Vec<DegradeWindow>,
+    transfer_loss: f64,
+    /// Dedicated coin stream for transfer-loss draws; `None` when the
+    /// loss probability is zero so the fault-free path draws nothing.
+    coin: Option<Rng>,
+    cursor: usize,
+}
+
+impl FaultPlan {
+    /// The inert plan: schedules nothing, draws nothing.
+    pub fn empty() -> Self {
+        FaultPlan {
+            events: Vec::new(),
+            windows: Vec::new(),
+            transfer_loss: 0.0,
+            coin: None,
+            cursor: 0,
+        }
+    }
+
+    /// True when the plan can never perturb a run.  The cluster gates
+    /// every fault hook on this, which is what makes the empty plan
+    /// bit-identical to the fault-free path.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.windows.is_empty() && self.coin.is_none()
+    }
+
+    /// Materialize a schedule for a fleet of `replicas` serving
+    /// `total_arrivals` requests.  Deterministic in `cfg.seed`; a
+    /// disabled config — or an enabled one that schedules nothing —
+    /// yields the empty plan without constructing an RNG.
+    pub fn build(cfg: &FaultConfig, replicas: usize, total_arrivals: usize) -> Self {
+        let scheduled = cfg.crashes + cfg.stalls + cfg.degradations;
+        if !cfg.enabled || (scheduled == 0 && cfg.transfer_loss <= 0.0) {
+            return FaultPlan::empty();
+        }
+        let mut rng =
+            Rng::new(cfg.seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xFA01));
+        // Faults land in the middle of the arrival stream so each
+        // schedule has traffic both before and after the disruption.
+        let lo = total_arrivals / SPAN_LEAD;
+        let hi = (total_arrivals - total_arrivals / SPAN_LEAD).max(lo + 1);
+        let mut events = Vec::with_capacity(cfg.crashes + cfg.stalls);
+        // Crashes hit distinct replicas (validation already capped the
+        // count below the fleet size).
+        let mut victims: Vec<usize> = (0..replicas).collect();
+        rng.shuffle(&mut victims);
+        for &replica in victims.iter().take(cfg.crashes.min(replicas.saturating_sub(1))) {
+            let at_arrival = rng.gen_range_usize(lo, hi);
+            events.push(FaultEvent { at_arrival, kind: FaultKind::Crash { replica } });
+        }
+        for _ in 0..cfg.stalls {
+            let replica = rng.gen_range_usize(0, replicas);
+            let seconds = 0.05 + 0.45 * rng.next_f64();
+            let at_arrival = rng.gen_range_usize(lo, hi);
+            events.push(FaultEvent { at_arrival, kind: FaultKind::Stall { replica, seconds } });
+        }
+        events.sort_by_key(|e| e.at_arrival);
+        let mut windows = Vec::with_capacity(cfg.degradations);
+        if replicas >= 2 {
+            for _ in 0..cfg.degradations {
+                let a = rng.gen_range_usize(0, replicas);
+                let mut b = rng.gen_range_usize(0, replicas - 1);
+                if b >= a {
+                    b += 1;
+                }
+                let from_arrival = rng.gen_range_usize(lo, hi);
+                let len = rng.gen_range_usize(1, (total_arrivals / 4).max(2));
+                windows.push(DegradeWindow {
+                    a,
+                    b,
+                    from_arrival,
+                    to_arrival: from_arrival + len,
+                    factor: cfg.degrade_factor,
+                });
+            }
+        }
+        let coin = (cfg.transfer_loss > 0.0).then(|| {
+            Rng::new(cfg.seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xFA02))
+        });
+        FaultPlan {
+            events,
+            windows,
+            transfer_loss: cfg.transfer_loss,
+            coin,
+            cursor: 0,
+        }
+    }
+
+    /// Drain the next event due at or before `arrival_idx`, if any.
+    /// Events come back in schedule order; call in a loop to deliver
+    /// everything due at a boundary.
+    pub fn pop_due(&mut self, arrival_idx: usize) -> Option<FaultEvent> {
+        let ev = self.events.get(self.cursor)?;
+        if ev.at_arrival <= arrival_idx {
+            self.cursor += 1;
+            Some(*ev)
+        } else {
+            None
+        }
+    }
+
+    /// Realized-bandwidth multiplier for a transfer between replicas
+    /// `x` and `y` while routing arrival `arrival_idx`: the product of
+    /// every active degradation window covering the (unordered) pair.
+    /// 1.0 outside all windows; 0.0 means the pair is partitioned.
+    pub fn bw_factor(&self, x: usize, y: usize, arrival_idx: usize) -> f64 {
+        let mut f = 1.0;
+        for w in &self.windows {
+            let pair = (w.a == x && w.b == y) || (w.a == y && w.b == x);
+            if pair && (w.from_arrival..w.to_arrival).contains(&arrival_idx) {
+                f *= w.factor;
+            }
+        }
+        f
+    }
+
+    /// Coin flip: is this transfer attempt lost (or truncated) in
+    /// flight?  Draws from the dedicated loss stream; always false —
+    /// and draws nothing — when the loss probability is zero.
+    pub fn transfer_lost(&mut self) -> bool {
+        match self.coin.as_mut() {
+            None => false,
+            Some(rng) => rng.next_f64() < self.transfer_loss,
+        }
+    }
+
+    /// Scheduled crash/stall events (schedule order), for audits.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Scheduled degradation windows, for audits.
+    pub fn windows(&self) -> &[DegradeWindow] {
+        &self.windows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            seed,
+            crashes: 2,
+            stalls: 3,
+            degradations: 2,
+            transfer_loss: 0.25,
+            degrade_factor: 0.1,
+        }
+    }
+
+    #[test]
+    fn disabled_or_zero_intensity_plans_are_empty() {
+        let plan = FaultPlan::build(&FaultConfig::disabled(), 4, 100);
+        assert!(plan.is_empty());
+        let mut enabled_but_inert = FaultConfig::disabled();
+        enabled_but_inert.enabled = true;
+        let plan = FaultPlan::build(&enabled_but_inert, 4, 100);
+        assert!(plan.is_empty(), "enabled with nothing scheduled is still inert");
+        assert!(FaultPlan::empty().is_empty());
+    }
+
+    #[test]
+    fn build_is_deterministic_in_the_seed() {
+        let a = FaultPlan::build(&cfg(7), 4, 200);
+        let b = FaultPlan::build(&cfg(7), 4, 200);
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.windows(), b.windows());
+        let c = FaultPlan::build(&cfg(8), 4, 200);
+        assert!(
+            a.events() != c.events() || a.windows() != c.windows(),
+            "different seeds draw different schedules"
+        );
+    }
+
+    #[test]
+    fn crashes_hit_distinct_replicas_inside_the_traffic_span() {
+        let plan = FaultPlan::build(&cfg(11), 4, 200);
+        let mut crashed = Vec::new();
+        for e in plan.events() {
+            assert!((40..=160).contains(&e.at_arrival), "mid-stream: {e:?}");
+            if let FaultKind::Crash { replica } = e.kind {
+                assert!(replica < 4);
+                assert!(!crashed.contains(&replica), "distinct victims");
+                crashed.push(replica);
+            }
+        }
+        assert_eq!(crashed.len(), 2);
+        let stalls = plan
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Stall { .. }))
+            .count();
+        assert_eq!(stalls, 3);
+    }
+
+    #[test]
+    fn pop_due_drains_in_schedule_order() {
+        let mut plan = FaultPlan::build(&cfg(3), 4, 200);
+        let total = plan.events().len();
+        assert!(plan.pop_due(0).is_none(), "nothing due before the span");
+        let mut seen = 0;
+        let mut last = 0;
+        while let Some(ev) = plan.pop_due(usize::MAX) {
+            assert!(ev.at_arrival >= last, "sorted delivery");
+            last = ev.at_arrival;
+            seen += 1;
+        }
+        assert_eq!(seen, total);
+        assert!(plan.pop_due(usize::MAX).is_none(), "drained");
+    }
+
+    #[test]
+    fn bw_factor_is_symmetric_and_windowed() {
+        let mut plan = FaultPlan::empty();
+        plan.windows.push(DegradeWindow {
+            a: 0,
+            b: 2,
+            from_arrival: 10,
+            to_arrival: 20,
+            factor: 0.5,
+        });
+        assert_eq!(plan.bw_factor(0, 2, 15), 0.5);
+        assert_eq!(plan.bw_factor(2, 0, 15), 0.5, "pair is unordered");
+        assert_eq!(plan.bw_factor(0, 2, 20), 1.0, "window is half-open");
+        assert_eq!(plan.bw_factor(0, 1, 15), 1.0, "other pairs untouched");
+        plan.windows.push(DegradeWindow {
+            a: 2,
+            b: 0,
+            from_arrival: 12,
+            to_arrival: 18,
+            factor: 0.0,
+        });
+        assert_eq!(plan.bw_factor(0, 2, 15), 0.0, "overlapping windows compound");
+    }
+
+    #[test]
+    fn transfer_loss_coin_matches_probability_and_zero_never_fires() {
+        let mut plan = FaultPlan::build(&cfg(5), 4, 200);
+        let n = 10_000;
+        let lost = (0..n).filter(|_| plan.transfer_lost()).count();
+        let rate = lost as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.03, "rate {rate}");
+        let mut lossless = cfg(5);
+        lossless.transfer_loss = 0.0;
+        let mut plan = FaultPlan::build(&lossless, 4, 200);
+        assert!((0..1000).all(|_| !plan.transfer_lost()));
+    }
+}

@@ -5,6 +5,7 @@
 pub mod cluster;
 pub mod e2e;
 pub mod engine;
+pub mod faults;
 pub mod serving_sim;
 pub mod sweep;
 pub mod tenancy;
@@ -15,6 +16,7 @@ pub use cluster::{
 };
 pub use e2e::{gpu_h800_calibrated, tgr_row, TgrEntry, TgrRow};
 pub use engine::SimEngine;
+pub use faults::{DegradeWindow, FaultEvent, FaultKind, FaultPlan};
 pub use serving_sim::{run_experiment, run_kernel_comparison, SimParams, SimReport};
 pub use sweep::{
     cluster_cells, cluster_row_configs, run_cluster_sweep, run_throughput_sweep,

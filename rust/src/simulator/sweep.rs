@@ -265,6 +265,11 @@ pub struct ClusterCell {
     /// Replica autoscaling enabled (prefix-affinity only; the fleet
     /// starts at `replicas` and may resize within the default bounds).
     pub autoscale: bool,
+    /// Fault injection enabled (prefix-affinity only): one mid-stream
+    /// replica crash on multi-replica rows (no crash is schedulable on
+    /// a single replica — at least one survivor must remain), recovered
+    /// by the failover policy.  The graceful-degradation column.
+    pub fault: bool,
     pub tenants: usize,
     pub batch: usize,
     pub total_requests: usize,
@@ -277,15 +282,18 @@ pub struct ClusterCell {
 }
 
 /// The per-row router configurations of the `cluster` artifact, in
-/// column order: baselines, spill-only affinity, migrate-enabled
-/// affinity, autoscaled migrate-enabled affinity last.
-pub fn cluster_row_configs() -> [(RouterPolicy, bool, bool); 5] {
+/// column order — `(router, migrate, autoscale, fault)`: baselines,
+/// spill-only affinity, migrate-enabled affinity, autoscaled
+/// migrate-enabled affinity, and the fault-injected migrate-enabled
+/// affinity column last.
+pub fn cluster_row_configs() -> [(RouterPolicy, bool, bool, bool); 6] {
     [
-        (RouterPolicy::RoundRobin, false, false),
-        (RouterPolicy::LeastLoaded, false, false),
-        (RouterPolicy::PrefixAffinity, false, false),
-        (RouterPolicy::PrefixAffinity, true, false),
-        (RouterPolicy::PrefixAffinity, true, true),
+        (RouterPolicy::RoundRobin, false, false, false),
+        (RouterPolicy::LeastLoaded, false, false, false),
+        (RouterPolicy::PrefixAffinity, false, false, false),
+        (RouterPolicy::PrefixAffinity, true, false, false),
+        (RouterPolicy::PrefixAffinity, true, true, false),
+        (RouterPolicy::PrefixAffinity, true, false, true),
     ]
 }
 
@@ -314,7 +322,7 @@ pub fn cluster_cells(
                 let bursty = arrival.is_some_and(|(_, f)| f > 1.0);
                 let spill_queue_depth =
                     if bursty { (batch / 4).max(1) } else { (2 * batch).max(1) };
-                for (router, migrate, autoscale) in cluster_row_configs() {
+                for (router, migrate, autoscale, fault) in cluster_row_configs() {
                     cells.push(ClusterCell {
                         model: model.clone(),
                         replicas,
@@ -322,6 +330,7 @@ pub fn cluster_cells(
                         router,
                         migrate,
                         autoscale,
+                        fault,
                         tenants,
                         batch,
                         total_requests,
@@ -367,6 +376,15 @@ pub fn run_cluster_sweep(
         p.spill_queue_depth = c.spill_queue_depth;
         p.migrate = c.migrate;
         p.scaling.enabled = c.autoscale;
+        if c.fault {
+            // One mid-stream crash, seeded off the workload seed so the
+            // column replays byte-identically across executors.  A
+            // single-replica row schedules nothing (no survivor would
+            // remain) and stays bit-identical to its migrate column.
+            p.faults.enabled = true;
+            p.faults.seed = p.seed;
+            p.faults.crashes = if c.replicas > 1 { 1 } else { 0 };
+        }
         let report = run_cluster_experiment(&p)?;
         Ok(ClusterCellResult { cell: c.clone(), report })
     })
@@ -421,38 +439,42 @@ mod tests {
         let bursty = Some((200.0, 50.0));
         let cells =
             cluster_cells(&deepseek_v3(), &[1, 2], &[0.0, 2.0], &[None, bursty], 4, 32, 64);
-        // 2 replica counts x 2 skews x 2 profiles x 5 router configs,
+        // 2 replica counts x 2 skews x 2 profiles x 6 router configs,
         // config innermost, profile next.
-        assert_eq!(cells.len(), 40);
+        assert_eq!(cells.len(), 48);
         assert_eq!(
             (cells[0].replicas, cells[0].skew, cells[0].router, cells[0].migrate),
             (1, 0.0, RouterPolicy::RoundRobin, false)
         );
         assert_eq!(
-            (cells[2].router, cells[2].migrate, cells[2].autoscale),
-            (RouterPolicy::PrefixAffinity, false, false)
+            (cells[2].router, cells[2].migrate, cells[2].autoscale, cells[2].fault),
+            (RouterPolicy::PrefixAffinity, false, false, false)
         );
         assert_eq!(
-            (cells[3].router, cells[3].migrate, cells[3].autoscale),
-            (RouterPolicy::PrefixAffinity, true, false)
+            (cells[3].router, cells[3].migrate, cells[3].autoscale, cells[3].fault),
+            (RouterPolicy::PrefixAffinity, true, false, false)
         );
         assert_eq!(
-            (cells[4].router, cells[4].migrate, cells[4].autoscale),
-            (RouterPolicy::PrefixAffinity, true, true)
+            (cells[4].router, cells[4].migrate, cells[4].autoscale, cells[4].fault),
+            (RouterPolicy::PrefixAffinity, true, true, false)
+        );
+        assert_eq!(
+            (cells[5].router, cells[5].migrate, cells[5].autoscale, cells[5].fault),
+            (RouterPolicy::PrefixAffinity, true, false, true)
         );
         assert_eq!(cells[0].arrival, None);
-        assert_eq!(cells[5].arrival, bursty, "profile pivots inside one skew");
-        assert_eq!((cells[10].replicas, cells[10].skew), (1, 2.0));
-        assert_eq!((cells[39].replicas, cells[39].skew), (2, 2.0));
-        assert_eq!(cells[39].arrival, bursty);
+        assert_eq!(cells[6].arrival, bursty, "profile pivots inside one skew");
+        assert_eq!((cells[12].replicas, cells[12].skew), (1, 2.0));
+        assert_eq!((cells[47].replicas, cells[47].skew), (2, 2.0));
+        assert_eq!(cells[47].arrival, bursty);
         // Batch rows keep the PR 4 threshold; bursty rows tighten it.
         assert_eq!(cells[0].spill_queue_depth, 64);
-        assert_eq!(cells[5].spill_queue_depth, 8);
-        // Baselines never migrate or autoscale.
+        assert_eq!(cells[6].spill_queue_depth, 8);
+        // Baselines never migrate, autoscale, or inject faults.
         assert!(cells
             .iter()
             .all(|c| c.router == RouterPolicy::PrefixAffinity
-                || (!c.migrate && !c.autoscale)));
+                || (!c.migrate && !c.autoscale && !c.fault)));
     }
 
     /// Cluster sweep determinism: serial and parallel executors produce
@@ -483,6 +505,13 @@ mod tests {
             assert_eq!(s.report.scale_ups, p.report.scale_ups);
             assert_eq!(s.report.scale_downs, p.report.scale_downs);
             assert_eq!(s.report.active_replicas, p.report.active_replicas);
+            assert_eq!(s.report.crashes, p.report.crashes);
+            assert_eq!(s.report.requeued_requests, p.report.requeued_requests);
+            assert_eq!(s.report.lost_pages, p.report.lost_pages);
+            assert_eq!(
+                s.report.recovery_p99_s.to_bits(),
+                p.report.recovery_p99_s.to_bits()
+            );
         }
     }
 

@@ -77,6 +77,26 @@ impl Args {
         }
     }
 
+    /// Like `get_f64`, but rejects NaN/inf and non-positive values —
+    /// the validated accessor for rates, targets, and headrooms where a
+    /// zero or NaN would silently wedge the simulation.
+    pub fn get_positive_f64(&self, name: &str, default: f64) -> Result<f64> {
+        let v = self.get_f64(name, default)?;
+        if !v.is_finite() || v <= 0.0 {
+            bail!("--{name} expects a positive finite number, got {v}");
+        }
+        Ok(v)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an unsigned integer, got {v:?}")),
+        }
+    }
+
     /// Parse "64,128,256" style lists.
     pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(name) {
@@ -139,6 +159,30 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse_from(["--port".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn positive_f64_rejects_nonpositive_and_nan() {
+        for bad in ["0", "-1.5", "NaN", "inf", "-inf"] {
+            let a = parse(&format!("x --rate {bad}"), &[]);
+            let err = a.get_positive_f64("rate", 1.0).unwrap_err().to_string();
+            assert!(err.contains("--rate"), "error must name the flag: {err}");
+        }
+        let a = parse("x --rate 2.5", &[]);
+        assert_eq!(a.get_positive_f64("rate", 1.0).unwrap(), 2.5);
+        // The default passes through untouched when the flag is absent.
+        assert_eq!(parse("x", &[]).get_positive_f64("rate", 7.0).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn u64_accessor_parses_and_rejects() {
+        let a = parse("x --fault-seed 12345", &[]);
+        assert_eq!(a.get_u64("fault-seed", 0).unwrap(), 12345);
+        assert_eq!(a.get_u64("absent", 9).unwrap(), 9);
+        let bad = parse("x --fault-seed -3", &[]);
+        assert!(bad.get_u64("fault-seed", 0).is_err());
+        let bad = parse("x --fault-seed abc", &[]);
+        assert!(bad.get_u64("fault-seed", 0).is_err());
     }
 
     #[test]

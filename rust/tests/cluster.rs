@@ -13,7 +13,13 @@
 //!   migrate-vs-spill rule enabled, a migrated group's pages end on
 //!   exactly one replica (unless a post-migration spill was recorded),
 //!   its destination adopts without re-prefilling, and retired copies
-//!   release their pages at drain.
+//!   release their pages at drain;
+//! * **fault-schedule conservation** — under arbitrary seeded
+//!   crash/stall/degradation/loss plans, every request still completes
+//!   exactly once fleet-wide, the fleet redoes exactly the tokens the
+//!   crash threw away, no replica leaks KV pages, and a crashed
+//!   replica ends with zero live pages.  The scheduled CI long-fuzz
+//!   job scales the iteration count via `TYPHOON_FUZZ_ITERS`.
 
 use typhoon_mla::config::hardware::ascend_npu;
 use typhoon_mla::config::model::deepseek_v3;
@@ -30,6 +36,16 @@ use typhoon_mla::workload::tenants::{tenant_set, timed_arrivals};
 
 fn cluster_params(replicas: usize, router: RouterPolicy) -> ClusterParams {
     ClusterParams::new(deepseek_v3(), ascend_npu(), replicas, router, 64, 1, 0.0)
+}
+
+/// Iteration budget for a fuzz loop: `base` in tier-1, `base x
+/// TYPHOON_FUZZ_ITERS` in the scheduled CI long-fuzz job (unset or
+/// unparsable falls back to the tier-1 budget).
+fn fuzz_iters(base: u64) -> u64 {
+    std::env::var("TYPHOON_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map_or(base, |m| base * m.max(1))
 }
 
 /// The reduction: with one replica, round-robin routing and no TP/SP
@@ -786,4 +802,185 @@ fn autoscale_never_triggered_is_bit_identical() {
     let auto = typhoon_mla::simulator::run_cluster_experiment(&a).unwrap();
     assert_eq!(auto.scale_ups + auto.scale_downs, 0, "batch protocol never scales");
     report_bits_equal(&fixed, &auto);
+}
+
+/// The fault-injection acceptance fuzz (conservation spine): across
+/// random fleets, routers knobs and **seeded fault schedules** —
+/// crashes, stalls, interconnect degradation/partition windows, and
+/// in-flight transfer loss — every request completes exactly once
+/// fleet-wide, the fleet's token total is exactly the arrival budget
+/// plus the tokens a crash threw away (re-queued work redoes them,
+/// nothing is dropped and nothing double-counts), no replica leaks KV
+/// pages, crashed replicas end with zero live pages, and per-replica
+/// clocks never move backward.  Assertion messages embed the failing
+/// seed so a red long-fuzz run replays as a one-seed unit test.
+#[test]
+fn fault_schedule_conservation_fuzz() {
+    let mut saw_crash = false;
+    let mut saw_requeue = false;
+    for seed in 0..fuzz_iters(10) {
+        let mut rng = Rng::new(17_000 + seed);
+        let replicas = rng.gen_range_usize(2, 5);
+        let tenants = rng.gen_range_usize(1, 4);
+        let skew = [0.0, 1.0, 2.0][rng.gen_range_usize(0, 3)];
+        let batch = rng.gen_range_usize(4, 13);
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            replicas,
+            RouterPolicy::PrefixAffinity,
+            batch,
+            tenants,
+            skew,
+        );
+        p.total_requests = rng.gen_range_usize(48, 160);
+        p.seed = seed * 41 + 3;
+        p.migrate = rng.next_f64() < 0.7;
+        p.spill_queue_depth = if rng.next_f64() < 0.5 { 1 } else { 2 * batch };
+        if rng.next_f64() < 0.5 {
+            p.arrival_rate = Some(1.0 + rng.next_f64() * 50.0);
+        }
+        p.faults.enabled = true;
+        p.faults.seed = seed * 97 + 13; // independent of the workload seed
+        p.faults.crashes = rng.gen_range_usize(0, replicas); // survivor stays
+        p.faults.stalls = rng.gen_range_usize(0, 4);
+        p.faults.degradations = rng.gen_range_usize(0, 3);
+        if rng.next_f64() < 0.5 {
+            p.faults.transfer_loss = rng.next_f64() * 0.9;
+        }
+        p.faults.degrade_factor = [0.0, 0.25, 1.0][rng.gen_range_usize(0, 3)];
+        let mut sim = ClusterSim::new(&p).unwrap();
+
+        // Expected totals from the arrival stream (pools are sized so
+        // no request is ever force-finished short; re-queued crash
+        // victims resubmit the same prompt/budget, so the same clamp
+        // applies on the survivor).
+        let max_seq_len = 2048usize;
+        let n_arrivals = sim.arrivals().len();
+        let expected_tokens: u64 = sim
+            .arrivals()
+            .iter()
+            .map(|a| {
+                let prompt = a.request.prompt_tokens.min(max_seq_len - 1);
+                a.request.max_new_tokens.min(max_seq_len - prompt).max(1) as u64
+            })
+            .sum();
+
+        let mut prev = sim.replica_clocks();
+        let mut guard = 0u64;
+        while sim.step_event().unwrap() {
+            let now = sim.replica_clocks();
+            for (r, (a, b)) in prev.iter().zip(&now).enumerate() {
+                assert!(b >= a, "seed {seed}: replica {r} clock went backward");
+            }
+            prev = now;
+            guard += 1;
+            assert!(guard < 4_000_000, "seed {seed}: no progress");
+        }
+
+        let report = sim.report();
+        saw_crash |= report.crashes > 0;
+        saw_requeue |= report.requeued_requests > 0;
+        assert!(
+            report.crashes as usize <= p.faults.crashes,
+            "seed {seed}: more crashes than the plan scheduled"
+        );
+        assert_eq!(
+            report.requests_completed as usize, n_arrivals,
+            "seed {seed}: every request completes exactly once across the fleet"
+        );
+        let routed: u64 = report.replicas.iter().map(|r| r.routed).sum();
+        assert_eq!(routed as usize, n_arrivals, "seed {seed}: no request routed twice");
+        let requeued: u64 = report.replicas.iter().map(|r| r.requeued).sum();
+        assert_eq!(
+            requeued, report.requeued_requests,
+            "seed {seed}: every extracted sequence lands on a survivor"
+        );
+        assert_eq!(
+            report.tokens,
+            expected_tokens + report.lost_tokens,
+            "seed {seed}: token conservation — crashed work redone exactly once"
+        );
+        for i in 0..sim.replica_count() {
+            let coord = sim.coordinator(i);
+            assert_eq!(coord.running(), 0, "seed {seed}: replica {i} drained");
+            assert_eq!(coord.queued(), 0, "seed {seed}: replica {i} drained");
+            let hosted_pages: usize = coord
+                .prefix_groups()
+                .iter()
+                .map(|&(id, _)| coord.kv.prefix(id).unwrap().latent_blocks.len())
+                .sum();
+            assert_eq!(
+                coord.kv.used_blocks(),
+                hosted_pages,
+                "seed {seed}: replica {i} leaked KV pages"
+            );
+            if sim.replica_state(i) == ReplicaLifecycle::Failed {
+                assert_eq!(
+                    coord.kv.used_blocks(),
+                    0,
+                    "seed {seed}: crashed replica {i} still holds live pages"
+                );
+            }
+        }
+        assert!(sim.retired_copies_released(), "seed {seed}");
+        if report.crashes > 0 {
+            assert!(
+                report.recovery_p99_s > 0.0,
+                "seed {seed}: executed crashes must report a recovery time"
+            );
+        }
+    }
+    assert!(saw_crash, "fuzz draws must exercise a crash");
+    assert!(saw_requeue, "fuzz draws must re-queue in-flight work");
+}
+
+/// Satellite pin: an **empty fault plan** is structurally inert.  A
+/// `--faults` run whose plan schedules nothing (zero crashes, stalls
+/// and degradation windows, zero loss probability) takes the exact
+/// fault-free code path — no RNG draws, no clock perturbation — and
+/// its report is bit-identical to the same cluster with fault
+/// injection disabled.
+#[test]
+fn empty_fault_plan_is_bit_identical() {
+    fn report_bits_equal(a: &ClusterReport, b: &ClusterReport) {
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.requests_completed, b.requests_completed);
+        assert_eq!(a.decode_seconds.to_bits(), b.decode_seconds.to_bits());
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits());
+        assert_eq!(a.spills, b.spills);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.transfer_seconds.to_bits(), b.transfer_seconds.to_bits());
+    }
+
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        2,
+        RouterPolicy::PrefixAffinity,
+        16,
+        3,
+        1.0,
+    );
+    p.total_requests = 96;
+    p.arrival_rate = Some(50.0);
+    p.migrate = true;
+    p.spill_queue_depth = 2;
+    let plain = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+
+    let mut f = p.clone();
+    f.faults.enabled = true;
+    f.faults.seed = 123; // a non-trivial seed must still draw nothing
+    let faulty = typhoon_mla::simulator::run_cluster_experiment(&f).unwrap();
+    report_bits_equal(&plain, &faulty);
+    assert_eq!(faulty.crashes, 0);
+    assert_eq!(faulty.stalls, 0);
+    assert_eq!(faulty.transfer_retries, 0);
+    assert_eq!(faulty.failovers, 0);
+    assert_eq!(faulty.lost_pages, 0);
+    assert_eq!(faulty.requeued_requests, 0);
+    assert_eq!(faulty.lost_tokens, 0);
+    assert_eq!(faulty.recovery_p99_s.to_bits(), 0.0f64.to_bits());
 }
