@@ -3,7 +3,7 @@
 //!
 //! Usage:
 //!   bench_sweep [--quick] [--full] [--threads N] [--out FILE]
-//!               [--skip-serial]
+//!               [--skip-serial] [--million] [--million-requests N]
 //!
 //! * `--quick`  caps `max_requests` and shrinks the batch set to a
 //!   tier-1-friendly load (default mode is a middle ground; `--full`
@@ -14,14 +14,23 @@
 //!   path — asserts the figure text/CSV artifacts are
 //!   **byte-identical**, and reports the speedup.  `--skip-serial`
 //!   times only the parallel run.
+//! * `--million` additionally times one large prefix-affinity cluster
+//!   cell (default 1M timed arrivals; `--million-requests` rescales,
+//!   e.g. the CI leg's 100k) through the indexed event core with
+//!   parallel replica stepping, recording `events_per_second`,
+//!   `million_wall_seconds` and the peak sequence-arena occupancy —
+//!   plus a serial replay asserted byte-identical unless
+//!   `--skip-serial`.
 //!
 //! Emits `BENCH_sweep.json` with schema
 //! `{wall_seconds, cells, tokens_simulated}` (plus serial baseline and
 //! speedup fields when measured, plus `cluster_*` fields for the
 //! replicas x skew x router grid, which is timed and
-//! byte-identity-asserted the same way) via util::bench-style JSON —
-//! to `--out` (default `target/bench/`) *and* to the tracked repo-root
-//! copy `BENCH_sweep.json`, so the perf trajectory survives PRs.
+//! byte-identity-asserted the same way, plus `million_*` /
+//! `events_per_second` fields under `--million`) via
+//! util::bench-style JSON — to `--out` (default `target/bench/`)
+//! *and* to the tracked repo-root copy `BENCH_sweep.json`, so the perf
+//! trajectory survives PRs.
 
 use std::time::Instant;
 
@@ -37,6 +46,7 @@ use typhoon_mla::simulator::sweep::{
     cluster_cells, cluster_row_configs, run_cluster_sweep, run_throughput_sweep,
     throughput_cells, ClusterCell, SweepExecutor, ThroughputCell,
 };
+use typhoon_mla::simulator::{run_cluster_experiment, ClusterParams, ClusterSim, RouterPolicy};
 use typhoon_mla::util::cli::Args;
 use typhoon_mla::util::json::Json;
 
@@ -113,8 +123,16 @@ fn run_cluster_grid(cells: &[ClusterCell], exec: &SweepExecutor) -> Result<Clust
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["quick", "full", "skip-serial"])?;
-    args.reject_unknown(&["quick", "full", "skip-serial", "threads", "out"])?;
+    let args = Args::parse(&["quick", "full", "skip-serial", "million"])?;
+    args.reject_unknown(&[
+        "quick",
+        "full",
+        "skip-serial",
+        "million",
+        "million-requests",
+        "threads",
+        "out",
+    ])?;
     let out_path = args.get_or("out", "target/bench/BENCH_sweep.json").to_string();
 
     // Batch set + request cap per mode.
@@ -171,6 +189,87 @@ fn main() -> Result<()> {
         cl.lost_pages
     );
 
+    // `--million`: one large prefix-affinity cell driven through the
+    // indexed event core with parallel replica stepping (DESIGN.md
+    // §15) — the throughput probe of the event loop itself.  The
+    // Poisson rate is calibrated against fleet capacity from a short
+    // batch-protocol pilot (deterministic: modeled time only), so the
+    // cell runs near saturation with bounded queues and the sequence
+    // arena proves out its O(max outstanding) memory claim.
+    let million_fields = if args.flag("million") {
+        let requests = args.get_usize("million-requests", 1_000_000)?;
+        ensure!(requests > 0, "--million-requests must be positive");
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            8,
+            RouterPolicy::PrefixAffinity,
+            128,
+            8,
+            1.0,
+        );
+        p.total_requests = requests.min(4096);
+        let pilot = run_cluster_experiment(&p)?;
+        let capacity = pilot.requests_completed as f64 / pilot.makespan.max(1e-9);
+        let rate = 0.9 * capacity;
+        p.total_requests = requests;
+        p.arrival_rate = Some(rate);
+
+        let mut sim = ClusterSim::new(&p)?;
+        let t0 = Instant::now();
+        sim.run_parallel()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let report = sim.report();
+        ensure!(
+            report.requests_completed as usize == requests,
+            "million cell dropped requests: {} of {requests}",
+            report.requests_completed
+        );
+        let events = sim.events_processed();
+        let eps = events as f64 / wall.max(1e-12);
+        println!(
+            "million:  {wall:.3}s wall, {requests} requests, {events} events \
+             ({eps:.0} events/s), arena peak {}, {} spills",
+            sim.arena_peak(),
+            report.spills,
+        );
+        let mut extra = vec![
+            ("million_requests", Json::num(requests as f64)),
+            ("million_events", Json::num(events as f64)),
+            ("events_per_second", Json::num(eps)),
+            ("million_wall_seconds", Json::num(wall)),
+            ("million_arena_peak", Json::num(sim.arena_peak() as f64)),
+            ("million_arrival_rate", Json::num(rate)),
+            ("million_tokens", Json::num(report.tokens as f64)),
+        ];
+        if !args.flag("skip-serial") {
+            // The serial event loop must replay the cell
+            // byte-identically — the same identity the fuzz suite
+            // asserts, on the bench cell itself.
+            let mut serial = ClusterSim::new(&p)?;
+            let t0 = Instant::now();
+            serial.run()?;
+            let serial_wall = t0.elapsed().as_secs_f64();
+            let sr = serial.report();
+            ensure!(sr.tokens == report.tokens, "million: token totals diverged");
+            ensure!(
+                sr.makespan.to_bits() == report.makespan.to_bits(),
+                "million: makespan diverged"
+            );
+            ensure!(serial.events_processed() == events, "million: event totals diverged");
+            let speedup = serial_wall / wall.max(1e-12);
+            println!(
+                "million serial: {serial_wall:.3}s wall ({speedup:.2}x parallel \
+                 speedup, byte-identical)"
+            );
+            extra.push(("million_serial_wall_seconds", Json::num(serial_wall)));
+            extra.push(("million_speedup", Json::num(speedup)));
+        }
+        extra
+    } else {
+        Vec::new()
+    };
+
     let mut fields: Vec<(&str, Json)> = vec![
         ("wall_seconds", Json::num(par.wall_seconds)),
         ("cells", Json::num(par.cells as f64)),
@@ -188,6 +287,7 @@ fn main() -> Result<()> {
         ("cluster_requeued", Json::num(cl.requeued as f64)),
         ("cluster_lost_pages", Json::num(cl.lost_pages as f64)),
     ];
+    fields.extend(million_fields);
 
     if !args.flag("skip-serial") {
         // Baseline: single worker + the per-sequence reference engine

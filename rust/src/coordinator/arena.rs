@@ -1,0 +1,171 @@
+//! Slab/arena storage for in-flight sequences (DESIGN.md §15).
+//!
+//! `SeqId` is a **dense index** into a slot vector: allocation pops a
+//! free slot (or grows the vector), so the per-token hot path indexes
+//! instead of hashing.  A slot's lifecycle mirrors the request's:
+//!
+//! * **reserved** — the id is allocated at `submit` while the
+//!   `Sequence` itself sits in the admission queue; the slot is `None`
+//!   and *not* on the free list (`Coordinator::sequence` returns `None`
+//!   for queued ids, exactly as the old `HashMap` did).
+//! * **installed** — admission moves the `Sequence` into the slot.
+//! * **taken** — preemption moves it back out to the queue; the id
+//!   stays reserved so the requeued request keeps its identity.
+//! * **freed** — retirement (or crash extraction) returns the id to
+//!   the free list for reuse by a later `submit`.
+//!
+//! Reuse means ids are only unique among *live* requests.  Callers
+//! that inspect finished sequences after the fact (the server loop's
+//! per-request log) run the coordinator in *retaining* mode, where
+//! finished slots are never freed — byte-identical to the historical
+//! always-growing map.  The cluster simulator switches retention off so
+//! a million-request cell runs in O(max outstanding) memory.
+
+use super::sequence::Sequence;
+use crate::kvcache::SeqId;
+
+#[derive(Debug, Default)]
+pub struct SeqArena {
+    slots: Vec<Option<Sequence>>,
+    free: Vec<SeqId>,
+    /// Slots currently holding a `Sequence` (installed, not reserved).
+    live: usize,
+    /// High-water mark of reserved+installed slots.
+    peak: usize,
+}
+
+impl SeqArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate an id in the **reserved** state (slot empty, off the
+    /// free list).
+    pub fn reserve(&mut self) -> SeqId {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.slots.push(None);
+                (self.slots.len() - 1) as SeqId
+            }
+        };
+        self.peak = self.peak.max(self.occupied());
+        id
+    }
+
+    /// Install a sequence into its reserved slot (admission).
+    pub fn install(&mut self, seq: Sequence) {
+        let slot = &mut self.slots[seq.id as usize];
+        debug_assert!(slot.is_none(), "slot {} double-installed", seq.id);
+        *slot = Some(seq);
+        self.live += 1;
+    }
+
+    /// Move a sequence back out of its slot (preemption); the id stays
+    /// reserved.
+    pub fn take(&mut self, id: SeqId) -> Option<Sequence> {
+        let seq = self.slots.get_mut(id as usize)?.take();
+        if seq.is_some() {
+            self.live -= 1;
+        }
+        seq
+    }
+
+    /// Return a **reserved** (empty) slot's id to the free list — a
+    /// queued request torn down before admission.
+    pub fn free_reserved(&mut self, id: SeqId) {
+        debug_assert!(self.slots[id as usize].is_none());
+        debug_assert!(!self.free.contains(&id), "double free of reserved id {id}");
+        self.free.push(id);
+    }
+
+    /// Drop an installed sequence and recycle its id (retirement in
+    /// non-retaining mode, or crash extraction).
+    pub fn free(&mut self, id: SeqId) {
+        if self.slots[id as usize].take().is_some() {
+            self.live -= 1;
+        }
+        self.free.push(id);
+    }
+
+    pub fn get(&self, id: SeqId) -> Option<&Sequence> {
+        self.slots.get(id as usize).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, id: SeqId) -> Option<&mut Sequence> {
+        self.slots.get_mut(id as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Installed sequences.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Reserved + installed slots right now.
+    pub fn occupied(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// High-water mark of `occupied()` over the arena's lifetime.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequence::Sequence;
+
+    fn seq(id: SeqId) -> Sequence {
+        Sequence::new(id, 0, 4, 2, 0.0)
+    }
+
+    #[test]
+    fn reserve_install_free_reuses_ids() {
+        let mut a = SeqArena::new();
+        let i0 = a.reserve();
+        let i1 = a.reserve();
+        assert_ne!(i0, i1);
+        assert_eq!(a.occupied(), 2);
+        assert_eq!(a.live(), 0, "reserved ids hold no sequence");
+        a.install(seq(i0));
+        assert_eq!(a.live(), 1);
+        assert!(a.get(i0).is_some());
+        assert!(a.get(i1).is_none(), "reserved-but-queued id reads as absent");
+        a.free(i0);
+        a.free_reserved(i1);
+        assert_eq!(a.occupied(), 0);
+        // Freed ids come back (LIFO) before the vector grows.
+        let r = a.reserve();
+        assert!(r == i0 || r == i1);
+        assert_eq!(a.occupied(), 1);
+    }
+
+    #[test]
+    fn take_keeps_id_reserved() {
+        let mut a = SeqArena::new();
+        let id = a.reserve();
+        a.install(seq(id));
+        let s = a.take(id).expect("installed");
+        assert_eq!(s.id, id);
+        assert_eq!(a.live(), 0);
+        assert_eq!(a.occupied(), 1, "preempted id stays reserved");
+        // Re-admission reinstalls into the same slot.
+        a.install(s);
+        assert_eq!(a.live(), 1);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut a = SeqArena::new();
+        let ids: Vec<_> = (0..5).map(|_| a.reserve()).collect();
+        assert_eq!(a.peak(), 5);
+        for &id in &ids {
+            a.free_reserved(id);
+        }
+        let _ = a.reserve();
+        assert_eq!(a.peak(), 5, "peak survives the drain");
+        assert_eq!(a.occupied(), 1);
+    }
+}

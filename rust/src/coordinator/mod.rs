@@ -16,11 +16,12 @@
 //! one registered prefix this reduces to the paper's single-prompt
 //! protocol bit-for-bit.
 
+pub mod arena;
 pub mod engine;
 pub mod running;
 pub mod sequence;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use anyhow::{anyhow, Result};
 
@@ -30,6 +31,7 @@ use crate::metrics::{Clock, Metrics};
 use crate::workload::Request;
 
 pub use crate::policy::KernelPolicy;
+pub use arena::SeqArena;
 pub use engine::{BatchGroup, DecodeBatch, Engine, IterationOutcome, PrefillRequest};
 pub use running::RunningSet;
 pub use sequence::{SeqState, Sequence};
@@ -61,7 +63,7 @@ pub struct Coordinator<E: Engine> {
     pub engine: E,
     queue: VecDeque<Sequence>,
     running: RunningSet,
-    seqs: HashMap<SeqId, Sequence>,
+    seqs: SeqArena,
     pub metrics: Metrics,
     /// Registered prefix groups, in registration order: (id, token len).
     prefixes: Vec<(PrefixId, usize)>,
@@ -76,7 +78,12 @@ pub struct Coordinator<E: Engine> {
     /// `metrics.decode_seconds` stamped at each of the last
     /// `SERVICE_RATE_WINDOW` completions (the windowed mu estimate).
     completion_marks: VecDeque<f64>,
-    next_seq: SeqId,
+    /// When true (default), finished sequences stay resident in the
+    /// arena (and `take_finished` logs them) so callers can read them
+    /// back after retirement; ids are never reused.  The cluster
+    /// simulator switches this off so million-request runs hold
+    /// O(max outstanding) sequences instead of O(total served).
+    retain_finished: bool,
     /// Canonical run clock: accumulated engine-reported seconds.
     now: f64,
 }
@@ -96,16 +103,34 @@ impl<E: Engine> Coordinator<E> {
             engine,
             queue: VecDeque::new(),
             running: RunningSet::new(),
-            seqs: HashMap::new(),
+            seqs: SeqArena::new(),
             metrics: Metrics::new(Clock::Simulated),
             prefixes: Vec::new(),
             default_prefix: None,
             draining: Vec::new(),
             recently_finished: Vec::new(),
             completion_marks: VecDeque::new(),
-            next_seq: 0,
+            retain_finished: true,
             now: 0.0,
         })
+    }
+
+    /// Toggle finished-sequence retention (see the field doc).  Off:
+    /// retired ids are recycled by later submissions, `sequence(id)`
+    /// stops resolving finished requests, and `take_finished` stays
+    /// empty — modeled times and metrics are bit-identical either way.
+    pub fn set_retain_finished(&mut self, retain: bool) {
+        self.retain_finished = retain;
+    }
+
+    /// High-water mark of sequence-arena slots (reserved + resident).
+    pub fn arena_peak(&self) -> usize {
+        self.seqs.peak()
+    }
+
+    /// Currently occupied sequence-arena slots.
+    pub fn arena_occupied(&self) -> usize {
+        self.seqs.occupied()
     }
 
     pub fn now(&self) -> f64 {
@@ -304,8 +329,7 @@ impl<E: Engine> Coordinator<E> {
             return Err(anyhow!("unknown prefix group {prefix}"));
         }
         self.kv.pin_pending(prefix)?;
-        let id = self.next_seq;
-        self.next_seq += 1;
+        let id = self.seqs.reserve();
         let prompt = req.prompt_tokens.min(self.cfg.max_seq_len.saturating_sub(1));
         let budget = req.max_new_tokens.min(self.cfg.max_seq_len - prompt);
         let seq = Sequence::new(id, prefix, prompt, budget, submitted_at.min(self.now));
@@ -339,7 +363,7 @@ impl<E: Engine> Coordinator<E> {
     }
 
     pub fn sequence(&self, id: SeqId) -> Option<&Sequence> {
-        self.seqs.get(&id)
+        self.seqs.get(id)
     }
 
     fn effective_max_batch(&self) -> usize {
@@ -370,7 +394,7 @@ impl<E: Engine> Coordinator<E> {
                 context_len: seq.context_len(),
                 shared_len,
             });
-            self.seqs.insert(seq.id, seq);
+            self.seqs.install(seq);
         }
         if !wave.is_empty() {
             let secs = self.engine.prefill_requests(&wave)?;
@@ -394,7 +418,7 @@ impl<E: Engine> Coordinator<E> {
         self.kv.remove_sequence(victim)?;
         self.engine.release(victim);
         self.running.remove(victim);
-        let mut seq = self.seqs.remove(&victim).expect("running seq exists");
+        let mut seq = self.seqs.take(victim).expect("running seq exists");
         seq.state = SeqState::Queued;
         // Back in the queue: re-pin its group so the prefix cannot be
         // freed out from under a preempted (but unfinished) request.
@@ -435,7 +459,7 @@ impl<E: Engine> Coordinator<E> {
     /// defined).  Shared by the normal and force-finish paths.
     fn record_completion(&mut self, id: SeqId) {
         self.metrics.requests_completed += 1;
-        let seq = &self.seqs[&id];
+        let seq = self.seqs.get(id).expect("finished seq exists");
         if let Some(lat) = seq.latency() {
             self.metrics.request_latency.push(lat);
         }
@@ -449,7 +473,12 @@ impl<E: Engine> Coordinator<E> {
         if self.completion_marks.len() > SERVICE_RATE_WINDOW {
             self.completion_marks.pop_front();
         }
-        self.recently_finished.push(id);
+        if self.retain_finished {
+            self.recently_finished.push(id);
+        } else {
+            // Million-request mode: recycle the slot immediately.
+            self.seqs.free(id);
+        }
     }
 
     /// Partition the running set into prefix groups, preserving
@@ -464,7 +493,10 @@ impl<E: Engine> Coordinator<E> {
         // *is* the group; no partition, no extra allocations on the
         // hot path.
         if let [(prefix, shared_len)] = self.prefixes[..] {
-            let context_lens = ids.iter().map(|id| self.seqs[id].context_len()).collect();
+            let context_lens = ids
+                .iter()
+                .map(|&id| self.seqs.get(id).expect("running seq exists").context_len())
+                .collect();
             let kernel = self.policy.select(ids.len(), shared_len);
             return DecodeBatch {
                 context_lens,
@@ -482,7 +514,7 @@ impl<E: Engine> Coordinator<E> {
         // linear scan over the tenant registry, no hashing).
         let mut members: Vec<Vec<SeqId>> = vec![Vec::new(); self.prefixes.len()];
         for id in ids {
-            let p = self.seqs[&id].prefix;
+            let p = self.seqs.get(id).expect("running seq exists").prefix;
             let gi = self
                 .prefixes
                 .iter()
@@ -508,7 +540,7 @@ impl<E: Engine> Coordinator<E> {
                 len: m.len(),
             });
             for id in m {
-                context_lens.push(self.seqs[&id].context_len());
+                context_lens.push(self.seqs.get(id).expect("running seq exists").context_len());
                 seqs.push(id);
             }
         }
@@ -528,7 +560,7 @@ impl<E: Engine> Coordinator<E> {
         for id in force_finished {
             self.kv.remove_sequence(id)?;
             self.engine.release(id);
-            let seq = self.seqs.get_mut(&id).unwrap();
+            let seq = self.seqs.get_mut(id).unwrap();
             seq.state = SeqState::Finished;
             seq.finished_at = Some(self.now);
             // Out-of-pool completions are completions too: their
@@ -561,7 +593,7 @@ impl<E: Engine> Coordinator<E> {
         // reserved above).
         let mut finished: Vec<SeqId> = Vec::new();
         for &id in &batch.seqs {
-            let seq = self.seqs.get_mut(&id).unwrap();
+            let seq = self.seqs.get_mut(id).unwrap();
             let done = seq.advance(self.now) || seq.context_len() >= self.cfg.max_seq_len;
             if done {
                 seq.state = SeqState::Finished;
@@ -598,7 +630,8 @@ impl<E: Engine> Coordinator<E> {
             self.kv.remove_sequence(id)?;
             self.engine.release(id);
             self.running.remove(id);
-            let seq = self.seqs.remove(&id).expect("running seq exists");
+            let seq = self.seqs.take(id).expect("running seq exists");
+            self.seqs.free_reserved(id);
             self.metrics.lost_tokens += seq.generated as u64;
             self.metrics.requeued_requests += 1;
             out.push(RequeuedWork {
@@ -612,6 +645,7 @@ impl<E: Engine> Coordinator<E> {
         // requeue may still carry regenerated tokens — lost too).
         for seq in std::mem::take(&mut self.queue) {
             self.kv.unpin_pending(seq.prefix)?;
+            self.seqs.free_reserved(seq.id);
             self.metrics.lost_tokens += seq.generated as u64;
             self.metrics.requeued_requests += 1;
             out.push(RequeuedWork {
@@ -654,6 +688,11 @@ mod tests {
         decode_calls: usize,
         batch_sizes: Vec<usize>,
         kernels: Vec<KernelKind>,
+        /// Off by default: cloning every iteration's group layout is
+        /// O(total iterations) memory — at 1M requests the transcript
+        /// would dominate the run.  Tests that assert on group shapes
+        /// opt in explicitly.
+        record_groups: bool,
         groups_seen: Vec<Vec<BatchGroup>>,
     }
 
@@ -663,6 +702,7 @@ mod tests {
                 decode_calls: 0,
                 batch_sizes: Vec::new(),
                 kernels: Vec::new(),
+                record_groups: false,
                 groups_seen: Vec::new(),
             }
         }
@@ -690,7 +730,9 @@ mod tests {
             if let Some(k) = batch.uniform_kernel() {
                 self.kernels.push(k);
             }
-            self.groups_seen.push(batch.groups.clone());
+            if self.record_groups {
+                self.groups_seen.push(batch.groups.clone());
+            }
             Ok(IterationOutcome { seconds: 0.01, breakdown: BreakdownTimers::default() })
         }
 
@@ -728,6 +770,80 @@ mod tests {
         assert_eq!(c.queued(), 0);
         // All pages back except the shared prefix's.
         assert_eq!(c.kv.used_blocks(), 4); // 64 tokens / 16
+    }
+
+    /// The per-iteration group transcript is opt-in: with recording
+    /// off (the default) the hot path never touches `groups_seen`, so
+    /// a long run accumulates nothing there — not even one allocation.
+    #[test]
+    fn group_transcript_off_by_default_allocates_nothing() {
+        let mut c = coordinator(4, 1);
+        c.set_shared_prefix(&(0..64u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..10 {
+            c.submit(&req(i, 8, 3)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert!(c.engine.decode_calls > 0);
+        assert!(c.engine.groups_seen.is_empty());
+        assert_eq!(
+            c.engine.groups_seen.capacity(),
+            0,
+            "hot path must not allocate for the disabled transcript"
+        );
+    }
+
+    /// Non-retaining mode (the cluster's million-request setting):
+    /// finished slots recycle, the arena stays bounded by outstanding
+    /// work, and `take_finished` keeps no log.  Retaining mode keeps
+    /// every finished sequence readable — the server loop's contract.
+    #[test]
+    fn retention_modes_bound_or_keep_finished_sequences() {
+        let mut c = coordinator(2, 1);
+        c.set_retain_finished(false);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..10 {
+            c.submit(&req(i, 4, 1)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.requests_completed, 10);
+        assert_eq!(c.arena_occupied(), 0, "all slots recycled after drain");
+        assert!(c.take_finished().is_empty(), "no finished log when not retaining");
+
+        let mut c = coordinator(2, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..10 {
+            c.submit(&req(i, 4, 1)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.arena_occupied(), 10, "retained finished sequences stay resident");
+        assert_eq!(c.arena_peak(), 10);
+        let ids = c.take_finished();
+        assert_eq!(ids.len(), 10);
+        assert!(ids.iter().all(|&id| c.sequence(id).is_some()));
+    }
+
+    /// Recycled ids keep per-request metrics intact: interleaved
+    /// submissions against recycled slots complete exactly once each.
+    #[test]
+    fn recycled_ids_complete_exactly_once() {
+        let mut c = coordinator(2, 1);
+        c.set_retain_finished(false);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        let mut submitted = 0u64;
+        for round in 0..5 {
+            for i in 0..3u64 {
+                c.submit(&req(round * 3 + i, 4, 2)).unwrap();
+                submitted += 1;
+            }
+            c.run_to_completion().unwrap();
+        }
+        assert_eq!(c.metrics.requests_completed, submitted);
+        assert_eq!(c.metrics.request_latency.len() as u64, submitted);
+        assert!(
+            c.arena_peak() <= 3,
+            "slot reuse keeps the arena at the per-round width, got {}",
+            c.arena_peak()
+        );
     }
 
     #[test]
@@ -943,6 +1059,7 @@ mod tests {
     #[test]
     fn grouped_batch_partitions_by_prefix() {
         let mut c = coordinator(8, 1);
+        c.engine.record_groups = true;
         let pa = c.register_prefix_group(&(0..64u32).collect::<Vec<_>>()).unwrap();
         let pb = c
             .register_prefix_group(&(1000..1032u32).collect::<Vec<_>>())
@@ -968,6 +1085,7 @@ mod tests {
     #[test]
     fn per_group_fallback_mixes_kernels() {
         let mut c = coordinator(8, 3); // B_theta = 3
+        c.engine.record_groups = true;
         let hot = c.register_prefix_group(&(0..64u32).collect::<Vec<_>>()).unwrap();
         let cold = c
             .register_prefix_group(&(1000..1064u32).collect::<Vec<_>>())
@@ -991,6 +1109,7 @@ mod tests {
     #[test]
     fn single_prefix_reduces_to_legacy_batch() {
         let mut c = coordinator(4, 1);
+        c.engine.record_groups = true;
         let p = c.set_shared_prefix(&(0..64u32).collect::<Vec<_>>()).unwrap();
         for i in 0..4 {
             c.submit(&req(i, 4, 3)).unwrap();

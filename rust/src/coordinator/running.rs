@@ -9,17 +9,24 @@
 //! with a position index for O(1) membership and O(1) position lookup;
 //! removal compacts the tail (O(tail), amortized far below the old
 //! full-vector scans and allocation-heavy `clone`+`retain` pairs).
-
-use std::collections::HashMap;
+//!
+//! Since PR 7 `SeqId`s are dense arena indices (`coordinator::arena`),
+//! so the position index is a plain sparse vector — no hashing on the
+//! per-token membership checks, and its footprint is bounded by the
+//! highest outstanding id, not total ids ever issued.
 
 use crate::kvcache::SeqId;
+
+/// Sentinel for "not running" in the sparse position index.
+const ABSENT: usize = usize::MAX;
 
 #[derive(Debug, Default)]
 pub struct RunningSet {
     /// Admission order (the decode-batch order).
     order: Vec<SeqId>,
-    /// SeqId -> index into `order`.
-    pos: HashMap<SeqId, usize>,
+    /// SeqId -> index into `order` (`ABSENT` when not running),
+    /// indexed directly by the dense id.
+    pos: Vec<usize>,
 }
 
 impl RunningSet {
@@ -36,7 +43,7 @@ impl RunningSet {
     }
 
     pub fn contains(&self, id: SeqId) -> bool {
-        self.pos.contains_key(&id)
+        self.pos.get(id as usize).is_some_and(|&p| p != ABSENT)
     }
 
     /// The batch in admission order.
@@ -51,8 +58,13 @@ impl RunningSet {
     /// Append at the end of the admission order.  Panics on duplicates
     /// (a sequence is running at most once — scheduler invariant).
     pub fn push(&mut self, id: SeqId) {
-        let prev = self.pos.insert(id, self.order.len());
-        assert!(prev.is_none(), "sequence {id} already running");
+        let n = self.order.len();
+        let i = id as usize;
+        if i >= self.pos.len() {
+            self.pos.resize(i + 1, ABSENT);
+        }
+        assert!(self.pos[i] == ABSENT, "sequence {id} already running");
+        self.pos[i] = n;
         self.order.push(id);
     }
 
@@ -65,10 +77,15 @@ impl RunningSet {
     /// Remove `id`, preserving the order of the remaining sequences.
     /// Returns false if it was not present.
     pub fn remove(&mut self, id: SeqId) -> bool {
-        let Some(idx) = self.pos.remove(&id) else { return false };
+        let Some(p) = self.pos.get_mut(id as usize) else { return false };
+        let idx = *p;
+        if idx == ABSENT {
+            return false;
+        }
+        *p = ABSENT;
         self.order.remove(idx);
         for (i, &s) in self.order.iter().enumerate().skip(idx) {
-            self.pos.insert(s, i);
+            self.pos[s as usize] = i;
         }
         true
     }
@@ -81,12 +98,14 @@ impl RunningSet {
         if ids.is_empty() {
             return;
         }
-        for id in ids {
-            self.pos.remove(id);
+        for &id in ids {
+            if let Some(p) = self.pos.get_mut(id as usize) {
+                *p = ABSENT;
+            }
         }
-        self.order.retain(|s| self.pos.contains_key(s));
+        self.order.retain(|&s| self.pos[s as usize] != ABSENT);
         for (i, &s) in self.order.iter().enumerate() {
-            self.pos.insert(s, i);
+            self.pos[s as usize] = i;
         }
     }
 

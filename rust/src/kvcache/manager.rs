@@ -81,7 +81,13 @@ pub struct KvCacheManager {
     alloc: BlockAllocator,
     radix: RadixTree,
     prefixes: HashMap<PrefixId, SharedPrefix>,
-    seqs: HashMap<SeqId, SequenceCache>,
+    /// Per-sequence suffix caches, indexed directly by the dense
+    /// `SeqId` (the coordinator's arena recycles ids, so this slab is
+    /// bounded by the highest outstanding id — and `append_token`, the
+    /// per-token hot path, indexes instead of hashing).
+    seqs: Vec<Option<SequenceCache>>,
+    /// Number of occupied `seqs` slots.
+    active: usize,
     next_prefix: PrefixId,
     /// Bytes of uncompressed expansion currently held (the "3%").
     /// Tracked outside the block pool: expansion is ≈71x denser than
@@ -97,7 +103,8 @@ impl KvCacheManager {
             alloc: BlockAllocator::new(total_blocks, block_size),
             radix: RadixTree::new(),
             prefixes: HashMap::new(),
-            seqs: HashMap::new(),
+            seqs: Vec::new(),
+            active: 0,
             next_prefix: 0,
             expanded_bytes: 0,
             bytes_per_elem: 2,
@@ -117,7 +124,7 @@ impl KvCacheManager {
     }
 
     pub fn active_sequences(&self) -> usize {
-        self.seqs.len()
+        self.active
     }
 
     // ---- shared prefixes --------------------------------------------------
@@ -328,7 +335,11 @@ impl KvCacheManager {
         prefix: PrefixId,
         prompt_tokens: usize,
     ) -> Result<()> {
-        if self.seqs.contains_key(&seq) {
+        let i = seq as usize;
+        if i >= self.seqs.len() {
+            self.seqs.resize_with(i + 1, || None);
+        }
+        if self.seqs[i].is_some() {
             bail!("sequence {seq} already exists");
         }
         let p = self
@@ -343,7 +354,8 @@ impl KvCacheManager {
             return Err(e);
         }
         table.len = prompt_tokens;
-        self.seqs.insert(seq, SequenceCache { prefix, table });
+        self.seqs[i] = Some(SequenceCache { prefix, table });
+        self.active += 1;
         Ok(())
     }
 
@@ -351,21 +363,24 @@ impl KvCacheManager {
     pub fn append_token(&mut self, seq: SeqId) -> Result<()> {
         let s = self
             .seqs
-            .get_mut(&seq)
+            .get_mut(seq as usize)
+            .and_then(|s| s.as_mut())
             .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
         s.table.append_token(&mut self.alloc)
     }
 
     pub fn sequence_len(&self, seq: SeqId) -> Option<usize> {
-        self.seqs.get(&seq).map(|s| s.table.len)
+        self.seqs.get(seq as usize).and_then(|s| s.as_ref()).map(|s| s.table.len)
     }
 
     /// Remove a finished/cancelled sequence, releasing its pages.
     pub fn remove_sequence(&mut self, seq: SeqId) -> Result<()> {
         let mut s = self
             .seqs
-            .remove(&seq)
+            .get_mut(seq as usize)
+            .and_then(|s| s.take())
             .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        self.active -= 1;
         s.table.release_all(&mut self.alloc);
         if let Some(p) = self.prefixes.get_mut(&s.prefix) {
             p.users -= 1;

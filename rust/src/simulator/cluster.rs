@@ -50,8 +50,28 @@
 //! round-robin routing and `ParallelismConfig::single()`, the whole
 //! machinery reduces bit-for-bit to the single-device tenancy path
 //! (pinned by `tests/cluster.rs`).
+//!
+//! **Event core (DESIGN.md §15).**  The loop's two priority questions
+//! — "which busy replica has the earliest clock?" and "which active
+//! replica is least loaded?" — are answered by indexes instead of
+//! O(#replicas) scans: [`EventHeap`], a lazy-invalidation binary
+//! min-heap of `(clock, replica)` keys guarded by per-replica
+//! generation stamps (re-keying = bump the stamp, push a fresh entry;
+//! stale generations pop off the root lazily), and a load-ordered
+//! BTree index over the Active replicas, both re-synced at every
+//! mutation site (arrival delivery, decode step, stall, crash,
+//! migration, resize) so lifecycle transitions — Draining, Retired,
+//! Failed — fall out of the indexes naturally.  The original linear
+//! scans are retained behind [`ClusterSim::use_linear_reference`] as
+//! the bit-identity oracle (fuzzed in `tests/cluster.rs`), and
+//! [`ClusterSim::run_parallel`] decode-steps independent replicas
+//! concurrently between consecutive router decisions with a
+//! deterministic ordered merge — byte-identical to [`ClusterSim::run`]
+//! because replicas only interact at arrival boundaries.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -341,6 +361,172 @@ impl Router {
     }
 }
 
+/// Lazy-invalidation binary min-heap over busy-replica clocks — the
+/// event core's priority queue (DESIGN.md §15).
+///
+/// Keys are `(clock, replica)` tuples ordered ascending, so ties on
+/// the clock resolve to the lowest replica index — exactly the order
+/// the retained linear scan produces.  There is no in-place
+/// decrease-key: every re-key bumps the replica's generation stamp and
+/// (while the replica stays busy) pushes a fresh entry; entries whose
+/// stamp no longer matches are stale and are popped lazily at the
+/// root.  A replica leaves the heap by going idle, draining, failing
+/// or retiring — all the same way: its next sync pushes nothing, and
+/// the stamp bump orphans whatever entries it still had in flight.
+struct EventHeap {
+    /// `(clock, replica, stamp)` entries in binary-heap order.
+    entries: Vec<(f64, usize, u64)>,
+    /// Current generation stamp per replica; older stamps are stale.
+    stamp: Vec<u64>,
+}
+
+impl EventHeap {
+    fn new(replicas: usize) -> Self {
+        EventHeap { entries: Vec::new(), stamp: vec![0; replicas] }
+    }
+
+    /// Register a new replica (scale-up).
+    fn grow(&mut self) {
+        self.stamp.push(0);
+    }
+
+    /// Re-key replica `i` — decrease-key, increase-key and delete in
+    /// one operation.  The stamp bump invalidates every older entry;
+    /// a fresh entry is pushed only while the replica is busy.
+    fn update(&mut self, i: usize, clock: f64, busy: bool) {
+        self.stamp[i] = self.stamp[i].wrapping_add(1);
+        if busy {
+            self.entries.push((clock, i, self.stamp[i]));
+            self.sift_up(self.entries.len() - 1);
+        }
+        // Amortized-O(1) hygiene: at most one entry per replica is
+        // live, so once stale entries dominate, drop them all and
+        // re-heapify rather than waiting for them to surface.
+        if self.entries.len() > 2 * self.stamp.len() + 64 {
+            self.compact();
+        }
+    }
+
+    /// The earliest-clock busy replica (lowest index on ties), or
+    /// `None` when no replica is busy.  Pops stale generations off the
+    /// root on the way.
+    fn earliest(&mut self) -> Option<(usize, f64)> {
+        while let Some(&(t, i, s)) = self.entries.first() {
+            if self.stamp[i] == s {
+                return Some((i, t));
+            }
+            self.pop_root();
+        }
+        None
+    }
+
+    fn less(a: &(f64, usize, u64), b: &(f64, usize, u64)) -> bool {
+        a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::less(&self.entries[i], &self.entries[parent]) {
+                self.entries.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.entries.len();
+        loop {
+            let left = 2 * i + 1;
+            if left >= n {
+                break;
+            }
+            let right = left + 1;
+            let child = if right < n && Self::less(&self.entries[right], &self.entries[left]) {
+                right
+            } else {
+                left
+            };
+            if Self::less(&self.entries[child], &self.entries[i]) {
+                self.entries.swap(i, child);
+                i = child;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn pop_root(&mut self) {
+        let last = self.entries.len() - 1;
+        self.entries.swap(0, last);
+        self.entries.pop();
+        if !self.entries.is_empty() {
+            self.sift_down(0);
+        }
+    }
+
+    /// Drop every stale generation and re-heapify.
+    fn compact(&mut self) {
+        let stamp = &self.stamp;
+        self.entries.retain(|&(_, i, s)| stamp[i] == s);
+        for i in (0..self.entries.len() / 2).rev() {
+            self.sift_down(i);
+        }
+    }
+}
+
+/// Load-ordered index over the **Active** replicas: a `BTreeSet` of
+/// `(load, replica)` tuples, so the least-loaded active replica (lowest
+/// index on ties — the linear scan's order) is the first entry.
+/// Draining / Failed / Retired replicas are simply absent.
+struct LoadIndex {
+    by_load: BTreeSet<(usize, usize)>,
+    /// Recorded load per replica; `None` = not indexed (non-Active).
+    load: Vec<Option<usize>>,
+}
+
+impl LoadIndex {
+    /// All `replicas` start Active at load 0.
+    fn new(replicas: usize) -> Self {
+        LoadIndex {
+            by_load: (0..replicas).map(|i| (0, i)).collect(),
+            load: vec![Some(0); replicas],
+        }
+    }
+
+    /// Register a new replica slot (scale-up) as un-indexed; the
+    /// caller's next sync inserts it with its real load.
+    fn grow(&mut self) {
+        self.load.push(None);
+    }
+
+    /// (Re-)index replica `i` at load `l`.
+    fn set(&mut self, i: usize, l: usize) {
+        if let Some(old) = self.load[i] {
+            if old == l {
+                return;
+            }
+            self.by_load.remove(&(old, i));
+        }
+        self.load[i] = Some(l);
+        self.by_load.insert((l, i));
+    }
+
+    /// Drop replica `i` from the index (lifecycle exit).
+    fn remove(&mut self, i: usize) {
+        if let Some(old) = self.load[i].take() {
+            self.by_load.remove(&(old, i));
+        }
+    }
+
+    /// Least-loaded indexed replica, optionally excluding one index.
+    fn least_loaded_except(&self, exclude: Option<usize>) -> Option<usize> {
+        self.by_load.iter().map(|&(_, i)| i).find(|&i| Some(i) != exclude)
+    }
+}
+
 /// Audit record of one prefix migration.
 #[derive(Clone, Debug)]
 pub struct MigrationEvent {
@@ -491,6 +677,17 @@ pub struct ClusterSim {
     /// Per-crash recovery spans, seconds (crash instant to the last
     /// re-queued sequence re-submitted on a survivor).
     recovery_times: Vec<f64>,
+    /// Indexed event core (DESIGN.md §15): min-heap of busy-replica
+    /// clocks, re-synced at every replica mutation site.
+    clock_heap: EventHeap,
+    /// Load-ordered index of Active replicas (least-loaded routing).
+    load_index: LoadIndex,
+    /// Test-only oracle switch: answer event/routing queries with the
+    /// retained O(N) linear scans instead of the indexes.
+    linear_oracle: bool,
+    /// Events processed (arrivals delivered + decode steps) — the
+    /// numerator of the bench's `events_per_second`.
+    events: u64,
 }
 
 impl ClusterSim {
@@ -558,7 +755,7 @@ impl ClusterSim {
         // budgets for all prefixes).
         let mut replicas = Vec::with_capacity(params.replicas);
         for _ in 0..params.replicas {
-            let coord = tenant_serving_stack(
+            let mut coord = tenant_serving_stack(
                 &params.model,
                 &params.hw,
                 params.kernel,
@@ -567,6 +764,10 @@ impl ClusterSim {
                 params.include_prefill,
                 params.parallelism,
             )?;
+            // Recycle arena slots at completion: a million-request cell
+            // runs in O(max outstanding) sequence memory.  Modeled
+            // times are bit-identical either way.
+            coord.set_retain_finished(false);
             replicas.push(Replica::fresh(coord));
         }
         let mut policy = PolicyEngine::new(
@@ -593,7 +794,77 @@ impl ClusterSim {
             faults,
             crashes: 0,
             recovery_times: Vec::new(),
+            clock_heap: EventHeap::new(params.replicas),
+            load_index: LoadIndex::new(params.replicas),
+            linear_oracle: false,
+            events: 0,
         })
+    }
+
+    /// Route event-core queries through the retained linear scans (the
+    /// pre-index reference implementation) instead of the heap and the
+    /// load index.  Test-only: the bit-identity oracle the fuzz suite
+    /// compares the indexed loop against.
+    pub fn use_linear_reference(&mut self, on: bool) {
+        self.linear_oracle = on;
+    }
+
+    /// Events processed so far: arrivals delivered plus decode steps.
+    pub fn events_processed(&self) -> u64 {
+        self.events
+    }
+
+    /// Largest per-replica sequence-arena high-water mark — the peak
+    /// number of concurrently reserved sequence slots on any replica.
+    pub fn arena_peak(&self) -> usize {
+        self.replicas.iter().map(|r| r.coord.arena_peak()).max().unwrap_or(0)
+    }
+
+    /// Re-sync replica `i` into the event core after any mutation that
+    /// may have moved its clock, changed its load, or flipped its
+    /// lifecycle state.  Reads current truth, so redundant syncs are
+    /// harmless; a *missing* sync is caught by the debug asserts in
+    /// `earliest_busy` / `least_loaded_except` and the identity fuzz.
+    fn sync_replica(&mut self, i: usize) {
+        let r = &self.replicas[i];
+        let busy = r.coord.running() > 0 || r.coord.queued() > 0;
+        self.clock_heap.update(i, r.coord.now(), busy);
+        if r.state == ReplicaLifecycle::Active {
+            self.load_index.set(i, r.coord.load());
+        } else {
+            self.load_index.remove(i);
+        }
+    }
+
+    /// Re-sync the whole fleet (multi-replica mutations: crash
+    /// recovery, the parallel stepping merge).  Performed in
+    /// replica-index order so the merge is deterministic.
+    fn sync_all(&mut self) {
+        for i in 0..self.replicas.len() {
+            self.sync_replica(i);
+        }
+    }
+
+    /// Least-loaded active replica via the load index (linear scan
+    /// under the oracle flag; debug builds cross-check the two).
+    fn least_loaded(&self) -> usize {
+        self.least_loaded_except(None)
+    }
+
+    fn least_loaded_except(&self, exclude: Option<usize>) -> usize {
+        if self.linear_oracle {
+            return Router::least_loaded_except(&self.replicas, exclude);
+        }
+        let best = self
+            .load_index
+            .least_loaded_except(exclude)
+            .expect("at least one active candidate replica");
+        debug_assert_eq!(
+            best,
+            Router::least_loaded_except(&self.replicas, exclude),
+            "load index diverged from the linear scan"
+        );
+        best
     }
 
     /// The generated arrival stream (inspection/conservation checks).
@@ -713,8 +984,23 @@ impl ClusterSim {
 
     /// The earliest busy replica (has queued or running work), by
     /// clock, lowest index on ties.  Draining replicas stay in the loop
-    /// until their in-flight work finishes.
-    fn earliest_busy(&self) -> Option<(usize, f64)> {
+    /// until their in-flight work finishes.  Answered by the clock heap
+    /// (linear scan under the oracle flag; debug builds cross-check).
+    fn earliest_busy(&mut self) -> Option<(usize, f64)> {
+        if self.linear_oracle {
+            return self.earliest_busy_linear();
+        }
+        let best = self.clock_heap.earliest();
+        debug_assert_eq!(
+            best,
+            self.earliest_busy_linear(),
+            "clock heap diverged from the linear scan"
+        );
+        best
+    }
+
+    /// The retained O(#replicas) reference scan (bit-identity oracle).
+    fn earliest_busy_linear(&self) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         for (i, r) in self.replicas.iter().enumerate() {
             if r.coord.running() > 0 || r.coord.queued() > 0 {
@@ -759,55 +1045,68 @@ impl ClusterSim {
                 Some((_, t)) => self.arrivals[self.next_arrival].at <= t,
             };
             if due {
-                let idx = self.next_arrival;
-                let a = self.arrivals[idx].clone();
-                self.next_arrival += 1;
-                if !self.faults.is_empty() {
-                    self.deliver_faults(idx, a.at)?;
-                }
-                if self.policy.scaling.enabled {
-                    self.finalize_drained();
-                    self.maybe_scale(&a, idx)?;
-                }
-                let r = self.route_arrival(&a)?;
-                let rep = &mut self.replicas[r];
-                rep.coord.advance_clock(a.at);
-                let pid = match rep.prefix_of.get(&a.tenant) {
-                    Some(&p) => p,
-                    None => {
-                        // First request of this group here: the replica
-                        // prefills + pages the tenant's prefix (this is
-                        // the state prefix-affinity preserves).
-                        let tokens = self.tenants[a.tenant].prompt_token_ids(50_000);
-                        let p = rep.coord.register_prefix_group(&tokens)?;
-                        rep.prefix_of.insert(a.tenant, p);
-                        p
-                    }
-                };
-                // Anchor the submission at the *arrival* time: a busy
-                // replica's clock may already be past `a.at` (arrivals
-                // are only deliverable between decode iterations), and
-                // that wait is real queueing delay TTFT must include.
-                rep.coord.submit_to_at(&a.request, pid, a.at)?;
-                rep.routed += 1;
-                // This arrival's generation budget amortizes its
-                // group's outstanding re-home cool-down (served-token
-                // budget; pools are sized so budgets are served in
-                // full).
-                if let Some(c) = self.router.cooldown_tokens.get_mut(&a.tenant) {
-                    *c = c.saturating_sub(a.request.max_new_tokens as u64);
-                }
+                self.deliver_next_arrival()?;
                 return Ok(true);
             }
         }
         if let Some((i, _)) = busy {
             self.replicas[i].coord.step()?;
+            self.events += 1;
+            self.sync_replica(i);
             return Ok(true);
         }
         if self.policy.scaling.enabled {
             self.finalize_drained();
         }
         Ok(false)
+    }
+
+    /// Deliver arrival `self.next_arrival` (the caller has established
+    /// it is due): fault delivery, autoscale check, router probe,
+    /// submit — the fully serialized part of the event loop, shared by
+    /// `step_event` and `run_parallel`.
+    fn deliver_next_arrival(&mut self) -> Result<()> {
+        let idx = self.next_arrival;
+        let a = self.arrivals[idx].clone();
+        self.next_arrival += 1;
+        if !self.faults.is_empty() {
+            self.deliver_faults(idx, a.at)?;
+        }
+        if self.policy.scaling.enabled {
+            self.finalize_drained();
+            self.maybe_scale(&a, idx)?;
+        }
+        let r = self.route_arrival(&a)?;
+        let rep = &mut self.replicas[r];
+        rep.coord.advance_clock(a.at);
+        let pid = match rep.prefix_of.get(&a.tenant) {
+            Some(&p) => p,
+            None => {
+                // First request of this group here: the replica
+                // prefills + pages the tenant's prefix (this is
+                // the state prefix-affinity preserves).
+                let tokens = self.tenants[a.tenant].prompt_token_ids(50_000);
+                let p = rep.coord.register_prefix_group(&tokens)?;
+                rep.prefix_of.insert(a.tenant, p);
+                p
+            }
+        };
+        // Anchor the submission at the *arrival* time: a busy
+        // replica's clock may already be past `a.at` (arrivals
+        // are only deliverable between decode iterations), and
+        // that wait is real queueing delay TTFT must include.
+        rep.coord.submit_to_at(&a.request, pid, a.at)?;
+        rep.routed += 1;
+        // This arrival's generation budget amortizes its
+        // group's outstanding re-home cool-down (served-token
+        // budget; pools are sized so budgets are served in
+        // full).
+        if let Some(c) = self.router.cooldown_tokens.get_mut(&a.tenant) {
+            *c = c.saturating_sub(a.request.max_new_tokens as u64);
+        }
+        self.events += 1;
+        self.sync_replica(r);
+        Ok(())
     }
 
     /// Pick the replica for one arrival, probing replica queue depth,
@@ -828,7 +1127,7 @@ impl ClusterSim {
                 self.router.rr_next += 1;
                 Ok(r)
             }
-            RouterPolicy::LeastLoaded => Ok(Router::least_loaded(&self.replicas)),
+            RouterPolicy::LeastLoaded => Ok(self.least_loaded()),
             RouterPolicy::PrefixAffinity => self.route_affinity(a),
         }
     }
@@ -856,7 +1155,7 @@ impl ClusterSim {
             // nothing to re-home): adopt the least-loaded active
             // replica as the group's home (it will hold the pages).
             _ => {
-                let r = Router::least_loaded(&self.replicas);
+                let r = self.least_loaded();
                 self.router.home.insert(tenant, r);
                 return Ok(r);
             }
@@ -866,7 +1165,7 @@ impl ClusterSim {
         let pressured =
             h.queued() >= depth || !h.can_admit_now(a.request.prompt_tokens);
         if pressured && self.active_replica_count() > 1 {
-            let alt = Router::least_loaded_except(&self.replicas, Some(home));
+            let alt = self.least_loaded_except(Some(home));
             if self.replicas[alt].coord.load() < self.replicas[home].coord.load() {
                 let len = self.tenants[tenant].prompt_tokens;
                 let expanded = self.replicas[home]
@@ -996,7 +1295,7 @@ impl ClusterSim {
     /// per-group ping-pong cool-down: a capacity change is not thrash,
     /// and the event itself is rate-limited.
     fn scale_up(&mut self, at: f64, idx: usize) -> Result<()> {
-        let coord = tenant_serving_stack(
+        let mut coord = tenant_serving_stack(
             &self.params.model,
             &self.params.hw,
             self.params.kernel,
@@ -1005,10 +1304,14 @@ impl ClusterSim {
             self.params.include_prefill,
             self.params.parallelism,
         )?;
+        coord.set_retain_finished(false);
         let mut rep = Replica::fresh(coord);
         rep.coord.advance_clock(at);
         let new_idx = self.replicas.len();
         self.replicas.push(rep);
+        self.clock_heap.grow();
+        self.load_index.grow();
+        self.sync_replica(new_idx);
 
         let mut moves: Vec<(usize, usize)> = Vec::new(); // (src, tenant)
         for src in 0..new_idx {
@@ -1085,12 +1388,13 @@ impl ClusterSim {
             return Ok(());
         };
         self.replicas[victim].state = ReplicaLifecycle::Draining;
+        self.sync_replica(victim);
         let mut hosted: Vec<usize> = self.replicas[victim].prefix_of.keys().copied().collect();
         hosted.sort_unstable();
         let mut moved = 0usize;
         for tenant in hosted {
             if self.router.home.get(&tenant) == Some(&victim) {
-                let dst = Router::least_loaded(&self.replicas);
+                let dst = self.least_loaded();
                 let len = self.tenants[tenant].prompt_tokens;
                 let expanded = self.replicas[victim]
                     .prefix_of
@@ -1190,15 +1494,20 @@ impl ClusterSim {
             } else {
                 self.fault_adjusted_transfer(src, dst, arrival_index, secs)
             };
-            let rep = &mut self.replicas[dst];
-            rep.coord.advance_clock(at);
-            rep.coord.charge_transfer(secs);
+            {
+                let rep = &mut self.replicas[dst];
+                rep.coord.advance_clock(at);
+                rep.coord.charge_transfer(secs);
+            }
             if !delivered {
                 // Every attempt was lost (or the pair is partitioned)
                 // and the retry budget ran out: the time was spent, but
-                // the pages never landed — the group stays home.
+                // the pages never landed — the group stays home.  The
+                // destination clock still moved: re-key it.
+                self.sync_replica(dst);
                 return Ok(false);
             }
+            let rep = &mut self.replicas[dst];
             let pid = rep.coord.import_prefix_group(&export)?;
             rep.prefix_of.insert(tenant, pid);
             rep.imported.insert(tenant);
@@ -1233,6 +1542,9 @@ impl ClusterSim {
             dst_prefills_before: before,
             dst_prefills_after: after,
         });
+        // The adoption moved the destination clock (transfer charge):
+        // re-key it in the event core.
+        self.sync_replica(dst);
         Ok(true)
     }
 
@@ -1283,6 +1595,7 @@ impl ClusterSim {
                         let t = rep.coord.now().max(now) + seconds;
                         rep.coord.advance_clock(t);
                         rep.coord.metrics.stalls += 1;
+                        self.sync_replica(replica);
                     }
                 }
                 FaultKind::Crash { replica } => self.fail_replica(replica, now)?,
@@ -1404,12 +1717,119 @@ impl ClusterSim {
             recovered_at = recovered_at.max(rep.coord.now());
         }
         self.recovery_times.push(recovered_at - crash_time);
+        // Crash recovery touched many replicas at once (the Failed
+        // victim left, the survivors gained clock and work): re-key the
+        // whole fleet.
+        self.sync_all();
         Ok(())
     }
 
     /// Drive arrivals and replicas until everything drains.
     pub fn run(&mut self) -> Result<()> {
         while self.step_event()? {}
+        Ok(())
+    }
+
+    /// Drive the same simulation, decode-stepping independent replicas
+    /// **concurrently** between consecutive router decisions
+    /// (DESIGN.md §15) — byte-identical to [`ClusterSim::run`].
+    ///
+    /// Why identity holds: the serial loop only ever steps the
+    /// clock-minimum busy replica, and only while that minimum precedes
+    /// the next arrival's timestamp — so between two consecutive
+    /// deliveries, each busy replica independently steps until its own
+    /// clock reaches the arrival instant (or it drains), an isolated
+    /// per-replica computation.  Replicas interact *only* inside
+    /// `deliver_next_arrival` (routing, faults, autoscaling and
+    /// migration are all serialized there, keyed to arrival indices).
+    /// The parallel interval computes exactly those per-replica step
+    /// sequences on `std::thread::scope` workers and merges the results
+    /// into the event core in replica-index order.
+    pub fn run_parallel(&mut self) -> Result<()> {
+        loop {
+            // Serialized phase: deliver every arrival that is due (at
+            // or before the earliest busy clock), in exactly the order
+            // `step_event` delivers them.
+            while self.next_arrival < self.arrivals.len() {
+                let due = match self.earliest_busy() {
+                    None => true,
+                    Some((_, t)) => self.arrivals[self.next_arrival].at <= t,
+                };
+                if !due {
+                    break;
+                }
+                self.deliver_next_arrival()?;
+            }
+            if self.next_arrival >= self.arrivals.len() {
+                // Stream exhausted: drain every replica, then settle
+                // lifecycle exactly as the serial loop's final
+                // `step_event` does.
+                self.step_replicas_until(None)?;
+                if self.policy.scaling.enabled {
+                    self.finalize_drained();
+                }
+                return Ok(());
+            }
+            // Parallel phase: every busy replica steps privately up to
+            // the next arrival instant.
+            let horizon = self.arrivals[self.next_arrival].at;
+            self.step_replicas_until(Some(horizon))?;
+        }
+    }
+
+    /// Decode-step every busy replica whose clock precedes `horizon`
+    /// until it reaches the horizon or drains (`None` = drain
+    /// everything).  Each worker owns one replica at a time — the
+    /// computation touches only that replica's stack — and the event
+    /// core is re-synced in replica-index order afterwards, so the
+    /// merge is deterministic regardless of worker scheduling.
+    fn step_replicas_until(&mut self, horizon: Option<f64>) -> Result<()> {
+        let stepped = AtomicU64::new(0);
+        let cursor = AtomicUsize::new(0);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        {
+            let slots: Vec<Mutex<&mut Replica>> =
+                self.replicas.iter_mut().map(Mutex::new).collect();
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(slots.len())
+                .max(1);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| {
+                        let mut local = 0u64;
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= slots.len() {
+                                break;
+                            }
+                            let mut rep = slots[i].lock().unwrap();
+                            loop {
+                                let busy = rep.coord.running() > 0 || rep.coord.queued() > 0;
+                                if !busy || horizon.is_some_and(|h| rep.coord.now() >= h) {
+                                    break;
+                                }
+                                if let Err(e) = rep.coord.step() {
+                                    let mut slot = first_err.lock().unwrap();
+                                    if slot.is_none() {
+                                        *slot = Some(e);
+                                    }
+                                    break;
+                                }
+                                local += 1;
+                            }
+                        }
+                        stepped.fetch_add(local, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        self.events += stepped.into_inner();
+        self.sync_all();
         Ok(())
     }
 
@@ -1914,5 +2334,124 @@ mod tests {
             }
         }
         assert!(sim.retired_copies_released());
+    }
+
+    /// EventHeap invariants: re-key (decrease- and increase-key),
+    /// lifecycle exits, tie ordering, and scale-up growth — the
+    /// operations every replica mutation site performs via
+    /// `sync_replica`.
+    #[test]
+    fn event_heap_rekeys_and_survives_lifecycle_exits() {
+        let mut h = EventHeap::new(3);
+        assert_eq!(h.earliest(), None, "empty heap has no busy replica");
+        h.update(0, 5.0, true);
+        h.update(1, 3.0, true);
+        h.update(2, 9.0, true);
+        assert_eq!(h.earliest(), Some((1, 3.0)));
+        // Decrease-key: replica 2 jumps to the front.
+        h.update(2, 1.0, true);
+        assert_eq!(h.earliest(), Some((2, 1.0)));
+        // Increase-key: it falls behind again.
+        h.update(2, 7.0, true);
+        assert_eq!(h.earliest(), Some((1, 3.0)));
+        // Ties resolve to the lowest replica index — the linear scan's
+        // order.
+        h.update(0, 3.0, true);
+        assert_eq!(h.earliest(), Some((0, 3.0)));
+        // Lifecycle exits (going idle, Draining with no work, Failed,
+        // Retired all sync as not-busy): the replica leaves the heap
+        // without touching the others.
+        h.update(0, 3.0, false);
+        h.update(1, 3.0, false);
+        assert_eq!(h.earliest(), Some((2, 7.0)));
+        h.update(2, 7.0, false);
+        assert_eq!(h.earliest(), None);
+        // Scale-up: a fresh slot keys in like any other.
+        h.grow();
+        h.update(3, 2.0, true);
+        assert_eq!(h.earliest(), Some((3, 2.0)));
+    }
+
+    /// Lazy invalidation stays bounded: a long run of re-keys on a
+    /// two-replica heap compacts instead of accumulating one stale
+    /// entry per decode step.
+    #[test]
+    fn event_heap_compacts_stale_generations() {
+        let mut h = EventHeap::new(2);
+        for k in 0..10_000u64 {
+            h.update(0, k as f64, true);
+            h.update(1, (k + 1) as f64, true);
+        }
+        assert!(
+            h.entries.len() <= 2 * h.stamp.len() + 64 + 1,
+            "stale generations must be compacted away, got {} entries",
+            h.entries.len()
+        );
+        assert_eq!(h.earliest(), Some((0, 9_999.0)));
+    }
+
+    /// LoadIndex orders Active replicas by (load, index) and forgets
+    /// replicas on lifecycle exit, matching the linear scan's tie
+    /// order.
+    #[test]
+    fn load_index_orders_active_replicas() {
+        let mut x = LoadIndex::new(3);
+        assert_eq!(x.least_loaded_except(None), Some(0), "all-zero ties pick lowest");
+        x.set(0, 4);
+        x.set(1, 2);
+        x.set(2, 2);
+        assert_eq!(x.least_loaded_except(None), Some(1));
+        assert_eq!(x.least_loaded_except(Some(1)), Some(2));
+        x.remove(1); // lifecycle exit
+        assert_eq!(x.least_loaded_except(None), Some(2));
+        x.grow(); // scale-up: un-indexed until the first sync
+        assert_eq!(x.least_loaded_except(None), Some(2));
+        x.set(3, 0);
+        assert_eq!(x.least_loaded_except(None), Some(3));
+        x.remove(2);
+        x.remove(3);
+        assert_eq!(x.least_loaded_except(None), Some(0));
+        x.remove(0);
+        assert_eq!(x.least_loaded_except(None), None, "no active replica left");
+    }
+
+    /// `run_parallel` is byte-identical to the serial event loop on a
+    /// bursty autoscaling + migration cell — the richest fixed-seed
+    /// configuration (resizes, re-homes and timed arrivals all in
+    /// play).  The fuzz suite widens this across random draws.
+    #[test]
+    fn parallel_stepping_bit_identical_to_serial() {
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            2,
+            RouterPolicy::PrefixAffinity,
+            16,
+            3,
+            1.0,
+        );
+        p.total_requests = 192;
+        p.arrival_rate = Some(60.0);
+        p.arrival_burst = Some(6.0);
+        p.migrate = true;
+        p.scaling.enabled = true;
+        p.scaling.cooldown_arrivals = 24;
+        let mut serial = ClusterSim::new(&p).unwrap();
+        serial.run().unwrap();
+        let mut par = ClusterSim::new(&p).unwrap();
+        par.run_parallel().unwrap();
+        let (a, b) = (serial.report(), par.report());
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.requests_completed, b.requests_completed);
+        assert_eq!(a.decode_seconds.to_bits(), b.decode_seconds.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits());
+        assert_eq!(a.spills, b.spills);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.scale_ups, b.scale_ups);
+        assert_eq!(a.scale_downs, b.scale_downs);
+        assert_eq!(serial.events_processed(), par.events_processed());
+        assert_eq!(serial.arena_peak(), par.arena_peak());
     }
 }

@@ -984,3 +984,201 @@ fn empty_fault_plan_is_bit_identical() {
     assert_eq!(faulty.lost_tokens, 0);
     assert_eq!(faulty.recovery_p99_s.to_bits(), 0.0f64.to_bits());
 }
+
+/// The event-core acceptance fuzz (PR 7 spine): across random fleets,
+/// **all three router policies**, autoscale resizes and seeded fault
+/// plans, the indexed event loop (clock heap + load index) and the
+/// parallel replica stepper are **bit-identical** to the retained
+/// linear-scan reference — same modeled times, same counters, same
+/// event totals.  Debug builds additionally cross-check every single
+/// heap/index query against the linear scan inside the sim itself.
+/// Two pinned draws (a cell the autoscale smoke test proves
+/// consolidates, and a cell the crash smoke test proves crashes)
+/// guarantee resize/fault coverage independent of the random draw
+/// sequence; `TYPHOON_FUZZ_ITERS` scales the random draws in the
+/// long-fuzz job.
+#[test]
+fn event_core_bit_identity_fuzz() {
+    fn report_bits_equal(seed: u64, label: &str, a: &ClusterReport, b: &ClusterReport) {
+        assert_eq!(a.tokens, b.tokens, "seed {seed}: {label} tokens");
+        assert_eq!(
+            a.requests_completed, b.requests_completed,
+            "seed {seed}: {label} completions"
+        );
+        assert_eq!(
+            a.decode_seconds.to_bits(),
+            b.decode_seconds.to_bits(),
+            "seed {seed}: {label} decode seconds"
+        );
+        assert_eq!(
+            a.goodput.to_bits(),
+            b.goodput.to_bits(),
+            "seed {seed}: {label} goodput"
+        );
+        assert_eq!(
+            a.makespan.to_bits(),
+            b.makespan.to_bits(),
+            "seed {seed}: {label} makespan"
+        );
+        assert_eq!(
+            a.ttft_p99.to_bits(),
+            b.ttft_p99.to_bits(),
+            "seed {seed}: {label} ttft p99"
+        );
+        assert_eq!(
+            a.tpot_p99.to_bits(),
+            b.tpot_p99.to_bits(),
+            "seed {seed}: {label} tpot p99"
+        );
+        assert_eq!(a.spills, b.spills, "seed {seed}: {label} spills");
+        assert_eq!(a.migrations, b.migrations, "seed {seed}: {label} migrations");
+        assert_eq!(
+            a.transfer_seconds.to_bits(),
+            b.transfer_seconds.to_bits(),
+            "seed {seed}: {label} transfer seconds"
+        );
+        assert_eq!(a.scale_ups, b.scale_ups, "seed {seed}: {label} scale-ups");
+        assert_eq!(a.scale_downs, b.scale_downs, "seed {seed}: {label} scale-downs");
+        assert_eq!(a.crashes, b.crashes, "seed {seed}: {label} crashes");
+        assert_eq!(a.stalls, b.stalls, "seed {seed}: {label} stalls");
+        assert_eq!(
+            a.requeued_requests, b.requeued_requests,
+            "seed {seed}: {label} re-queues"
+        );
+        assert_eq!(a.lost_tokens, b.lost_tokens, "seed {seed}: {label} lost tokens");
+        assert_eq!(a.replicas.len(), b.replicas.len(), "seed {seed}: {label} fleet size");
+        for (i, (ra, rb)) in a.replicas.iter().zip(&b.replicas).enumerate() {
+            assert_eq!(
+                ra.final_clock.to_bits(),
+                rb.final_clock.to_bits(),
+                "seed {seed}: {label} replica {i} clock"
+            );
+            assert_eq!(ra.tokens, rb.tokens, "seed {seed}: {label} replica {i} tokens");
+            assert_eq!(ra.state, rb.state, "seed {seed}: {label} replica {i} state");
+        }
+    }
+
+    /// Run the same cell three ways — linear-scan oracle, indexed
+    /// serial loop, parallel stepper — assert bit-identity, and return
+    /// the (identical) report.
+    fn identity_triple(seed: u64, p: &ClusterParams) -> ClusterReport {
+        let mut oracle = ClusterSim::new(p).unwrap();
+        oracle.use_linear_reference(true);
+        oracle.run().unwrap();
+        let reference = oracle.report();
+
+        let mut heap = ClusterSim::new(p).unwrap();
+        heap.run().unwrap();
+        report_bits_equal(seed, "heap vs linear", &reference, &heap.report());
+        assert_eq!(
+            oracle.events_processed(),
+            heap.events_processed(),
+            "seed {seed}: event totals diverged"
+        );
+
+        let mut par = ClusterSim::new(p).unwrap();
+        par.run_parallel().unwrap();
+        report_bits_equal(seed, "parallel vs linear", &reference, &par.report());
+        assert_eq!(
+            oracle.events_processed(),
+            par.events_processed(),
+            "seed {seed}: parallel event totals diverged"
+        );
+        assert_eq!(
+            oracle.arena_peak(),
+            par.arena_peak(),
+            "seed {seed}: arena high-water diverged"
+        );
+        reference
+    }
+
+    // Pinned draw 1: the cell `autoscale_consolidates_an_overprovisioned_fleet`
+    // proves scales down (resize coverage under lifecycle exits).
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        3,
+        RouterPolicy::PrefixAffinity,
+        16,
+        3,
+        1.0,
+    );
+    p.total_requests = 256;
+    p.arrival_rate = Some(40.0);
+    p.migrate = true;
+    p.scaling.enabled = true;
+    p.scaling.cooldown_arrivals = 32;
+    let r = identity_triple(u64::MAX, &p);
+    assert!(r.scale_downs > 0, "pinned draw must exercise a resize");
+
+    // Pinned draw 2: the cell `crash_failover_requeues_and_completes_everything`
+    // proves crashes (failover re-queue coverage).
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        2,
+        RouterPolicy::PrefixAffinity,
+        32,
+        3,
+        1.0,
+    );
+    p.total_requests = 64;
+    p.migrate = true;
+    p.faults.enabled = true;
+    p.faults.seed = 9;
+    p.faults.crashes = 1;
+    let r = identity_triple(u64::MAX - 1, &p);
+    assert_eq!(r.crashes, 1, "pinned draw must exercise a crash");
+
+    // Random draws over routers, fleet shapes, arrival profiles and —
+    // on the prefix-affinity draws, where the policy layers act —
+    // migration, SLO admission, autoscaling and fault plans.
+    for seed in 0..fuzz_iters(8) {
+        let mut rng = Rng::new(23_000 + seed);
+        let replicas = rng.gen_range_usize(2, 6);
+        let tenants = rng.gen_range_usize(1, 4);
+        let skew = [0.0, 1.0, 2.0][rng.gen_range_usize(0, 3)];
+        let batch = rng.gen_range_usize(4, 13);
+        let router = RouterPolicy::all()[rng.gen_range_usize(0, 3)];
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            replicas,
+            router,
+            batch,
+            tenants,
+            skew,
+        );
+        p.total_requests = rng.gen_range_usize(48, 160);
+        p.seed = seed * 59 + 5;
+        if rng.next_f64() < 0.7 {
+            p.arrival_rate = Some(1.0 + rng.next_f64() * 50.0);
+        }
+        if router == RouterPolicy::PrefixAffinity {
+            p.migrate = rng.next_f64() < 0.7;
+            p.spill_queue_depth = if rng.next_f64() < 0.5 { 1 } else { 2 * batch };
+            if rng.next_f64() < 0.3 {
+                p.slo_ttft = Some(0.05 + rng.next_f64());
+            }
+            if p.arrival_rate.is_some() && rng.next_f64() < 0.6 {
+                p.scaling.enabled = true;
+                p.scaling.cooldown_arrivals = rng.gen_range_usize(16, 48);
+                if rng.next_f64() < 0.5 {
+                    p.arrival_burst = Some(2.0 + rng.next_f64() * 6.0);
+                }
+            }
+            if rng.next_f64() < 0.6 {
+                p.faults.enabled = true;
+                p.faults.seed = seed * 89 + 7;
+                p.faults.crashes = rng.gen_range_usize(0, replicas);
+                p.faults.stalls = rng.gen_range_usize(0, 4);
+                p.faults.degradations = rng.gen_range_usize(0, 3);
+                if rng.next_f64() < 0.5 {
+                    p.faults.transfer_loss = rng.next_f64() * 0.9;
+                }
+                p.faults.degrade_factor = [0.0, 0.25, 1.0][rng.gen_range_usize(0, 3)];
+            }
+        }
+        identity_triple(seed, &p);
+    }
+}
