@@ -5,7 +5,7 @@ use std::fmt::Write as _;
 
 use anyhow::Result;
 
-use crate::config::hardware::{ascend_npu, gpu_h800, roofline_npu, HardwareSpec};
+use crate::config::hardware::{ascend_npu, gpu_h800, roofline_npu, Backend, HardwareSpec};
 use crate::config::model::{deepseek_v3, kimi_k2};
 use crate::config::KernelKind;
 use crate::costmodel::exec_time::{time_breakdown, TimeBreakdown};
@@ -14,10 +14,12 @@ use crate::costmodel::memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead}
 use crate::costmodel::roofline::roofline_point;
 use crate::simulator::cluster::RouterPolicy;
 use crate::simulator::sweep::{
-    cluster_cells, cluster_row_configs, run_cluster_sweep, run_tenant_sweep,
-    run_throughput_sweep, tenant_cells, throughput_cells, ClusterCellResult, SweepExecutor,
+    cluster_cells, cluster_row_configs, crossover_cells, run_cluster_sweep,
+    run_crossover_sweep, run_tenant_sweep, run_throughput_sweep, tenant_cells,
+    throughput_cells, ClusterCellResult, CrossoverCellResult, SweepExecutor,
     TenantCellResult, ThroughputCellResult,
 };
+use crate::simulator::tenancy::calibration_cell;
 
 use super::Artifact;
 
@@ -727,6 +729,86 @@ pub fn fig8() -> Result<Artifact> {
     })
 }
 
+/// The backends the crossover artifact sweeps (the accelerator grid
+/// axis; host-cpu is bench contextualization only and stays out).
+pub const CROSSOVER_BACKENDS: [Backend; 2] = [Backend::Npu, Backend::Gpu];
+
+/// Format evaluated crossover-grid cells into the `crossover`
+/// artifact: per (backend x model x fallback), the analytic pairwise
+/// Eq. 1 threshold next to the numeric crossover of the priced
+/// curves, with the per-backend calibration-cell speedups appended.
+/// Byte-identical however the cells were evaluated.
+pub fn format_crossover(results: &[CrossoverCellResult]) -> Artifact {
+    let mut text = String::new();
+    let mut csv = String::from(
+        "backend,hardware,model,fallback,analytic_exact,analytic,numeric\n",
+    );
+    writeln!(
+        text,
+        "{:>7} {:<16} {:<12} {:<12} {:>10} {:>9} {:>8}",
+        "backend", "hardware", "model", "fallback", "exact", "analytic", "numeric"
+    )
+    .unwrap();
+    for r in results {
+        let c = &r.cell;
+        let numeric = r.numeric.map_or_else(|| "-".into(), |n| n.to_string());
+        writeln!(
+            text,
+            "{:>7} {:<16} {:<12} {:<12} {:>10.4} {:>9} {:>8}",
+            c.backend.as_str(),
+            r.hw_name,
+            c.model.name,
+            c.fallback.as_str(),
+            r.analytic_exact,
+            r.analytic,
+            numeric
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{},{},{},{:.6},{},{}",
+            c.backend.as_str(),
+            r.hw_name,
+            c.model.name,
+            c.fallback.as_str(),
+            r.analytic_exact,
+            r.analytic,
+            numeric
+        )
+        .unwrap();
+    }
+    writeln!(text).unwrap();
+    for backend in CROSSOVER_BACKENDS {
+        let cal = calibration_cell(backend);
+        writeln!(
+            text,
+            "calibration cell ({}, Kimi K2, B=1024 Ls=26472 Ln=512): \
+             typhoon-over-absorb {:.2}x",
+            cal.hw_name, cal.speedup
+        )
+        .unwrap();
+    }
+    text.push_str(
+        "(analytic = floored pairwise Eq. 1 threshold the registry uses; \
+         numeric = first batch where the priced naive-family curve stops \
+         losing — brackets analytic within +1 by construction)\n",
+    );
+    Artifact {
+        id: "crossover",
+        title: "Per-backend B_theta crossover grid (kernel registry)".into(),
+        text,
+        csv,
+    }
+}
+
+/// `crossover` artifact: the per-backend B_theta grid over the paper
+/// model pair, classic and AMLA fallbacks, at the Fig. 7 shared length.
+pub fn fig_crossover(exec: &SweepExecutor) -> Result<Artifact> {
+    let cells = crossover_cells(&CROSSOVER_BACKENDS, &paper_models(), 4096);
+    let results = run_crossover_sweep(&cells, exec)?;
+    Ok(format_crossover(&results))
+}
+
 /// The two throughput figures with paper batch sweeps.
 pub fn fig2(max_requests_factor: Option<usize>) -> Result<Artifact> {
     fig_throughput(
@@ -862,6 +944,33 @@ mod tests {
         );
         let csv_crashes: u64 = fields[21].parse().unwrap();
         assert_eq!(csv_crashes, 1, "fault CSV column records the crash: {row}");
+    }
+
+    /// The crossover artifact pins the per-backend thresholds and the
+    /// calibration-speedup ordering the backend presets are tuned for.
+    #[test]
+    fn crossover_artifact_pins_backend_thresholds() {
+        let a = fig_crossover(&SweepExecutor::from_env()).unwrap();
+        assert_eq!(a.id, "crossover");
+        // 2 backends x 2 models x 2 fallbacks + header.
+        assert_eq!(a.csv.lines().count(), 9);
+        let pinned = [
+            ("npu,ascend-npu,deepseek-v3,absorb,", ",61,62"),
+            ("npu,ascend-npu,deepseek-v3,amla-absorb,", ",70,71"),
+            ("gpu,gpu-h800-decode,deepseek-v3,absorb,", ",29,30"),
+            ("gpu,gpu-h800-decode,deepseek-v3,amla-absorb,", ",33,34"),
+        ];
+        for (prefix, suffix) in pinned {
+            assert!(
+                a.csv
+                    .lines()
+                    .any(|l| l.starts_with(prefix) && l.ends_with(suffix)),
+                "missing pinned row {prefix}..{suffix} in\n{}",
+                a.csv
+            );
+        }
+        assert!(a.text.contains("calibration cell (ascend-npu"), "{}", a.text);
+        assert!(a.text.contains("calibration cell (gpu-h800-decode"), "{}", a.text);
     }
 
     #[test]

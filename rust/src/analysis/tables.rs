@@ -165,7 +165,10 @@ mod tests {
         let a = table1();
         assert!(a.text.contains("40.00 Ki"));
         assert!(a.text.contains("136.00 Ki"));
-        assert!(a.csv.lines().count() == 4);
+        // Header + one row per registry kernel (5 since the AMLA pair).
+        assert!(a.csv.lines().count() == 1 + KernelKind::all().len());
+        assert!(a.csv.contains("amla-absorb,"));
+        assert!(a.csv.contains("typhoon-amla,"));
     }
 
     #[test]

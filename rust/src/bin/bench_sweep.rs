@@ -4,10 +4,17 @@
 //! Usage:
 //!   bench_sweep [--quick] [--full] [--threads N] [--out FILE]
 //!               [--skip-serial] [--million] [--million-requests N]
+//!               [--backend npu|gpu]
 //!
 //! * `--quick`  caps `max_requests` and shrinks the batch set to a
 //!   tier-1-friendly load (default mode is a middle ground; `--full`
 //!   is the paper's whole-split protocol).
+//! * `--backend` restricts the grids to one accelerator preset:
+//!   `npu` runs the fig2 (Ascend) leg, `gpu` runs the fig3 leg on the
+//!   decode-calibrated H800 preset, and the cluster + crossover grids
+//!   follow the same preset.  Absent, both figure legs run exactly as
+//!   before and the crossover grid covers every backend axis value.
+//!   Unknown names are rejected with the candidate list.
 //! * By default the sweep runs twice — a **serial, unmemoized**
 //!   baseline (pre-optimization hot path: per-sequence Table-1
 //!   evaluation, single thread), then the optimized parallel+memoized
@@ -26,7 +33,9 @@
 //! `{wall_seconds, cells, tokens_simulated}` (plus serial baseline and
 //! speedup fields when measured, plus `cluster_*` fields for the
 //! replicas x skew x router grid, which is timed and
-//! byte-identity-asserted the same way, plus `million_*` /
+//! byte-identity-asserted the same way, plus `backend`, `crossover_*`
+//! and per-backend `b_theta_*` registry-threshold fields for the
+//! crossover grid, plus `million_*` /
 //! `events_per_second` fields under `--million`) via
 //! util::bench-style JSON — to `--out` (default `target/bench/`)
 //! *and* to the tracked repo-root copy `BENCH_sweep.json`, so the perf
@@ -36,15 +45,17 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 use typhoon_mla::analysis::figures::{
-    format_cluster, format_throughput, paper_models, CLUSTER_ARRIVALS, CLUSTER_REPLICAS,
-    CLUSTER_SKEWS, CLUSTER_TENANTS, PAPER_BATCHES,
+    format_cluster, format_crossover, format_throughput, paper_models, CLUSTER_ARRIVALS,
+    CLUSTER_REPLICAS, CLUSTER_SKEWS, CLUSTER_TENANTS, CROSSOVER_BACKENDS, PAPER_BATCHES,
 };
 use typhoon_mla::analysis::Artifact;
-use typhoon_mla::config::hardware::{ascend_npu, gpu_h800};
+use typhoon_mla::config::hardware::{ascend_npu, gpu_h800, Backend, HardwareSpec};
 use typhoon_mla::config::model::deepseek_v3;
+use typhoon_mla::costmodel::{parallel_batch_threshold, ParallelismConfig};
 use typhoon_mla::simulator::sweep::{
-    cluster_cells, cluster_row_configs, run_cluster_sweep, run_throughput_sweep,
-    throughput_cells, ClusterCell, SweepExecutor, ThroughputCell,
+    cluster_cells, cluster_row_configs, crossover_cells, run_cluster_sweep,
+    run_crossover_sweep, run_throughput_sweep, throughput_cells, ClusterCell, SweepExecutor,
+    ThroughputCell,
 };
 use typhoon_mla::simulator::{run_cluster_experiment, ClusterParams, ClusterSim, RouterPolicy};
 use typhoon_mla::util::cli::Args;
@@ -57,8 +68,10 @@ struct SweepOutcome {
     artifacts: Vec<Artifact>,
 }
 
-/// Run the fig2 (Ascend) + fig3 (H800) grids under one executor.
+/// Run the selected figure grids (fig2 Ascend / fig3 H800, or the
+/// `--backend` subset) under one executor.
 fn run_sweep(
+    figs: &[(&'static str, HardwareSpec)],
     cells: &[ThroughputCell],
     batches_per_group: usize,
     exec: &SweepExecutor,
@@ -67,11 +80,11 @@ fn run_sweep(
     let mut artifacts = Vec::new();
     let mut tokens = 0u64;
     let mut n_cells = 0usize;
-    for (id, hw) in [("fig2", ascend_npu()), ("fig3", gpu_h800())] {
-        let results = run_throughput_sweep(&hw, cells, exec)?;
+    for &(id, ref hw) in figs {
+        let results = run_throughput_sweep(hw, cells, exec)?;
         n_cells += results.len();
         tokens += results.iter().map(|r| r.tokens()).sum::<u64>();
-        artifacts.push(format_throughput(id, &hw, &results, batches_per_group));
+        artifacts.push(format_throughput(id, hw, &results, batches_per_group));
     }
     Ok(SweepOutcome {
         wall_seconds: t0.elapsed().as_secs_f64(),
@@ -96,9 +109,13 @@ struct ClusterOutcome {
 
 /// Run the cluster (replicas x skew x arrival-profile x router-config)
 /// grid under one executor.
-fn run_cluster_grid(cells: &[ClusterCell], exec: &SweepExecutor) -> Result<ClusterOutcome> {
+fn run_cluster_grid(
+    hw: &HardwareSpec,
+    cells: &[ClusterCell],
+    exec: &SweepExecutor,
+) -> Result<ClusterOutcome> {
     let t0 = Instant::now();
-    let results = run_cluster_sweep(&ascend_npu(), cells, exec)?;
+    let results = run_cluster_sweep(hw, cells, exec)?;
     let tokens: u64 = results.iter().map(|r| r.report.tokens).sum();
     let migrations: u64 = results.iter().map(|r| r.report.migrations).sum();
     let scale_events: u64 = results
@@ -132,8 +149,25 @@ fn main() -> Result<()> {
         "million-requests",
         "threads",
         "out",
+        "backend",
     ])?;
     let out_path = args.get_or("out", "target/bench/BENCH_sweep.json").to_string();
+
+    // `--backend` narrows every grid to one accelerator preset.  The
+    // candidate list is npu|gpu — host-cpu is a contextualization
+    // preset, not a figure axis.  Absent, behavior (and the figure
+    // artifacts) match the historical two-leg sweep exactly.
+    let backend = match args.get_choice("backend", &["npu", "gpu"])? {
+        Some(name) => Some(Backend::parse(name)?),
+        None => None,
+    };
+    let figs: Vec<(&'static str, HardwareSpec)> = match backend {
+        None => vec![("fig2", ascend_npu()), ("fig3", gpu_h800())],
+        Some(Backend::Npu) => vec![("fig2", ascend_npu())],
+        Some(Backend::Gpu) => vec![("fig3", Backend::Gpu.preset())],
+        Some(Backend::Cpu) => unreachable!("cpu is filtered by get_choice"),
+    };
+    let cluster_hw = backend.map_or_else(ascend_npu, |b| b.preset());
 
     // Batch set + request cap per mode.
     let (batches, factor): (Vec<usize>, Option<usize>) = if args.flag("quick") {
@@ -150,12 +184,13 @@ fn main() -> Result<()> {
     };
     let cells = throughput_cells(&paper_models(), &batches, factor);
     eprintln!(
-        "[bench_sweep] {} cells/figure x 2 figures x 3 kernels, {} worker(s)",
+        "[bench_sweep] {} cells/figure x {} figure(s) x 3 kernels, {} worker(s)",
         cells.len(),
+        figs.len(),
         parallel.threads
     );
 
-    let par = run_sweep(&cells, batches.len(), &parallel)?;
+    let par = run_sweep(&figs, &cells, batches.len(), &parallel)?;
     println!(
         "parallel: {:.3}s wall, {} cells, {} tokens simulated",
         par.wall_seconds, par.cells, par.tokens
@@ -174,7 +209,7 @@ fn main() -> Result<()> {
         128,
         cluster_requests,
     );
-    let cl = run_cluster_grid(&cl_cells, &parallel)?;
+    let cl = run_cluster_grid(&cluster_hw, &cl_cells, &parallel)?;
     println!(
         "cluster:  {:.3}s wall, {} cells, {} tokens simulated, {} migrations, \
          {} scale events, {} crashes ({} failovers, {} re-queued, {} pages lost)",
@@ -187,6 +222,26 @@ fn main() -> Result<()> {
         cl.failovers,
         cl.requeued,
         cl.lost_pages
+    );
+
+    // Per-backend B_theta crossover grid (kernel registry, DESIGN.md
+    // §16): the analytic pairwise Eq. 1 thresholds next to the numeric
+    // priced-curve scan, timed and byte-identity-asserted like every
+    // other grid.  `--backend` narrows the axis to one preset.
+    let xover_backends: Vec<Backend> = match backend {
+        Some(b) => vec![b],
+        None => CROSSOVER_BACKENDS.to_vec(),
+    };
+    let x_cells = crossover_cells(&xover_backends, &paper_models(), 4096);
+    let t0 = Instant::now();
+    let x_results = run_crossover_sweep(&x_cells, &parallel)?;
+    let x_wall = t0.elapsed().as_secs_f64();
+    let x_art = format_crossover(&x_results);
+    println!(
+        "crossover: {:.3}s wall, {} cells over {} backend(s)",
+        x_wall,
+        x_cells.len(),
+        xover_backends.len()
     );
 
     // `--million`: one large prefix-affinity cell driven through the
@@ -276,6 +331,9 @@ fn main() -> Result<()> {
         ("tokens_simulated", Json::num(par.tokens as f64)),
         ("threads", Json::num(parallel.threads as f64)),
         ("quick", Json::Bool(args.flag("quick"))),
+        ("backend", Json::str(backend.map_or("all", |b| b.as_str()))),
+        ("crossover_wall_seconds", Json::num(x_wall)),
+        ("crossover_cells", Json::num(x_cells.len() as f64)),
         ("cluster_wall_seconds", Json::num(cl.wall_seconds)),
         ("cluster_cells", Json::num(cl_cells.len() as f64)),
         ("cluster_row_width", Json::num(cluster_row_configs().len() as f64)),
@@ -287,6 +345,19 @@ fn main() -> Result<()> {
         ("cluster_requeued", Json::num(cl.requeued as f64)),
         ("cluster_lost_pages", Json::num(cl.lost_pages as f64)),
     ];
+    // Pin the per-backend registry B_theta (DeepSeek-v3, s_q = 1,
+    // single-device) into the artifact so threshold drift shows up in
+    // the tracked perf trajectory, not just in tests.
+    for b in &xover_backends {
+        let key = match b {
+            Backend::Npu => "b_theta_npu",
+            Backend::Gpu => "b_theta_gpu",
+            Backend::Cpu => "b_theta_cpu",
+        };
+        let theta =
+            parallel_batch_threshold(&deepseek_v3(), &b.preset(), 1, &ParallelismConfig::single());
+        fields.push((key, Json::num(theta as f64)));
+    }
     fields.extend(million_fields);
 
     if !args.flag("skip-serial") {
@@ -297,7 +368,7 @@ fn main() -> Result<()> {
         for c in &mut baseline_cells {
             c.memoized = false;
         }
-        let serial = run_sweep(&baseline_cells, batches.len(), &SweepExecutor::serial())?;
+        let serial = run_sweep(&figs, &baseline_cells, batches.len(), &SweepExecutor::serial())?;
         println!(
             "serial/unmemoized: {:.3}s wall, {} cells, {} tokens simulated",
             serial.wall_seconds, serial.cells, serial.tokens
@@ -322,7 +393,7 @@ fn main() -> Result<()> {
         // Cluster grid byte-identity: serial run of the same cells must
         // reproduce the parallel artifact exactly — including every
         // migration and scale decision.
-        let cl_serial = run_cluster_grid(&cl_cells, &SweepExecutor::serial())?;
+        let cl_serial = run_cluster_grid(&cluster_hw, &cl_cells, &SweepExecutor::serial())?;
         ensure!(
             cl_serial.artifact.text == cl.artifact.text,
             "cluster: text artifact diverged"
@@ -351,6 +422,15 @@ fn main() -> Result<()> {
         println!("cluster speedup:   {cl_speedup:.2}x (artifacts byte-identical)");
         fields.push(("cluster_serial_wall_seconds", Json::num(cl_serial.wall_seconds)));
         fields.push(("cluster_speedup", Json::num(cl_speedup)));
+
+        // Crossover grid byte-identity: the serial scan must reproduce
+        // the parallel artifact exactly for the selected backend axis
+        // — the identity the CI backend-matrix leg gates on.
+        let x_serial = format_crossover(&run_crossover_sweep(&x_cells, &SweepExecutor::serial())?);
+        ensure!(x_serial.text == x_art.text, "crossover: text artifact diverged");
+        ensure!(x_serial.csv == x_art.csv, "crossover: csv artifact diverged");
+        println!("crossover: serial scan byte-identical");
+        fields.push(("crossover_identical", Json::Bool(true)));
     }
 
     let json = Json::obj(fields);

@@ -2,7 +2,7 @@
 //!
 //! Usage:
 //!   figures all [--out DIR] [--full]      # everything
-//!   figures table1|eq1|table3|fig2|...|fig8|tenants|cluster
+//!   figures table1|eq1|table3|fig2|...|fig8|tenants|cluster|crossover
 //!
 //! `--full` runs the throughput sweeps over whole dataset splits (the
 //! paper's protocol); the default caps requests at 4x batch per cell so
@@ -58,8 +58,14 @@ fn main() -> Result<()> {
     if all || which == "cluster" {
         artifacts.push(figures::fig_cluster(cap, &SweepExecutor::from_env())?);
     }
+    if all || which == "crossover" {
+        artifacts.push(figures::fig_crossover(&SweepExecutor::from_env())?);
+    }
     if artifacts.is_empty() {
-        bail!("unknown artifact {which:?} (all|table1|eq1|table3|fig2..fig8|tenants|cluster)");
+        bail!(
+            "unknown artifact {which:?} \
+             (all|table1|eq1|table3|fig2..fig8|tenants|cluster|crossover)"
+        );
     }
 
     let dir = std::path::Path::new(&out);

@@ -4,6 +4,6 @@ pub mod hardware;
 pub mod model;
 pub mod serving;
 
-pub use hardware::HardwareSpec;
+pub use hardware::{Backend, HardwareSpec};
 pub use model::ModelConfig;
 pub use serving::{FaultConfig, KernelKind, ScalingConfig, ServingConfig};

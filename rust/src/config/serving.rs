@@ -11,6 +11,12 @@ pub enum KernelKind {
     Absorb,
     /// Naive-only (TorchNPU PagedAttention / FlashAttention baseline).
     Naive,
+    /// Absorb with AMLA's add-based FlashAttention rescaling (arxiv
+    /// 2509.25224): the running-output rescale becomes an exponent add,
+    /// discounting the absorb-side attention MACs (costmodel::flops).
+    AmlaAbsorb,
+    /// Typhoon whose non-shared (absorb) stage runs the AMLA variant.
+    TyphoonAmla,
 }
 
 impl KernelKind {
@@ -19,6 +25,8 @@ impl KernelKind {
             KernelKind::Typhoon => "typhoon",
             KernelKind::Absorb => "absorb",
             KernelKind::Naive => "naive",
+            KernelKind::AmlaAbsorb => "amla-absorb",
+            KernelKind::TyphoonAmla => "typhoon-amla",
         }
     }
 
@@ -27,12 +35,46 @@ impl KernelKind {
             "typhoon" => KernelKind::Typhoon,
             "absorb" => KernelKind::Absorb,
             "naive" => KernelKind::Naive,
-            _ => bail!("unknown kernel kind {s:?} (typhoon|absorb|naive)"),
+            "amla-absorb" => KernelKind::AmlaAbsorb,
+            "typhoon-amla" => KernelKind::TyphoonAmla,
+            _ => bail!(
+                "unknown kernel kind {s:?} \
+                 (typhoon|absorb|naive|amla-absorb|typhoon-amla)"
+            ),
         })
     }
 
-    pub fn all() -> [KernelKind; 3] {
-        [KernelKind::Typhoon, KernelKind::Absorb, KernelKind::Naive]
+    pub fn all() -> [KernelKind; 5] {
+        [
+            KernelKind::Typhoon,
+            KernelKind::Absorb,
+            KernelKind::Naive,
+            KernelKind::AmlaAbsorb,
+            KernelKind::TyphoonAmla,
+        ]
+    }
+
+    /// Kernels whose *shared* stage reads the prefix in uncompressed
+    /// (naive) form — these need the expanded K/V copy materialized
+    /// (`KvCacheManager::expand_shared_prefix`) and amortize the stream
+    /// across the group, which is what the Eq. 1 threshold prices.
+    pub fn reads_shared_naive(&self) -> bool {
+        matches!(
+            self,
+            KernelKind::Typhoon | KernelKind::TyphoonAmla | KernelKind::Naive
+        )
+    }
+
+    /// The absorb-formulation kernels — the fall-back family the naive
+    /// readers switch to below their crossover batch.
+    pub fn is_absorb_family(&self) -> bool {
+        !self.reads_shared_naive()
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
     }
 }
 
@@ -351,8 +393,23 @@ mod tests {
             assert_eq!(KernelKind::parse(k.as_str()).unwrap().as_str(), k.as_str());
         }
         let err = KernelKind::parse("x").unwrap_err().to_string();
-        assert!(err.contains("typhoon|absorb|naive"), "{err}");
+        assert!(err.contains("typhoon|absorb|naive|amla-absorb|typhoon-amla"), "{err}");
         assert!(KernelKind::parse("Typhoon").is_err(), "matching is exact");
         assert!(KernelKind::parse("").is_err());
+    }
+
+    /// Family partition: every kernel is exactly one of naive-shared or
+    /// absorb-family, and the split matches the expansion requirement
+    /// the coordinator enforces.
+    #[test]
+    fn kernel_families_partition() {
+        for k in KernelKind::all() {
+            assert_ne!(k.reads_shared_naive(), k.is_absorb_family(), "{k:?}");
+        }
+        assert!(KernelKind::Typhoon.reads_shared_naive());
+        assert!(KernelKind::TyphoonAmla.reads_shared_naive());
+        assert!(KernelKind::Naive.reads_shared_naive());
+        assert!(KernelKind::Absorb.is_absorb_family());
+        assert!(KernelKind::AmlaAbsorb.is_absorb_family());
     }
 }

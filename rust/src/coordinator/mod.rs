@@ -42,6 +42,18 @@ pub use sequence::{SeqState, Sequence};
 /// whole run's history.
 const SERVICE_RATE_WINDOW: usize = 64;
 
+/// Mean non-shared context length of a group's members (floor; 0 for
+/// an empty slice).  Feeds the kernel registry's `GroupContext` — the
+/// binary seed registry ignores it, an N-way registry prices the
+/// non-shared stage with it.
+fn mean_len(lens: &[usize]) -> usize {
+    if lens.is_empty() {
+        0
+    } else {
+        lens.iter().sum::<usize>() / lens.len()
+    }
+}
+
 /// One sequence extracted from a failed replica for fleet-level
 /// re-queueing (DESIGN.md §14): enough to restart the request from
 /// scratch on a survivor.  `generated` tokens of work die with the
@@ -155,7 +167,7 @@ impl<E: Engine> Coordinator<E> {
     pub fn register_prefix_group(&mut self, tokens: &[u32]) -> Result<PrefixId> {
         let id = self.kv.register_shared_prefix(tokens)?;
         let secs = self.engine.prepare_shared(id, tokens, self.cfg.kernel)?;
-        if self.cfg.kernel == KernelKind::Typhoon || self.cfg.kernel == KernelKind::Naive {
+        if self.cfg.kernel.reads_shared_naive() {
             self.kv.expand_shared_prefix(id)?;
         }
         self.now += secs;
@@ -178,8 +190,7 @@ impl<E: Engine> Coordinator<E> {
     /// unpriced work — expand at the source so the transfer carries
     /// (and prices) it.
     pub fn import_prefix_group(&mut self, export: &PrefixExport) -> Result<PrefixId> {
-        let needs_expansion =
-            self.cfg.kernel == KernelKind::Typhoon || self.cfg.kernel == KernelKind::Naive;
+        let needs_expansion = self.cfg.kernel.reads_shared_naive();
         if needs_expansion && !export.expanded {
             return Err(anyhow!(
                 "cannot adopt an unexpanded prefix into a {} stack: expand it at \
@@ -493,11 +504,15 @@ impl<E: Engine> Coordinator<E> {
         // *is* the group; no partition, no extra allocations on the
         // hot path.
         if let [(prefix, shared_len)] = self.prefixes[..] {
-            let context_lens = ids
+            let context_lens: Vec<usize> = ids
                 .iter()
                 .map(|&id| self.seqs.get(id).expect("running seq exists").context_len())
                 .collect();
-            let kernel = self.policy.select(ids.len(), shared_len);
+            let kernel = self.policy.select_group(
+                ids.len(),
+                shared_len,
+                mean_len(&context_lens),
+            );
             return DecodeBatch {
                 context_lens,
                 groups: vec![BatchGroup {
@@ -531,18 +546,23 @@ impl<E: Engine> Coordinator<E> {
                 continue;
             }
             let (prefix, shared_len) = self.prefixes[gi];
-            let kernel = self.policy.select(m.len(), shared_len);
-            groups.push(BatchGroup {
-                prefix,
-                shared_len,
-                kernel,
-                start: seqs.len(),
-                len: m.len(),
-            });
+            let start = seqs.len();
             for id in m {
                 context_lens.push(self.seqs.get(id).expect("running seq exists").context_len());
                 seqs.push(id);
             }
+            let kernel = self.policy.select_group(
+                seqs.len() - start,
+                shared_len,
+                mean_len(&context_lens[start..]),
+            );
+            groups.push(BatchGroup {
+                prefix,
+                shared_len,
+                kernel,
+                start,
+                len: seqs.len() - start,
+            });
         }
         DecodeBatch { seqs, context_lens, groups }
     }
@@ -579,8 +599,12 @@ impl<E: Engine> Coordinator<E> {
         self.now += outcome.seconds;
         for g in &batch.groups {
             match g.kernel {
-                KernelKind::Typhoon => self.metrics.typhoon_iters += 1,
-                KernelKind::Absorb => self.metrics.absorb_iters += 1,
+                // Family counters: the AMLA variants are the same two
+                // execution strategies with rescaled arithmetic.
+                KernelKind::Typhoon | KernelKind::TyphoonAmla => {
+                    self.metrics.typhoon_iters += 1
+                }
+                KernelKind::Absorb | KernelKind::AmlaAbsorb => self.metrics.absorb_iters += 1,
                 KernelKind::Naive => self.metrics.naive_iters += 1,
             }
         }

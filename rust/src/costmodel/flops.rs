@@ -29,6 +29,24 @@ impl AttentionWorkload {
     }
 }
 
+/// AMLA MAC discount (arxiv 2509.25224), as an exact rational.
+///
+/// AMLA replaces FlashAttention's multiply-based rescaling of the
+/// running output with an exponent *add* on the accumulator, deleting
+/// one multiply per accumulated element of the `P x V` update.  Per
+/// context token the absorb inner loop does `2*(2*D_l+D_r)` MACs of
+/// which the rescale multiply is one per output element — we model the
+/// saving as 1/8 of the attention-stream MACs (the fraction the AMLA
+/// paper's Ascend kernels recover on the absorb GEMMs).  HBM words are
+/// untouched: the trick is arithmetic-only.
+pub const AMLA_RESCALE_NUM: u64 = 7;
+pub const AMLA_RESCALE_DEN: u64 = 8;
+
+/// Apply the AMLA rescaling discount to an attention-stream MAC count.
+pub fn amla_macs(macs: u64) -> u64 {
+    macs * AMLA_RESCALE_NUM / AMLA_RESCALE_DEN
+}
+
 /// MACs + HBM words of one component of the attention computation.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Component {
@@ -127,6 +145,32 @@ pub fn attention_cost(
             cost.proj_kvb2 = proj_cost(b, sq, h, d_v, d_l);
             cost.combine = combine_cost(cfg, b, sq);
         }
+        KernelKind::AmlaAbsorb => {
+            // Absorb with the AMLA rescaling discount on both attention
+            // streams; projections/combine and all words are unchanged.
+            cost.shared = Component {
+                macs: amla_macs(b * sq * ls * absorb_f),
+                hbm_words: ls * lat_w,
+            };
+            cost.non_shared = Component {
+                macs: amla_macs(b * sq * ln * absorb_f),
+                hbm_words: b * ln * lat_w,
+            };
+            cost.proj_kvb1 = proj_cost(b, sq, h, d_n, d_l);
+            cost.proj_kvb2 = proj_cost(b, sq, h, d_v, d_l);
+            cost.combine = combine_cost(cfg, b, sq);
+        }
+        KernelKind::TyphoonAmla => {
+            // Naive on shared, AMLA-absorb on non-shared.
+            cost.shared = Component { macs: b * sq * ls * naive_f, hbm_words: ls * unc_w };
+            cost.non_shared = Component {
+                macs: amla_macs(b * sq * ln * absorb_f),
+                hbm_words: b * ln * lat_w,
+            };
+            cost.proj_kvb1 = proj_cost(b, sq, h, d_n, d_l);
+            cost.proj_kvb2 = proj_cost(b, sq, h, d_v, d_l);
+            cost.combine = combine_cost(cfg, b, sq);
+        }
     }
     let _ = (d_qk, d_v, cfg.d_rope);
     cost
@@ -214,6 +258,55 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The AMLA variants discount exactly the attention-stream MACs by
+    /// 7/8 and change nothing else: words, projections and combine are
+    /// bit-identical to their non-AMLA counterparts.
+    #[test]
+    fn amla_discounts_attention_macs_only() {
+        let cfg = deepseek_v3();
+        for (base, amla) in [
+            (KernelKind::Absorb, KernelKind::AmlaAbsorb),
+            (KernelKind::Typhoon, KernelKind::TyphoonAmla),
+        ] {
+            for wl in [
+                AttentionWorkload::decode(8, 1000, 200),
+                AttentionWorkload::decode(1024, 26472, 512),
+                AttentionWorkload::decode(1, 0, 17),
+            ] {
+                let b = attention_cost(&cfg, base, &wl);
+                let a = attention_cost(&cfg, amla, &wl);
+                // Shared stage: discounted for absorb-family, identical
+                // (naive) for the typhoon pair.
+                if base == KernelKind::Absorb {
+                    assert_eq!(a.shared.macs, amla_macs(b.shared.macs));
+                } else {
+                    assert_eq!(a.shared, b.shared);
+                }
+                assert_eq!(a.non_shared.macs, amla_macs(b.non_shared.macs));
+                assert_eq!(a.shared.hbm_words, b.shared.hbm_words);
+                assert_eq!(a.non_shared.hbm_words, b.non_shared.hbm_words);
+                assert_eq!(a.proj_kvb1, b.proj_kvb1);
+                assert_eq!(a.proj_kvb2, b.proj_kvb2);
+                assert_eq!(a.combine, b.combine);
+                // The discount is real whenever the stream is nonempty.
+                if wl.l_n > 0 {
+                    assert!(a.non_shared.macs < b.non_shared.macs);
+                }
+            }
+        }
+    }
+
+    /// `amla_macs` is the exact rational 7/8 on the absorb factors (all
+    /// divisible by 8), and never rounds up.
+    #[test]
+    fn amla_macs_exact_on_absorb_factors() {
+        let cfg = deepseek_v3();
+        assert_eq!(cfg.absorb_factor() % AMLA_RESCALE_DEN, 0);
+        assert_eq!(amla_macs(cfg.absorb_factor()), cfg.absorb_factor() / 8 * 7);
+        assert_eq!(amla_macs(0), 0);
+        assert!(amla_macs(9) <= 9 * 7 / 8);
     }
 
     #[test]

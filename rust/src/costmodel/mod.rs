@@ -12,11 +12,12 @@ pub mod threshold;
 pub mod transfer;
 
 pub use exec_time::{attention_time, time_breakdown, tokens_per_sec, TimeBreakdown};
-pub use flops::{attention_cost, AttentionWorkload, Component, CostBreakdown};
-pub use table::CostTable;
+pub use flops::{amla_macs, attention_cost, AttentionWorkload, Component, CostBreakdown};
+pub use table::{BackendId, CostTable, PriceTable};
 pub use parallel::{
     parallel_attention_time, parallel_batch_threshold, parallel_batch_threshold_exact,
-    scaling_efficiency, ParallelismConfig,
+    parallel_pair_threshold, parallel_pair_threshold_exact, scaling_efficiency,
+    ParallelismConfig,
 };
 pub use memory::{cloudmatrix_384, hbm_footprint, typhoon_overhead, ClusterConfig};
 pub use roofline::{ridge_batch, roofline_curve, roofline_point, RooflinePoint};

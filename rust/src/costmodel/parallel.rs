@@ -14,7 +14,9 @@
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 
 use super::exec_time::component_time;
-use super::flops::{attention_cost, AttentionWorkload, Component};
+use super::flops::{
+    attention_cost, AttentionWorkload, Component, AMLA_RESCALE_DEN, AMLA_RESCALE_NUM,
+};
 use super::threshold::batch_threshold_exact;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -78,6 +80,54 @@ pub fn parallel_batch_threshold(
     par: &ParallelismConfig,
 ) -> usize {
     (parallel_batch_threshold_exact(cfg, hw, s_q, par).floor() as usize).max(1)
+}
+
+/// Exact per-rank crossover between a naive-shared-stage kernel and a
+/// specific absorb-family fallback — the N-way generalization of Eq. 1
+/// the kernel registry prices per entry.
+///
+/// Derivation: Eq. 1 equates the naive shared stage's memory time with
+/// the absorb shared stage's compute time.  An AMLA-discounted absorb
+/// does `7/8` of those MACs (`flops::amla_macs`), so its compute line
+/// crosses the flat naive memory line later by exactly `8/7`:
+/// `B_theta(amla) = B_theta * DEN/NUM`.  The latent-replication
+/// collapse (deep TP) is fallback-independent — absorb's memory floor
+/// alone already loses, with or without the MAC discount.
+///
+/// `fallback = Absorb` reproduces `parallel_batch_threshold_exact`
+/// bit-identically (the factor is exactly 1) — the reduction the
+/// registry's binary mode is pinned on.
+pub fn parallel_pair_threshold_exact(
+    cfg: &ModelConfig,
+    hw: &HardwareSpec,
+    s_q: u64,
+    par: &ParallelismConfig,
+    fallback: KernelKind,
+) -> f64 {
+    let base = parallel_batch_threshold_exact(cfg, hw, s_q, par);
+    match fallback {
+        KernelKind::Absorb => base,
+        KernelKind::AmlaAbsorb => {
+            if base <= 1.0 {
+                // Latent-replication regime: naive wins at any batch.
+                base
+            } else {
+                base * AMLA_RESCALE_DEN as f64 / AMLA_RESCALE_NUM as f64
+            }
+        }
+        k => panic!("pair threshold needs an absorb-family fallback, got {k:?}"),
+    }
+}
+
+/// Integer pair threshold (floor, at least 1).
+pub fn parallel_pair_threshold(
+    cfg: &ModelConfig,
+    hw: &HardwareSpec,
+    s_q: u64,
+    par: &ParallelismConfig,
+    fallback: KernelKind,
+) -> usize {
+    (parallel_pair_threshold_exact(cfg, hw, s_q, par, fallback).floor() as usize).max(1)
 }
 
 /// Per-rank cost of one decode attention iteration under (TP, SP).
@@ -277,6 +327,96 @@ mod tests {
                     let wl = AttentionWorkload::decode(b, 4096, 0);
                     parallel_attention_time(&cfg, KernelKind::Typhoon, &wl, &hw, &par)
                         <= parallel_attention_time(&cfg, KernelKind::Absorb, &wl, &hw, &par)
+                })
+                .expect("crossover within scan range") as usize;
+            assert!(
+                numeric == analytic || numeric == analytic + 1,
+                "tp={} sp={}: numeric {numeric} vs analytic {analytic}",
+                par.tp,
+                par.sp
+            );
+        }
+    }
+
+    /// `fallback = Absorb` reduces the pair threshold to the classic
+    /// per-rank Eq. 1 bit-identically — the registry's binary-mode pin.
+    #[test]
+    fn absorb_pair_threshold_is_eq1_bitwise() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        for par in [
+            ParallelismConfig::single(),
+            ParallelismConfig { tp: 4, sp: 4 },
+            ParallelismConfig { tp: 128, sp: 1 },
+        ] {
+            for s_q in [1u64, 2, 4] {
+                assert_eq!(
+                    parallel_pair_threshold_exact(&cfg, &hw, s_q, &par, KernelKind::Absorb)
+                        .to_bits(),
+                    parallel_batch_threshold_exact(&cfg, &hw, s_q, &par).to_bits()
+                );
+            }
+        }
+    }
+
+    /// The AMLA fallback shifts the crossover up by exactly 8/7:
+    /// the cheaper absorb stage stays competitive to a larger batch.
+    /// Ascend: 61.44 * 8/7 = 70.21 -> 70; the deep-TP collapse is
+    /// fallback-independent.
+    #[test]
+    fn amla_pair_threshold_scales_8_over_7() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let single = ParallelismConfig::single();
+        assert_eq!(
+            parallel_pair_threshold(&cfg, &hw, 1, &single, KernelKind::AmlaAbsorb),
+            70
+        );
+        let classic = parallel_batch_threshold_exact(&cfg, &hw, 1, &single);
+        let amla =
+            parallel_pair_threshold_exact(&cfg, &hw, 1, &single, KernelKind::AmlaAbsorb);
+        assert!((amla / classic - 8.0 / 7.0).abs() < 1e-12);
+        let deep = ParallelismConfig { tp: 128, sp: 1 };
+        assert_eq!(
+            parallel_pair_threshold(&cfg, &hw, 1, &deep, KernelKind::AmlaAbsorb),
+            1
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "absorb-family fallback")]
+    fn pair_threshold_rejects_naive_fallback() {
+        let cfg = deepseek_v3();
+        parallel_pair_threshold_exact(
+            &cfg,
+            &ascend_npu(),
+            1,
+            &ParallelismConfig::single(),
+            KernelKind::Naive,
+        );
+    }
+
+    /// The AMLA analytic pair threshold brackets the numeric crossover
+    /// of the priced AMLA curves, exactly like the classic Eq. 1 test
+    /// above brackets typhoon-vs-absorb.
+    #[test]
+    fn amla_analytic_threshold_brackets_cost_model_crossover() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        for par in [ParallelismConfig::single(), ParallelismConfig { tp: 4, sp: 4 }] {
+            let analytic =
+                parallel_pair_threshold(&cfg, &hw, 1, &par, KernelKind::AmlaAbsorb);
+            let numeric = (1..=256u64)
+                .find(|&b| {
+                    let wl = AttentionWorkload::decode(b, 4096, 0);
+                    parallel_attention_time(&cfg, KernelKind::TyphoonAmla, &wl, &hw, &par)
+                        <= parallel_attention_time(
+                            &cfg,
+                            KernelKind::AmlaAbsorb,
+                            &wl,
+                            &hw,
+                            &par,
+                        )
                 })
                 .expect("crossover within scan range") as usize;
             assert!(

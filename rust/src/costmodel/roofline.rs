@@ -25,7 +25,12 @@ fn kernel_factor(cfg: &ModelConfig, kind: KernelKind) -> (u64, u64) {
     match kind {
         KernelKind::Naive => (cfg.naive_factor(), cfg.uncompressed_words()),
         KernelKind::Absorb => (cfg.absorb_factor(), cfg.latent_words()),
-        KernelKind::Typhoon => unreachable!("typhoon mixes both; plot its parts"),
+        KernelKind::AmlaAbsorb => {
+            (crate::costmodel::flops::amla_macs(cfg.absorb_factor()), cfg.latent_words())
+        }
+        KernelKind::Typhoon | KernelKind::TyphoonAmla => {
+            unreachable!("typhoon mixes both; plot its parts")
+        }
     }
 }
 

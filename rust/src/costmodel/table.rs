@@ -16,10 +16,10 @@
 
 use std::collections::HashMap;
 
-use crate::config::{KernelKind, ModelConfig};
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 
 use super::flops::{attention_cost, AttentionWorkload, CostBreakdown};
-use super::parallel::{parallel_attention_cost, ParallelismConfig};
+use super::parallel::{parallel_attention_cost, parallel_attention_time, ParallelismConfig};
 
 /// Cache key: (kernel, batch, shared_len, nonshared_len) with s_q = 1
 /// (plain decode; speculative s_q > 1 bypasses the table).
@@ -115,6 +115,77 @@ impl CostTable {
     }
 }
 
+/// Opaque handle to a backend registered with a [`PriceTable`].
+pub type BackendId = usize;
+
+/// Roofline-*time* memo keyed by `(kernel, backend, B, L_s, L_n)` —
+/// the pricing companion to [`CostTable`].  The kernel registry prices
+/// N kernels per prefix group each iteration and the per-backend
+/// crossover sweep scans the same curves across hardware presets; both
+/// recur on identical keys, so the table turns repeated roofline
+/// evaluations into hash lookups.  Exactness: `parallel_attention_time`
+/// is a pure function of its integer workload and the two specs, so a
+/// hit returns the identical f64 bits.
+#[derive(Debug)]
+pub struct PriceTable {
+    cfg: ModelConfig,
+    par: ParallelismConfig,
+    /// Registered hardware presets; `BackendId` indexes this.
+    backends: Vec<HardwareSpec>,
+    map: HashMap<(KernelKind, BackendId, u64, u64, u64), f64>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PriceTable {
+    pub fn new(cfg: ModelConfig, par: ParallelismConfig) -> Self {
+        PriceTable { cfg, par, backends: Vec::new(), map: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Register a hardware preset as a pricing backend; re-registering
+    /// a spec with the same name returns the existing id (the memo
+    /// stays valid because presets are keyed by name).
+    pub fn register_backend(&mut self, hw: HardwareSpec) -> BackendId {
+        if let Some(i) = self.backends.iter().position(|b| b.name == hw.name) {
+            return i;
+        }
+        self.backends.push(hw);
+        self.backends.len() - 1
+    }
+
+    pub fn backend(&self, id: BackendId) -> &HardwareSpec {
+        &self.backends[id]
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Memoized per-rank roofline seconds of one decode iteration.
+    pub fn time(
+        &mut self,
+        kernel: KernelKind,
+        backend: BackendId,
+        batch: u64,
+        l_s: u64,
+        l_n: u64,
+    ) -> f64 {
+        let key = (kernel, backend, batch, l_s, l_n);
+        if let Some(&t) = self.map.get(&key) {
+            self.hits += 1;
+            return t;
+        }
+        self.misses += 1;
+        let wl = AttentionWorkload::decode(batch, l_s, l_n);
+        let t = parallel_attention_time(&self.cfg, kernel, &wl, &self.backends[backend], &self.par);
+        if self.map.len() >= MAX_ENTRIES {
+            self.map.clear();
+        }
+        self.map.insert(key, t);
+        t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,8 +204,44 @@ mod tests {
                 assert_eq!(table.cost(kernel, b, ls, ln), direct);
             }
         }
-        assert_eq!(table.misses, 9);
-        assert_eq!(table.hits, 9);
+        // 5 kernels x 3 workloads.
+        assert_eq!(table.misses, 15);
+        assert_eq!(table.hits, 15);
+    }
+
+    /// `PriceTable` memoizes `parallel_attention_time` bit-identically
+    /// per (kernel, backend, workload) key, and backend registration
+    /// dedups by name.
+    #[test]
+    fn price_table_memoizes_per_backend() {
+        use crate::config::hardware::{ascend_npu, gpu_h800_decode};
+        use crate::costmodel::parallel::parallel_attention_time;
+
+        let cfg = deepseek_v3();
+        let par = ParallelismConfig { tp: 4, sp: 2 };
+        let mut prices = PriceTable::new(cfg.clone(), par);
+        let npu = prices.register_backend(ascend_npu());
+        let gpu = prices.register_backend(gpu_h800_decode());
+        assert_ne!(npu, gpu);
+        assert_eq!(prices.register_backend(ascend_npu()), npu, "dedup by name");
+        assert_eq!(prices.backend(gpu).name, "gpu-h800-decode");
+
+        for kernel in KernelKind::all() {
+            for (id, hw) in [(npu, ascend_npu()), (gpu, gpu_h800_decode())] {
+                let wl = AttentionWorkload::decode(128, 4096, 256);
+                let direct = parallel_attention_time(&cfg, kernel, &wl, &hw, &par);
+                assert_eq!(prices.time(kernel, id, 128, 4096, 256).to_bits(), direct.to_bits());
+                // Hit path returns identical bits.
+                assert_eq!(prices.time(kernel, id, 128, 4096, 256).to_bits(), direct.to_bits());
+            }
+        }
+        assert_eq!(prices.misses, 10);
+        assert_eq!(prices.hits, 10);
+        // Same workload, different backend: distinct keys, different times.
+        assert_ne!(
+            prices.time(KernelKind::Typhoon, npu, 128, 4096, 256),
+            prices.time(KernelKind::Typhoon, gpu, 128, 4096, 256)
+        );
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   info       show artifact manifest + runtime info
 
 use anyhow::{bail, Result};
-use typhoon_mla::config::hardware;
+use typhoon_mla::config::hardware::{self, Backend, HardwareSpec};
 use typhoon_mla::config::model;
 use typhoon_mla::config::{KernelKind, ServingConfig};
 use typhoon_mla::coordinator::{Coordinator, KernelPolicy};
@@ -37,7 +37,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: typhoon-mla <serve|simulate|threshold|info> [options]\n\
                  serve    --kernel typhoon|absorb|naive --requests N --gen N\n\
-                 simulate --model deepseek-v3|kimi-k2 --hw ascend-npu|gpu \
+                 simulate --model deepseek-v3|kimi-k2 [--hw ascend-npu|gpu | \
+                 --backend npu|gpu|cpu] \
                  --kernel K --batch B --dataset mmlu|gsm8k|simpleqa --prompt a|b|c \
                  [--tenants N --skew S]\n\
                  simulate --replicas N --router round-robin|least-loaded|prefix-affinity \
@@ -45,10 +46,26 @@ fn main() -> Result<()> {
                  --slo-ttft S --autoscale --scale-headroom H --min-replicas N \
                  --max-replicas N --faults --fault-seed S --crashes N --stalls N \
                  --degradations N --transfer-loss P --degrade-factor F]\n\
-                 threshold --model M --hw H"
+                 threshold --model M [--hw H | --backend npu|gpu|cpu]"
             );
             Ok(())
         }
+    }
+}
+
+/// Resolve the hardware spec from `--hw` (a spec name) or `--backend`
+/// (an accelerator preset: npu|gpu|cpu); passing both is a conflict.
+/// Absent both, `default_hw` wins — so existing invocations without
+/// the new flag stay bit-identical to the old CLI.
+fn resolve_hw(args: &Args, default_hw: &str) -> Result<HardwareSpec> {
+    let backend = args.get_choice("backend", &["npu", "gpu", "cpu"])?;
+    if backend.is_some() && args.get("hw").is_some() {
+        bail!("--backend and --hw conflict; pass exactly one");
+    }
+    match backend {
+        Some(name) => Ok(Backend::parse(name)?.preset()),
+        None => hardware::by_name(args.get_or("hw", default_hw))
+            .ok_or_else(|| anyhow::anyhow!("unknown hardware")),
     }
 }
 
@@ -87,8 +104,7 @@ fn serve(args: &Args) -> Result<()> {
 fn simulate(args: &Args) -> Result<()> {
     let model = model::by_name(args.get_or("model", "deepseek-v3"))
         .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-    let hw = hardware::by_name(args.get_or("hw", "ascend-npu"))
-        .ok_or_else(|| anyhow::anyhow!("unknown hardware"))?;
+    let hw = resolve_hw(args, "ascend-npu")?;
     let kernel = KernelKind::parse(args.get_or("kernel", "typhoon"))?;
     let batch = args.get_usize("batch", 256)?;
     // Multi-tenant mode: N prefix groups with Zipf(skew) arrivals.
@@ -317,8 +333,7 @@ fn simulate(args: &Args) -> Result<()> {
 fn threshold(args: &Args) -> Result<()> {
     let model = model::by_name(args.get_or("model", "deepseek-v3"))
         .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-    let hw = hardware::by_name(args.get_or("hw", "ascend-npu"))
-        .ok_or_else(|| anyhow::anyhow!("unknown hardware"))?;
+    let hw = resolve_hw(args, "ascend-npu")?;
     println!(
         "B_theta({}, {}) = {}",
         model.name,
@@ -326,6 +341,56 @@ fn threshold(args: &Args) -> Result<()> {
         batch_threshold(&model, &hw, 1)
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from), &[]).unwrap()
+    }
+
+    #[test]
+    fn backend_flag_resolves_presets_and_rejects_unknown() {
+        assert_eq!(resolve_hw(&parse("simulate"), "ascend-npu").unwrap().name, "ascend-npu");
+        assert_eq!(
+            resolve_hw(&parse("simulate --backend gpu"), "ascend-npu").unwrap().name,
+            "gpu-h800-decode"
+        );
+        assert_eq!(
+            resolve_hw(&parse("simulate --backend cpu"), "ascend-npu").unwrap().name,
+            "host-cpu"
+        );
+        // Unknown names are rejected with the candidate list.
+        let err = resolve_hw(&parse("simulate --backend tpu"), "ascend-npu")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--backend") && err.contains("npu|gpu|cpu"), "{err}");
+        // Passing both selectors is a conflict, not a silent override.
+        let err = resolve_hw(&parse("simulate --backend npu --hw gpu-h800"), "ascend-npu")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("conflict"), "{err}");
+    }
+
+    /// `--backend npu` resolves to the very same spec as the historical
+    /// default — every field bit-identical — so adding the flag to a
+    /// single-kernel run cannot perturb its results.
+    #[test]
+    fn backend_npu_is_bit_identical_to_default_hw() {
+        let old = resolve_hw(&parse("simulate"), "ascend-npu").unwrap();
+        let new = resolve_hw(&parse("simulate --backend npu"), "ascend-npu").unwrap();
+        assert_eq!(old.name, new.name);
+        assert_eq!(old.peak_ops.to_bits(), new.peak_ops.to_bits());
+        assert_eq!(old.hbm_bw.to_bits(), new.hbm_bw.to_bits());
+        assert_eq!(old.hbm_bytes, new.hbm_bytes);
+        assert_eq!(old.interconnect_bw.to_bits(), new.interconnect_bw.to_bits());
+        assert_eq!(old.bytes_per_word.to_bits(), new.bytes_per_word.to_bits());
+        assert_eq!(old.compute_efficiency.to_bits(), new.compute_efficiency.to_bits());
+        assert_eq!(old.bandwidth_efficiency.to_bits(), new.bandwidth_efficiency.to_bits());
+        assert_eq!(old.backend, new.backend);
+    }
 }
 
 fn info() -> Result<()> {

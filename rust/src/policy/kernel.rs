@@ -1,13 +1,35 @@
 //! Kernel-selection policy: TyphoonMLA's fall-back rule (paper §3.1,
-//! "Fall-back to Absorb").
+//! "Fall-back to Absorb"), generalized into a cost-priced **kernel
+//! registry** (DESIGN.md §16).
 //!
 //! Below the batch threshold B_theta (Eq. 1) there is not enough data
 //! reuse for the naive stage to pay off, so a Typhoon deployment
 //! executes the absorb-only kernel instead — "ensuring consistently
 //! high efficiency across a wide range of batch sizes".
 //!
-//! With prefix groups the decision is **per group**: the naive stage
-//! amortizes over the sequences sharing *each* prefix, so `select` is
+//! The registry turns that binary branch into a table: every kernel is
+//! a [`KernelDescriptor`] (name, Table-1 cost function over
+//! `(B, L_s, L_n, HardwareSpec, Parallelism)`, applicability
+//! predicate), and [`KernelPolicy`] prices the applicable entries per
+//! prefix group each iteration.  Entries split into two families —
+//! naive-shared readers (typhoon, typhoon-amla, naive) and the absorb
+//! formulations (absorb, amla-absorb).  All naive-family entries share
+//! the *identical* naive shared stage, so the family decision reduces
+//! to the pairwise Eq. 1 crossover against the chosen absorb fallback
+//! (`costmodel::parallel::parallel_pair_threshold`), precomputed as an
+//! integer threshold; *within* a family the cheapest priced entry wins
+//! (strict `<`, first-in-order on ties).
+//!
+//! **Bit-identity invariant** (pinned by `tests/registry.rs`): the
+//! registry restricted to the binary `{requested, absorb-fallback}`
+//! population — the default every constructor seeds — reproduces the
+//! pre-registry `KernelPolicy` decision for every input.  The floored
+//! analytic threshold, not a priced comparison, makes the family call:
+//! Eq. 1 floors the exact crossover (61.44 -> 61 on Ascend) while a
+//! priced scan would cross at 62, so pricing the family decision would
+//! flip the boundary batch.
+//!
+//! With prefix groups the decision is **per group**: `select` is
 //! called with the group's occupancy and the group's shared length —
 //! a cold tenant falls back to absorb while a hot tenant runs Typhoon
 //! in the same decode iteration.
@@ -19,24 +41,175 @@
 //! replication regime.
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
-use crate::costmodel::parallel::{parallel_batch_threshold, ParallelismConfig};
+use crate::costmodel::exec_time::component_time;
+use crate::costmodel::flops::{AttentionWorkload, CostBreakdown};
+use crate::costmodel::parallel::{
+    parallel_attention_cost, parallel_batch_threshold, parallel_pair_threshold,
+    ParallelismConfig,
+};
+
+/// Everything the registry knows about one prefix group when pricing
+/// its kernel for the next decode iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupContext {
+    /// The group's occupancy (whole batch for single-prefix configs).
+    pub batch: usize,
+    /// The group's shared-prefix length, tokens.
+    pub shared_len: usize,
+    /// Mean non-shared context length across the group's members,
+    /// tokens.  The binary (threshold-only) population never reads it;
+    /// the N-way pricing uses it to weigh the non-shared stage.
+    pub mean_non_shared: usize,
+    /// What the operator configured the stack to run.
+    pub requested: KernelKind,
+}
+
+/// Table-1 cost of one kernel at a workload, per rank under (TP, SP).
+pub type KernelCostFn =
+    fn(&ModelConfig, &AttentionWorkload, &ParallelismConfig) -> CostBreakdown;
+
+/// Whether a registry entry may serve a group at all.
+pub type ApplicableFn = fn(&GroupContext) -> bool;
+
+/// One priced kernel in the registry.
+#[derive(Clone, Debug)]
+pub struct KernelDescriptor {
+    pub kind: KernelKind,
+    pub name: &'static str,
+    /// Cost function over `(B, L_s, L_n)` x parallelism; the policy
+    /// turns it into seconds against its `HardwareSpec`.
+    pub cost: KernelCostFn,
+    /// Applicability predicate evaluated per group.
+    pub applicable: ApplicableFn,
+}
+
+fn always(_: &GroupContext) -> bool {
+    true
+}
+
+fn with_shared_prefix(ctx: &GroupContext) -> bool {
+    ctx.shared_len > 0
+}
+
+fn cost_fn(kind: KernelKind) -> KernelCostFn {
+    match kind {
+        KernelKind::Typhoon => |c, w, p| parallel_attention_cost(c, KernelKind::Typhoon, w, p),
+        KernelKind::Absorb => |c, w, p| parallel_attention_cost(c, KernelKind::Absorb, w, p),
+        KernelKind::Naive => |c, w, p| parallel_attention_cost(c, KernelKind::Naive, w, p),
+        KernelKind::AmlaAbsorb => {
+            |c, w, p| parallel_attention_cost(c, KernelKind::AmlaAbsorb, w, p)
+        }
+        KernelKind::TyphoonAmla => {
+            |c, w, p| parallel_attention_cost(c, KernelKind::TyphoonAmla, w, p)
+        }
+    }
+}
+
+impl KernelDescriptor {
+    /// The standard descriptor for a kernel: its Table-1 parallel cost
+    /// model and the given applicability predicate.
+    pub fn standard(kind: KernelKind, applicable: ApplicableFn) -> Self {
+        KernelDescriptor { kind, name: kind.as_str(), cost: cost_fn(kind), applicable }
+    }
+}
+
+/// An ordered table of kernel descriptors.  Order is the tie-break:
+/// when two entries of a family price identically, the earlier one
+/// wins — `full()` lists the legacy kernels first so exact ties keep
+/// today's choices.
+#[derive(Clone, Debug)]
+pub struct KernelRegistry {
+    entries: Vec<KernelDescriptor>,
+}
+
+impl KernelRegistry {
+    /// The binary seed population for an operator-requested kernel:
+    /// the kernel itself plus (for the naive-shared readers) its
+    /// absorb-family fallback.  This is exactly the pre-registry
+    /// policy's option set, and the predicates are `always` so the
+    /// decision is purely threshold-driven — the bit-identity mode.
+    pub fn binary(requested: KernelKind) -> Self {
+        let kinds: &[KernelKind] = match requested {
+            KernelKind::Typhoon => &[KernelKind::Typhoon, KernelKind::Absorb],
+            KernelKind::TyphoonAmla => &[KernelKind::TyphoonAmla, KernelKind::AmlaAbsorb],
+            KernelKind::Absorb => &[KernelKind::Absorb],
+            KernelKind::AmlaAbsorb => &[KernelKind::AmlaAbsorb],
+            KernelKind::Naive => &[KernelKind::Naive],
+        };
+        KernelRegistry {
+            entries: kinds.iter().map(|&k| KernelDescriptor::standard(k, always)).collect(),
+        }
+    }
+
+    /// The full N-way population: every kernel the cost model knows.
+    /// Naive-shared readers require a shared prefix to exist; the
+    /// absorb formulations serve any group.
+    pub fn full() -> Self {
+        let entries = KernelKind::all()
+            .iter()
+            .map(|&k| {
+                let applicable: ApplicableFn =
+                    if k.reads_shared_naive() { with_shared_prefix } else { always };
+                KernelDescriptor::standard(k, applicable)
+            })
+            .collect();
+        KernelRegistry { entries }
+    }
+
+    pub fn entries(&self) -> &[KernelDescriptor] {
+        &self.entries
+    }
+
+    pub fn kinds(&self) -> Vec<KernelKind> {
+        self.entries.iter().map(|d| d.kind).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The model/hardware/sharding a policy prices its registry against.
+/// Absent (threshold-override construction), families must be
+/// singletons or the first entry wins.
+#[derive(Clone, Debug)]
+struct PricingContext {
+    cfg: ModelConfig,
+    hw: HardwareSpec,
+    par: ParallelismConfig,
+    s_q: u64,
+}
 
 #[derive(Clone, Debug)]
 pub struct KernelPolicy {
     /// The configured kernel (what the operator asked for).
     pub requested: KernelKind,
-    /// Fall-back threshold in batch size (only used for Typhoon).
+    /// Fall-back threshold in batch size against the classic absorb
+    /// fallback (the legacy Eq. 1 quantity; kept as the public pricing
+    /// surface `migration_cooldown_tokens` et al. consume).
     pub b_theta: usize,
     /// A shared prefix must exist and be at least this long for the
     /// naive stage to be worth scheduling at all.
     pub min_shared_len: usize,
+    /// The priced option set.
+    registry: KernelRegistry,
+    /// Per-entry integer fall-back threshold: `Some(B_theta)` for
+    /// absorb-family entries (the pairwise Eq. 1 crossover against
+    /// *that* fallback), `None` for naive-family entries.
+    thetas: Vec<Option<usize>>,
+    pricing: Option<PricingContext>,
 }
 
 impl KernelPolicy {
     /// Derive the per-rank B_theta from model + hardware + the stack's
-    /// TP/SP sharding via the parallel Eq. 1.  The query length is
-    /// explicit (`s_q = 1` for plain decode; speculative/tree decode
-    /// lowers the threshold proportionally).
+    /// TP/SP sharding via the parallel Eq. 1, over the binary seed
+    /// registry for `requested`.  The query length is explicit
+    /// (`s_q = 1` for plain decode; speculative/tree decode lowers the
+    /// threshold proportionally).
     pub fn from_parallelism(
         requested: KernelKind,
         cfg: &ModelConfig,
@@ -44,10 +217,54 @@ impl KernelPolicy {
         s_q: u64,
         par: &ParallelismConfig,
     ) -> Self {
+        Self::with_registry(KernelRegistry::binary(requested), requested, cfg, hw, s_q, par)
+    }
+
+    /// The N-way policy: price the full registry per prefix group.
+    /// `requested` is what the operator configured (it seeds the
+    /// `GroupContext`); the registry may still pick any applicable
+    /// entry.
+    pub fn n_way(
+        requested: KernelKind,
+        cfg: &ModelConfig,
+        hw: &HardwareSpec,
+        s_q: u64,
+        par: &ParallelismConfig,
+    ) -> Self {
+        Self::with_registry(KernelRegistry::full(), requested, cfg, hw, s_q, par)
+    }
+
+    /// A policy over an explicit registry, with every absorb-family
+    /// entry's pairwise threshold derived analytically.
+    pub fn with_registry(
+        registry: KernelRegistry,
+        requested: KernelKind,
+        cfg: &ModelConfig,
+        hw: &HardwareSpec,
+        s_q: u64,
+        par: &ParallelismConfig,
+    ) -> Self {
+        let thetas = registry
+            .entries
+            .iter()
+            .map(|d| {
+                d.kind
+                    .is_absorb_family()
+                    .then(|| parallel_pair_threshold(cfg, hw, s_q, par, d.kind))
+            })
+            .collect();
         KernelPolicy {
             requested,
             b_theta: parallel_batch_threshold(cfg, hw, s_q, par),
             min_shared_len: 1,
+            registry,
+            thetas,
+            pricing: Some(PricingContext {
+                cfg: cfg.clone(),
+                hw: hw.clone(),
+                par: *par,
+                s_q,
+            }),
         }
     }
 
@@ -64,29 +281,142 @@ impl KernelPolicy {
         Self::from_parallelism(requested, cfg, hw, 1, &ParallelismConfig::single())
     }
 
+    /// Threshold-override construction (tests, calibrated deployments):
+    /// the binary registry with every absorb entry's threshold pinned
+    /// to `b_theta`; no pricing context.
     pub fn with_threshold(requested: KernelKind, b_theta: usize) -> Self {
-        KernelPolicy { requested, b_theta, min_shared_len: 1 }
+        let registry = KernelRegistry::binary(requested);
+        let thetas = registry
+            .entries
+            .iter()
+            .map(|d| d.kind.is_absorb_family().then_some(b_theta))
+            .collect();
+        KernelPolicy {
+            requested,
+            b_theta,
+            min_shared_len: 1,
+            registry,
+            thetas,
+            pricing: None,
+        }
+    }
+
+    pub fn registry(&self) -> &KernelRegistry {
+        &self.registry
+    }
+
+    /// The pairwise fall-back threshold of an absorb-family entry, or
+    /// `None` for naive-family kinds / kinds not in the registry.
+    pub fn theta_for(&self, kind: KernelKind) -> Option<usize> {
+        self.registry
+            .entries
+            .iter()
+            .position(|d| d.kind == kind)
+            .and_then(|i| self.thetas[i])
     }
 
     /// The per-group decision: `batch` is the *group's* occupancy (the
     /// whole batch for single-prefix configs), `shared_len` the group's
-    /// prefix length.
+    /// prefix length.  Legacy entry point — prices the group with an
+    /// unknown (zero) mean non-shared length, which the binary
+    /// population ignores entirely.
     pub fn select(&self, batch: usize, shared_len: usize) -> KernelKind {
-        match self.requested {
-            KernelKind::Typhoon
-                if batch < self.b_theta || shared_len < self.min_shared_len =>
-            {
-                KernelKind::Absorb
+        self.select_group(batch, shared_len, 0)
+    }
+
+    /// The registry decision with the group's full context.
+    pub fn select_group(
+        &self,
+        batch: usize,
+        shared_len: usize,
+        mean_non_shared: usize,
+    ) -> KernelKind {
+        let ctx = GroupContext {
+            batch,
+            shared_len,
+            mean_non_shared,
+            requested: self.requested,
+        };
+        let applicable: Vec<usize> = (0..self.registry.entries.len())
+            .filter(|&i| (self.registry.entries[i].applicable)(&ctx))
+            .collect();
+        let best_naive = self.best_in_family(&applicable, &ctx, true);
+        let best_absorb = self.best_in_family(&applicable, &ctx, false);
+        match (best_naive, best_absorb) {
+            (Some(n), Some(a)) => {
+                // The family decision is the analytic pairwise Eq. 1
+                // threshold against the absorb entry that would run —
+                // floored, so the boundary batch matches the paper's
+                // integer B_theta (and the pre-registry policy).
+                let theta = self.thetas[a].expect("absorb entries carry a threshold");
+                if ctx.batch >= theta && ctx.shared_len >= self.min_shared_len {
+                    self.registry.entries[n].kind
+                } else {
+                    self.registry.entries[a].kind
+                }
             }
-            k => k,
+            (Some(n), None) => self.registry.entries[n].kind,
+            (None, Some(a)) => self.registry.entries[a].kind,
+            // No applicable entry (a fully predicated-out registry):
+            // run what the operator asked for.
+            (None, None) => self.requested,
         }
+    }
+
+    /// Cheapest applicable entry of one family: priced roofline
+    /// seconds at the group's workload, strict `<` so the earliest
+    /// entry wins exact ties.  Without a pricing context (threshold
+    /// override), the earliest applicable entry wins outright — binary
+    /// registries have singleton families, so nothing is lost.
+    fn best_in_family(
+        &self,
+        applicable: &[usize],
+        ctx: &GroupContext,
+        naive_family: bool,
+    ) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for &i in applicable {
+            let d = &self.registry.entries[i];
+            if d.kind.reads_shared_naive() != naive_family {
+                continue;
+            }
+            match (&self.pricing, &mut best) {
+                (_, None) => best = Some((i, self.price(i, ctx))),
+                (None, Some(_)) => {} // first applicable wins unpriced
+                (Some(_), Some((_, t))) => {
+                    let ti = self.price(i, ctx);
+                    if ti < *t {
+                        best = Some((i, ti));
+                    }
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Roofline seconds of entry `i` at the group's workload (0.0
+    /// without a pricing context — only reachable for singleton
+    /// families where the value is never compared).
+    fn price(&self, i: usize, ctx: &GroupContext) -> f64 {
+        let Some(pc) = &self.pricing else { return 0.0 };
+        let wl = AttentionWorkload {
+            batch: ctx.batch as u64,
+            s_q: pc.s_q,
+            l_s: ctx.shared_len as u64,
+            l_n: ctx.mean_non_shared as u64,
+        };
+        let c = (self.registry.entries[i].cost)(&pc.cfg, &wl, &pc.par);
+        [c.shared, c.non_shared, c.proj_kvb1, c.proj_kvb2, c.combine]
+            .iter()
+            .map(|comp| component_time(comp, &pc.hw))
+            .sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::hardware::ascend_npu;
+    use crate::config::hardware::{ascend_npu, gpu_h800_decode};
     use crate::config::model::deepseek_v3;
 
     #[test]
@@ -105,12 +435,29 @@ mod tests {
 
     #[test]
     fn baselines_never_switch() {
-        for k in [KernelKind::Absorb, KernelKind::Naive] {
+        for k in [KernelKind::Absorb, KernelKind::Naive, KernelKind::AmlaAbsorb] {
             let p = KernelPolicy::with_threshold(k, 61);
             for b in [1, 61, 1024] {
                 assert_eq!(p.select(b, 4096), k);
             }
         }
+    }
+
+    /// The AMLA pair behaves like the classic pair around its own
+    /// (higher) threshold: 70 on Ascend vs the classic 61.
+    #[test]
+    fn typhoon_amla_falls_back_to_amla_absorb() {
+        let p = KernelPolicy::from_parallelism(
+            KernelKind::TyphoonAmla,
+            &deepseek_v3(),
+            &ascend_npu(),
+            1,
+            &ParallelismConfig::single(),
+        );
+        assert_eq!(p.theta_for(KernelKind::AmlaAbsorb), Some(70));
+        assert_eq!(p.select(69, 4096), KernelKind::AmlaAbsorb);
+        assert_eq!(p.select(70, 4096), KernelKind::TyphoonAmla);
+        assert_eq!(p.select(1024, 0), KernelKind::AmlaAbsorb, "no shared prefix");
     }
 
     /// The satellite pin: the explicit `single()` derivation reproduces
@@ -126,6 +473,8 @@ mod tests {
             &ParallelismConfig::single(),
         );
         assert_eq!(p.b_theta, 61);
+        assert_eq!(p.theta_for(KernelKind::Absorb), Some(61));
+        assert_eq!(p.theta_for(KernelKind::Typhoon), None, "naive family has no theta");
         #[allow(deprecated)]
         let implicit = KernelPolicy::from_cost_model(
             KernelKind::Typhoon,
@@ -176,8 +525,8 @@ mod tests {
         );
     }
 
-    /// Monotonicity: once typhoon is selected at batch b, it stays
-    /// selected for every larger batch (same shared length).
+    /// Monotonicity: once a naive-family kernel is selected at batch b,
+    /// it stays selected for every larger batch (same shared length).
     #[test]
     fn selection_monotone_in_batch() {
         let p = KernelPolicy::with_threshold(KernelKind::Typhoon, 61);
@@ -188,9 +537,106 @@ mod tests {
                 KernelKind::Absorb => {
                     assert!(!seen_typhoon, "fallback after typhoon at b={b}")
                 }
-                KernelKind::Naive => unreachable!(),
+                k => unreachable!("binary typhoon registry picked {k:?}"),
             }
         }
         assert!(seen_typhoon);
+    }
+
+    /// N-way mode on the full registry: the AMLA variants price
+    /// strictly cheaper than their classic counterparts on compute-
+    /// bound stages, so the registry picks them — amla-absorb below
+    /// the family threshold, typhoon-amla above it (nonzero L_n), and
+    /// pure naive when there is no non-shared context at all (no
+    /// projections to pay for).
+    #[test]
+    fn n_way_prices_the_full_registry() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let p = KernelPolicy::n_way(
+            KernelKind::Typhoon,
+            &cfg,
+            &hw,
+            1,
+            &ParallelismConfig::single(),
+        );
+        assert_eq!(p.registry().len(), 5);
+        // Family threshold is the *winning* absorb entry's: amla's 70.
+        assert_eq!(p.theta_for(KernelKind::AmlaAbsorb), Some(70));
+        assert_eq!(p.select_group(8, 4096, 512), KernelKind::AmlaAbsorb);
+        assert_eq!(p.select_group(1024, 4096, 512), KernelKind::TyphoonAmla);
+        assert_eq!(p.select_group(1024, 4096, 0), KernelKind::Naive);
+        // No shared prefix: naive readers are inapplicable.
+        assert_eq!(p.select_group(1024, 0, 512), KernelKind::AmlaAbsorb);
+    }
+
+    /// The family decision tracks the winning absorb entry's threshold:
+    /// between 61 (classic) and 70 (amla) the N-way registry still
+    /// serves the absorb family, because the cheaper amla fallback
+    /// stays competitive longer.
+    #[test]
+    fn n_way_family_flip_uses_the_winning_fallback_threshold() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let p = KernelPolicy::n_way(
+            KernelKind::Typhoon,
+            &cfg,
+            &hw,
+            1,
+            &ParallelismConfig::single(),
+        );
+        for b in 61..70 {
+            assert!(
+                p.select_group(b, 4096, 512).is_absorb_family(),
+                "b={b} sits between the classic and amla crossovers"
+            );
+        }
+        assert!(p.select_group(70, 4096, 512).reads_shared_naive());
+    }
+
+    /// Per-backend thresholds: the decode-calibrated GPU preset's
+    /// T/M = 100 puts the classic crossover at 29 and the AMLA one at
+    /// 33 — both pinned here so cost-model edits can't silently move
+    /// them.
+    #[test]
+    fn gpu_decode_thresholds_pinned() {
+        let cfg = deepseek_v3();
+        let hw = gpu_h800_decode();
+        let p = KernelPolicy::n_way(
+            KernelKind::Typhoon,
+            &cfg,
+            &hw,
+            1,
+            &ParallelismConfig::single(),
+        );
+        assert_eq!(p.b_theta, 29);
+        assert_eq!(p.theta_for(KernelKind::Absorb), Some(29));
+        assert_eq!(p.theta_for(KernelKind::AmlaAbsorb), Some(33));
+    }
+
+    /// Registry shapes: binary populations per requested kernel, and
+    /// the full table lists the legacy kernels first (tie-break order).
+    #[test]
+    fn registry_populations() {
+        assert_eq!(
+            KernelRegistry::binary(KernelKind::Typhoon).kinds(),
+            vec![KernelKind::Typhoon, KernelKind::Absorb]
+        );
+        assert_eq!(
+            KernelRegistry::binary(KernelKind::TyphoonAmla).kinds(),
+            vec![KernelKind::TyphoonAmla, KernelKind::AmlaAbsorb]
+        );
+        assert_eq!(
+            KernelRegistry::binary(KernelKind::Absorb).kinds(),
+            vec![KernelKind::Absorb]
+        );
+        assert_eq!(
+            KernelRegistry::binary(KernelKind::Naive).kinds(),
+            vec![KernelKind::Naive]
+        );
+        let full = KernelRegistry::full();
+        assert!(!full.is_empty());
+        assert_eq!(full.kinds()[..3], KernelKind::all()[..3]);
+        assert_eq!(full.kinds().len(), KernelKind::all().len());
     }
 }

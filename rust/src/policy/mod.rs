@@ -46,7 +46,7 @@ use crate::costmodel::table::CostTable;
 use crate::costmodel::transfer::{prefix_transfer_seconds, shared_prefill_seconds};
 
 pub use admission::SloAdmission;
-pub use kernel::KernelPolicy;
+pub use kernel::{GroupContext, KernelDescriptor, KernelPolicy, KernelRegistry};
 pub use migration::{MigrationDecision, MigrationPolicy};
 pub use recovery::{RecoveryPolicy, RetryAttempt};
 pub use scaling::{ScalingDecision, ScalingPolicy};
@@ -107,6 +107,18 @@ impl PolicyEngine {
     /// The per-group kernel decision (delegates to the fall-back rule).
     pub fn select(&self, occupancy: usize, shared_len: usize) -> KernelKind {
         self.kernel.select(occupancy, shared_len)
+    }
+
+    /// The registry decision with the group's mean non-shared context
+    /// threaded through (an N-way registry prices it; the binary seed
+    /// population ignores it, so this is `select` bit-identical there).
+    pub fn select_group(
+        &self,
+        occupancy: usize,
+        shared_len: usize,
+        mean_non_shared: usize,
+    ) -> KernelKind {
+        self.kernel.select_group(occupancy, shared_len, mean_non_shared)
     }
 
     /// Modeled per-rank seconds of one group's shared stage at a given

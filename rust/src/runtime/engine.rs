@@ -278,9 +278,10 @@ impl Engine for TinyModelEngine {
         let lens_l = literal_i32(&[self.b], &self.lengths)?;
         let sl_l = literal_i32(&[1], &[shared.len])?;
         let (ckv_l, krope_l) = self.cache_literals()?;
-        let (sa, sb): (&Literal, &Literal) = match kernel {
-            KernelKind::Absorb => (&shared.ckv, &shared.krope),
-            _ => (&shared.k, &shared.v),
+        let (sa, sb): (&Literal, &Literal) = if kernel.is_absorb_family() {
+            (&shared.ckv, &shared.krope)
+        } else {
+            (&shared.k, &shared.v)
         };
         let mut args: Vec<&Literal> = vec![&tokens_l, &lens_l, &sl_l, sa, sb, &ckv_l, &krope_l];
         args.extend(self.weights.iter());

@@ -19,11 +19,13 @@ pub use engine::SimEngine;
 pub use faults::{DegradeWindow, FaultEvent, FaultKind, FaultPlan};
 pub use serving_sim::{run_experiment, run_kernel_comparison, SimParams, SimReport};
 pub use sweep::{
-    cluster_cells, cluster_row_configs, run_cluster_sweep, run_throughput_sweep,
-    throughput_cells, ClusterCell, ClusterCellResult, SweepExecutor, ThroughputCell,
+    cluster_cells, cluster_row_configs, crossover_cells, run_cluster_sweep,
+    run_crossover_sweep, run_throughput_sweep, throughput_cells, ClusterCell,
+    ClusterCellResult, CrossoverCell, CrossoverCellResult, SweepExecutor, ThroughputCell,
     ThroughputCellResult,
 };
 pub use tenancy::{
-    run_tenant_comparison, run_tenant_experiment, run_tenant_experiment_with,
-    tenant_serving_stack, TenantSimParams, TenantSimReport,
+    calibration_cell, run_tenant_comparison, run_tenant_experiment,
+    run_tenant_experiment_with, tenant_serving_stack, CalibrationCell, TenantSimParams,
+    TenantSimReport,
 };

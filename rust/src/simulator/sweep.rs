@@ -17,7 +17,13 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::config::hardware::Backend;
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+use crate::costmodel::flops::AttentionWorkload;
+use crate::costmodel::parallel::{
+    parallel_attention_time, parallel_pair_threshold, parallel_pair_threshold_exact,
+    ParallelismConfig,
+};
 use crate::workload::datasets::all_datasets;
 use crate::workload::prompts::all_prompts;
 use crate::workload::{Dataset, SystemPrompt};
@@ -247,6 +253,90 @@ pub fn run_tenant_sweep(
         p.total_requests = c.total_requests;
         let reports = run_tenant_comparison(&p)?;
         Ok(TenantCellResult { cell: c.clone(), reports })
+    })
+}
+
+/// One cell of the per-backend B_theta crossover grid: (backend x
+/// model x absorb-family fallback), the new grid axis the kernel
+/// registry adds to `figures`/`bench_sweep`.  Each cell compares the
+/// analytic pairwise Eq. 1 threshold against a numeric scan of the
+/// priced curves — the same bracket discipline `tests/registry.rs`
+/// fuzzes.
+#[derive(Clone, Debug)]
+pub struct CrossoverCell {
+    pub backend: Backend,
+    pub model: ModelConfig,
+    /// The absorb-family fallback the naive-family curve crosses.
+    pub fallback: KernelKind,
+    /// Shared length of the scanned workload (L_n = 0 isolates the
+    /// shared-stage trade-off Eq. 1 models).
+    pub shared_len: u64,
+}
+
+/// The crossover grid in row order: backend (outer) x model x fallback
+/// (inner; classic absorb first).
+pub fn crossover_cells(
+    backends: &[Backend],
+    models: &[ModelConfig],
+    shared_len: u64,
+) -> Vec<CrossoverCell> {
+    let mut cells = Vec::new();
+    for &backend in backends {
+        for model in models {
+            for fallback in [KernelKind::Absorb, KernelKind::AmlaAbsorb] {
+                cells.push(CrossoverCell {
+                    backend,
+                    model: model.clone(),
+                    fallback,
+                    shared_len,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// One evaluated crossover cell.
+#[derive(Clone, Debug)]
+pub struct CrossoverCellResult {
+    pub cell: CrossoverCell,
+    pub hw_name: &'static str,
+    /// Exact (real-valued) pairwise Eq. 1 crossover.
+    pub analytic_exact: f64,
+    /// The integer threshold the registry uses (floored, min 1).
+    pub analytic: usize,
+    /// First batch in `1..=4096` where the naive-family counterpart's
+    /// priced curve stops losing to the fallback's (None if it never
+    /// does in range).  Brackets `analytic` within +1 by construction.
+    pub numeric: Option<usize>,
+}
+
+/// Evaluate the crossover grid under the executor (cells are pure
+/// model evaluations; order-stable like every other grid).
+pub fn run_crossover_sweep(
+    cells: &[CrossoverCell],
+    exec: &SweepExecutor,
+) -> Result<Vec<CrossoverCellResult>> {
+    exec.run(cells.len(), |i| {
+        let c = &cells[i];
+        let hw = c.backend.preset();
+        let par = ParallelismConfig::single();
+        let counterpart = match c.fallback {
+            KernelKind::AmlaAbsorb => KernelKind::TyphoonAmla,
+            _ => KernelKind::Typhoon,
+        };
+        let numeric = (1u64..=4096).find(|&b| {
+            let wl = AttentionWorkload::decode(b, c.shared_len, 0);
+            parallel_attention_time(&c.model, counterpart, &wl, &hw, &par)
+                <= parallel_attention_time(&c.model, c.fallback, &wl, &hw, &par)
+        });
+        Ok(CrossoverCellResult {
+            cell: c.clone(),
+            hw_name: hw.name,
+            analytic_exact: parallel_pair_threshold_exact(&c.model, &hw, 1, &par, c.fallback),
+            analytic: parallel_pair_threshold(&c.model, &hw, 1, &par, c.fallback),
+            numeric: numeric.map(|b| b as usize),
+        })
     })
 }
 
@@ -513,6 +603,46 @@ mod tests {
                 p.report.recovery_p99_s.to_bits()
             );
         }
+    }
+
+    /// The crossover grid: enumeration order, analytic-vs-numeric
+    /// bracketing on every cell, and the per-backend pinned values on
+    /// DeepSeek-v3 (the `figures`/`bench_sweep` crossover axis).
+    #[test]
+    fn crossover_grid_brackets_and_pins() {
+        let cells = crossover_cells(
+            &[Backend::Npu, Backend::Gpu],
+            &[deepseek_v3(), crate::config::model::kimi_k2()],
+            4096,
+        );
+        // 2 backends x 2 models x 2 fallbacks, fallback innermost.
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].fallback, KernelKind::Absorb);
+        assert_eq!(cells[1].fallback, KernelKind::AmlaAbsorb);
+        let serial = run_crossover_sweep(&cells, &SweepExecutor::serial()).unwrap();
+        let par = run_crossover_sweep(&cells, &SweepExecutor::with_threads(4)).unwrap();
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.analytic, p.analytic);
+            assert_eq!(s.numeric, p.numeric);
+            assert_eq!(s.analytic_exact.to_bits(), p.analytic_exact.to_bits());
+            // Bracket: the priced scan crosses at the analytic value or
+            // one past it (flooring), never anywhere else.
+            let n = s.numeric.expect("crossover exists in range");
+            assert!(
+                n == s.analytic || n == s.analytic + 1,
+                "{} {} {:?}: numeric {} vs analytic {}",
+                s.hw_name,
+                s.cell.model.name,
+                s.cell.fallback,
+                n,
+                s.analytic
+            );
+        }
+        // DeepSeek-v3 pins: NPU 61/70, decode-GPU 29/33 (model index 0).
+        assert_eq!(serial[0].analytic, 61);
+        assert_eq!(serial[1].analytic, 70);
+        assert_eq!(serial[4].analytic, 29);
+        assert_eq!(serial[5].analytic, 33);
     }
 
     #[test]

@@ -12,9 +12,15 @@
 
 use anyhow::Result;
 
+use crate::config::hardware::Backend;
+use crate::config::model::{deepseek_v3, kimi_k2};
 use crate::config::{HardwareSpec, KernelKind, ModelConfig, ServingConfig};
 use crate::coordinator::{Coordinator, KernelPolicy};
-use crate::costmodel::parallel::ParallelismConfig;
+use crate::costmodel::flops::AttentionWorkload;
+use crate::costmodel::parallel::{
+    parallel_attention_time, parallel_batch_threshold, parallel_pair_threshold,
+    ParallelismConfig,
+};
 use crate::kvcache::{KvCacheManager, PrefixId};
 use crate::workload::tenants::{tenant_set, MultiTenantGenerator, TenantSpec};
 
@@ -55,6 +61,43 @@ pub fn tenant_serving_stack(
     let mut engine = SimEngine::with_parallelism(model.clone(), hw.clone(), parallelism);
     engine.include_prefill = include_prefill;
     Coordinator::new(cfg, policy, kv, engine)
+}
+
+/// One backend's calibration summary on the Table-2-shaped tenancy
+/// cell (Kimi K2, B = 1024, L_s = 26472, L_n = 512 — the paper's
+/// largest shared-prefix point).  The backend presets are calibrated
+/// so this cell reproduces the paper's headline speedup shape: ~3x
+/// Typhoon-over-absorb on the NPU, ~3.24x-shaped (strictly larger) on
+/// the decode-calibrated GPU — with the per-backend Eq. 1 crossovers
+/// alongside (DeepSeek-v3: 61 / 29 classic, 70 / 33 AMLA).
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrationCell {
+    pub backend: Backend,
+    pub hw_name: &'static str,
+    /// Modeled absorb-baseline time / Typhoon time at the cell.
+    pub speedup: f64,
+    /// Classic Eq. 1 crossover on this backend (DeepSeek-v3, s_q = 1).
+    pub b_theta: usize,
+    /// Pairwise crossover against the AMLA-absorb fallback.
+    pub amla_theta: usize,
+}
+
+/// Evaluate the calibration cell on one backend's preset.
+pub fn calibration_cell(backend: Backend) -> CalibrationCell {
+    let hw = backend.preset();
+    let par = ParallelismConfig::single();
+    let cell = kimi_k2();
+    let wl = AttentionWorkload::decode(1024, 26472, 512);
+    let typhoon = parallel_attention_time(&cell, KernelKind::Typhoon, &wl, &hw, &par);
+    let absorb = parallel_attention_time(&cell, KernelKind::Absorb, &wl, &hw, &par);
+    let dv3 = deepseek_v3();
+    CalibrationCell {
+        backend,
+        hw_name: hw.name,
+        speedup: absorb / typhoon,
+        b_theta: parallel_batch_threshold(&dv3, &hw, 1, &par),
+        amla_theta: parallel_pair_threshold(&dv3, &hw, 1, &par, KernelKind::AmlaAbsorb),
+    }
 }
 
 /// Parameters of one multi-tenant experiment.
@@ -238,5 +281,45 @@ mod tests {
         assert_eq!(a.mixed_iters, 0);
         assert_eq!(a.typhoon_iters, 0);
         assert_eq!(a.expansion_bytes, 0, "absorb keeps latent-only prefixes");
+    }
+
+    /// Backend calibration regression (satellite of the kernel-zoo PR):
+    /// the NPU and GPU presets reproduce the paper's speedup shape on
+    /// the Table-2 cell — ~3x on the NPU, ~3.24x-shaped (strictly
+    /// larger) on the decode-calibrated GPU — and never drift out of
+    /// their bands when the cost model or presets change.
+    #[test]
+    fn backend_calibration_reproduces_paper_speedup_shape() {
+        let npu = calibration_cell(Backend::Npu);
+        let gpu = calibration_cell(Backend::Gpu);
+        assert_eq!(npu.hw_name, "ascend-npu");
+        assert_eq!(gpu.hw_name, "gpu-h800-decode");
+        assert!(
+            npu.speedup > 2.95 && npu.speedup < 3.2,
+            "NPU cell speedup {} out of the 3x-shaped band",
+            npu.speedup
+        );
+        assert!(
+            gpu.speedup > 3.1 && gpu.speedup < 3.35,
+            "GPU cell speedup {} out of the 3.24x-shaped band",
+            gpu.speedup
+        );
+        assert!(
+            gpu.speedup > npu.speedup,
+            "paper ordering: GPU {} must exceed NPU {}",
+            gpu.speedup,
+            npu.speedup
+        );
+    }
+
+    /// The per-backend crossover batches are pinned: Ascend keeps the
+    /// paper's B_theta = 61 (70 vs the AMLA fallback), the decode-
+    /// calibrated GPU lands at 29 (33 AMLA) from its exact T/M = 100.
+    #[test]
+    fn backend_crossovers_pinned() {
+        let npu = calibration_cell(Backend::Npu);
+        assert_eq!((npu.b_theta, npu.amla_theta), (61, 70));
+        let gpu = calibration_cell(Backend::Gpu);
+        assert_eq!((gpu.b_theta, gpu.amla_theta), (29, 33));
     }
 }

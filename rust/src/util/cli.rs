@@ -112,6 +112,19 @@ impl Args {
         }
     }
 
+    /// Validated enumerated option: the value must be one of `choices`.
+    /// Returns the matched candidate (with the `choices` lifetime, so
+    /// callers can hold it past `self`), `None` when absent, or an
+    /// error naming every candidate on a miss.
+    pub fn get_choice<'c>(&self, name: &str, choices: &[&'c str]) -> Result<Option<&'c str>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => choices.iter().find(|c| **c == v).copied().map(Some).ok_or_else(|| {
+                anyhow!("--{name}: unknown value {v:?} (expected one of: {})", choices.join("|"))
+            }),
+        }
+    }
+
     pub fn require(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
     }
@@ -183,6 +196,22 @@ mod tests {
         assert!(bad.get_u64("fault-seed", 0).is_err());
         let bad = parse("x --fault-seed abc", &[]);
         assert!(bad.get_u64("fault-seed", 0).is_err());
+    }
+
+    #[test]
+    fn get_choice_validates_against_candidates() {
+        let a = parse("x --backend npu", &[]);
+        assert_eq!(a.get_choice("backend", &["npu", "gpu", "cpu"]).unwrap(), Some("npu"));
+        // Absent option passes through as None.
+        assert_eq!(parse("x", &[]).get_choice("backend", &["npu"]).unwrap(), None);
+        // A miss names the flag and lists every candidate.
+        let err = parse("x --backend tpu", &[])
+            .get_choice("backend", &["npu", "gpu", "cpu"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--backend"), "must name the flag: {err}");
+        assert!(err.contains("tpu"), "must echo the bad value: {err}");
+        assert!(err.contains("npu|gpu|cpu"), "must list candidates: {err}");
     }
 
     #[test]

@@ -1,0 +1,67 @@
+//! Unit tests for `scripts/check_bench_artifact.sh` — the CI gate that
+//! fails while the tracked `BENCH_sweep.json` still carries the
+//! no-toolchain placeholder marker.  Exercised through the script's
+//! `CHECK_BENCH_TRACKED` test seam so no git checkout (or HEAD state)
+//! is assumed.
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn script_path() -> PathBuf {
+    // CARGO_MANIFEST_DIR = <repo>/rust; the script lives one level up.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../scripts/check_bench_artifact.sh")
+}
+
+fn run_gate(measured: &std::path::Path, tracked: &std::path::Path) -> std::process::Output {
+    Command::new("bash")
+        .arg(script_path())
+        .arg(measured)
+        .env("CHECK_BENCH_TRACKED", tracked)
+        .output()
+        .expect("bash must be runnable")
+}
+
+#[test]
+fn gate_fails_on_placeholder_and_passes_on_measured() {
+    let dir = std::env::temp_dir().join(format!("bench_gate_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let placeholder = dir.join("tracked_placeholder.json");
+    std::fs::write(
+        &placeholder,
+        "{\n  \"note\": \"placeholder\",\n  \"wall_seconds\": 0\n}\n",
+    )
+    .unwrap();
+    let measured = dir.join("measured.json");
+    std::fs::write(&measured, "{\n  \"wall_seconds\": 1.5,\n  \"cells\": 8\n}\n").unwrap();
+
+    // Tracked copy still the placeholder: the gate must fail and point
+    // at the marker.
+    let out = run_gate(&measured, &placeholder);
+    assert!(
+        !out.status.success(),
+        "placeholder must fail the gate: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("placeholder marker"), "stderr: {err}");
+    // The measured artifact is echoed so it can be committed verbatim.
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"cells\": 8"), "stdout: {stdout}");
+
+    // Tracked copy is measured data (no "note" key): the gate passes.
+    let out = run_gate(&measured, &measured);
+    assert!(
+        out.status.success(),
+        "measured tracked copy must pass: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // Missing measured artifact: fail fast with the bench_sweep hint.
+    let out = run_gate(&dir.join("does_not_exist.json"), &measured);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("run bench_sweep first"), "stderr: {err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -27,7 +27,12 @@ measured=${1:-target/bench/BENCH_sweep.json}
 
 tracked=$(mktemp)
 trap 'rm -f "$tracked"' EXIT
-if git cat-file -e HEAD:BENCH_sweep.json 2>/dev/null; then
+# Test seam: CHECK_BENCH_TRACKED overrides where the tracked copy is
+# read from, so the placeholder-detection path is unit-testable without
+# a git checkout (rust/tests/bench_gate.rs).
+if [ -n "${CHECK_BENCH_TRACKED:-}" ]; then
+    cp "$CHECK_BENCH_TRACKED" "$tracked"
+elif git cat-file -e HEAD:BENCH_sweep.json 2>/dev/null; then
     git show HEAD:BENCH_sweep.json >"$tracked"
 else
     cp BENCH_sweep.json "$tracked"
