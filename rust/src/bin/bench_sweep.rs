@@ -26,8 +26,12 @@
 //!   e.g. the CI leg's 100k) through the indexed event core with
 //!   parallel replica stepping, recording `events_per_second`,
 //!   `million_wall_seconds` and the peak sequence-arena occupancy —
-//!   plus a serial replay asserted byte-identical unless
-//!   `--skip-serial`.
+//!   plus a spawn-reference replay (the retained per-window
+//!   `thread::scope` dispatch) recorded as
+//!   `events_per_second_reference`, the fleet-shared price-cache
+//!   `price_cache_hits`/`price_cache_misses` counters and the pool's
+//!   `pool_windows` count, plus a serial replay asserted
+//!   byte-identical unless `--skip-serial`.
 //!
 //! Emits `BENCH_sweep.json` with schema
 //! `{wall_seconds, cells, tokens_simulated}` (plus serial baseline and
@@ -282,20 +286,58 @@ fn main() -> Result<()> {
         );
         let events = sim.events_processed();
         let eps = events as f64 / wall.max(1e-12);
+        ensure!(sim.pool_windows() > 0, "million: pooled dispatch never engaged");
+        let (hits, misses) = sim.price_cache_stats();
         println!(
             "million:  {wall:.3}s wall, {requests} requests, {events} events \
-             ({eps:.0} events/s), arena peak {}, {} spills",
+             ({eps:.0} events/s), arena peak {}, {} spills, price cache \
+             {hits} hits / {misses} misses, {} pool windows",
             sim.arena_peak(),
             report.spills,
+            sim.pool_windows(),
         );
+
+        // Reference dispatch: the same parallel event loop on the
+        // retained per-window `thread::scope` spawn path (the pre-pool
+        // hot path).  Byte-identical by construction; CI gates on the
+        // pooled path at least matching this throughput.
+        let mut reference = ClusterSim::new(&p)?;
+        reference.use_spawn_reference(true);
+        let t0 = Instant::now();
+        reference.run_parallel()?;
+        let ref_wall = t0.elapsed().as_secs_f64();
+        let rr = reference.report();
+        ensure!(rr.tokens == report.tokens, "million: spawn-reference tokens diverged");
+        ensure!(
+            rr.makespan.to_bits() == report.makespan.to_bits(),
+            "million: spawn-reference makespan diverged"
+        );
+        ensure!(
+            reference.events_processed() == events,
+            "million: spawn-reference event totals diverged"
+        );
+        ensure!(
+            reference.pool_windows() == 0,
+            "million: the spawn-reference path must not touch the pool"
+        );
+        let eps_ref = reference.events_processed() as f64 / ref_wall.max(1e-12);
+        println!(
+            "million reference: {ref_wall:.3}s wall ({eps_ref:.0} events/s on \
+             spawn-per-window dispatch, byte-identical)"
+        );
+
         let mut extra = vec![
             ("million_requests", Json::num(requests as f64)),
             ("million_events", Json::num(events as f64)),
             ("events_per_second", Json::num(eps)),
+            ("events_per_second_reference", Json::num(eps_ref)),
             ("million_wall_seconds", Json::num(wall)),
             ("million_arena_peak", Json::num(sim.arena_peak() as f64)),
             ("million_arrival_rate", Json::num(rate)),
             ("million_tokens", Json::num(report.tokens as f64)),
+            ("price_cache_hits", Json::num(hits as f64)),
+            ("price_cache_misses", Json::num(misses as f64)),
+            ("pool_windows", Json::num(sim.pool_windows() as f64)),
         ];
         if !args.flag("skip-serial") {
             // The serial event loop must replay the cell

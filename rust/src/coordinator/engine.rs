@@ -39,8 +39,9 @@ pub struct BatchGroup {
 }
 
 /// One decode iteration over the running set, partitioned into prefix
-/// groups.
-#[derive(Clone, Debug)]
+/// groups.  (`Default` is the coordinator's empty recycled scratch,
+/// never a batch an engine sees.)
+#[derive(Clone, Debug, Default)]
 pub struct DecodeBatch {
     /// All sequences this iteration, grouped-contiguous.
     pub seqs: Vec<SeqId>,

@@ -96,6 +96,14 @@ pub struct Coordinator<E: Engine> {
     /// simulator switches this off so million-request runs hold
     /// O(max outstanding) sequences instead of O(total served).
     retain_finished: bool,
+    /// Decode-batch scratch recycled across iterations (DESIGN.md §17):
+    /// `step` hands the batch's three vectors back after the engine
+    /// call, so a million-iteration run reuses the same allocations
+    /// instead of building fresh ones every step.
+    batch_scratch: DecodeBatch,
+    /// Per-group member buckets for the multi-tenant partition path,
+    /// recycled the same way (inner vectors keep their capacity).
+    members_scratch: Vec<Vec<SeqId>>,
     /// Canonical run clock: accumulated engine-reported seconds.
     now: f64,
 }
@@ -123,6 +131,8 @@ impl<E: Engine> Coordinator<E> {
             recently_finished: Vec::new(),
             completion_marks: VecDeque::new(),
             retain_finished: true,
+            batch_scratch: DecodeBatch::default(),
+            members_scratch: Vec::new(),
             now: 0.0,
         })
     }
@@ -497,74 +507,93 @@ impl<E: Engine> Coordinator<E> {
     /// registration order (deterministic; modeled times are
     /// order-independent anyway — exact u64 sums).  The fall-back rule
     /// is applied per group.
-    fn build_decode_batch(&self) -> DecodeBatch {
-        let ids = self.running.snapshot();
+    fn build_decode_batch(&mut self) -> DecodeBatch {
+        let mut batch = std::mem::take(&mut self.batch_scratch);
+        debug_assert!(
+            batch.seqs.is_empty() && batch.context_lens.is_empty() && batch.groups.is_empty(),
+            "decode-batch scratch must come back cleared"
+        );
         // Fast path: one registered group (the paper's single-prompt
         // protocol and the dominant sweep configuration) — the batch
-        // *is* the group; no partition, no extra allocations on the
-        // hot path.
+        // *is* the group; no partition, and with the recycled scratch
+        // the steady-state hot path allocates nothing at all.
         if let [(prefix, shared_len)] = self.prefixes[..] {
-            let context_lens: Vec<usize> = ids
-                .iter()
-                .map(|&id| self.seqs.get(id).expect("running seq exists").context_len())
-                .collect();
+            batch.seqs.extend_from_slice(self.running.ids());
+            batch.context_lens.extend(batch.seqs.iter().map(|&id| {
+                self.seqs.get(id).expect("running seq exists").context_len()
+            }));
             let kernel = self.policy.select_group(
-                ids.len(),
+                batch.seqs.len(),
                 shared_len,
-                mean_len(&context_lens),
+                mean_len(&batch.context_lens),
             );
-            return DecodeBatch {
-                context_lens,
-                groups: vec![BatchGroup {
-                    prefix,
-                    shared_len,
-                    kernel,
-                    start: 0,
-                    len: ids.len(),
-                }],
-                seqs: ids,
-            };
+            batch.groups.push(BatchGroup {
+                prefix,
+                shared_len,
+                kernel,
+                start: 0,
+                len: batch.seqs.len(),
+            });
+            return batch;
         }
         // General path: bucket members by registration index (small
-        // linear scan over the tenant registry, no hashing).
-        let mut members: Vec<Vec<SeqId>> = vec![Vec::new(); self.prefixes.len()];
-        for id in ids {
+        // linear scan over the tenant registry, no hashing).  The
+        // buckets are recycled scratch too — drained below, capacity
+        // kept across iterations.
+        self.members_scratch.resize_with(self.prefixes.len(), Vec::new);
+        debug_assert!(
+            self.members_scratch.iter().all(Vec::is_empty),
+            "member scratch must come back cleared"
+        );
+        for id in self.running.iter() {
             let p = self.seqs.get(id).expect("running seq exists").prefix;
             let gi = self
                 .prefixes
                 .iter()
                 .position(|&(pid, _)| pid == p)
                 .expect("running sequence's prefix is registered");
-            members[gi].push(id);
+            self.members_scratch[gi].push(id);
         }
         let n = self.running.len();
-        let mut seqs = Vec::with_capacity(n);
-        let mut context_lens = Vec::with_capacity(n);
-        let mut groups = Vec::new();
-        for (gi, m) in members.into_iter().enumerate() {
-            if m.is_empty() {
+        batch.seqs.reserve(n);
+        batch.context_lens.reserve(n);
+        for gi in 0..self.members_scratch.len() {
+            if self.members_scratch[gi].is_empty() {
                 continue;
             }
             let (prefix, shared_len) = self.prefixes[gi];
-            let start = seqs.len();
-            for id in m {
-                context_lens.push(self.seqs.get(id).expect("running seq exists").context_len());
-                seqs.push(id);
+            let start = batch.seqs.len();
+            for i in 0..self.members_scratch[gi].len() {
+                let id = self.members_scratch[gi][i];
+                batch
+                    .context_lens
+                    .push(self.seqs.get(id).expect("running seq exists").context_len());
+                batch.seqs.push(id);
             }
+            self.members_scratch[gi].clear();
             let kernel = self.policy.select_group(
-                seqs.len() - start,
+                batch.seqs.len() - start,
                 shared_len,
-                mean_len(&context_lens[start..]),
+                mean_len(&batch.context_lens[start..]),
             );
-            groups.push(BatchGroup {
+            batch.groups.push(BatchGroup {
                 prefix,
                 shared_len,
                 kernel,
                 start,
-                len: seqs.len() - start,
+                len: batch.seqs.len() - start,
             });
         }
-        DecodeBatch { seqs, context_lens, groups }
+        batch
+    }
+
+    /// Hand a decode batch's vectors back to the scratch — cleared,
+    /// capacity kept (see `batch_scratch`).
+    fn recycle_batch(&mut self, mut batch: DecodeBatch) {
+        batch.seqs.clear();
+        batch.context_lens.clear();
+        batch.groups.clear();
+        self.batch_scratch = batch;
     }
 
     /// One scheduler step: admit, decode one iteration, retire finished.
@@ -636,6 +665,7 @@ impl<E: Engine> Coordinator<E> {
         }
         self.metrics
             .record_iteration(outcome.seconds, batch.seqs.len(), batch.seqs.len() as u64);
+        self.recycle_batch(batch);
         Ok(true)
     }
 
@@ -814,6 +844,26 @@ mod tests {
             0,
             "hot path must not allocate for the disabled transcript"
         );
+    }
+
+    /// The decode-batch scratch is recycled: after a run it holds the
+    /// (cleared) vectors of the last iteration rather than fresh empty
+    /// ones, so steady-state steps build their batch without
+    /// allocating.
+    #[test]
+    fn decode_batch_scratch_is_recycled() {
+        let mut c = coordinator(4, 1);
+        c.set_shared_prefix(&(0..16u32).collect::<Vec<_>>()).unwrap();
+        for i in 0..6 {
+            c.submit(&req(i, 4, 2)).unwrap();
+        }
+        c.run_to_completion().unwrap();
+        assert!(c.batch_scratch.seqs.is_empty(), "scratch comes back cleared");
+        assert!(
+            c.batch_scratch.seqs.capacity() >= 4,
+            "the last iteration's vectors came back for reuse"
+        );
+        assert!(c.batch_scratch.groups.capacity() >= 1);
     }
 
     /// Non-retaining mode (the cluster's million-request setting):

@@ -7,12 +7,14 @@ pub mod flops;
 pub mod memory;
 pub mod parallel;
 pub mod roofline;
+pub mod surface;
 pub mod table;
 pub mod threshold;
 pub mod transfer;
 
 pub use exec_time::{attention_time, time_breakdown, tokens_per_sec, TimeBreakdown};
 pub use flops::{amla_macs, attention_cost, AttentionWorkload, Component, CostBreakdown};
+pub use surface::PriceSurface;
 pub use table::{BackendId, CostTable, PriceTable};
 pub use parallel::{
     parallel_attention_time, parallel_batch_threshold, parallel_batch_threshold_exact,

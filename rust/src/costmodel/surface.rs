@@ -1,0 +1,299 @@
+//! The fleet-shared price surface (DESIGN.md §17).
+//!
+//! Kernel pricing is a pure function of `(kernel, B, L_s, L_n)` given a
+//! model, hardware spec, and sharding — so a fleet of replicas has no
+//! reason to each warm a private memo.  [`PriceSurface`] hoists the
+//! dense interned memo of `costmodel::table` into one `Arc`-shared,
+//! read-mostly structure: every replica engine, the cluster's policy
+//! engine, and autoscale spin-ups (which previously rebuilt a
+//! stone-cold table) price against the same warm arrays.
+//!
+//! Concurrency protocol: hits take a read lock only (`DenseMemo::get`
+//! never mutates); a miss computes **outside** any lock, then takes the
+//! write lock to store.  Two threads missing the same key concurrently
+//! both compute — harmless, the function is pure, so the stored value
+//! is bit-identical whichever insert wins.  Consequently the *values*
+//! returned are deterministic always; only the hit/miss *split* can
+//! vary under concurrency (the total always equals the call count).
+//! Nothing in any simulation report reads the counters, which is why
+//! the serial-vs-parallel byte-identity artifacts are unaffected.
+//!
+//! The surface is keyed by `(model, hardware, parallelism, s_q)` at
+//! construction; constructors downstream (`SimEngine::with_surface`,
+//! `KernelPolicy::attach_surface`) verify the key matches before
+//! adopting it, so a mismatched surface degrades to unshared pricing
+//! rather than returning wrong numbers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::config::{HardwareSpec, KernelKind, ModelConfig};
+
+use super::flops::{AttentionWorkload, CostBreakdown};
+use super::parallel::{parallel_attention_cost, ParallelismConfig};
+use super::table::{kernel_index, DenseMemo, MAX_ENTRIES};
+
+/// One shared, read-mostly pricing cache for a `(model, hardware,
+/// parallelism, s_q)` cell.  See the module docs for the sharing and
+/// locking protocol.
+#[derive(Debug)]
+pub struct PriceSurface {
+    cfg: ModelConfig,
+    hw: HardwareSpec,
+    par: ParallelismConfig,
+    /// Query length the kernel-pricing memo is evaluated at (plain
+    /// decode = 1; a policy priced at a different s_q must not share
+    /// this surface's `kernel_seconds` memo).
+    s_q: u64,
+    /// Memoized `parallel_attention_cost`, group = kernel index.
+    costs: RwLock<DenseMemo<CostBreakdown>>,
+    /// Memoized registry kernel pricing (roofline seconds), group =
+    /// kernel index; filled through [`PriceSurface::kernel_seconds`].
+    prices: RwLock<DenseMemo<f64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PriceSurface {
+    pub fn new(cfg: ModelConfig, hw: HardwareSpec, par: ParallelismConfig) -> Self {
+        Self::with_query_len(cfg, hw, par, 1)
+    }
+
+    pub fn with_query_len(
+        cfg: ModelConfig,
+        hw: HardwareSpec,
+        par: ParallelismConfig,
+        s_q: u64,
+    ) -> Self {
+        PriceSurface {
+            cfg,
+            hw,
+            par,
+            s_q,
+            costs: RwLock::new(DenseMemo::new()),
+            prices: RwLock::new(DenseMemo::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Convenience: a fresh surface already behind its `Arc`.
+    pub fn shared(cfg: ModelConfig, hw: HardwareSpec, par: ParallelismConfig) -> Arc<Self> {
+        Arc::new(Self::new(cfg, hw, par))
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn hardware(&self) -> &HardwareSpec {
+        &self.hw
+    }
+
+    pub fn parallelism(&self) -> ParallelismConfig {
+        self.par
+    }
+
+    pub fn query_len(&self) -> u64 {
+        self.s_q
+    }
+
+    /// Whether this surface prices the given cell — the adoption check
+    /// used by `SimEngine::with_surface` / `KernelPolicy::attach_surface`.
+    pub fn covers(
+        &self,
+        cfg: &ModelConfig,
+        hw: &HardwareSpec,
+        par: &ParallelismConfig,
+        s_q: u64,
+    ) -> bool {
+        self.s_q == s_q && self.par == *par && self.cfg == *cfg && self.hw == *hw
+    }
+
+    /// `(hits, misses)` across both memos since construction.  Under
+    /// concurrent use the split is schedule-dependent (see module
+    /// docs); the sum always equals the number of memoized calls.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Memoized `parallel_attention_cost` for a plain-decode workload —
+    /// the shared-surface equivalent of `CostTable::cost`, `&self` so a
+    /// whole fleet can price through one `Arc`.
+    pub fn cost(&self, kernel: KernelKind, batch: u64, l_s: u64, l_n: u64) -> CostBreakdown {
+        let group = kernel_index(kernel);
+        if let Some(c) =
+            self.costs.read().expect("price surface poisoned").get(group, batch, l_s, l_n)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return c;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let wl = AttentionWorkload::decode(batch, l_s, l_n);
+        let c = parallel_attention_cost(&self.cfg, kernel, &wl, &self.par);
+        let mut memo = self.costs.write().expect("price surface poisoned");
+        if memo.len() >= MAX_ENTRIES {
+            memo.clear();
+        }
+        memo.insert(group, batch, l_s, l_n, c);
+        c
+    }
+
+    /// Shared-stage cost of a grouped decode iteration — the shared
+    /// equivalent of `CostTable::grouped_shared_cost`, summing the
+    /// shared/projection/combine components per prefix group exactly
+    /// (`l_n = 0` isolates the shared stage; `non_shared` stays zero).
+    pub fn grouped_shared_cost<I>(&self, groups: I) -> CostBreakdown
+    where
+        I: IntoIterator<Item = (KernelKind, u64, u64)>,
+    {
+        let mut total = CostBreakdown::default();
+        for (kernel, occupancy, l_s) in groups {
+            let c = self.cost(kernel, occupancy, l_s, 0);
+            total.shared = total.shared.add(c.shared);
+            total.proj_kvb1 = total.proj_kvb1.add(c.proj_kvb1);
+            total.proj_kvb2 = total.proj_kvb2.add(c.proj_kvb2);
+            total.combine = total.combine.add(c.combine);
+        }
+        total
+    }
+
+    /// Memoized registry kernel pricing: roofline seconds of `kernel`
+    /// on `(batch, l_s, l_n)` at this surface's cell, computed by
+    /// `compute` on a miss.  The memo is keyed by kernel *kind*, so a
+    /// caller must guarantee `compute` is the standard Table-1 pricing
+    /// for that kind at this surface's `(model, hw, par, s_q)` —
+    /// `KernelPolicy::attach_surface` checks exactly that before
+    /// routing its registry pricing here.
+    pub fn kernel_seconds(
+        &self,
+        kernel: KernelKind,
+        batch: u64,
+        l_s: u64,
+        l_n: u64,
+        compute: impl FnOnce() -> f64,
+    ) -> f64 {
+        let group = kernel_index(kernel);
+        if let Some(t) =
+            self.prices.read().expect("price surface poisoned").get(group, batch, l_s, l_n)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return t;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let t = compute();
+        let mut memo = self.prices.write().expect("price surface poisoned");
+        if memo.len() >= MAX_ENTRIES {
+            memo.clear();
+        }
+        memo.insert(group, batch, l_s, l_n, t);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ascend_npu;
+    use crate::config::model::deepseek_v3;
+    use crate::costmodel::flops::attention_cost;
+    use crate::costmodel::table::CostTable;
+
+    fn surface() -> PriceSurface {
+        PriceSurface::new(deepseek_v3(), ascend_npu(), ParallelismConfig::single())
+    }
+
+    #[test]
+    fn shared_cost_matches_cost_table_bit_for_bit() {
+        let s = surface();
+        let mut t = CostTable::new(deepseek_v3());
+        for kernel in KernelKind::all() {
+            for (b, ls, ln) in [(1u64, 0u64, 17u64), (256, 4096, 512), (1024, 26472, 1)] {
+                assert_eq!(s.cost(kernel, b, ls, ln), t.cost(kernel, b, ls, ln));
+                assert_eq!(s.cost(kernel, b, ls, ln), t.cost(kernel, b, ls, ln));
+            }
+        }
+        let (hits, misses) = s.stats();
+        assert_eq!((hits, misses), (t.hits, t.misses), "serial counter parity");
+        assert_eq!(misses, 15);
+        assert_eq!(hits, 15);
+    }
+
+    #[test]
+    fn grouped_shared_cost_matches_table() {
+        let s = surface();
+        let mut t = CostTable::new(deepseek_v3());
+        let groups = [
+            (KernelKind::Typhoon, 100u64, 4096u64),
+            (KernelKind::Absorb, 8, 7069),
+        ];
+        assert_eq!(s.grouped_shared_cost(groups), t.grouped_shared_cost(groups));
+    }
+
+    #[test]
+    fn kernel_seconds_memoizes_and_never_recomputes_on_hit() {
+        let s = surface();
+        let priced = s.kernel_seconds(KernelKind::Typhoon, 256, 4096, 512, || 0.125);
+        assert_eq!(priced, 0.125);
+        // A hit must return the stored bits without calling compute.
+        let again = s.kernel_seconds(KernelKind::Typhoon, 256, 4096, 512, || {
+            panic!("hit path must not recompute")
+        });
+        assert_eq!(again.to_bits(), priced.to_bits());
+        // Distinct kind or workload: distinct slot.
+        assert_eq!(s.kernel_seconds(KernelKind::Absorb, 256, 4096, 512, || 0.5), 0.5);
+        assert_eq!(s.kernel_seconds(KernelKind::Typhoon, 256, 4096, 513, || 0.75), 0.75);
+        let (hits, misses) = s.stats();
+        assert_eq!((hits, misses), (1, 3));
+    }
+
+    #[test]
+    fn covers_is_exact_on_the_cell_key() {
+        let s = surface();
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let single = ParallelismConfig::single();
+        assert!(s.covers(&cfg, &hw, &single, 1));
+        assert!(!s.covers(&cfg, &hw, &single, 2), "s_q mismatch");
+        assert!(!s.covers(&cfg, &hw, &ParallelismConfig { tp: 2, sp: 1 }, 1));
+        let mut other = cfg.clone();
+        other.name = "other";
+        assert!(!s.covers(&other, &hw, &single, 1));
+    }
+
+    /// Two threads pricing the same keys concurrently agree with a
+    /// serial table to the bit, and the counter totals account for
+    /// every call even though the hit/miss split is schedule-dependent.
+    #[test]
+    fn concurrent_pricing_agrees_with_serial() {
+        let s = Arc::new(surface());
+        let cfg = deepseek_v3();
+        let keys: Vec<(KernelKind, u64, u64, u64)> = KernelKind::all()
+            .into_iter()
+            .flat_map(|k| {
+                (0..8u64).map(move |i| (k, 1 + i * 31, 4096, 1 + (i * 7) % 512))
+            })
+            .collect();
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let s = Arc::clone(&s);
+            let keys = keys.clone();
+            handles.push(std::thread::spawn(move || {
+                keys.iter()
+                    .map(|&(k, b, ls, ln)| s.cost(k, b, ls, ln))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        let results: Vec<Vec<CostBreakdown>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (i, &(k, b, ls, ln)) in keys.iter().enumerate() {
+            let direct = attention_cost(&cfg, k, &AttentionWorkload::decode(b, ls, ln));
+            for r in &results {
+                assert_eq!(r[i], direct, "({k:?}, {b}, {ls}, {ln})");
+            }
+        }
+        let (hits, misses) = s.stats();
+        assert_eq!(hits + misses, 2 * keys.len() as u64, "every call counted");
+        assert!(misses >= keys.len() as u64, "each distinct key misses at least once");
+    }
+}

@@ -6,13 +6,26 @@
 //! thousands of iterations per cell) the same `(kernel, B, L_s, L_n)`
 //! workloads recur constantly — context lengths are bounded by
 //! `max_seq_len` and the shared length is fixed per cell.  `CostTable`
-//! caches the exact `CostBreakdown` per key, turning the dominant
-//! per-iteration cost into hash lookups.
+//! caches the exact `CostBreakdown` per key.
+//!
+//! Storage is a **dense interned memo** (DESIGN.md §17), not a hash
+//! map: each axis value (`B`, `L_s`, `L_n`) is interned to a small
+//! consecutive slot the first time it is seen, and entries live in
+//! nested arrays indexed `[kernel][b][l_s][l_n]` — a lookup is three
+//! array reads, no hashing.  Per sweep cell the axis domains are tiny
+//! (one `L_s`, `L_n <= max_seq_len`, a handful of batch occupancies),
+//! so the arrays stay small and hot.  The pre-dense `HashMap` memo is
+//! retained behind the [`CostTable::use_hash_reference`] oracle flag
+//! and fuzz-pinned bit-identical (tests/pricing_pool.rs), the same way
+//! PR 7 pinned the cluster loop against `use_linear_reference`.
 //!
 //! Exactness: `attention_cost` is a pure function of
 //! `(ModelConfig, KernelKind, AttentionWorkload)` over integers, so a
 //! cache hit returns bit-identical results to direct evaluation — the
-//! figure artifacts cannot drift.
+//! figure artifacts cannot drift.  The hit/miss *counters* are also
+//! path-independent: both stores memo exact keys and clear at the same
+//! entry cap, so a call sequence produces the same counter trace dense
+//! or hashed.
 
 use std::collections::HashMap;
 
@@ -27,8 +40,151 @@ type CostKey = (KernelKind, u64, u64, u64);
 
 /// Entry cap — a full Fig. 2/3 sweep stays far below this (distinct
 /// lengths are bounded by `max_seq_len`), but a runaway caller must not
-/// grow the table without bound.
-const MAX_ENTRIES: usize = 1 << 20;
+/// grow the table without bound.  Shared with the fleet-wide
+/// `PriceSurface`, which applies the same cap per memo.
+pub(crate) const MAX_ENTRIES: usize = 1 << 20;
+
+/// Dense position of a kernel in memo group arrays — the `all()` order.
+pub(crate) fn kernel_index(kernel: KernelKind) -> usize {
+    match kernel {
+        KernelKind::Typhoon => 0,
+        KernelKind::Absorb => 1,
+        KernelKind::Naive => 2,
+        KernelKind::AmlaAbsorb => 3,
+        KernelKind::TyphoonAmla => 4,
+    }
+}
+
+/// Number of dense kernel slots (`KernelKind::all().len()`).
+pub(crate) const KERNEL_SLOTS: usize = 5;
+
+/// Axis values below this are interned through a direct-indexed array
+/// (value -> slot); rarer larger values go through a sorted spill list.
+/// Every axis in the repo (batch <= 4096, `L_s` <= ~50k prompt tokens
+/// interned once per cell, `L_n` <= `max_seq_len`) fits the direct
+/// range, so the spill path is a correctness escape hatch, not a hot
+/// path.
+const DENSE_AXIS_CAP: u64 = 1 << 16;
+
+/// Interner for one workload axis: assigns each distinct `u64` value a
+/// small consecutive slot.  Lookup is one array read for values under
+/// [`DENSE_AXIS_CAP`] (slot + 1 stored, 0 = unassigned); a sorted spill
+/// list covers the tail.  `get` never mutates, so shared callers can
+/// peek under a read lock.
+#[derive(Clone, Debug, Default)]
+struct AxisMap {
+    direct: Vec<u32>,
+    spill: Vec<(u64, u32)>,
+    len: u32,
+}
+
+impl AxisMap {
+    fn get(&self, v: u64) -> Option<usize> {
+        if v < DENSE_AXIS_CAP {
+            match self.direct.get(v as usize) {
+                Some(&s) if s != 0 => Some(s as usize - 1),
+                _ => None,
+            }
+        } else {
+            self.spill
+                .binary_search_by_key(&v, |&(val, _)| val)
+                .ok()
+                .map(|i| self.spill[i].1 as usize)
+        }
+    }
+
+    fn intern(&mut self, v: u64) -> usize {
+        if let Some(s) = self.get(v) {
+            return s;
+        }
+        let slot = self.len;
+        self.len += 1;
+        if v < DENSE_AXIS_CAP {
+            if self.direct.len() <= v as usize {
+                self.direct.resize(v as usize + 1, 0);
+            }
+            self.direct[v as usize] = slot + 1;
+        } else {
+            let at = self.spill.partition_point(|&(val, _)| val < v);
+            self.spill.insert(at, (v, slot));
+        }
+        slot as usize
+    }
+}
+
+/// The dense memo core shared by [`CostTable`], [`PriceTable`], and the
+/// fleet-shared `PriceSurface`: values stored in nested arrays indexed
+/// `[group][b_slot][ls_slot][ln_slot]`, with each axis interned through
+/// an [`AxisMap`].  The group dimension is caller-defined (kernel index
+/// for `CostTable`, `backend x kernel` for `PriceTable`).
+///
+/// `get` is non-mutating (slot peeks only), so a shared owner can serve
+/// hits under a read lock; `insert` interns and grows lazily — axis
+/// growth never re-scatters existing entries, because slots are
+/// append-only.
+#[derive(Clone, Debug)]
+pub(crate) struct DenseMemo<V> {
+    b: AxisMap,
+    ls: AxisMap,
+    ln: AxisMap,
+    groups: Vec<Vec<Vec<Vec<Option<V>>>>>,
+    len: usize,
+}
+
+impl<V: Copy> DenseMemo<V> {
+    pub(crate) fn new() -> Self {
+        DenseMemo {
+            b: AxisMap::default(),
+            ls: AxisMap::default(),
+            ln: AxisMap::default(),
+            groups: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub(crate) fn get(&self, group: usize, b: u64, ls: u64, ln: u64) -> Option<V> {
+        let b = self.b.get(b)?;
+        let ls = self.ls.get(ls)?;
+        let ln = self.ln.get(ln)?;
+        *self.groups.get(group)?.get(b)?.get(ls)?.get(ln)?
+    }
+
+    pub(crate) fn insert(&mut self, group: usize, b: u64, ls: u64, ln: u64, v: V) {
+        let b = self.b.intern(b);
+        let ls = self.ls.intern(ls);
+        let ln = self.ln.intern(ln);
+        if self.groups.len() <= group {
+            self.groups.resize_with(group + 1, Vec::new);
+        }
+        let by_b = &mut self.groups[group];
+        if by_b.len() <= b {
+            by_b.resize_with(b + 1, Vec::new);
+        }
+        let by_ls = &mut by_b[b];
+        if by_ls.len() <= ls {
+            by_ls.resize_with(ls + 1, Vec::new);
+        }
+        let by_ln = &mut by_ls[ls];
+        if by_ln.len() <= ln {
+            by_ln.resize(ln + 1, None);
+        }
+        if by_ln[ln].is_none() {
+            self.len += 1;
+        }
+        by_ln[ln] = Some(v);
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Drop every stored value (interned axis slots are kept — they
+    /// stay valid and re-interning would churn the direct arrays).
+    pub(crate) fn clear(&mut self) {
+        self.groups.clear();
+        self.len = 0;
+    }
+}
 
 #[derive(Debug)]
 pub struct CostTable {
@@ -38,7 +194,14 @@ pub struct CostTable {
     /// definitionally `attention_cost` — bit-identical to the
     /// pre-parallelism table.
     par: ParallelismConfig,
+    dense: DenseMemo<CostBreakdown>,
+    /// The pre-dense `HashMap` memo, retained as the reference oracle.
     map: HashMap<CostKey, CostBreakdown>,
+    /// Route lookups through the retained `HashMap` path instead of the
+    /// dense arrays — the PR 9 analogue of the cluster's
+    /// `use_linear_reference`: results *and* hit/miss counters must be
+    /// identical either way (fuzz-pinned in tests/pricing_pool.rs).
+    pub use_hash_reference: bool,
     pub hits: u64,
     pub misses: u64,
 }
@@ -51,7 +214,15 @@ impl CostTable {
     /// A table evaluating per-rank costs under (TP, SP).  TP must
     /// divide the model's head count (asserted on first evaluation).
     pub fn with_parallelism(cfg: ModelConfig, par: ParallelismConfig) -> Self {
-        CostTable { cfg, par, map: HashMap::new(), hits: 0, misses: 0 }
+        CostTable {
+            cfg,
+            par,
+            dense: DenseMemo::new(),
+            map: HashMap::new(),
+            use_hash_reference: false,
+            hits: 0,
+            misses: 0,
+        }
     }
 
     pub fn model(&self) -> &ModelConfig {
@@ -62,16 +233,45 @@ impl CostTable {
         self.par
     }
 
+    /// Entries in the active store (dense by default, hash under the
+    /// reference flag) — the stores are not kept in sync, each fills
+    /// from its own miss traffic.
     pub fn len(&self) -> usize {
-        self.map.len()
+        if self.use_hash_reference {
+            self.map.len()
+        } else {
+            self.dense.len()
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 
     /// Memoized `attention_cost` for a plain-decode workload.
     pub fn cost(&mut self, kernel: KernelKind, batch: u64, l_s: u64, l_n: u64) -> CostBreakdown {
+        if self.use_hash_reference {
+            return self.cost_hash(kernel, batch, l_s, l_n);
+        }
+        let group = kernel_index(kernel);
+        if let Some(c) = self.dense.get(group, batch, l_s, l_n) {
+            self.hits += 1;
+            return c;
+        }
+        self.misses += 1;
+        let wl = AttentionWorkload::decode(batch, l_s, l_n);
+        let c = parallel_attention_cost(&self.cfg, kernel, &wl, &self.par);
+        if self.dense.len() >= MAX_ENTRIES {
+            self.dense.clear();
+        }
+        self.dense.insert(group, batch, l_s, l_n, c);
+        c
+    }
+
+    /// The retained reference path: the pre-PR-9 `HashMap` memo,
+    /// verbatim (including the entry-cap clear, so the counter trace
+    /// matches the dense path call for call).
+    fn cost_hash(&mut self, kernel: KernelKind, batch: u64, l_s: u64, l_n: u64) -> CostBreakdown {
         let key = (kernel, batch, l_s, l_n);
         if let Some(c) = self.map.get(&key) {
             self.hits += 1;
@@ -88,6 +288,7 @@ impl CostTable {
     }
 
     pub fn clear(&mut self) {
+        self.dense.clear();
         self.map.clear();
     }
 
@@ -123,7 +324,9 @@ pub type BackendId = usize;
 /// N kernels per prefix group each iteration and the per-backend
 /// crossover sweep scans the same curves across hardware presets; both
 /// recur on identical keys, so the table turns repeated roofline
-/// evaluations into hash lookups.  Exactness: `parallel_attention_time`
+/// evaluations into dense-array lookups (group = backend x kernel; the
+/// `HashMap` path is retained behind the same `use_hash_reference`
+/// oracle flag as [`CostTable`]).  Exactness: `parallel_attention_time`
 /// is a pure function of its integer workload and the two specs, so a
 /// hit returns the identical f64 bits.
 #[derive(Debug)]
@@ -132,14 +335,26 @@ pub struct PriceTable {
     par: ParallelismConfig,
     /// Registered hardware presets; `BackendId` indexes this.
     backends: Vec<HardwareSpec>,
+    dense: DenseMemo<f64>,
     map: HashMap<(KernelKind, BackendId, u64, u64, u64), f64>,
+    /// See [`CostTable::use_hash_reference`].
+    pub use_hash_reference: bool,
     pub hits: u64,
     pub misses: u64,
 }
 
 impl PriceTable {
     pub fn new(cfg: ModelConfig, par: ParallelismConfig) -> Self {
-        PriceTable { cfg, par, backends: Vec::new(), map: HashMap::new(), hits: 0, misses: 0 }
+        PriceTable {
+            cfg,
+            par,
+            backends: Vec::new(),
+            dense: DenseMemo::new(),
+            map: HashMap::new(),
+            use_hash_reference: false,
+            hits: 0,
+            misses: 0,
+        }
     }
 
     /// Register a hardware preset as a pricing backend; re-registering
@@ -163,6 +378,33 @@ impl PriceTable {
 
     /// Memoized per-rank roofline seconds of one decode iteration.
     pub fn time(
+        &mut self,
+        kernel: KernelKind,
+        backend: BackendId,
+        batch: u64,
+        l_s: u64,
+        l_n: u64,
+    ) -> f64 {
+        if self.use_hash_reference {
+            return self.time_hash(kernel, backend, batch, l_s, l_n);
+        }
+        let group = backend * KERNEL_SLOTS + kernel_index(kernel);
+        if let Some(t) = self.dense.get(group, batch, l_s, l_n) {
+            self.hits += 1;
+            return t;
+        }
+        self.misses += 1;
+        let wl = AttentionWorkload::decode(batch, l_s, l_n);
+        let t = parallel_attention_time(&self.cfg, kernel, &wl, &self.backends[backend], &self.par);
+        if self.dense.len() >= MAX_ENTRIES {
+            self.dense.clear();
+        }
+        self.dense.insert(group, batch, l_s, l_n, t);
+        t
+    }
+
+    /// The retained pre-PR-9 `HashMap` reference path.
+    fn time_hash(
         &mut self,
         kernel: KernelKind,
         backend: BackendId,
@@ -310,5 +552,66 @@ mod tests {
         assert_ne!(a, c);
         assert_eq!(table.hits, 0);
         assert_eq!(table.misses, 3);
+    }
+
+    /// The dense store and the retained hash reference agree to the
+    /// bit — values *and* hit/miss counters — on an interleaved call
+    /// sequence that exercises axis growth, spill values past the
+    /// direct-index cap, and repeated keys.
+    #[test]
+    fn dense_matches_hash_reference_on_mixed_sequence() {
+        let cfg = deepseek_v3();
+        let mut dense = CostTable::new(cfg.clone());
+        let mut hash = CostTable::new(cfg);
+        hash.use_hash_reference = true;
+        let calls: &[(KernelKind, u64, u64, u64)] = &[
+            (KernelKind::Typhoon, 256, 4096, 512),
+            (KernelKind::Absorb, 1, 0, 17),
+            (KernelKind::Typhoon, 256, 4096, 512),
+            (KernelKind::Naive, 1024, 26472, 1),
+            // Past DENSE_AXIS_CAP: exercises the axis spill list.
+            (KernelKind::Absorb, 8, 1 << 17, 3),
+            (KernelKind::Absorb, 8, 1 << 17, 3),
+            (KernelKind::TyphoonAmla, 64, 0, 2047),
+            (KernelKind::AmlaAbsorb, 64, 0, 2047),
+            (KernelKind::Typhoon, 256, 4096, 512),
+        ];
+        for &(k, b, ls, ln) in calls {
+            assert_eq!(dense.cost(k, b, ls, ln), hash.cost(k, b, ls, ln));
+            assert_eq!((dense.hits, dense.misses), (hash.hits, hash.misses));
+        }
+        assert_eq!(dense.len(), hash.len());
+        assert_eq!(dense.misses, 6);
+        assert_eq!(dense.hits, 3);
+    }
+
+    /// Same contract for `PriceTable` across two backends.
+    #[test]
+    fn price_table_dense_matches_hash_reference() {
+        use crate::config::hardware::{ascend_npu, gpu_h800_decode};
+
+        let cfg = deepseek_v3();
+        let par = ParallelismConfig { tp: 2, sp: 2 };
+        let mut dense = PriceTable::new(cfg.clone(), par);
+        let mut hash = PriceTable::new(cfg, par);
+        hash.use_hash_reference = true;
+        for t in [&mut dense, &mut hash] {
+            t.register_backend(ascend_npu());
+            t.register_backend(gpu_h800_decode());
+        }
+        for _ in 0..2 {
+            for kernel in KernelKind::all() {
+                for backend in [0usize, 1] {
+                    for (b, ls, ln) in [(1u64, 0u64, 1u64), (128, 4096, 256), (61, 26472, 0)] {
+                        let d = dense.time(kernel, backend, b, ls, ln);
+                        let h = hash.time(kernel, backend, b, ls, ln);
+                        assert_eq!(d.to_bits(), h.to_bits());
+                    }
+                }
+            }
+        }
+        assert_eq!((dense.hits, dense.misses), (hash.hits, hash.misses));
+        assert_eq!(dense.misses, 30, "5 kernels x 2 backends x 3 workloads");
+        assert_eq!(dense.hits, 30);
     }
 }

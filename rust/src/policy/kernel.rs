@@ -40,6 +40,8 @@
 //! bit-identically at `ranks = 1` and collapses in the deep-TP latent
 //! replication regime.
 
+use std::sync::Arc;
+
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 use crate::costmodel::exec_time::component_time;
 use crate::costmodel::flops::{AttentionWorkload, CostBreakdown};
@@ -47,6 +49,7 @@ use crate::costmodel::parallel::{
     parallel_attention_cost, parallel_batch_threshold, parallel_pair_threshold,
     ParallelismConfig,
 };
+use crate::costmodel::surface::PriceSurface;
 
 /// Everything the registry knows about one prefix group when pricing
 /// its kernel for the next decode iteration.
@@ -202,6 +205,11 @@ pub struct KernelPolicy {
     /// *that* fallback), `None` for naive-family entries.
     thetas: Vec<Option<usize>>,
     pricing: Option<PricingContext>,
+    /// Fleet-shared price memo (DESIGN.md §17).  When attached, entry
+    /// pricing routes through the surface's `(kernel, B, L_s, L_n)`
+    /// memo — the compute closure stays this policy's own cost path,
+    /// so attached and detached pricing are bit-identical.
+    surface: Option<Arc<PriceSurface>>,
 }
 
 impl KernelPolicy {
@@ -265,6 +273,7 @@ impl KernelPolicy {
                 par: *par,
                 s_q,
             }),
+            surface: None,
         }
     }
 
@@ -298,6 +307,23 @@ impl KernelPolicy {
             registry,
             thetas,
             pricing: None,
+            surface: None,
+        }
+    }
+
+    /// Adopt a fleet-shared [`PriceSurface`] for entry pricing.  The
+    /// surface must cover this policy's pricing cell exactly
+    /// (model/hardware/parallelism/`s_q`); a mismatched surface is
+    /// silently refused — the policy keeps pricing directly, which is
+    /// always correct, just unmemoized.  The surface memo is keyed by
+    /// `KernelKind`, which assumes standard descriptors (the
+    /// `cost_fn(kind)` table every repo registry uses); a
+    /// `with_registry` population carrying custom cost functions must
+    /// not attach a shared surface.
+    pub fn attach_surface(&mut self, surface: &Arc<PriceSurface>) {
+        let Some(pc) = &self.pricing else { return };
+        if surface.covers(&pc.cfg, &pc.hw, &pc.par, pc.s_q) {
+            self.surface = Some(Arc::clone(surface));
         }
     }
 
@@ -396,20 +422,35 @@ impl KernelPolicy {
 
     /// Roofline seconds of entry `i` at the group's workload (0.0
     /// without a pricing context — only reachable for singleton
-    /// families where the value is never compared).
+    /// families where the value is never compared).  With an attached
+    /// surface the value is served from the fleet-shared memo; the
+    /// compute closure below is the cold path, so both routes produce
+    /// identical bits.
     fn price(&self, i: usize, ctx: &GroupContext) -> f64 {
         let Some(pc) = &self.pricing else { return 0.0 };
-        let wl = AttentionWorkload {
-            batch: ctx.batch as u64,
-            s_q: pc.s_q,
-            l_s: ctx.shared_len as u64,
-            l_n: ctx.mean_non_shared as u64,
+        let compute = || {
+            let wl = AttentionWorkload {
+                batch: ctx.batch as u64,
+                s_q: pc.s_q,
+                l_s: ctx.shared_len as u64,
+                l_n: ctx.mean_non_shared as u64,
+            };
+            let c = (self.registry.entries[i].cost)(&pc.cfg, &wl, &pc.par);
+            [c.shared, c.non_shared, c.proj_kvb1, c.proj_kvb2, c.combine]
+                .iter()
+                .map(|comp| component_time(comp, &pc.hw))
+                .sum::<f64>()
         };
-        let c = (self.registry.entries[i].cost)(&pc.cfg, &wl, &pc.par);
-        [c.shared, c.non_shared, c.proj_kvb1, c.proj_kvb2, c.combine]
-            .iter()
-            .map(|comp| component_time(comp, &pc.hw))
-            .sum()
+        match &self.surface {
+            Some(surface) => surface.kernel_seconds(
+                self.registry.entries[i].kind,
+                ctx.batch as u64,
+                ctx.shared_len as u64,
+                ctx.mean_non_shared as u64,
+                compute,
+            ),
+            None => compute(),
+        }
     }
 }
 
@@ -612,6 +653,44 @@ mod tests {
         assert_eq!(p.b_theta, 29);
         assert_eq!(p.theta_for(KernelKind::Absorb), Some(29));
         assert_eq!(p.theta_for(KernelKind::AmlaAbsorb), Some(33));
+    }
+
+    /// An attached fleet surface memoizes entry pricing without moving
+    /// a single decision, and repeat selection runs entirely on memo
+    /// hits; a surface for the wrong pricing cell is silently refused
+    /// (selection stays correct, memo stays cold).
+    #[test]
+    fn attached_surface_prices_bit_identically() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let par = ParallelismConfig::single();
+        let detached = KernelPolicy::n_way(KernelKind::Typhoon, &cfg, &hw, 1, &par);
+        let mut attached = detached.clone();
+        let surface = PriceSurface::shared(cfg.clone(), hw.clone(), par);
+        attached.attach_surface(&surface);
+        let grid = [(8usize, 4096usize, 512usize), (61, 4096, 512), (70, 4096, 512),
+            (1024, 4096, 0), (1024, 0, 512)];
+        for &(b, ls, ln) in &grid {
+            assert_eq!(
+                attached.select_group(b, ls, ln),
+                detached.select_group(b, ls, ln),
+                "b={b} ls={ls} ln={ln}"
+            );
+        }
+        let (_, misses_cold) = surface.stats();
+        assert!(misses_cold > 0, "first pass fills the memo");
+        for &(b, ls, ln) in &grid {
+            attached.select_group(b, ls, ln);
+        }
+        let (hits, misses_warm) = surface.stats();
+        assert_eq!(misses_warm, misses_cold, "second pass is all hits");
+        assert!(hits > 0);
+
+        let mut refused = KernelPolicy::n_way(KernelKind::Typhoon, &cfg, &hw, 2, &par);
+        let wrong_cell = PriceSurface::shared(cfg.clone(), hw.clone(), par);
+        refused.attach_surface(&wrong_cell); // s_q = 2 vs surface's 1
+        refused.select_group(128, 4096, 512);
+        assert_eq!(wrong_cell.stats(), (0, 0), "mismatched surface never consulted");
     }
 
     /// Registry shapes: binary populations per requested kernel, and

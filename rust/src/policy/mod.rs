@@ -24,12 +24,14 @@
 //!   crash detection, and failover placement for a dead replica's
 //!   prefix groups (surviving copy first, priced re-prefill fallback).
 //!
-//! [`PolicyEngine`] bundles the five with a memoized [`CostTable`]
-//! and per-quantity memos, so a router probing costs on every arrival
-//! pays hash lookups, not cost-model evaluations.  Consistency with
-//! the engines is pinned by tests: the analytic per-rank threshold
-//! brackets the `CostTable` crossover, and the prefill pricing is the
-//! exact `SimEngine::prepare_shared` formulation.
+//! [`PolicyEngine`] bundles the five with a fleet-shared
+//! [`PriceSurface`] (DESIGN.md §17) and per-quantity memos, so a
+//! router probing costs on every arrival pays dense-array lookups, not
+//! cost-model evaluations — and a cluster's policy engine prices
+//! against the *same* warm surface its replica engines fill.
+//! Consistency with the engines is pinned by tests: the analytic
+//! per-rank threshold brackets the priced crossover, and the prefill
+//! pricing is the exact `SimEngine::prepare_shared` formulation.
 
 pub mod admission;
 pub mod kernel;
@@ -38,11 +40,12 @@ pub mod recovery;
 pub mod scaling;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 use crate::costmodel::exec_time::component_time;
 use crate::costmodel::parallel::ParallelismConfig;
-use crate::costmodel::table::CostTable;
+use crate::costmodel::surface::PriceSurface;
 use crate::costmodel::transfer::{prefix_transfer_seconds, shared_prefill_seconds};
 
 pub use admission::SloAdmission;
@@ -57,8 +60,10 @@ pub struct PolicyEngine {
     hw: HardwareSpec,
     par: ParallelismConfig,
     /// Memoized Table-1 pricing shared by every decision that needs a
-    /// shared-stage cost (same exactness discipline as the engines).
-    table: CostTable,
+    /// shared-stage cost (same exactness discipline as the engines) —
+    /// and, when constructed via [`PolicyEngine::with_surface`], shared
+    /// with the whole fleet.
+    surface: Arc<PriceSurface>,
     pub kernel: KernelPolicy,
     pub migration: MigrationPolicy,
     pub admission: SloAdmission,
@@ -81,9 +86,41 @@ impl PolicyEngine {
         requested: KernelKind,
         par: ParallelismConfig,
     ) -> Self {
-        let kernel = KernelPolicy::from_parallelism(requested, &model, &hw, 1, &par);
+        let surface = PriceSurface::shared(model, hw.clone(), par);
+        Self::with_surface(hw, requested, par, surface)
+    }
+
+    /// Build the registry against an existing fleet-shared
+    /// [`PriceSurface`] — the cluster router hands the same surface to
+    /// its policy engine and every replica stack, so all of them price
+    /// against one warm memo.  The surface must cover this engine's
+    /// cell (its own model, the given hardware/parallelism, `s_q = 1`);
+    /// a mismatch is a debug assertion, and release builds fall back to
+    /// a fresh private surface rather than returning wrong prices.
+    pub fn with_surface(
+        hw: HardwareSpec,
+        requested: KernelKind,
+        par: ParallelismConfig,
+        surface: Arc<PriceSurface>,
+    ) -> Self {
+        debug_assert!(
+            surface.covers(surface.model(), &hw, &par, 1),
+            "price surface cell mismatch: surface prices ({}, {:?}), policy wants ({}, {:?})",
+            surface.hardware().name,
+            surface.parallelism(),
+            hw.name,
+            par,
+        );
+        let surface = if surface.covers(surface.model(), &hw, &par, 1) {
+            surface
+        } else {
+            PriceSurface::shared(surface.model().clone(), hw.clone(), par)
+        };
+        let mut kernel =
+            KernelPolicy::from_parallelism(requested, surface.model(), &hw, 1, &par);
+        kernel.attach_surface(&surface);
         PolicyEngine {
-            table: CostTable::with_parallelism(model, par),
+            surface,
             hw,
             par,
             kernel,
@@ -97,7 +134,12 @@ impl PolicyEngine {
     }
 
     pub fn model(&self) -> &ModelConfig {
-        self.table.model()
+        self.surface.model()
+    }
+
+    /// The fleet-shared pricing cache this engine consults.
+    pub fn surface(&self) -> &Arc<PriceSurface> {
+        &self.surface
     }
 
     pub fn parallelism(&self) -> ParallelismConfig {
@@ -123,7 +165,7 @@ impl PolicyEngine {
 
     /// Modeled per-rank seconds of one group's shared stage at a given
     /// occupancy — the quantity Eq. 1 trades off, priced through the
-    /// shared memoized `CostTable`.  The kernel decision itself uses
+    /// fleet-shared [`PriceSurface`].  The kernel decision itself uses
     /// the precomputed threshold; this probe is the pricing surface
     /// follow-up policies (replica autoscaling, migration batching —
     /// see ROADMAP) query, and tests pin it against the crossover.
@@ -133,7 +175,7 @@ impl PolicyEngine {
         occupancy: u64,
         shared_len: u64,
     ) -> f64 {
-        let c = self.table.cost(kernel, occupancy, shared_len, 0);
+        let c = self.surface.cost(kernel, occupancy, shared_len, 0);
         [c.shared, c.proj_kvb1, c.proj_kvb2, c.combine]
             .iter()
             .map(|comp| component_time(comp, &self.hw))
@@ -150,7 +192,7 @@ impl PolicyEngine {
             return s;
         }
         let s =
-            prefix_transfer_seconds(self.table.model(), &self.hw, tokens, expanded, &self.par);
+            prefix_transfer_seconds(self.surface.model(), &self.hw, tokens, expanded, &self.par);
         self.transfer_memo.insert(key, s);
         s
     }
@@ -163,7 +205,7 @@ impl PolicyEngine {
         if let Some(&s) = self.prefill_memo.get(&key) {
             return s;
         }
-        let s = shared_prefill_seconds(self.table.model(), &self.hw, tokens, self.par.ranks());
+        let s = shared_prefill_seconds(self.surface.model(), &self.hw, tokens, self.par.ranks());
         self.prefill_memo.insert(key, s);
         s
     }
@@ -332,6 +374,43 @@ mod tests {
         let t_below = p.shared_stage_seconds(KernelKind::Typhoon, b / 2, 4096);
         let a_below = p.shared_stage_seconds(KernelKind::Absorb, b / 2, 4096);
         assert!(a_below < t_below, "below B_theta absorb wins");
+    }
+
+    /// Two policy engines adopting one fleet surface price bit-
+    /// identically to a private engine, and the second engine's probes
+    /// ride the memo the first one warmed (zero new misses).
+    #[test]
+    fn with_surface_shares_one_warm_memo() {
+        let surface = PriceSurface::shared(
+            deepseek_v3(),
+            ascend_npu(),
+            ParallelismConfig::single(),
+        );
+        let mut a = PolicyEngine::with_surface(
+            ascend_npu(),
+            KernelKind::Typhoon,
+            ParallelismConfig::single(),
+            Arc::clone(&surface),
+        );
+        let mut b = PolicyEngine::with_surface(
+            ascend_npu(),
+            KernelKind::Typhoon,
+            ParallelismConfig::single(),
+            Arc::clone(&surface),
+        );
+        let x = a.shared_stage_seconds(KernelKind::Typhoon, 100, 4096);
+        let (_, misses_warm) = surface.stats();
+        let y = b.shared_stage_seconds(KernelKind::Typhoon, 100, 4096);
+        let (hits, misses_after) = surface.stats();
+        assert_eq!(x.to_bits(), y.to_bits());
+        assert_eq!(misses_after, misses_warm, "second engine rides the warm memo");
+        assert!(hits > 0);
+        let mut fresh = engine();
+        assert_eq!(
+            fresh.shared_stage_seconds(KernelKind::Typhoon, 100, 4096).to_bits(),
+            x.to_bits(),
+            "shared and private pricing are bit-identical"
+        );
     }
 
     #[test]

@@ -71,16 +71,18 @@
 
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{FaultConfig, HardwareSpec, KernelKind, ModelConfig, ScalingConfig};
 use crate::coordinator::Coordinator;
 use crate::costmodel::parallel::ParallelismConfig;
+use crate::costmodel::surface::PriceSurface;
 use crate::kvcache::PrefixId;
 use crate::metrics::Metrics;
 use crate::policy::{MigrationDecision, PolicyEngine, ScalingDecision, ScalingPolicy};
+use crate::util::pool;
 use crate::util::stats::{p50, p95, p99};
 use crate::workload::tenants::{
     tenant_set, timed_arrivals, timed_arrivals_bursty, TenantSpec, TimedArrival,
@@ -89,7 +91,7 @@ use crate::workload::Request;
 
 use super::engine::SimEngine;
 use super::faults::{FaultKind, FaultPlan};
-use super::tenancy::tenant_serving_stack;
+use super::tenancy::tenant_serving_stack_with_surface;
 
 /// Phases of the square-wave bursty arrival profile (calm/burst
 /// alternation, starting calm).
@@ -224,6 +226,13 @@ pub struct ClusterParams {
     /// loss.  `FaultConfig::disabled()` reproduces the fault-free
     /// cluster bit-for-bit.
     pub faults: FaultConfig,
+    /// Pre-warmed fleet-shared price surface to adopt (sweeps pass one
+    /// so every cell of a grid reuses the same warm memo).  `None`
+    /// builds a fresh surface; a surface that does not price this
+    /// cell's `(model, hw, parallelism)` is ignored.  Either way the
+    /// simulated results are bit-identical — the surface only memoizes
+    /// a pure function.
+    pub surface: Option<Arc<PriceSurface>>,
 }
 
 impl ClusterParams {
@@ -256,6 +265,7 @@ impl ClusterParams {
             slo_ttft: None,
             scaling: ScalingConfig::for_fleet(replicas),
             faults: FaultConfig::disabled(),
+            surface: None,
         }
     }
 }
@@ -685,6 +695,16 @@ pub struct ClusterSim {
     /// Test-only oracle switch: answer event/routing queries with the
     /// retained O(N) linear scans instead of the indexes.
     linear_oracle: bool,
+    /// Test/bench oracle switch: dispatch parallel windows on freshly
+    /// scoped threads (the pre-pool reference) instead of the
+    /// persistent worker pool.
+    spawn_oracle: bool,
+    /// The fleet-shared pricing cache (DESIGN.md §17): every replica
+    /// engine, every autoscale spin-up, and the policy engine price
+    /// through this one Arc.
+    surface: Arc<PriceSurface>,
+    /// Parallel windows dispatched to the persistent worker pool.
+    pool_windows: u64,
     /// Events processed (arrivals delivered + decode steps) — the
     /// numerator of the bench's `events_per_second`.
     events: u64,
@@ -750,12 +770,26 @@ impl ClusterSim {
                 params.seed,
             )?,
         };
+        // One fleet-shared price surface: every replica stack below,
+        // every autoscale spin-up, and the policy engine memoize into
+        // (and hit) the same warm arrays.  A sweep may pass a surface
+        // of its own so sibling cells share one warm memo too.
+        let surface = match &params.surface {
+            Some(s) if s.covers(&params.model, &params.hw, &params.parallelism, 1) => {
+                Arc::clone(s)
+            }
+            _ => PriceSurface::shared(
+                params.model.clone(),
+                params.hw.clone(),
+                params.parallelism,
+            ),
+        };
         // Per-replica stack: the canonical single-device tenancy sizing
         // (any replica may end up hosting every group, so each pool
         // budgets for all prefixes).
         let mut replicas = Vec::with_capacity(params.replicas);
         for _ in 0..params.replicas {
-            let mut coord = tenant_serving_stack(
+            let mut coord = tenant_serving_stack_with_surface(
                 &params.model,
                 &params.hw,
                 params.kernel,
@@ -763,6 +797,7 @@ impl ClusterSim {
                 &tenants,
                 params.include_prefill,
                 params.parallelism,
+                &surface,
             )?;
             // Recycle arena slots at completion: a million-request cell
             // runs in O(max outstanding) sequence memory.  Modeled
@@ -770,11 +805,11 @@ impl ClusterSim {
             coord.set_retain_finished(false);
             replicas.push(Replica::fresh(coord));
         }
-        let mut policy = PolicyEngine::new(
-            params.model.clone(),
+        let mut policy = PolicyEngine::with_surface(
             params.hw.clone(),
             params.kernel,
             params.parallelism,
+            Arc::clone(&surface),
         );
         policy.migration.enabled = params.migrate;
         policy.admission.ttft_target = params.slo_ttft;
@@ -797,6 +832,9 @@ impl ClusterSim {
             clock_heap: EventHeap::new(params.replicas),
             load_index: LoadIndex::new(params.replicas),
             linear_oracle: false,
+            spawn_oracle: false,
+            surface,
+            pool_windows: 0,
             events: 0,
         })
     }
@@ -809,9 +847,30 @@ impl ClusterSim {
         self.linear_oracle = on;
     }
 
+    /// Dispatch `run_parallel` windows on freshly scoped threads — the
+    /// retained pre-pool reference implementation — instead of the
+    /// persistent worker pool.  Bit-identity oracle for the pool path
+    /// (fuzzed in `tests/pricing_pool.rs`), and the bench's
+    /// `events_per_second_reference` measurement.
+    pub fn use_spawn_reference(&mut self, on: bool) {
+        self.spawn_oracle = on;
+    }
+
     /// Events processed so far: arrivals delivered plus decode steps.
     pub fn events_processed(&self) -> u64 {
         self.events
+    }
+
+    /// Parallel stepping windows dispatched to the persistent worker
+    /// pool so far (zero on the serial and spawn-reference paths).
+    pub fn pool_windows(&self) -> u64 {
+        self.pool_windows
+    }
+
+    /// `(hits, misses)` of the fleet-shared price surface — proof the
+    /// replicas actually share one warm cache.
+    pub fn price_cache_stats(&self) -> (u64, u64) {
+        self.surface.stats()
     }
 
     /// Largest per-replica sequence-arena high-water mark — the peak
@@ -1295,7 +1354,9 @@ impl ClusterSim {
     /// per-group ping-pong cool-down: a capacity change is not thrash,
     /// and the event itself is rate-limited.
     fn scale_up(&mut self, at: f64, idx: usize) -> Result<()> {
-        let mut coord = tenant_serving_stack(
+        // A spin-up adopts the fleet surface: it joins with the warm
+        // pricing cache instead of rebuilding a cold memo.
+        let mut coord = tenant_serving_stack_with_surface(
             &self.params.model,
             &self.params.hw,
             self.params.kernel,
@@ -1303,6 +1364,7 @@ impl ClusterSim {
             &self.tenants,
             self.params.include_prefill,
             self.params.parallelism,
+            &self.surface,
         )?;
         coord.set_retain_finished(false);
         let mut rep = Replica::fresh(coord);
@@ -1743,7 +1805,9 @@ impl ClusterSim {
     /// `deliver_next_arrival` (routing, faults, autoscaling and
     /// migration are all serialized there, keyed to arrival indices).
     /// The parallel interval computes exactly those per-replica step
-    /// sequences on `std::thread::scope` workers and merges the results
+    /// sequences on the persistent worker pool (`util::pool`; the
+    /// original `std::thread::scope` dispatch is retained behind
+    /// [`ClusterSim::use_spawn_reference`]) and merges the results
     /// into the event core in replica-index order.
     pub fn run_parallel(&mut self) -> Result<()> {
         loop {
@@ -1782,11 +1846,16 @@ impl ClusterSim {
     /// everything).  Each worker owns one replica at a time — the
     /// computation touches only that replica's stack — and the event
     /// core is re-synced in replica-index order afterwards, so the
-    /// merge is deterministic regardless of worker scheduling.
+    /// merge is deterministic regardless of worker scheduling or how
+    /// the windows are dispatched.  Dispatch goes to the persistent
+    /// worker pool by default (one publish + wakeup per window instead
+    /// of per-window thread spawns — DESIGN.md §17); the original
+    /// scoped-spawn body is retained behind
+    /// [`ClusterSim::use_spawn_reference`] as the bit-identity oracle.
     fn step_replicas_until(&mut self, horizon: Option<f64>) -> Result<()> {
         let stepped = AtomicU64::new(0);
-        let cursor = AtomicUsize::new(0);
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let use_pool = !self.spawn_oracle;
         {
             let slots: Vec<Mutex<&mut Replica>> =
                 self.replicas.iter_mut().map(Mutex::new).collect();
@@ -1795,35 +1864,48 @@ impl ClusterSim {
                 .unwrap_or(1)
                 .min(slots.len())
                 .max(1);
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| {
-                        let mut local = 0u64;
-                        loop {
+            // One replica's private window: step until the horizon (or
+            // drain).  Identical under either dispatcher — work
+            // distribution cannot affect results because replicas only
+            // interact inside `deliver_next_arrival`.
+            let step_replica = |i: usize| {
+                let mut rep = slots[i].lock().unwrap();
+                let mut local = 0u64;
+                loop {
+                    let busy = rep.coord.running() > 0 || rep.coord.queued() > 0;
+                    if !busy || horizon.is_some_and(|h| rep.coord.now() >= h) {
+                        break;
+                    }
+                    if let Err(e) = rep.coord.step() {
+                        let mut slot = first_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        break;
+                    }
+                    local += 1;
+                }
+                stepped.fetch_add(local, Ordering::Relaxed);
+            };
+            if use_pool {
+                pool::global().run(slots.len(), workers, &step_replica);
+            } else {
+                let cursor = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    for _ in 0..workers {
+                        scope.spawn(|| loop {
                             let i = cursor.fetch_add(1, Ordering::Relaxed);
                             if i >= slots.len() {
                                 break;
                             }
-                            let mut rep = slots[i].lock().unwrap();
-                            loop {
-                                let busy = rep.coord.running() > 0 || rep.coord.queued() > 0;
-                                if !busy || horizon.is_some_and(|h| rep.coord.now() >= h) {
-                                    break;
-                                }
-                                if let Err(e) = rep.coord.step() {
-                                    let mut slot = first_err.lock().unwrap();
-                                    if slot.is_none() {
-                                        *slot = Some(e);
-                                    }
-                                    break;
-                                }
-                                local += 1;
-                            }
-                        }
-                        stepped.fetch_add(local, Ordering::Relaxed);
-                    });
-                }
-            });
+                            step_replica(i);
+                        });
+                    }
+                });
+            }
+        }
+        if use_pool {
+            self.pool_windows += 1;
         }
         if let Some(e) = first_err.into_inner().unwrap() {
             return Err(e);
@@ -2453,5 +2535,71 @@ mod tests {
         assert_eq!(a.scale_downs, b.scale_downs);
         assert_eq!(serial.events_processed(), par.events_processed());
         assert_eq!(serial.arena_peak(), par.arena_peak());
+    }
+
+    /// The persistent-pool dispatcher is byte-identical to the retained
+    /// scoped-spawn reference on the same rich cell, and only the
+    /// pooled run counts pool windows.  The fuzz suite
+    /// (`tests/pricing_pool.rs`) widens this across random draws.
+    #[test]
+    fn pooled_dispatch_bit_identical_to_spawn_reference() {
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            2,
+            RouterPolicy::PrefixAffinity,
+            16,
+            3,
+            1.0,
+        );
+        p.total_requests = 192;
+        p.arrival_rate = Some(60.0);
+        p.arrival_burst = Some(6.0);
+        p.migrate = true;
+        p.scaling.enabled = true;
+        p.scaling.cooldown_arrivals = 24;
+        let mut pooled = ClusterSim::new(&p).unwrap();
+        pooled.run_parallel().unwrap();
+        let mut spawned = ClusterSim::new(&p).unwrap();
+        spawned.use_spawn_reference(true);
+        spawned.run_parallel().unwrap();
+        assert!(pooled.pool_windows() > 0, "the pooled run must use the pool");
+        assert_eq!(spawned.pool_windows(), 0, "the reference never does");
+        let (a, b) = (pooled.report(), spawned.report());
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.requests_completed, b.requests_completed);
+        assert_eq!(a.decode_seconds.to_bits(), b.decode_seconds.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits());
+        assert_eq!(a.spills, b.spills);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.scale_ups, b.scale_ups);
+        assert_eq!(a.scale_downs, b.scale_downs);
+        assert_eq!(pooled.events_processed(), spawned.events_processed());
+        assert_eq!(pooled.arena_peak(), spawned.arena_peak());
+    }
+
+    /// The fleet prices through ONE surface: every replica engine and
+    /// the policy engine hold the same Arc, and a finished run shows a
+    /// warm cache (hits recorded fleet-wide, not per-replica cold
+    /// memos).
+    #[test]
+    fn fleet_shares_one_price_surface() {
+        let mut sim = ClusterSim::new(&quick_params(3, RouterPolicy::RoundRobin)).unwrap();
+        for i in 0..sim.replica_count() {
+            assert!(
+                Arc::ptr_eq(sim.coordinator(i).engine.surface(), &sim.surface),
+                "replica {i} must adopt the fleet surface"
+            );
+        }
+        assert!(Arc::ptr_eq(sim.policy.surface(), &sim.surface));
+        sim.run().unwrap();
+        let (hits, misses) = sim.price_cache_stats();
+        assert!(misses > 0, "the run must price something");
+        assert!(
+            hits > misses,
+            "a shared warm cache mostly hits: {hits} hits vs {misses} misses"
+        );
     }
 }

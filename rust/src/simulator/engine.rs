@@ -17,9 +17,15 @@
 //! formulation (shared cost at full batch + per-sequence non-shared).
 //!
 //! Hot path: `context_lens` are bucketed by distinct length
-//! (counting-sort scratch) and the memoized `CostTable` is evaluated
-//! once per *distinct* length — O(#distinct) cost evaluations per
-//! decode iteration instead of O(B), bit-identical results.
+//! (counting-sort scratch, reused across iterations) and the memoized
+//! cost surface is evaluated once per *distinct* length — O(#distinct)
+//! cost evaluations per decode iteration instead of O(B), bit-identical
+//! results.  The memo lives in an `Arc`-shared [`PriceSurface`]
+//! (DESIGN.md §17): a standalone engine gets a private surface, while a
+//! cluster replica adopts the fleet-shared one via `with_surface`, so
+//! autoscale spin-ups start warm instead of rebuilding a cold table.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -28,7 +34,7 @@ use crate::coordinator::{DecodeBatch, Engine, IterationOutcome, PrefillRequest};
 use crate::costmodel::exec_time::component_time;
 use crate::costmodel::flops::Component;
 use crate::costmodel::parallel::ParallelismConfig;
-use crate::costmodel::table::CostTable;
+use crate::costmodel::surface::PriceSurface;
 use crate::kvcache::PrefixId;
 use crate::metrics::BreakdownTimers;
 
@@ -37,17 +43,18 @@ pub struct SimEngine {
     pub hw: HardwareSpec,
     /// Model prefill as compute-bound naive attention + projections.
     pub include_prefill: bool,
-    /// Hot-path switch: bucket lengths + memoize the cost table.  Off,
+    /// Hot-path switch: bucket lengths + memoize the cost surface.  Off,
     /// the engine evaluates Table 1 once per sequence per iteration —
     /// the pre-optimization reference, kept as the measurable baseline
     /// (`bench_sweep`) and for equivalence tests.  Results are
     /// bit-identical either way.
     pub memoized: bool,
-    /// Memoized Table-1 evaluations, shared across all iterations.
-    table: CostTable,
+    /// Memoized Table-1 evaluations — private by default, fleet-shared
+    /// when constructed via `with_surface`.
+    surface: Arc<PriceSurface>,
     /// TP/SP sharding of the modeled device group.  `single()` (the
     /// default) is bit-identical to the pre-parallelism engine; set via
-    /// `with_parallelism` so the memoized table stays consistent.
+    /// `with_parallelism` so the memoized surface stays consistent.
     par: ParallelismConfig,
     /// Counting-sort scratch: `len_counts[l]` = sequences at length `l`
     /// this iteration; `touched` lists the distinct lengths to reset.
@@ -64,13 +71,50 @@ impl SimEngine {
     /// `costmodel::parallel::parallel_attention_cost`; prefill compute
     /// splits across ranks.  TP must divide the model's head count.
     pub fn with_parallelism(cfg: ModelConfig, hw: HardwareSpec, par: ParallelismConfig) -> Self {
-        let table = CostTable::with_parallelism(cfg.clone(), par);
+        let surface = Arc::new(PriceSurface::new(cfg.clone(), hw.clone(), par));
+        Self::from_surface(cfg, hw, par, surface)
+    }
+
+    /// An engine adopting a fleet-shared [`PriceSurface`] — the cluster
+    /// path, where every replica (and every autoscale spin-up) prices
+    /// against the same warm memo.  The surface must cover this
+    /// engine's `(model, hardware, parallelism)` cell; a mismatched
+    /// surface is rejected in favor of a private one (debug-asserted),
+    /// so results can never come from the wrong cell.
+    pub fn with_surface(
+        cfg: ModelConfig,
+        hw: HardwareSpec,
+        par: ParallelismConfig,
+        surface: Arc<PriceSurface>,
+    ) -> Self {
+        debug_assert!(
+            surface.covers(&cfg, &hw, &par, 1),
+            "shared surface keyed for ({}, {}, {:?}) handed to engine ({}, {}, {:?})",
+            surface.model().name,
+            surface.hardware().name,
+            surface.parallelism(),
+            cfg.name,
+            hw.name,
+            par,
+        );
+        if !surface.covers(&cfg, &hw, &par, 1) {
+            return Self::with_parallelism(cfg, hw, par);
+        }
+        Self::from_surface(cfg, hw, par, surface)
+    }
+
+    fn from_surface(
+        cfg: ModelConfig,
+        hw: HardwareSpec,
+        par: ParallelismConfig,
+        surface: Arc<PriceSurface>,
+    ) -> Self {
         SimEngine {
             cfg,
             hw,
             include_prefill: true,
             memoized: true,
-            table,
+            surface,
             par,
             len_counts: Vec::new(),
             touched: Vec::new(),
@@ -82,9 +126,30 @@ impl SimEngine {
         self.par
     }
 
-    /// Cache statistics of the memoized cost table: (hits, misses).
+    /// The pricing surface this engine evaluates through (shared by the
+    /// whole fleet in cluster mode).
+    pub fn surface(&self) -> &Arc<PriceSurface> {
+        &self.surface
+    }
+
+    /// Cache statistics of the memoized cost surface: (hits, misses).
+    /// For an engine on a fleet-shared surface these are fleet-wide.
     pub fn cost_cache_stats(&self) -> (u64, u64) {
-        (self.table.hits, self.table.misses)
+        self.surface.stats()
+    }
+
+    /// The counting-sort scratch contract: both buffers fully cleared
+    /// between decode iterations — `touched` drained and every
+    /// `len_counts` bucket zeroed by the previous walk.  A leaked
+    /// bucket would silently inflate the next iteration's length
+    /// histogram, so the gate is checked (debug builds) at every
+    /// iteration entry, not just per kernel class.
+    fn debug_assert_scratch_clear(&self) {
+        debug_assert!(self.touched.is_empty(), "scratch `touched` leaked entries");
+        debug_assert!(
+            self.len_counts.iter().all(|&c| c == 0),
+            "scratch `len_counts` has nonzero buckets between iterations"
+        );
     }
 
     /// Per-layer decode-attention time of one grouped iteration with
@@ -94,9 +159,10 @@ impl SimEngine {
     /// kernel class, scaled by how many requests share it.
     fn iteration_time(&mut self, batch: &DecodeBatch) -> (f64, BreakdownTimers) {
         let (shared_cost, non_shared) = if self.memoized {
+            self.debug_assert_scratch_clear();
             // Shared stage: one memoized evaluation per group (l_n=0
             // isolates the shared component + projections/combine).
-            let shared_cost = self.table.grouped_shared_cost(
+            let shared_cost = self.surface.grouped_shared_cost(
                 batch.groups.iter().map(|g| (g.kernel, g.len as u64, g.shared_len as u64)),
             );
             // Non-shared stage: bucket context lengths per kernel class
@@ -131,7 +197,7 @@ impl SimEngine {
                     let l = self.touched[i];
                     let count = self.len_counts[l];
                     self.len_counts[l] = 0;
-                    let c = self.table.cost(kernel, 1, 0, l as u64 + 1);
+                    let c = self.surface.cost(kernel, 1, 0, l as u64 + 1);
                     non_shared = non_shared.add(c.non_shared.scale(count));
                 }
                 self.touched.clear();
@@ -456,5 +522,33 @@ mod tests {
         let (hits, misses) = e.cost_cache_stats();
         assert_eq!(misses, misses_after_first, "steady state never misses");
         assert_eq!(hits, 20);
+    }
+
+    /// Two engines adopting one shared surface produce the same bits
+    /// as a private-surface engine, and the second engine starts warm:
+    /// a workload the first engine already priced adds zero misses.
+    #[test]
+    fn shared_surface_warm_start_is_bit_identical() {
+        let cfg = deepseek_v3();
+        let hw = ascend_npu();
+        let par = ParallelismConfig::single();
+        let surface = Arc::new(PriceSurface::new(cfg.clone(), hw.clone(), par));
+        let mut first = SimEngine::with_surface(cfg.clone(), hw.clone(), par, Arc::clone(&surface));
+        let mut second = SimEngine::with_surface(cfg.clone(), hw.clone(), par, surface);
+        let mut private = SimEngine::new(cfg, hw);
+        let b = batch(KernelKind::Typhoon, 256, 4096, 512);
+
+        let r1 = first.decode(&b).unwrap();
+        let (_, misses_after_first) = first.cost_cache_stats();
+        assert!(misses_after_first > 0);
+        let r2 = second.decode(&b).unwrap();
+        let (_, misses_after_second) = second.cost_cache_stats();
+        assert_eq!(
+            misses_after_second, misses_after_first,
+            "spin-up engine reuses the warm fleet surface"
+        );
+        let rp = private.decode(&b).unwrap();
+        assert_eq!(r1.seconds.to_bits(), r2.seconds.to_bits());
+        assert_eq!(r1.seconds.to_bits(), rp.seconds.to_bits(), "sharing never changes bits");
     }
 }

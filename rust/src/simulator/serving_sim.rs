@@ -91,7 +91,7 @@ pub fn run_experiment(
     };
     // Per-rank Eq. 1: the threshold follows the stack's TP/SP sharding
     // (ranks = 1 reproduces the classic single-device value exactly).
-    let policy = KernelPolicy::from_parallelism(
+    let mut policy = KernelPolicy::from_parallelism(
         params.kernel,
         &params.model,
         &params.hw,
@@ -104,6 +104,9 @@ pub fn run_experiment(
         params.hw.clone(),
         params.parallelism,
     );
+    // Policy and engine price against the same surface (registry
+    // pricing memoizes into it; values are bit-identical either way).
+    policy.attach_surface(engine.surface());
     engine.include_prefill = params.include_prefill;
     engine.memoized = params.memoized_engine;
     let mut coord = Coordinator::new(cfg, policy, kv, engine)?;

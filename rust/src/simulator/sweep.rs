@@ -5,21 +5,21 @@
 //! Each cell of the paper's evaluation grid — (model x hardware x
 //! prompt x dataset x batch x kernel) — is a self-contained serving
 //! simulation with its own coordinator, KV-cache and seeded RNG; cells
-//! share no mutable state.  The executor fans cells out over
-//! `std::thread::scope` workers pulling indices from an atomic counter,
-//! stores each result at its cell index, and returns them **in cell
-//! order** — so any artifact formatted from the results is
-//! byte-identical to a serial run (asserted by
+//! share no mutable state.  The executor fans cells out over the
+//! process-wide persistent worker pool (`util::pool` — parked threads,
+//! no per-sweep spawn cost), stores each result at its cell index, and
+//! returns them **in cell order** — so any artifact formatted from the
+//! results is byte-identical to a serial run (asserted by
 //! `tests/sweep_equivalence.rs`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::config::hardware::Backend;
 use crate::config::{HardwareSpec, KernelKind, ModelConfig};
 use crate::costmodel::flops::AttentionWorkload;
+use crate::costmodel::surface::PriceSurface;
 use crate::costmodel::parallel::{
     parallel_attention_time, parallel_pair_threshold, parallel_pair_threshold_exact,
     ParallelismConfig,
@@ -83,24 +83,15 @@ impl SweepExecutor {
         if self.is_serial() || n <= 1 {
             return (0..n).map(&f).collect();
         }
-        let workers = self.threads.min(n);
-        let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<Result<T>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        return;
-                    }
-                    let out = f(i);
-                    *slots[i].lock().expect("sweep slot poisoned") = Some(out);
-                });
-            }
-        });
-        // A worker panic is re-raised by scope() above, so reaching
-        // this point means every slot was filled exactly once.
+        let fill = |i: usize| {
+            let out = f(i);
+            *slots[i].lock().expect("sweep slot poisoned") = Some(out);
+        };
+        crate::util::pool::global().run(n, self.threads.min(n), &fill);
+        // A worker panic is re-raised by the pool in this thread, so
+        // reaching this point means every slot was filled exactly once.
         let mut results = Vec::with_capacity(n);
         for (i, slot) in slots.into_iter().enumerate() {
             let out = slot
@@ -449,6 +440,15 @@ pub fn run_cluster_sweep(
     cells: &[ClusterCell],
     exec: &SweepExecutor,
 ) -> Result<Vec<ClusterCellResult>> {
+    // One warm price surface for the whole grid: sibling cells share
+    // `(model, hw, parallelism)`, so a sweep worker hits the memo a
+    // neighboring cell already filled instead of re-pricing the same
+    // workloads cold.  A cell that prices a different combination
+    // (mixed-model grids) silently gets a private surface inside
+    // `ClusterSim::new` — results are bit-identical either way.
+    let surface = cells.first().map(|c| {
+        PriceSurface::shared(c.model.clone(), hw.clone(), ParallelismConfig::single())
+    });
     exec.run(cells.len(), |i| {
         let c = &cells[i];
         let mut p = ClusterParams::new(
@@ -475,6 +475,7 @@ pub fn run_cluster_sweep(
             p.faults.seed = p.seed;
             p.faults.crashes = if c.replicas > 1 { 1 } else { 0 };
         }
+        p.surface = surface.as_ref().map(Arc::clone);
         let report = run_cluster_experiment(&p)?;
         Ok(ClusterCellResult { cell: c.clone(), report })
     })

@@ -10,6 +10,8 @@
 //! * **per-tenant naive** (`KernelKind::Naive`) — each group naive on
 //!   both stages (prefix-aware PagedAttention).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::hardware::Backend;
@@ -21,6 +23,7 @@ use crate::costmodel::parallel::{
     parallel_attention_time, parallel_batch_threshold, parallel_pair_threshold,
     ParallelismConfig,
 };
+use crate::costmodel::surface::PriceSurface;
 use crate::kvcache::{KvCacheManager, PrefixId};
 use crate::workload::tenants::{tenant_set, MultiTenantGenerator, TenantSpec};
 
@@ -41,6 +44,37 @@ pub fn tenant_serving_stack(
     include_prefill: bool,
     parallelism: ParallelismConfig,
 ) -> Result<Coordinator<SimEngine>> {
+    let surface = PriceSurface::shared(model.clone(), hw.clone(), parallelism);
+    tenant_serving_stack_with_surface(
+        model,
+        hw,
+        kernel,
+        batch,
+        tenants,
+        include_prefill,
+        parallelism,
+        &surface,
+    )
+}
+
+/// The same stack priced against a fleet-shared [`PriceSurface`]
+/// (DESIGN.md §17): the cluster router builds one surface and hands it
+/// to every replica — including autoscale spin-ups, which previously
+/// paid a full cold-memo rebuild — so the whole fleet shares one warm
+/// pricing cache.  With a fresh surface this is `tenant_serving_stack`
+/// bit-for-bit (the hit/miss *values* never differ, only who computes
+/// them first).
+#[allow(clippy::too_many_arguments)]
+pub fn tenant_serving_stack_with_surface(
+    model: &ModelConfig,
+    hw: &HardwareSpec,
+    kernel: KernelKind,
+    batch: usize,
+    tenants: &[TenantSpec],
+    include_prefill: bool,
+    parallelism: ParallelismConfig,
+    surface: &Arc<PriceSurface>,
+) -> Result<Coordinator<SimEngine>> {
     let block_size = 128; // paper: paged KV with block size 128
     let max_seq_len = 2048;
     let prefix_blocks: usize =
@@ -56,9 +90,15 @@ pub fn tenant_serving_stack(
     };
     // Per-rank Eq. 1: a TP/SP-sharded replica derives its own B_theta
     // (ranks = 1 reproduces the classic single-device value exactly).
-    let policy = KernelPolicy::from_parallelism(kernel, model, hw, 1, &parallelism);
+    let mut policy = KernelPolicy::from_parallelism(kernel, model, hw, 1, &parallelism);
+    policy.attach_surface(surface);
     let kv = KvCacheManager::new(model.clone(), total_blocks, block_size);
-    let mut engine = SimEngine::with_parallelism(model.clone(), hw.clone(), parallelism);
+    let mut engine = SimEngine::with_surface(
+        model.clone(),
+        hw.clone(),
+        parallelism,
+        Arc::clone(surface),
+    );
     engine.include_prefill = include_prefill;
     Coordinator::new(cfg, policy, kv, engine)
 }

@@ -1,0 +1,300 @@
+//! A process-global persistent worker pool (DESIGN.md §17).
+//!
+//! `ClusterSim::run_parallel` previously re-spawned `std::thread::scope`
+//! workers for **every arrival window** — at `--million` scale, ~one
+//! million spawn/join cycles fencing a few replica decode steps each.
+//! This pool parks its workers on a condvar between jobs instead:
+//! dispatching a window is one mutex publish + wakeup, not N thread
+//! spawns.
+//!
+//! ## Handoff protocol
+//!
+//! A job is published under the state mutex as `(epoch+1, task, limit)`
+//! and workers are woken; each worker copies the current job, drains
+//! indices from its shared cursor (`fetch_add` work stealing, exactly
+//! like the scoped code this replaces), and checks out by decrementing
+//! `active`.  The caller blocks until `active == 0`, so by the time
+//! [`WorkerPool::run`] returns no worker holds the task reference —
+//! that blocking is what makes the internal lifetime erasure of the
+//! caller's borrowed closure sound.  Concurrent callers are serialized
+//! by a caller-side mutex; `limit` caps how many workers participate
+//! (the executor's `threads` semantic).
+//!
+//! ## Panics and re-entrancy
+//!
+//! A panicking task is caught in the worker (`catch_unwind`), the first
+//! payload is stashed, the remaining workers keep draining, and the
+//! caller re-raises it (`resume_unwind`) after the job completes — the
+//! same observable behavior as a scoped-thread panic, but the pool
+//! survives for the next job.  A `run` issued *from inside* a pool
+//! worker (nested parallelism, e.g. a parallel sweep cell whose cluster
+//! sim steps replicas) executes inline and serially on that worker —
+//! the pool's threads are already saturated, and inlining cannot
+//! deadlock.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock, PoisonError};
+
+/// One published job: a borrowed task with its lifetime erased (sound —
+/// see module docs), the shared index cursor, and the participation cap.
+#[derive(Clone, Copy)]
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    cursor: &'static AtomicUsize,
+    items: usize,
+    limit: usize,
+}
+
+struct State {
+    /// Bumped once per published job; workers wait for it to advance.
+    epoch: u64,
+    job: Option<Job>,
+    /// Participants yet to check out of the current job.
+    active: usize,
+}
+
+pub struct WorkerPool {
+    state: Mutex<State>,
+    /// Wakes workers when a job is published.
+    work: Condvar,
+    /// Wakes the caller when the last participant checks out.
+    done: Condvar,
+    /// Serializes callers: one job in flight at a time.
+    caller: Mutex<()>,
+    /// First panic payload of the current job, re-raised by the caller.
+    panicked: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    workers: usize,
+}
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread: a nested `run`
+    /// from task code executes inline instead of re-entering the pool.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// The process-global pool, spawned lazily on first use with one worker
+/// per available core.  Living in a `OnceLock` keeps pool users `Copy`
+/// (`SweepExecutor`) and lets every simulator and sweep share the same
+/// parked threads.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<&'static WorkerPool> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        WorkerPool::with_workers(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    })
+}
+
+impl WorkerPool {
+    /// A pool with exactly `workers` parked threads (the global pool
+    /// sizes this to the machine; tests may build small private pools).
+    pub fn with_workers(workers: usize) -> &'static Self {
+        // Pools are immortal by design (workers park forever between
+        // jobs and die with the process), so leaking the allocation is
+        // the honest lifetime — it also gives worker threads a plain
+        // `&'static` to borrow.
+        let pool: &'static WorkerPool = Box::leak(Box::new(WorkerPool {
+            state: Mutex::new(State { epoch: 0, job: None, active: 0 }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            caller: Mutex::new(()),
+            panicked: Mutex::new(None),
+            workers: workers.max(1),
+        }));
+        for worker_id in 0..pool.workers {
+            std::thread::Builder::new()
+                .name(format!("typhoon-pool-{worker_id}"))
+                .spawn(move || pool.worker_loop(worker_id))
+                .expect("spawn pool worker");
+        }
+        pool
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// True when called from inside a pool worker (where a nested
+    /// `run` executes inline).
+    pub fn on_worker_thread() -> bool {
+        IN_POOL_WORKER.with(|f| f.get())
+    }
+
+    /// Run `task(i)` for every `i in 0..items` across up to `limit`
+    /// pool workers (work-stealing index distribution), blocking until
+    /// all indices are done.  Serial cases — `limit <= 1`, one item, or
+    /// a nested call from a pool worker — execute inline on the caller.
+    /// A task panic is re-raised here after the job drains.
+    pub fn run(&self, items: usize, limit: usize, task: &(dyn Fn(usize) + Sync)) {
+        if items == 0 {
+            return;
+        }
+        if limit <= 1 || items == 1 || Self::on_worker_thread() {
+            for i in 0..items {
+                task(i);
+            }
+            return;
+        }
+        let _serialize = self.caller.lock().unwrap_or_else(PoisonError::into_inner);
+        let cursor = AtomicUsize::new(0);
+        // Erase the borrows to 'static for the Job. Sound: this caller
+        // blocks below until every participant has checked out, so no
+        // worker can touch either reference after `run` returns.
+        let task: &'static (dyn Fn(usize) + Sync) =
+            unsafe { &*(task as *const (dyn Fn(usize) + Sync)) };
+        let cursor_ref: &'static AtomicUsize = unsafe { &*(&cursor as *const AtomicUsize) };
+        let participants = self.workers.min(limit);
+        {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.job = Some(Job { task, cursor: cursor_ref, items, limit });
+            st.epoch += 1;
+            st.active = participants;
+            self.work.notify_all();
+        }
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        while st.active != 0 {
+            st = self.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        st.job = None;
+        drop(st);
+        let payload = self.panicked.lock().unwrap_or_else(PoisonError::into_inner).take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
+    fn worker_loop(&'static self, worker_id: usize) {
+        IN_POOL_WORKER.with(|f| f.set(true));
+        let mut seen_epoch = 0u64;
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+                while st.epoch == seen_epoch {
+                    st = self.work.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+                seen_epoch = st.epoch;
+                st.job
+            };
+            // A worker above the cap sleeps through the job entirely —
+            // it is not counted in `active`, so nobody waits on it.
+            let Some(job) = job else { continue };
+            if worker_id >= job.limit {
+                continue;
+            }
+            let outcome = catch_unwind(AssertUnwindSafe(|| loop {
+                let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= job.items {
+                    break;
+                }
+                (job.task)(i);
+            }));
+            if let Err(payload) = outcome {
+                let mut slot =
+                    self.panicked.lock().unwrap_or_else(PoisonError::into_inner);
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.active -= 1;
+            if st.active == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = global();
+        let counts: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(counts.len(), 8, &|i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn limit_caps_concurrency() {
+        let pool = global();
+        let in_flight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool.run(64, 2, &|_| {
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_pool() {
+        let pool = global();
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            pool.run(100, 4, &|i| {
+                sum.fetch_add(i + round, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 4950 + 100 * round);
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline_without_deadlock() {
+        let pool = global();
+        let total = AtomicUsize::new(0);
+        pool.run(4, 4, &|_| {
+            assert!(WorkerPool::on_worker_thread());
+            // Nested: must inline on this worker, not re-enter the pool.
+            pool.run(10, 4, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = global();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, 4, &|i| {
+                if i == 7 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(err.is_err(), "panic must re-raise in the caller");
+        // The pool keeps working after a panicked job.
+        let sum = AtomicUsize::new(0);
+        pool.run(8, 4, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 28);
+    }
+
+    #[test]
+    fn serial_paths_inline_on_the_caller() {
+        let pool = global();
+        let hit = AtomicUsize::new(0);
+        pool.run(1, 8, &|i| {
+            assert_eq!(i, 0);
+            assert!(!WorkerPool::on_worker_thread(), "single item inlines");
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.run(5, 1, &|_| {
+            assert!(!WorkerPool::on_worker_thread(), "limit 1 inlines");
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.run(0, 8, &|_| unreachable!("zero items"));
+        assert_eq!(hit.load(Ordering::Relaxed), 6);
+    }
+}

@@ -1,0 +1,291 @@
+//! PR 9 regressions: the dense interned pricing memo, the fleet-shared
+//! price surface, and the persistent worker pool (DESIGN.md §17).
+//!
+//! * **dense-vs-hash bit-identity** — across random model / sharding /
+//!   backend draws and randomized call sequences (repeated keys for
+//!   hits, coordinates past the dense axis cap for the spill path),
+//!   `CostTable::cost` and `PriceTable::time` return bit-identical
+//!   values with the dense memo and the retained `HashMap` reference
+//!   (`use_hash_reference`), and the hit/miss counter traces agree
+//!   call-for-call;
+//! * **shared-surface identity** — two cluster cells pricing
+//!   concurrently through one `Arc<PriceSurface>` (the sweep's
+//!   cross-cell sharing) report bit-identically to private-surface
+//!   baselines, and the shared surface records warm hits;
+//! * **pool determinism** — across random cluster draws, the serial
+//!   event loop, the pooled parallel dispatch, and the retained
+//!   spawn-per-window reference (`use_spawn_reference`) produce
+//!   byte-identical reports; only the pooled run touches the pool.
+//!
+//! The scheduled CI long-fuzz job scales the iteration counts via
+//! `TYPHOON_FUZZ_ITERS` (`--test pricing_pool fuzz`); assertion
+//! messages embed the failing seed so a red run replays as a one-seed
+//! unit test.
+
+use std::sync::Arc;
+
+use typhoon_mla::config::hardware::{ascend_npu, gpu_h800, gpu_h800_decode, host_cpu};
+use typhoon_mla::config::model::{deepseek_v3, kimi_k2};
+use typhoon_mla::config::KernelKind;
+use typhoon_mla::costmodel::{CostTable, ParallelismConfig, PriceSurface, PriceTable};
+use typhoon_mla::simulator::{ClusterParams, ClusterReport, ClusterSim, RouterPolicy};
+use typhoon_mla::util::rng::Rng;
+
+/// Iteration budget for a fuzz loop: `base` in tier-1, `base x
+/// TYPHOON_FUZZ_ITERS` in the scheduled CI long-fuzz job (unset or
+/// unparsable falls back to the tier-1 budget).
+fn fuzz_iters(base: u64) -> u64 {
+    std::env::var("TYPHOON_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map_or(base, |m| base * m.max(1))
+}
+
+/// One random memo coordinate.  Half the draws revisit an
+/// already-priced key (exercising the hit path on both memos); fresh
+/// draws mix small coordinates with lengths past the dense axis cap
+/// (`1 << 16`), so the sorted spill-list path is fuzzed too.
+fn draw_key(
+    rng: &mut Rng,
+    seen: &mut Vec<(KernelKind, u64, u64, u64)>,
+) -> (KernelKind, u64, u64, u64) {
+    if !seen.is_empty() && rng.gen_range(0, 2) == 0 {
+        return *rng.choose(seen);
+    }
+    let kernel = *rng.choose(&KernelKind::all());
+    let batch = rng.gen_range(1, 2048);
+    let l_s = match rng.gen_range(0, 4) {
+        0 => rng.gen_range(0, 512),
+        1 => rng.gen_range(0, 32768),
+        // Past DENSE_AXIS_CAP: lands in the AxisMap spill list.
+        _ => rng.gen_range(1 << 16, 1 << 18),
+    };
+    let l_n = match rng.gen_range(0, 3) {
+        0 => 0,
+        1 => rng.gen_range(1, 4096),
+        _ => rng.gen_range(1 << 16, (1 << 16) + 4096),
+    };
+    let key = (kernel, batch, l_s, l_n);
+    seen.push(key);
+    key
+}
+
+/// `CostTable` with the dense memo (default) returns the same
+/// `CostBreakdown` — and the same hit/miss trace — as the retained
+/// `HashMap` reference across randomized models, sharding, and call
+/// sequences.
+#[test]
+fn cost_table_dense_matches_hash_reference_fuzz() {
+    for seed in 0..fuzz_iters(12) {
+        let mut rng = Rng::new(0x9A11_0000 + seed);
+        let cfg = rng.choose(&[deepseek_v3(), kimi_k2()]).clone();
+        let par = ParallelismConfig {
+            tp: 1u64 << rng.gen_range(0, 4),
+            sp: 1u64 << rng.gen_range(0, 3),
+        };
+        let mut dense = CostTable::with_parallelism(cfg.clone(), par);
+        let mut hash = CostTable::with_parallelism(cfg.clone(), par);
+        hash.use_hash_reference = true;
+
+        let mut seen = Vec::new();
+        for call in 0..160 {
+            let (kernel, b, ls, ln) = draw_key(&mut rng, &mut seen);
+            let d = dense.cost(kernel, b, ls, ln);
+            let h = hash.cost(kernel, b, ls, ln);
+            assert_eq!(
+                d,
+                h,
+                "seed {seed} call {call}: dense vs hash cost diverged on \
+                 ({kernel:?}, {b}, {ls}, {ln}) for {} tp={} sp={}",
+                cfg.name,
+                par.tp,
+                par.sp
+            );
+            assert_eq!(
+                (dense.hits, dense.misses),
+                (hash.hits, hash.misses),
+                "seed {seed} call {call}: counter traces diverged"
+            );
+        }
+        assert!(dense.hits > 0, "seed {seed}: repeated keys must hit");
+        assert!(dense.misses > 0, "seed {seed}: fresh keys must miss");
+        assert_eq!(dense.len(), hash.len(), "seed {seed}: memo sizes diverged");
+    }
+}
+
+/// `PriceTable` with the dense memo returns bit-identical roofline
+/// seconds — and the same hit/miss trace — as the `HashMap` reference
+/// across randomized backends (up to all four hardware presets
+/// registered) and call sequences.
+#[test]
+fn price_table_dense_matches_hash_reference_fuzz() {
+    let presets = [ascend_npu(), gpu_h800(), gpu_h800_decode(), host_cpu()];
+    for seed in 0..fuzz_iters(12) {
+        let mut rng = Rng::new(0x9A12_0000 + seed);
+        let cfg = rng.choose(&[deepseek_v3(), kimi_k2()]).clone();
+        let par = ParallelismConfig {
+            tp: 1u64 << rng.gen_range(0, 4),
+            sp: 1u64 << rng.gen_range(0, 3),
+        };
+        let mut dense = PriceTable::new(cfg.clone(), par);
+        let mut hash = PriceTable::new(cfg.clone(), par);
+        hash.use_hash_reference = true;
+        let n_backends = rng.gen_range_usize(1, presets.len() + 1);
+        for hw in presets.iter().take(n_backends) {
+            let a = dense.register_backend(hw.clone());
+            let b = hash.register_backend(hw.clone());
+            assert_eq!(a, b, "seed {seed}: backend ids must agree");
+        }
+
+        let mut seen = Vec::new();
+        for call in 0..160 {
+            let (kernel, b, ls, ln) = draw_key(&mut rng, &mut seen);
+            let backend = rng.gen_range_usize(0, n_backends);
+            let d = dense.time(kernel, backend, b, ls, ln);
+            let h = hash.time(kernel, backend, b, ls, ln);
+            assert_eq!(
+                d.to_bits(),
+                h.to_bits(),
+                "seed {seed} call {call}: dense vs hash time diverged on \
+                 ({kernel:?}, backend {backend}, {b}, {ls}, {ln}) for {} tp={} sp={}",
+                cfg.name,
+                par.tp,
+                par.sp
+            );
+            assert_eq!(
+                (dense.hits, dense.misses),
+                (hash.hits, hash.misses),
+                "seed {seed} call {call}: counter traces diverged"
+            );
+        }
+        assert!(dense.hits > 0, "seed {seed}: repeated keys must hit");
+        assert!(dense.misses > 0, "seed {seed}: fresh keys must miss");
+    }
+}
+
+/// Assert two cluster reports are byte-identical on every audited
+/// aggregate (floats compared by bit pattern).
+fn assert_reports_identical(a: &ClusterReport, b: &ClusterReport, ctx: &str) {
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+    assert_eq!(a.requests_completed, b.requests_completed, "{ctx}: completed");
+    assert_eq!(a.decode_seconds.to_bits(), b.decode_seconds.to_bits(), "{ctx}: decode");
+    assert_eq!(a.goodput.to_bits(), b.goodput.to_bits(), "{ctx}: goodput");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.ttft_p50.to_bits(), b.ttft_p50.to_bits(), "{ctx}: ttft_p50");
+    assert_eq!(a.ttft_p95.to_bits(), b.ttft_p95.to_bits(), "{ctx}: ttft_p95");
+    assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits(), "{ctx}: ttft_p99");
+    assert_eq!(a.tpot_p50.to_bits(), b.tpot_p50.to_bits(), "{ctx}: tpot_p50");
+    assert_eq!(a.tpot_p99.to_bits(), b.tpot_p99.to_bits(), "{ctx}: tpot_p99");
+    assert_eq!(a.spills, b.spills, "{ctx}: spills");
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migrations");
+    assert_eq!(a.transfer_seconds.to_bits(), b.transfer_seconds.to_bits(), "{ctx}: transfer");
+    assert_eq!(a.scale_ups, b.scale_ups, "{ctx}: scale_ups");
+    assert_eq!(a.scale_downs, b.scale_downs, "{ctx}: scale_downs");
+    assert_eq!(a.active_replicas, b.active_replicas, "{ctx}: active_replicas");
+}
+
+/// The sweep's cross-cell sharing: two cluster cells adopting ONE
+/// `Arc<PriceSurface>` via `ClusterParams::surface` and running
+/// **concurrently** (each on its own thread, both dispatching decode
+/// windows to the global pool) report bit-identically to
+/// private-surface serial baselines — and the shared surface ends warm
+/// (hits recorded, so the replicas really priced through it).
+#[test]
+fn shared_surface_concurrent_cells_bit_identical() {
+    let mut cells = Vec::new();
+    for (seed, skew) in [(11u64, 0.0f64), (29, 1.1)] {
+        let mut p = ClusterParams::new(
+            deepseek_v3(),
+            ascend_npu(),
+            2,
+            RouterPolicy::PrefixAffinity,
+            16,
+            3,
+            skew,
+        );
+        p.total_requests = 96;
+        p.seed = seed;
+        p.arrival_rate = Some(50.0);
+        cells.push(p);
+    }
+
+    // Baselines: private surfaces (surface = None), serial event loop.
+    let mut baselines = Vec::new();
+    for p in &cells {
+        let mut sim = ClusterSim::new(p).unwrap();
+        sim.run().unwrap();
+        baselines.push(sim.report());
+    }
+
+    // Shared: one warm surface adopted by both cells, run concurrently.
+    let surface = PriceSurface::shared(deepseek_v3(), ascend_npu(), ParallelismConfig::single());
+    let mut handles = Vec::new();
+    for p in &cells {
+        let mut p = p.clone();
+        p.surface = Some(Arc::clone(&surface));
+        handles.push(std::thread::spawn(move || {
+            let mut sim = ClusterSim::new(&p).unwrap();
+            sim.run_parallel().unwrap();
+            sim.report()
+        }));
+    }
+    let shared: Vec<ClusterReport> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (i, (base, shr)) in baselines.iter().zip(&shared).enumerate() {
+        assert_reports_identical(base, shr, &format!("cell {i}"));
+    }
+    let (hits, misses) = surface.stats();
+    assert!(misses > 0, "the cells must have priced something");
+    assert!(hits > 0, "two cells on one surface must record warm hits");
+}
+
+/// Pool determinism: across random cluster draws, the serial event
+/// loop (`run`), the pooled parallel dispatch (`run_parallel`), and
+/// the retained spawn-per-window reference produce byte-identical
+/// reports and event totals.  Only the pooled run touches the pool.
+#[test]
+fn pooled_dispatch_matches_spawn_and_serial_fuzz() {
+    for seed in 0..fuzz_iters(4) {
+        let mut rng = Rng::new(0x9A13_0000 + seed);
+        let model = rng.choose(&[deepseek_v3(), kimi_k2()]).clone();
+        let hw = rng.choose(&[ascend_npu(), gpu_h800()]).clone();
+        let replicas = rng.gen_range_usize(1, 4);
+        let router = *rng.choose(&[RouterPolicy::RoundRobin, RouterPolicy::PrefixAffinity]);
+        let batch = *rng.choose(&[8usize, 16, 32]);
+        let tenants = rng.gen_range_usize(1, 5);
+        let skew = *rng.choose(&[0.0f64, 0.7, 1.2]);
+        let mut p = ClusterParams::new(model, hw, replicas, router, batch, tenants, skew);
+        p.seed = rng.next_u64();
+        p.total_requests = rng.gen_range_usize(48, 160);
+        if rng.gen_range(0, 2) == 0 {
+            p.arrival_rate = Some(*rng.choose(&[40.0f64, 90.0]));
+            if rng.gen_range(0, 2) == 0 {
+                p.arrival_burst = Some(4.0);
+            }
+        }
+        if p.router == RouterPolicy::PrefixAffinity {
+            p.migrate = rng.gen_range(0, 2) == 0;
+            if rng.gen_range(0, 3) == 0 {
+                p.scaling.enabled = true;
+                p.scaling.cooldown_arrivals = 24;
+            }
+        }
+
+        let mut serial = ClusterSim::new(&p).unwrap();
+        serial.run().unwrap();
+        let mut pooled = ClusterSim::new(&p).unwrap();
+        pooled.run_parallel().unwrap();
+        let mut spawned = ClusterSim::new(&p).unwrap();
+        spawned.use_spawn_reference(true);
+        spawned.run_parallel().unwrap();
+
+        let (rs, rp, rr) = (serial.report(), pooled.report(), spawned.report());
+        assert_reports_identical(&rs, &rp, &format!("seed {seed}: serial vs pooled"));
+        assert_reports_identical(&rp, &rr, &format!("seed {seed}: pooled vs spawn-ref"));
+        assert_eq!(pooled.events_processed(), spawned.events_processed(), "seed {seed}: events");
+        assert_eq!(pooled.arena_peak(), spawned.arena_peak(), "seed {seed}: arena peaks");
+        assert!(pooled.pool_windows() > 0, "seed {seed}: pooled run must use the pool");
+        assert_eq!(serial.pool_windows(), 0, "seed {seed}: serial loop never pools");
+        assert_eq!(spawned.pool_windows(), 0, "seed {seed}: spawn reference never pools");
+    }
+}
