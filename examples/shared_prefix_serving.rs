@@ -10,6 +10,10 @@
 //! token-level equivalence check between them.  Results are recorded in
 //! EXPERIMENTS.md §E2E.
 
+// Real-runtime E2E driver: wall clocks are the measurement, not a
+// determinism hazard (outside rust/src, so detlint does not scan it).
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use typhoon_mla::config::model::tiny;

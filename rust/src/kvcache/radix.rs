@@ -353,6 +353,8 @@ impl RadixTree {
         loop {
             let mut parent_of: HashMap<usize, (usize, u32)> = HashMap::new();
             for (pid, node) in self.nodes.iter().enumerate() {
+                // detlint: allow(unordered-iter, keyed parent_of rebuild - every
+                // child id is a distinct key, so insertion order cannot matter)
                 for (&tok, &cid) in &node.children {
                     parent_of.insert(cid, (pid, tok));
                 }

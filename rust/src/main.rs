@@ -240,6 +240,13 @@ fn simulate(args: &Args) -> Result<()> {
              tpot p50/p95/p99 = {:.5}/{:.5}/{:.5}s",
             r.ttft_p50, r.ttft_p95, r.ttft_p99, r.tpot_p50, r.tpot_p95, r.tpot_p99
         );
+        if !r.spilled_tenants.is_empty() || !r.migrated_tenants.is_empty() {
+            // Sorted by tenant id in report() — never HashSet order.
+            println!(
+                "[simulate] tenant audit: spilled {:?}, migrated {:?}",
+                r.spilled_tenants, r.migrated_tenants
+            );
+        }
         if p.faults.enabled {
             println!(
                 "[simulate] faults: {} crashes, {} stalls, {} failovers, \

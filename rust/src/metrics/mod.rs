@@ -115,8 +115,11 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    #[allow(clippy::disallowed_methods)]
     pub fn new(clock: Clock) -> Self {
         Metrics {
+            // detlint: allow(wall-clock, Clock::Wall is the real-runtime bench
+            // mode; every simulation report reads sim_elapsed, never this stamp)
             start: Instant::now(),
             sim_elapsed: 0.0,
             clock,

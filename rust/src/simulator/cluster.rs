@@ -82,6 +82,7 @@ use crate::costmodel::surface::PriceSurface;
 use crate::kvcache::PrefixId;
 use crate::metrics::Metrics;
 use crate::policy::{MigrationDecision, PolicyEngine, ScalingDecision, ScalingPolicy};
+use crate::util::det;
 use crate::util::pool;
 use crate::util::stats::{p50, p95, p99};
 use crate::workload::tenants::{
@@ -626,9 +627,15 @@ pub struct ClusterReport {
     pub tpot_p99: f64,
     /// Prefix-affinity requests routed off their home replica.
     pub spills: u64,
+    /// Tenants that spilled at least once, ascending tenant id — the
+    /// per-tenant audit trail behind `spills`, sorted before emission so
+    /// the report never leaks `HashSet` iteration order (detlint rule 1).
+    pub spilled_tenants: Vec<usize>,
     /// Prefix groups re-homed by the migrate-vs-spill rule (pressure
     /// and scale-event migrations alike).
     pub migrations: u64,
+    /// Tenants whose group re-homed at least once, ascending tenant id.
+    pub migrated_tenants: Vec<usize>,
     /// Modeled interconnect seconds spent moving pages (fleet total;
     /// wall time on the receiving clocks, never decode time).
     pub transfer_seconds: f64,
@@ -1451,8 +1458,7 @@ impl ClusterSim {
         };
         self.replicas[victim].state = ReplicaLifecycle::Draining;
         self.sync_replica(victim);
-        let mut hosted: Vec<usize> = self.replicas[victim].prefix_of.keys().copied().collect();
-        hosted.sort_unstable();
+        let hosted: Vec<usize> = det::sorted_keys(&self.replicas[victim].prefix_of);
         let mut moved = 0usize;
         for tenant in hosted {
             if self.router.home.get(&tenant) == Some(&victim) {
@@ -1697,9 +1703,8 @@ impl ClusterSim {
         let work = rep.coord.fail_and_extract()?;
         let mut tenant_of: HashMap<PrefixId, usize> =
             rep.retired.iter().map(|&(t, p)| (p, t)).collect();
-        tenant_of.extend(rep.prefix_of.iter().map(|(&t, &p)| (p, t)));
-        let mut hosted: Vec<(usize, PrefixId)> = rep.prefix_of.drain().collect();
-        hosted.sort_unstable();
+        tenant_of.extend(det::sorted_pairs(&rep.prefix_of).into_iter().map(|(t, p)| (p, t)));
+        let hosted: Vec<(usize, PrefixId)> = det::drain_sorted(&mut rep.prefix_of);
         for &(tenant, pid) in &hosted {
             rep.coord.retire_prefix_group(pid)?;
             rep.retired.push((tenant, pid));
@@ -1710,14 +1715,11 @@ impl ClusterSim {
         // least-loaded survivor — which re-prefills the prefix on the
         // group's next arrival through the normal lazy registration
         // path — when the crash destroyed the only copy.
-        let mut dead_homes: Vec<usize> = self
-            .router
-            .home
-            .iter()
-            .filter(|&(_, &h)| h == victim)
-            .map(|(&t, _)| t)
+        let dead_homes: Vec<usize> = det::sorted_pairs(&self.router.home)
+            .into_iter()
+            .filter(|&(_, h)| h == victim)
+            .map(|(t, _)| t)
             .collect();
-        dead_homes.sort_unstable();
         for tenant in dead_homes {
             let copies: Vec<usize> = (0..self.replicas.len())
                 .filter(|&i| {
@@ -1992,7 +1994,9 @@ impl ClusterSim {
             tpot_p95: p95(&tpot),
             tpot_p99: p99(&tpot),
             spills: self.router.spills,
+            spilled_tenants: det::sorted_members(&self.router.spilled),
             migrations: self.router.migrations,
+            migrated_tenants: det::sorted_members(&self.router.migrated),
             transfer_seconds,
             scale_ups: self.scale_ups(),
             scale_downs: self.scale_downs(),

@@ -82,11 +82,13 @@ impl Bench {
     }
 
     /// Measure `f`, which performs ONE logical iteration per call.
+    #[allow(clippy::disallowed_methods)]
     pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<BenchResult> {
         if !self.enabled(name) {
             return None;
         }
         // Warmup.
+        // detlint: allow(wall-clock, real-runtime bench harness)
         let start = Instant::now();
         while start.elapsed() < self.cfg.warmup {
             f();
@@ -94,12 +96,14 @@ impl Bench {
         // Measure.
         let mut summary = Summary::new();
         let mut pct = Percentiles::default();
+        // detlint: allow(wall-clock, real-runtime bench harness)
         let measure_start = Instant::now();
         let mut iters = 0u64;
         while (iters < self.cfg.min_iters as u64
             || measure_start.elapsed() < self.cfg.min_time)
             && iters < self.cfg.max_iters as u64
         {
+            // detlint: allow(wall-clock, real-runtime bench harness)
             let t0 = Instant::now();
             f();
             let dt = t0.elapsed().as_secs_f64();

@@ -1,0 +1,82 @@
+//! Deterministic iteration over unordered collections (DESIGN.md §18).
+//!
+//! `HashMap`/`HashSet` iteration order is unspecified and varies run to
+//! run, so any traversal that feeds a report, an artifact, a migration
+//! decision, or a float accumulation must be sorted first.  These
+//! helpers are the sanctioned route the `detlint` gate
+//! (`tools/detlint`) recognizes: collect, sort by key, return —
+//! O(n log n) on fleet-sized maps, which is negligible next to the
+//! machine-checkable determinism it buys.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::BuildHasher;
+
+/// Key-sorted `(key, value)` pairs of a map (entries cloned).
+pub fn sorted_pairs<K, V, S>(m: &HashMap<K, V, S>) -> Vec<(K, V)>
+where
+    K: Ord + Clone,
+    V: Clone,
+    S: BuildHasher,
+{
+    let mut v: Vec<(K, V)> = m.iter().map(|(k, val)| (k.clone(), val.clone())).collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+/// Sorted keys of a map.
+pub fn sorted_keys<K, V, S>(m: &HashMap<K, V, S>) -> Vec<K>
+where
+    K: Ord + Clone,
+    S: BuildHasher,
+{
+    let mut v: Vec<K> = m.keys().cloned().collect();
+    v.sort();
+    v
+}
+
+/// Sorted members of a set.
+pub fn sorted_members<T, S>(s: &HashSet<T, S>) -> Vec<T>
+where
+    T: Ord + Clone,
+    S: BuildHasher,
+{
+    let mut v: Vec<T> = s.iter().cloned().collect();
+    v.sort();
+    v
+}
+
+/// Drain a map into key-sorted `(key, value)` pairs, leaving it empty.
+pub fn drain_sorted<K, V, S>(m: &mut HashMap<K, V, S>) -> Vec<(K, V)>
+where
+    K: Ord,
+    S: BuildHasher,
+{
+    let mut v: Vec<(K, V)> = m.drain().collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_and_keys_come_out_key_sorted() {
+        let m: HashMap<usize, &str> = [(3, "c"), (1, "a"), (2, "b")].into_iter().collect();
+        assert_eq!(sorted_pairs(&m), vec![(1, "a"), (2, "b"), (3, "c")]);
+        assert_eq!(sorted_keys(&m), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn members_come_out_sorted() {
+        let s: HashSet<u64> = [9, 4, 7].into_iter().collect();
+        assert_eq!(sorted_members(&s), vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn drain_sorts_and_empties() {
+        let mut m: HashMap<u32, u32> = [(5, 50), (2, 20)].into_iter().collect();
+        assert_eq!(drain_sorted(&mut m), vec![(2, 20), (5, 50)]);
+        assert!(m.is_empty());
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod det;
 pub mod json;
 pub mod pool;
 pub mod rng;

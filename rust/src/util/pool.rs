@@ -146,18 +146,25 @@ impl WorkerPool {
         let cursor_ref: &'static AtomicUsize = unsafe { &*(&cursor as *const AtomicUsize) };
         let participants = self.workers.min(limit);
         {
+            // detlint: allow(lock-discipline, caller mutex is the documented outer
+            // lock; caller -> state is the pinned order, loom-modeled in
+            // tools/loom_models)
             let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
             st.job = Some(Job { task, cursor: cursor_ref, items, limit });
             st.epoch += 1;
             st.active = participants;
             self.work.notify_all();
         }
+        // detlint: allow(lock-discipline, caller -> state is the pinned order; the
+        // completion wait must hold state while the caller mutex serializes jobs)
         let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         while st.active != 0 {
             st = self.done.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         st.job = None;
         drop(st);
+        // detlint: allow(lock-discipline, caller -> panicked is the pinned order;
+        // workers only touch panicked outside state, so this cannot invert)
         let payload = self.panicked.lock().unwrap_or_else(PoisonError::into_inner).take();
         if let Some(p) = payload {
             resume_unwind(p);

@@ -421,6 +421,41 @@ fn forced_spill_is_recorded_and_audited() {
     assert_eq!(report.requests_completed, 32, "spilled requests still complete");
 }
 
+/// Determinism pin for the per-tenant audit fields: the report's
+/// spilled/migrated tenant lists come out of `util::det::sorted_members`
+/// strictly ascending (never `HashSet` iteration order), stay consistent
+/// with the aggregate counters, and replay bit-identically.
+#[test]
+fn report_tenant_audit_is_sorted_and_replayable() {
+    let mut p = ClusterParams::new(
+        deepseek_v3(),
+        ascend_npu(),
+        4,
+        RouterPolicy::PrefixAffinity,
+        128,
+        4,
+        2.0,
+    );
+    p.total_requests = 512;
+    p.migrate = true;
+    let r = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    assert!(r.spills > 0, "the skewed cell must spill");
+    assert!(r.migrations > 0, "the cost rule must fire");
+    for list in [&r.spilled_tenants, &r.migrated_tenants] {
+        assert!(!list.is_empty(), "counters fired, so the audit lists are populated");
+        assert!(list.windows(2).all(|w| w[0] < w[1]), "strictly ascending: {list:?}");
+        assert!(list.iter().all(|&t| t < p.tenants), "tenant ids in range: {list:?}");
+    }
+    assert!(
+        r.spilled_tenants.len() as u64 <= r.spills,
+        "each listed tenant spilled at least once"
+    );
+    assert!(r.migrated_tenants.len() as u64 <= r.migrations);
+    let replay = typhoon_mla::simulator::run_cluster_experiment(&p).unwrap();
+    assert_eq!(replay.spilled_tenants, r.spilled_tenants, "audit order must replay");
+    assert_eq!(replay.migrated_tenants, r.migrated_tenants);
+}
+
 /// Prefix-affinity on a skewed multi-tenant workload must model at
 /// least round-robin's goodput (the acceptance headline behind the
 /// `cluster` artifact).

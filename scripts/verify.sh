@@ -36,4 +36,7 @@ else
     echo "verify: clippy unavailable, skipping lint" >&2
 fi
 
+echo "== detlint (determinism lint, DESIGN.md §18) =="
+cargo run --release -p detlint
+
 echo "verify: OK"

@@ -1,0 +1,116 @@
+//! `detlint` — the determinism & concurrency static-analysis gate
+//! (DESIGN.md §18).
+//!
+//! Five rules, each pinning an invariant the TyphoonMLA tree already
+//! relies on:
+//!
+//! 1. `unordered-iter` — no `HashMap`/`HashSet` iteration in
+//!    determinism-critical modules unless routed through
+//!    `util::det::sorted_*` or annotated with a reason.
+//! 2. `wall-clock` — no `Instant::now`/`SystemTime::now`/ambient
+//!    randomness outside `bin/bench_sweep.rs`; simulations run on
+//!    modeled time.
+//! 3. `float-reduce` — no float reductions fed by an unordered
+//!    iterator; accumulation order is part of the bit-identity
+//!    contract.
+//! 4. `oracle-coverage` — every retained reference-path flag
+//!    (`use_linear_reference`, `use_hash_reference`,
+//!    `use_spawn_reference`) stays exercised under `rust/tests/`.
+//! 5. `lock-discipline` — no second lock acquisition while holding a
+//!    guard in `costmodel/surface.rs` / `util/pool.rs` (or any file
+//!    opting in via `// detlint: lock-protocol`).
+//!
+//! The frontend is a purpose-built comment/string-stripping scanner
+//! (`scan`), not a full parser: the authoring containers have no crate
+//! registry, so the crate is dependency-free by design, and the five
+//! rules only need line-level syntax.  Escape hatch:
+//! `// detlint: allow(<rule>, <reason>)` — a *non-empty* reason is
+//! required; empty or unknown annotations are themselves violations.
+
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::path::Path;
+
+/// One input file: repo-relative path (forward slashes) plus contents.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// A single rule violation at a 1-based line (0 = tree-level finding).
+#[derive(Debug)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// The result of a full analysis pass.
+pub struct Analysis {
+    /// Violations sorted by (path, line, rule) — output is stable
+    /// regardless of filesystem enumeration order.
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+    /// Well-formed allow annotations that suppressed a firing rule.
+    pub allows_used: usize,
+}
+
+/// Run every rule over `src` (rule 4 additionally reads `tests`).
+pub fn analyze(src: &[SourceFile], tests: &[SourceFile]) -> Analysis {
+    let mut violations = Vec::new();
+    let mut suppressed = 0usize;
+    for f in src {
+        let sc = scan::Scanned::new(&f.path, &f.text);
+        violations.extend(rules::rule_unordered_iter(&sc, &mut suppressed));
+        violations.extend(rules::rule_wall_clock(&sc, &mut suppressed));
+        violations.extend(rules::rule_float_reduce(&sc, &mut suppressed));
+        violations.extend(rules::rule_lock_discipline(&sc, &mut suppressed));
+        violations.extend(rules::rule_allow_syntax(&sc));
+    }
+    violations.extend(rules::rule_oracle_coverage(src, tests));
+    violations.sort_by(|a, b| {
+        a.path.cmp(&b.path).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+    Analysis { violations, files_scanned: src.len() + tests.len(), allows_used: suppressed }
+}
+
+/// Analyze the repository rooted at `root`: scans `rust/src/**` as rule
+/// input and reads `rust/tests/**` for the oracle-coverage check.
+pub fn analyze_tree(root: &Path) -> std::io::Result<Analysis> {
+    let src = read_tree(root, "rust/src")?;
+    let tests = read_tree(root, "rust/tests")?;
+    Ok(analyze(&src, &tests))
+}
+
+/// Read every `.rs` file under `root/rel`, sorted by repo-relative
+/// path so the scan is machine-independent.
+fn read_tree(root: &Path, rel: &str) -> std::io::Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    let dir = root.join(rel);
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    let mut stack = vec![dir];
+    while let Some(d) = stack.pop() {
+        for entry in fs::read_dir(&d)? {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                let relpath = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push(SourceFile { path: relpath, text: fs::read_to_string(&p)? });
+            }
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(out)
+}

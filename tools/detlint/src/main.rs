@@ -1,0 +1,70 @@
+//! `detlint` CLI: scan the tree, print violations, exit nonzero on any.
+//!
+//! Usage: `cargo run -p detlint` from anywhere inside the workspace
+//! (walks up to the directory containing `rust/src`), or
+//! `detlint --root <repo>`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let Some(v) = args.next() else {
+                    eprintln!("detlint: --root requires a path");
+                    return ExitCode::from(2);
+                };
+                root = PathBuf::from(v);
+            }
+            "--help" | "-h" => {
+                println!("usage: detlint [--root <repo>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("detlint: unknown argument {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // Run from anywhere inside the workspace: walk up until `rust/src`
+    // exists under the base directory.  Relative roots are resolved
+    // first so `pop()` genuinely ascends.
+    let mut base = if root.is_relative() {
+        std::env::current_dir().map(|d| d.join(&root)).unwrap_or_else(|_| root.clone())
+    } else {
+        root.clone()
+    };
+    while !base.join("rust/src").is_dir() {
+        if !base.pop() {
+            eprintln!("detlint: no rust/src under {} or its parents", root.display());
+            return ExitCode::from(2);
+        }
+    }
+    let analysis = match detlint::analyze_tree(&base) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("detlint: read failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &analysis.violations {
+        if v.line == 0 {
+            println!("{}: [{}] {}", v.path, v.rule, v.message);
+        } else {
+            println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.message);
+        }
+    }
+    if analysis.violations.is_empty() {
+        println!(
+            "detlint: OK ({} files, {} suppression(s))",
+            analysis.files_scanned, analysis.allows_used
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("detlint: {} violation(s)", analysis.violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,547 @@
+//! The five determinism/concurrency rules (DESIGN.md §18), evaluated
+//! over scanned code lines.
+//!
+//! Every rule is syntactic and intentionally conservative: it flags the
+//! patterns this repo's invariants forbid and accepts an explicit,
+//! reason-carrying `// detlint: allow(rule, reason)` where a human has
+//! argued the site is safe.  What syntax cannot see — lock temporaries
+//! living past a statement, cross-file field types, real interleavings
+//! — is covered by the dynamic legs (loom models, TSan, Miri; see
+//! `.github/workflows/verify.yml`).
+
+use crate::scan::Scanned;
+use crate::{SourceFile, Violation};
+
+/// Rule names, as written inside `allow(...)` annotations.
+pub const RULE_UNORDERED_ITER: &str = "unordered-iter";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_FLOAT_REDUCE: &str = "float-reduce";
+pub const RULE_ORACLE_COVERAGE: &str = "oracle-coverage";
+pub const RULE_LOCK_DISCIPLINE: &str = "lock-discipline";
+/// Hygiene pseudo-rule for malformed annotations (cannot be allowed).
+pub const RULE_ALLOW_SYNTAX: &str = "allow-syntax";
+
+pub const KNOWN_RULES: [&str; 5] = [
+    RULE_UNORDERED_ITER,
+    RULE_WALL_CLOCK,
+    RULE_FLOAT_REDUCE,
+    RULE_ORACLE_COVERAGE,
+    RULE_LOCK_DISCIPLINE,
+];
+
+/// Modules whose iteration order is part of the bit-identity contract.
+pub const CRITICAL_MODULES: [&str; 7] =
+    ["simulator", "coordinator", "costmodel", "kvcache", "policy", "metrics", "analysis"];
+
+/// The one sanctioned wall-clock reader.
+pub const WALL_CLOCK_EXEMPT: &str = "rust/src/bin/bench_sweep.rs";
+
+/// Types whose iteration order is unspecified.
+const UNORDERED_TYPES: [&str; 2] = ["HashMap", "HashSet"];
+
+/// Iteration methods that expose unordered traversal.
+const ITER_METHODS: [&str; 9] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+/// Routing an iteration through these `util::det` helpers yields a
+/// key-sorted sequence, which satisfies the rule by construction.
+const SORTED_ROUTES: [&str; 5] =
+    ["sorted_pairs(", "sorted_keys(", "sorted_values(", "sorted_members(", "drain_sorted("];
+
+/// Wall-clock / ambient-randomness readers (modeled time only outside
+/// the bench bin).
+const WALL_TOKENS: [&str; 5] =
+    ["Instant::now", "SystemTime::now", "thread_rng", "rand::random", "from_entropy"];
+
+/// Float accumulators whose result depends on summation order.
+const FLOAT_REDUCERS: [&str; 7] = [
+    ".sum::<f64>",
+    ".sum::<f32>",
+    ".product::<f64>",
+    ".product::<f32>",
+    ".fold(0.0",
+    ".fold(0f64",
+    ".fold(0f32",
+];
+
+/// Every fast-path oracle flag that must stay exercised under
+/// `rust/tests/` (rule 4): the retained reference implementations of
+/// the event core (§15), the dense pricing memo (§17), and the worker
+/// pool dispatch (§17).
+pub const ORACLE_FLAGS: [&str; 3] =
+    ["use_linear_reference", "use_hash_reference", "use_spawn_reference"];
+
+/// Files under the lock-discipline rule (plus any file carrying a
+/// `// detlint: lock-protocol` marker).
+pub const LOCK_FILES: [&str; 2] = ["rust/src/costmodel/surface.rs", "rust/src/util/pool.rs"];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// The identifier ending exactly at byte offset `end` (exclusive).
+fn ident_ending_at(line: &str, end: usize) -> Option<&str> {
+    let head = &line[..end];
+    let start = head
+        .char_indices()
+        .rev()
+        .take_while(|&(_, c)| is_ident_char(c))
+        .last()
+        .map(|(i, _)| i)?;
+    let id = &head[start..];
+    if id.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(id)
+    }
+}
+
+/// The identifier at the very end of `line` (after trailing trim).
+fn ident_at_end(line: &str) -> Option<&str> {
+    let t = line.trim_end();
+    ident_ending_at(t, t.len())
+}
+
+/// The first identifier starting at byte offset `start`.
+fn ident_starting_at(line: &str, start: usize) -> Option<&str> {
+    let tail = &line[start..];
+    let end = tail.find(|c: char| !is_ident_char(c)).unwrap_or(tail.len());
+    if end == 0 {
+        None
+    } else {
+        Some(&tail[..end])
+    }
+}
+
+/// Does `path` (repo-relative, forward slashes) live in a
+/// determinism-critical module?
+pub fn is_critical(path: &str) -> bool {
+    let Some(rel) = path.strip_prefix("rust/src/") else {
+        return false;
+    };
+    let module = rel.split('/').next().unwrap_or(rel);
+    let module = module.strip_suffix(".rs").unwrap_or(module);
+    CRITICAL_MODULES.contains(&module)
+}
+
+/// Collect identifiers bound to `HashMap`/`HashSet` in this file: typed
+/// bindings, fields, and fn params (`name: HashMap<..>`) plus
+/// constructor bindings (`let [mut] name = HashMap::new()`).  Per-file
+/// by design — cross-file field types are out of syntactic reach and
+/// covered by review plus the dynamic legs.
+pub fn unordered_names(code: &[String]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for line in code {
+        for ty in UNORDERED_TYPES {
+            for (pos, _) in line.match_indices(ty) {
+                // Word boundary on both sides of the type name.
+                if line[..pos].chars().next_back().is_some_and(is_ident_char) {
+                    continue;
+                }
+                let after = &line[pos + ty.len()..];
+                if after.chars().next().is_some_and(is_ident_char) {
+                    continue;
+                }
+                let mut found = binding_before_type(line, pos);
+                if found.is_none() && constructed_here(after) {
+                    found = binding_before_constructor(line, pos);
+                }
+                if let Some(name) = found {
+                    if !name.is_empty() && !names.iter().any(|n| n == name) {
+                        names.push(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+fn constructed_here(after: &str) -> bool {
+    after.starts_with("::new(")
+        || after.starts_with("::with_capacity(")
+        || after.starts_with("::default(")
+        || after.starts_with("::from(")
+}
+
+/// For `name: [&]['a ][mut ][path::]HashMap<..>` at `type_pos`, the
+/// bound `name`.
+fn binding_before_type(line: &str, type_pos: usize) -> Option<&str> {
+    let mut b = line[..type_pos].trim_end();
+    // Peel reference / lifetime / `mut` / path-segment prefixes back to
+    // the `name:` that introduces the binding.
+    loop {
+        if let Some(s) = b.strip_suffix("::") {
+            // Path-qualified type: drop the preceding segment too.
+            let s = s.trim_end();
+            let cut = ident_at_end(s).map_or(s.len(), |id| s.len() - id.len());
+            b = s[..cut].trim_end();
+            continue;
+        }
+        if let Some(s) = b.strip_suffix('&') {
+            b = s.trim_end();
+            continue;
+        }
+        if let Some(s) = b.strip_suffix("mut") {
+            if !s.chars().next_back().is_some_and(is_ident_char) {
+                b = s.trim_end();
+                continue;
+            }
+        }
+        if let Some(id) = ident_at_end(b) {
+            // `&'a` lifetime prefix: strip the lifetime name and tick.
+            if let Some(rest) = b[..b.len() - id.len()].strip_suffix('\'') {
+                b = rest.trim_end();
+                continue;
+            }
+        }
+        break;
+    }
+    let b = b.strip_suffix(':')?;
+    if b.ends_with(':') {
+        return None; // `::` — a path, not a binding
+    }
+    ident_at_end(b)
+}
+
+/// For `... = HashMap::new()` at `type_pos`, the identifier bound on
+/// the left-hand side (`let [mut] name` or the final segment of an
+/// assignment target).
+fn binding_before_constructor(line: &str, type_pos: usize) -> Option<&str> {
+    let lhs = line[..type_pos].trim_end().strip_suffix('=')?.trim_end();
+    ident_at_end(lhs)
+}
+
+/// One unordered-iteration site: 0-based line plus a description of
+/// what fired.
+pub struct IterSite {
+    pub line: usize,
+    pub what: String,
+}
+
+/// Find unordered-iteration sites in a file given its unordered names.
+/// Helper-routed lines (`util::det::sorted_*`) are not sites.
+pub fn iter_sites(code: &[String], names: &[String]) -> Vec<IterSite> {
+    let mut sites = Vec::new();
+    for (i, line) in code.iter().enumerate() {
+        if SORTED_ROUTES.iter().any(|h| line.contains(h)) {
+            continue;
+        }
+        for m in ITER_METHODS {
+            for (pos, _) in line.match_indices(m) {
+                if let Some(r) = receiver_ident(code, i, pos) {
+                    if names.iter().any(|n| n == &r) {
+                        sites.push(IterSite {
+                            line: i,
+                            what: format!("`{}` on unordered `{r}`", &m[..m.len() - 1]),
+                        });
+                    }
+                }
+            }
+        }
+        // `for pat in &expr` / `for pat in &mut expr`
+        for (pos, _) in line.match_indices(" in &") {
+            let mut start = pos + " in &".len();
+            if line[start..].starts_with("mut ") {
+                start += 4;
+            }
+            let expr_end = line[start..]
+                .find(|c: char| c == ' ' || c == '{')
+                .map_or(line.len(), |e| start + e);
+            let expr = &line[start..expr_end];
+            if expr.ends_with(')') || expr.ends_with(']') {
+                continue;
+            }
+            if let Some(seg) = ident_at_end(expr) {
+                if names.iter().any(|n| n == seg) {
+                    sites.push(IterSite {
+                        line: i,
+                        what: format!("`for .. in &{seg}` over an unordered collection"),
+                    });
+                }
+            }
+        }
+    }
+    sites
+}
+
+/// The receiver identifier of a method call at `pos` on `code[i]`,
+/// looking at the previous code line when the call opens the line
+/// (builder-style chains).
+fn receiver_ident(code: &[String], i: usize, pos: usize) -> Option<String> {
+    let line = &code[i];
+    if line[..pos].trim().is_empty() {
+        let prev = code[..i].iter().rev().find(|l| !l.trim().is_empty())?;
+        return ident_at_end(prev).map(str::to_string);
+    }
+    let prev_char = line[..pos].chars().next_back()?;
+    if !is_ident_char(prev_char) {
+        return None; // `).iter()`, `].iter()` — unknown type, skip
+    }
+    ident_ending_at(line, pos).map(str::to_string)
+}
+
+/// Rule 1: unordered-map iteration in determinism-critical modules.
+pub fn rule_unordered_iter(sc: &Scanned, suppressed: &mut usize) -> Vec<Violation> {
+    if !is_critical(&sc.path) {
+        return Vec::new();
+    }
+    let names = unordered_names(&sc.code);
+    let mut out = Vec::new();
+    for site in iter_sites(&sc.code, &names) {
+        if sc.allowed(site.line, RULE_UNORDERED_ITER) {
+            *suppressed += 1;
+            continue;
+        }
+        out.push(Violation {
+            path: sc.path.clone(),
+            line: site.line + 1,
+            rule: RULE_UNORDERED_ITER,
+            message: format!(
+                "{} in a determinism-critical module — route through \
+                 util::det::sorted_* or annotate \
+                 `// detlint: allow(unordered-iter, <reason>)`",
+                site.what
+            ),
+        });
+    }
+    out
+}
+
+/// Rule 2: wall-clock / ambient randomness outside the bench bin.
+pub fn rule_wall_clock(sc: &Scanned, suppressed: &mut usize) -> Vec<Violation> {
+    if sc.path == WALL_CLOCK_EXEMPT {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, line) in sc.code.iter().enumerate() {
+        for t in WALL_TOKENS {
+            for (pos, _) in line.match_indices(t) {
+                if line[..pos].chars().next_back().is_some_and(is_ident_char) {
+                    continue;
+                }
+                if line[pos + t.len()..].chars().next().is_some_and(is_ident_char) {
+                    continue;
+                }
+                if sc.allowed(i, RULE_WALL_CLOCK) {
+                    *suppressed += 1;
+                    continue;
+                }
+                out.push(Violation {
+                    path: sc.path.clone(),
+                    line: i + 1,
+                    rule: RULE_WALL_CLOCK,
+                    message: format!(
+                        "`{t}` outside the bench bin — simulations run on modeled \
+                         time; annotate `// detlint: allow(wall-clock, <reason>)` \
+                         only for genuine harness/runtime timing"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Rule 3: float reductions fed by an unordered iterator (accumulation
+/// order is part of the bit-identity contract on report paths).
+pub fn rule_float_reduce(sc: &Scanned, suppressed: &mut usize) -> Vec<Violation> {
+    if !is_critical(&sc.path) {
+        return Vec::new();
+    }
+    let names = unordered_names(&sc.code);
+    let mut out = Vec::new();
+    for site in iter_sites(&sc.code, &names) {
+        // Gather the rest of the statement (a few lines) so a chained
+        // `.values() ... .sum::<f64>()` across lines is still seen.
+        let mut hay = String::new();
+        for l in sc.code.iter().skip(site.line).take(4) {
+            hay.push_str(l);
+            if l.trim_end().ends_with(';') {
+                break;
+            }
+        }
+        if !FLOAT_REDUCERS.iter().any(|r| hay.contains(r)) {
+            continue;
+        }
+        if sc.allowed(site.line, RULE_FLOAT_REDUCE) {
+            *suppressed += 1;
+            continue;
+        }
+        out.push(Violation {
+            path: sc.path.clone(),
+            line: site.line + 1,
+            rule: RULE_FLOAT_REDUCE,
+            message: format!(
+                "float reduction over {} — accumulation order is part of the \
+                 bit-identity contract; sort first (util::det::sorted_*)",
+                site.what
+            ),
+        });
+    }
+    out
+}
+
+/// Rule 4: every fast-path reference flag stays exercised by the test
+/// suite, so an optimized path can never silently lose its shadow
+/// oracle.
+pub fn rule_oracle_coverage(src: &[SourceFile], tests: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for flag in ORACLE_FLAGS {
+        if !src.iter().any(|f| f.text.contains(flag)) {
+            out.push(Violation {
+                path: "rust/src".to_string(),
+                line: 0,
+                rule: RULE_ORACLE_COVERAGE,
+                message: format!(
+                    "oracle flag `{flag}` no longer exists under rust/src — if the \
+                     reference path was renamed, update detlint::rules::ORACLE_FLAGS \
+                     in the same change"
+                ),
+            });
+            continue;
+        }
+        if !tests.iter().any(|f| f.text.contains(flag)) {
+            out.push(Violation {
+                path: "rust/tests".to_string(),
+                line: 0,
+                rule: RULE_ORACLE_COVERAGE,
+                message: format!(
+                    "reference-path flag `{flag}` is never exercised by any file \
+                     under rust/tests/ — the fast path lost its shadow oracle"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Lock acquisitions on a code line: byte offsets where a
+/// `.lock()`/`.read()`/`.write()` is immediately consumed by
+/// `.unwrap…`/`.expect` — the shape every real site in this tree has.
+fn lock_acquisitions(line: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for m in [".lock()", ".read()", ".write()"] {
+        for (pos, _) in line.match_indices(m) {
+            let rest = &line[pos + m.len()..];
+            if rest.starts_with(".unwrap") || rest.starts_with(".expect") {
+                out.push(pos);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Rule 5: no second lock acquisition while a bound guard is live, in
+/// the files that document a read-peek / compute-outside-locks /
+/// write-insert protocol.
+pub fn rule_lock_discipline(sc: &Scanned, suppressed: &mut usize) -> Vec<Violation> {
+    if !LOCK_FILES.contains(&sc.path.as_str()) && !sc.lock_marker {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    // Live bound guards: (name, depth of the block that owns them).
+    let mut guards: Vec<(String, usize)> = Vec::new();
+    let mut depth = 0usize;
+    for (i, line) in sc.code.iter().enumerate() {
+        for (pos, _) in line.match_indices("drop(") {
+            if line[..pos].chars().next_back().is_some_and(is_ident_char) {
+                continue;
+            }
+            if let Some(name) = ident_starting_at(line, pos + "drop(".len()) {
+                guards.retain(|(g, _)| g != name);
+            }
+        }
+        let acqs = lock_acquisitions(line);
+        for k in 0..acqs.len() {
+            if guards.is_empty() && k == 0 {
+                continue;
+            }
+            if sc.allowed(i, RULE_LOCK_DISCIPLINE) {
+                *suppressed += 1;
+                continue;
+            }
+            let held = if guards.is_empty() {
+                "a lock acquired earlier on this statement".to_string()
+            } else {
+                let names: Vec<&str> = guards.iter().map(|(g, _)| g.as_str()).collect();
+                format!("guard(s) [{}]", names.join(", "))
+            };
+            out.push(Violation {
+                path: sc.path.clone(),
+                line: i + 1,
+                rule: RULE_LOCK_DISCIPLINE,
+                message: format!(
+                    "lock acquired while already holding {held} — the documented \
+                     protocol is read-peek, compute outside locks, write-insert; \
+                     annotate `// detlint: allow(lock-discipline, <reason>)` only \
+                     with a pinned lock order"
+                ),
+            });
+        }
+        let depth_after = {
+            let opens = line.matches('{').count();
+            let closes = line.matches('}').count();
+            (depth + opens).saturating_sub(closes)
+        };
+        if let Some(first_acq) = acqs.first() {
+            if let Some(lp) = line.find("let ") {
+                if lp < *first_acq {
+                    let mut p = lp + "let ".len();
+                    if line[p..].starts_with("mut ") {
+                        p += "mut ".len();
+                    }
+                    if let Some(name) = ident_starting_at(line, p) {
+                        guards.push((name.to_string(), depth_after.max(depth)));
+                    }
+                }
+            }
+        }
+        depth = depth_after;
+        guards.retain(|&(_, d)| d <= depth);
+    }
+    out
+}
+
+/// Annotation hygiene: every `allow(...)` must name a known rule and
+/// carry a non-empty reason.  Malformed annotations are violations in
+/// their own right (and never suppress anything).
+pub fn rule_allow_syntax(sc: &Scanned) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (i, a) in &sc.all_allows {
+        if !KNOWN_RULES.contains(&a.rule.as_str()) {
+            out.push(Violation {
+                path: sc.path.clone(),
+                line: i + 1,
+                rule: RULE_ALLOW_SYNTAX,
+                message: format!(
+                    "unknown rule `{}` in detlint allow annotation (known: {})",
+                    a.rule,
+                    KNOWN_RULES.join(", ")
+                ),
+            });
+        } else if a.reason.trim().is_empty() {
+            out.push(Violation {
+                path: sc.path.clone(),
+                line: i + 1,
+                rule: RULE_ALLOW_SYNTAX,
+                message: format!(
+                    "allow({}) without a reason — suppression requires a non-empty \
+                     justification and does not apply until one is written",
+                    a.rule
+                ),
+            });
+        }
+    }
+    out
+}

@@ -1,0 +1,399 @@
+//! Source scanning: comment/string stripping and `detlint:` annotation
+//! extraction.
+//!
+//! The rules in `rules.rs` operate on *code lines* — the input text with
+//! every comment and every string/char-literal body blanked to spaces,
+//! line structure preserved — so a `HashMap` mentioned in a doc comment
+//! or an error message can never fire a rule.  Annotations
+//! (`// detlint: allow(rule, reason)` and `// detlint: lock-protocol`)
+//! are parsed from the *raw* lines, because they live inside comments by
+//! design.
+
+/// One `allow(rule, reason)` annotation as written in the source.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allow {
+    pub rule: String,
+    pub reason: String,
+}
+
+/// A scanned source file ready for rule evaluation.
+pub struct Scanned {
+    /// Repo-relative path with forward slashes (e.g.
+    /// `rust/src/simulator/cluster.rs`).
+    pub path: String,
+    /// Code lines: comments and literal bodies blanked, 1:1 with the
+    /// raw lines.
+    pub code: Vec<String>,
+    /// Every annotation as parsed, with its 0-based source line (for
+    /// hygiene checks: unknown rule names, empty reasons).
+    pub all_allows: Vec<(usize, Allow)>,
+    /// Effective suppressions per 0-based code line: a trailing
+    /// annotation applies to its own line; an annotation on a
+    /// comment-only line applies to the next line carrying code.
+    pub line_allows: Vec<Vec<Allow>>,
+    /// The file declared `// detlint: lock-protocol` — opt in to the
+    /// lock-discipline rule regardless of path.
+    pub lock_marker: bool,
+}
+
+impl Scanned {
+    pub fn new(path: &str, text: &str) -> Scanned {
+        let stripped = strip(text);
+        let code: Vec<String> = stripped.lines().map(str::to_string).collect();
+        let raw: Vec<&str> = text.lines().collect();
+        let n = raw.len().max(code.len());
+
+        let mut all_allows: Vec<(usize, Allow)> = Vec::new();
+        let mut own: Vec<Vec<Allow>> = vec![Vec::new(); n];
+        let mut lock_marker = false;
+        for (i, line) in raw.iter().enumerate() {
+            if let Some(cpos) = line.find("//") {
+                let comment = &line[cpos..];
+                if comment.contains("detlint: lock-protocol") {
+                    lock_marker = true;
+                }
+                for a in parse_allows(comment) {
+                    all_allows.push((i, a.clone()));
+                    own[i].push(a);
+                }
+            }
+        }
+
+        // Attach: annotations on comment-only lines carry forward to the
+        // next line that has code; trailing annotations stay put.
+        let mut line_allows: Vec<Vec<Allow>> = vec![Vec::new(); n];
+        let mut pending: Vec<Allow> = Vec::new();
+        for i in 0..n {
+            let code_blank = code.get(i).is_none_or(|l| l.trim().is_empty());
+            if code_blank {
+                pending.append(&mut own[i]);
+            } else {
+                line_allows[i].append(&mut pending);
+                line_allows[i].append(&mut own[i]);
+            }
+        }
+
+        Scanned { path: path.to_string(), code, all_allows, line_allows, lock_marker }
+    }
+
+    /// Is `rule` suppressed at 0-based line `i`?  Only well-formed
+    /// annotations (known rule handled by the caller, non-empty reason)
+    /// suppress.
+    pub fn allowed(&self, i: usize, rule: &str) -> bool {
+        self.line_allows
+            .get(i)
+            .is_some_and(|v| v.iter().any(|a| a.rule == rule && !a.reason.trim().is_empty()))
+    }
+}
+
+/// Parse every `detlint: allow(rule, reason)` in a comment fragment.
+/// The reason may itself contain balanced parentheses.
+pub fn parse_allows(comment: &str) -> Vec<Allow> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(p) = rest.find("detlint:") {
+        rest = &rest[p + "detlint:".len()..];
+        let after = rest.trim_start();
+        if let Some(body) = after.strip_prefix("allow(") {
+            let mut depth = 1usize;
+            let mut end = None;
+            for (bi, c) in body.char_indices() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = Some(bi);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let inner = match end {
+                Some(e) => &body[..e],
+                // Unclosed annotation: take the rest of the line so the
+                // hygiene check can still flag the rule name.
+                None => body,
+            };
+            let (rule, reason) = match inner.find(',') {
+                Some(cp) => (inner[..cp].trim(), inner[cp + 1..].trim()),
+                None => (inner.trim(), ""),
+            };
+            out.push(Allow { rule: rule.to_string(), reason: reason.to_string() });
+        }
+    }
+    out
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(usize),
+    Char,
+}
+
+/// Blank comments and string/char-literal bodies to spaces, preserving
+/// newlines exactly (line numbers in the output match the input).
+/// Handles nested block comments, raw strings (`r#"…"#`), byte strings,
+/// escapes, and the char-literal vs lifetime ambiguity.
+pub fn strip(text: &str) -> String {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let mut mode = Mode::Code;
+    let mut prev_ident = false;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        match mode {
+            Mode::Code => {
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    out.push_str("  ");
+                    prev_ident = false;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    mode = Mode::Block(1);
+                    out.push_str("  ");
+                    prev_ident = false;
+                    i += 2;
+                    continue;
+                }
+                if !prev_ident && (c == 'r' || c == 'b') {
+                    // Candidate prefixed string literal: r"…", r#"…"#,
+                    // b"…", br"…", b'…'.
+                    let mut k = i + 1;
+                    let mut raw = c == 'r';
+                    if c == 'b' && chars.get(k) == Some(&'r') {
+                        raw = true;
+                        k += 1;
+                    }
+                    let mut hashes = 0usize;
+                    if raw {
+                        while chars.get(k) == Some(&'#') {
+                            hashes += 1;
+                            k += 1;
+                        }
+                    }
+                    if chars.get(k) == Some(&'"') && (raw || c == 'b') {
+                        for _ in i..=k {
+                            out.push(' ');
+                        }
+                        mode = if raw { Mode::RawStr(hashes) } else { Mode::Str };
+                        prev_ident = false;
+                        i = k + 1;
+                        continue;
+                    }
+                    if c == 'b' && next == Some('\'') {
+                        // Byte char literal: blank the prefix, let the
+                        // quote branch consume the body.
+                        out.push(' ');
+                        prev_ident = false;
+                        i += 1;
+                        continue;
+                    }
+                    // Plain identifier character; fall through.
+                }
+                if c == '"' {
+                    mode = Mode::Str;
+                    out.push(' ');
+                    prev_ident = false;
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    let is_char = match next {
+                        Some('\\') => true,
+                        Some(x) if x != '\'' => chars.get(i + 2) == Some(&'\''),
+                        _ => false,
+                    };
+                    if is_char {
+                        mode = Mode::Char;
+                        out.push(' ');
+                    } else {
+                        // Lifetime tick: keep it, it is code.
+                        out.push('\'');
+                    }
+                    prev_ident = false;
+                    i += 1;
+                    continue;
+                }
+                out.push(c);
+                prev_ident = c.is_alphanumeric() || c == '_';
+                i += 1;
+            }
+            Mode::LineComment => {
+                if c == '\n' {
+                    mode = Mode::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            Mode::Block(d) => {
+                if c == '/' && next == Some('*') {
+                    mode = Mode::Block(d + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if d == 1 { Mode::Code } else { Mode::Block(d - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            Mode::Str | Mode::Char => {
+                let terminator = if mode == Mode::Str { '"' } else { '\'' };
+                if c == '\\' {
+                    out.push(' ');
+                    if let Some(n) = next {
+                        out.push(if n == '\n' { '\n' } else { ' ' });
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == terminator {
+                    mode = Mode::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            Mode::RawStr(h) => {
+                if c == '"' {
+                    let mut cnt = 0usize;
+                    while cnt < h && chars.get(i + 1 + cnt) == Some(&'#') {
+                        cnt += 1;
+                    }
+                    if cnt == h {
+                        for _ in 0..=h {
+                            out.push(' ');
+                        }
+                        mode = Mode::Code;
+                        i += 1 + h;
+                        continue;
+                    }
+                }
+                out.push(if c == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let s = strip("let a = 1; // HashMap here\nlet /* HashMap */ b = 2;\n");
+        assert!(!s.contains("HashMap"));
+        assert!(s.contains("let a = 1;"));
+        assert!(s.contains("b = 2;"));
+        assert_eq!(s.lines().count(), 2);
+    }
+
+    #[test]
+    fn strips_nested_block_comments() {
+        let s = strip("a /* outer /* inner */ still comment */ b");
+        assert!(s.contains('a'));
+        assert!(s.contains('b'));
+        assert!(!s.contains("still"));
+    }
+
+    #[test]
+    fn strips_string_bodies_but_keeps_line_structure() {
+        let s = strip("let m = \"HashMap::new()\\n more\";\nnext();\n");
+        assert!(!s.contains("HashMap"));
+        assert_eq!(s.lines().nth(1), Some("next();"));
+    }
+
+    #[test]
+    fn strips_raw_and_byte_strings() {
+        let s = strip("let r = r#\"Instant::now() \"quoted\" \"#; let b = b\"SystemTime\";");
+        assert!(!s.contains("Instant"));
+        assert!(!s.contains("SystemTime"));
+        assert!(s.contains("let r ="));
+        assert!(s.contains("let b ="));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let s = strip("fn f<'a>(x: &'a str) { let c = 'y'; let n = '\\n'; }");
+        assert!(s.contains("<'a>"));
+        assert!(s.contains("&'a str"));
+        assert!(!s.contains('y'), "char literal body must be blanked: {s}");
+    }
+
+    #[test]
+    fn multiline_strings_keep_numbering() {
+        let text = "let s = \"line one\nline two\";\nafter();\n";
+        let s = strip(text);
+        assert_eq!(s.lines().count(), 3);
+        assert_eq!(s.lines().nth(2), Some("after();"));
+        assert!(!s.contains("line two"));
+    }
+
+    #[test]
+    fn parse_allow_with_reason() {
+        let a = parse_allows("// detlint: allow(unordered-iter, builds a keyed map (order-free))");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].rule, "unordered-iter");
+        assert_eq!(a[0].reason, "builds a keyed map (order-free)");
+    }
+
+    #[test]
+    fn parse_allow_without_reason_is_captured_empty() {
+        let a = parse_allows("// detlint: allow(wall-clock)");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].rule, "wall-clock");
+        assert_eq!(a[0].reason, "");
+    }
+
+    #[test]
+    fn standalone_annotation_attaches_to_next_code_line() {
+        let sc = Scanned::new(
+            "rust/src/simulator/x.rs",
+            "// detlint: allow(wall-clock, harness timing)\nlet t = now();\n",
+        );
+        assert!(sc.allowed(1, "wall-clock"));
+        assert!(!sc.allowed(0, "wall-clock"));
+    }
+
+    #[test]
+    fn trailing_annotation_attaches_to_its_own_line() {
+        let sc = Scanned::new(
+            "rust/src/simulator/x.rs",
+            "let t = now(); // detlint: allow(wall-clock, harness timing)\n",
+        );
+        assert!(sc.allowed(0, "wall-clock"));
+    }
+
+    #[test]
+    fn empty_reason_never_suppresses() {
+        let sc = Scanned::new(
+            "rust/src/simulator/x.rs",
+            "let t = now(); // detlint: allow(wall-clock)\n",
+        );
+        assert!(!sc.allowed(0, "wall-clock"));
+    }
+
+    #[test]
+    fn lock_marker_detected() {
+        let sc = Scanned::new("rust/src/other.rs", "//! detlint: lock-protocol\nfn f() {}\n");
+        assert!(sc.lock_marker);
+    }
+}

@@ -1,0 +1,12 @@
+// Fixture: an allow annotation with no reason must NOT suppress, and
+// is itself an allow-syntax violation.
+use std::collections::HashMap;
+
+pub fn rebuild(m: &HashMap<usize, u64>) -> u64 {
+    let mut acc = 0;
+    // detlint: allow(unordered-iter)
+    for (_k, v) in m.iter() {
+        acc += *v;
+    }
+    acc
+}

@@ -1,0 +1,11 @@
+// Fixture: a reason-carrying allow annotation suppresses rule 1.
+use std::collections::HashMap;
+
+pub fn rebuild(m: &HashMap<usize, u64>) -> u64 {
+    let mut acc = 0;
+    // detlint: allow(unordered-iter, keyed rebuild - order cannot affect the result)
+    for (_k, v) in m.iter() {
+        acc += *v;
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+// Fixture: rule 3 (float-reduce) must fire on an order-dependent sum
+// fed by an unordered iterator.
+use std::collections::HashMap;
+
+pub fn total(weights: &HashMap<u64, f64>) -> f64 {
+    weights.values().sum::<f64>()
+}

@@ -1,0 +1,14 @@
+// Fixture: rule 5 (lock-discipline) must fire on a nested acquisition.
+// detlint: lock-protocol
+use std::sync::Mutex;
+
+pub struct Pair {
+    a: Mutex<u64>,
+    b: Mutex<u64>,
+}
+
+pub fn both(p: &Pair) -> u64 {
+    let ga = p.a.lock().unwrap();
+    let gb = p.b.lock().unwrap();
+    *ga + *gb
+}

@@ -1,0 +1,18 @@
+// Fixture: rule 1 (unordered-iter) must fire on both iteration shapes.
+use std::collections::HashMap;
+
+pub fn emit(m: &HashMap<usize, u64>) -> Vec<(usize, u64)> {
+    let mut out = Vec::new();
+    for (k, v) in m.iter() {
+        out.push((*k, *v));
+    }
+    out
+}
+
+pub fn emit_ref(m: &HashMap<usize, u64>) -> u64 {
+    let mut acc = 0;
+    for (_k, v) in &m {
+        acc += *v;
+    }
+    acc
+}

@@ -1,0 +1,6 @@
+// Fixture: rule 2 (wall-clock) must fire on an Instant::now() read.
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

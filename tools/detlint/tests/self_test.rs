@@ -1,0 +1,180 @@
+//! detlint self-tests: one firing fixture per rule, allow-annotation
+//! semantics (a suppression requires a non-empty reason), and the
+//! repo-green gate — the actual tree must analyze clean.
+
+use std::path::Path;
+
+use detlint::rules::{
+    RULE_ALLOW_SYNTAX, RULE_FLOAT_REDUCE, RULE_LOCK_DISCIPLINE, RULE_ORACLE_COVERAGE,
+    RULE_UNORDERED_ITER, RULE_WALL_CLOCK,
+};
+use detlint::{analyze, Analysis, SourceFile, Violation};
+
+fn src(path: &str, text: &str) -> SourceFile {
+    SourceFile { path: path.to_string(), text: text.to_string() }
+}
+
+fn of<'a>(a: &'a Analysis, rule: &str) -> Vec<&'a Violation> {
+    a.violations.iter().filter(|v| v.rule == rule).collect()
+}
+
+/// Source/tests pair that keeps the oracle-coverage rule quiet, so the
+/// per-file tests can assert on their own rule in isolation.
+fn oracle_src() -> SourceFile {
+    src(
+        "rust/src/simulator/flags.rs",
+        "pub use_linear_reference: bool,\n\
+         pub use_hash_reference: bool,\n\
+         pub use_spawn_reference: bool,\n",
+    )
+}
+
+fn oracle_tests() -> SourceFile {
+    src(
+        "rust/tests/flags.rs",
+        "use_linear_reference; use_hash_reference; use_spawn_reference;\n",
+    )
+}
+
+#[test]
+fn fixture_unordered_iter_fires_in_critical_module() {
+    let text = include_str!("fixtures/unordered_iter.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/simulator/fx.rs", text)], &[oracle_tests()]);
+    let hits = of(&a, RULE_UNORDERED_ITER);
+    assert_eq!(hits.len(), 2, "both iteration shapes must fire: {:?}", a.violations);
+    assert!(hits.iter().all(|v| v.path == "rust/src/simulator/fx.rs"));
+}
+
+#[test]
+fn unordered_iter_silent_outside_critical_modules() {
+    let text = include_str!("fixtures/unordered_iter.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/util/fx.rs", text)], &[oracle_tests()]);
+    assert!(of(&a, RULE_UNORDERED_ITER).is_empty(), "{:?}", a.violations);
+}
+
+#[test]
+fn unordered_iter_silent_when_routed_through_det_helpers() {
+    let text = "use std::collections::HashMap;\n\
+                pub fn emit(m: &HashMap<usize, u64>) -> Vec<(usize, u64)> {\n\
+                    crate::util::det::sorted_pairs(m.iter())\n\
+                }\n";
+    let a = analyze(&[oracle_src(), src("rust/src/simulator/fx.rs", text)], &[oracle_tests()]);
+    assert!(of(&a, RULE_UNORDERED_ITER).is_empty(), "{:?}", a.violations);
+}
+
+#[test]
+fn fixture_wall_clock_fires() {
+    let text = include_str!("fixtures/wall_clock.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/util/bench.rs", text)], &[oracle_tests()]);
+    let hits = of(&a, RULE_WALL_CLOCK);
+    assert_eq!(hits.len(), 1, "{:?}", a.violations);
+    assert_eq!(hits[0].line, 5);
+}
+
+#[test]
+fn wall_clock_exempt_in_bench_sweep() {
+    let text = include_str!("fixtures/wall_clock.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/bin/bench_sweep.rs", text)], &[oracle_tests()]);
+    assert!(of(&a, RULE_WALL_CLOCK).is_empty(), "{:?}", a.violations);
+}
+
+#[test]
+fn fixture_float_reduce_fires() {
+    let text = include_str!("fixtures/float_reduce.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/metrics/fx.rs", text)], &[oracle_tests()]);
+    assert_eq!(of(&a, RULE_FLOAT_REDUCE).len(), 1, "{:?}", a.violations);
+}
+
+#[test]
+fn fixture_lock_discipline_fires_via_marker() {
+    let text = include_str!("fixtures/lock_discipline.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/runtime/fx.rs", text)], &[oracle_tests()]);
+    let hits = of(&a, RULE_LOCK_DISCIPLINE);
+    assert_eq!(hits.len(), 1, "{:?}", a.violations);
+    assert!(hits[0].message.contains("ga"), "held guard named: {}", hits[0].message);
+}
+
+#[test]
+fn lock_discipline_applies_to_listed_files_without_marker() {
+    let text = "pub fn f(a: &std::sync::Mutex<u8>, b: &std::sync::Mutex<u8>) {\n\
+                    let ga = a.lock().unwrap();\n\
+                    let gb = b.lock().unwrap();\n\
+                    let _ = (*ga, *gb);\n\
+                }\n";
+    let a = analyze(&[oracle_src(), src("rust/src/util/pool.rs", text)], &[oracle_tests()]);
+    assert_eq!(of(&a, RULE_LOCK_DISCIPLINE).len(), 1, "{:?}", a.violations);
+}
+
+#[test]
+fn fixture_allow_with_reason_suppresses() {
+    let text = include_str!("fixtures/allow_ok.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/simulator/fx.rs", text)], &[oracle_tests()]);
+    assert!(of(&a, RULE_UNORDERED_ITER).is_empty(), "{:?}", a.violations);
+    assert!(of(&a, RULE_ALLOW_SYNTAX).is_empty(), "{:?}", a.violations);
+    assert_eq!(a.allows_used, 1);
+}
+
+#[test]
+fn fixture_allow_without_reason_does_not_suppress() {
+    let text = include_str!("fixtures/allow_empty_reason.rs");
+    let a = analyze(&[oracle_src(), src("rust/src/simulator/fx.rs", text)], &[oracle_tests()]);
+    assert_eq!(of(&a, RULE_UNORDERED_ITER).len(), 1, "{:?}", a.violations);
+    assert_eq!(of(&a, RULE_ALLOW_SYNTAX).len(), 1, "{:?}", a.violations);
+    assert_eq!(a.allows_used, 0);
+}
+
+#[test]
+fn unknown_rule_name_is_an_allow_syntax_violation() {
+    let text = "// detlint: allow(no-such-rule, because reasons)\npub fn f() {}\n";
+    let a = analyze(&[oracle_src(), src("rust/src/policy/fx.rs", text)], &[oracle_tests()]);
+    let hits = of(&a, RULE_ALLOW_SYNTAX);
+    assert_eq!(hits.len(), 1, "{:?}", a.violations);
+    assert!(hits[0].message.contains("no-such-rule"));
+}
+
+#[test]
+fn oracle_coverage_fires_when_a_flag_loses_its_test() {
+    let tests = src("rust/tests/flags.rs", "use_linear_reference; use_hash_reference;\n");
+    let a = analyze(&[oracle_src()], &[tests]);
+    let hits = of(&a, RULE_ORACLE_COVERAGE);
+    assert_eq!(hits.len(), 1, "{:?}", a.violations);
+    assert!(hits[0].message.contains("use_spawn_reference"));
+    assert_eq!(hits[0].line, 0);
+}
+
+#[test]
+fn oracle_coverage_fires_when_a_flag_leaves_the_source() {
+    let source = src("rust/src/simulator/flags.rs", "pub use_linear_reference: bool,\n");
+    let a = analyze(&[source], &[oracle_tests()]);
+    let hits = of(&a, RULE_ORACLE_COVERAGE);
+    assert_eq!(hits.len(), 2, "{:?}", a.violations);
+    assert!(hits.iter().all(|v| v.path == "rust/src"));
+}
+
+#[test]
+fn comments_and_strings_never_fire() {
+    let text = "// HashMap iter() in a comment\n\
+                pub fn f() -> &'static str {\n\
+                    \"Instant::now() and map.keys() in a string\"\n\
+                }\n";
+    let a = analyze(&[oracle_src(), src("rust/src/simulator/fx.rs", text)], &[oracle_tests()]);
+    assert!(of(&a, RULE_UNORDERED_ITER).is_empty(), "{:?}", a.violations);
+    assert!(of(&a, RULE_WALL_CLOCK).is_empty(), "{:?}", a.violations);
+}
+
+/// The acceptance gate: the tree this crate ships in analyzes clean.
+/// Every pre-existing violation was either fixed (routed through
+/// `util::det`) or carries a reason-bearing allow annotation.
+#[test]
+fn repository_tree_is_green() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let a = detlint::analyze_tree(&root).expect("tree readable");
+    assert!(a.files_scanned > 20, "expected the real tree, scanned {}", a.files_scanned);
+    let rendered: Vec<String> = a
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.message))
+        .collect();
+    assert!(a.violations.is_empty(), "tree has violations:\n{}", rendered.join("\n"));
+    assert!(a.allows_used > 0, "the annotated sites should register as suppressions");
+}

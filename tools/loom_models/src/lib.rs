@@ -1,0 +1,24 @@
+//! Loom models of the repo's two audited lock protocols.
+//!
+//! The models live in `tests/` (`pool_handoff.rs`,
+//! `price_surface.rs`) and re-state the protocols of
+//! `rust/src/util/pool.rs` and `rust/src/costmodel/surface.rs` in
+//! loom's checked primitives, small enough for exhaustive
+//! interleaving exploration:
+//!
+//! * **Pool handoff** — a job published under the state mutex as
+//!   `(epoch+1, active=participants)` with a condvar wakeup; workers
+//!   drain a shared `fetch_add` cursor and check out by decrementing
+//!   `active`; the caller blocks until `active == 0`.  Properties:
+//!   every index executes exactly once, no worker touches the job
+//!   after the caller's wait returns (the lifetime-erasure soundness
+//!   claim), and of concurrent failure payloads exactly the first
+//!   stash wins.
+//! * **PriceSurface insert race** — hits take a read lock; a miss
+//!   computes outside any lock and inserts under the write lock.  Two
+//!   threads missing the same key both compute the same pure value,
+//!   so whichever insert wins the stored value is identical and
+//!   `hits + misses` equals the call count.
+//!
+//! Run with `cargo test --release` in this directory (release: loom
+//! explores thousands of executions per model).

@@ -1,0 +1,141 @@
+//! Loom model of the `WorkerPool` handoff protocol
+//! (rust/src/util/pool.rs, DESIGN.md §17).
+//!
+//! The real pool parks immortal workers on a condvar; loom needs every
+//! thread to terminate, so the model gives the epoch counter one extra
+//! value meaning "shut down" (`job == None`), published exactly like a
+//! job.  Everything else is the production protocol verbatim: publish
+//! `(epoch+1, active=participants)` under the state mutex, notify the
+//! work condvar, workers drain a shared `fetch_add` cursor, check out
+//! by decrementing `active`, and the caller blocks on the done condvar
+//! until `active == 0`.
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::{Arc, Condvar, Mutex};
+use loom::thread;
+
+const WORKERS: usize = 2;
+const ITEMS: usize = 3;
+
+struct State {
+    epoch: u64,
+    /// `Some(items)` publishes a job; `None` at a new epoch shuts down.
+    job: Option<usize>,
+    active: usize,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    work: Condvar,
+    done: Condvar,
+    cursor: AtomicUsize,
+    counts: [AtomicUsize; ITEMS],
+    /// First failure payload wins (models the `panicked` stash; the
+    /// payload is the worker id instead of a panic payload).
+    panicked: Mutex<Option<usize>>,
+}
+
+fn worker(pool: &Pool, worker_id: usize, fail: bool) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = pool.state.lock().unwrap();
+            while st.epoch == seen_epoch {
+                st = pool.work.wait(st).unwrap();
+            }
+            seen_epoch = st.epoch;
+            st.job
+        };
+        let Some(items) = job else { return };
+        loop {
+            let i = pool.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= items {
+                break;
+            }
+            pool.counts[i].fetch_add(1, Ordering::Relaxed);
+        }
+        if fail {
+            // The production worker stashes the first caught panic
+            // payload OUTSIDE the state lock — same order here.
+            let mut slot = pool.panicked.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(worker_id);
+            }
+        }
+        let mut st = pool.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            pool.done.notify_all();
+        }
+    }
+}
+
+fn run_model(fail: bool) {
+    loom::model(move || {
+        let pool = Arc::new(Pool {
+            state: Mutex::new(State { epoch: 0, job: None, active: 0 }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            counts: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            panicked: Mutex::new(None),
+        });
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|id| {
+                let p = Arc::clone(&pool);
+                thread::spawn(move || worker(&p, id, fail))
+            })
+            .collect();
+
+        // Publish the job exactly as WorkerPool::run does.
+        {
+            let mut st = pool.state.lock().unwrap();
+            st.job = Some(ITEMS);
+            st.epoch += 1;
+            st.active = WORKERS;
+            pool.work.notify_all();
+        }
+        // Completion wait: by the time this returns, no worker holds
+        // the job — the lifetime-erasure soundness claim.
+        {
+            let mut st = pool.state.lock().unwrap();
+            while st.active != 0 {
+                st = pool.done.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        // Exactly-once execution, observed at the instant the caller's
+        // wait returns (not after join).
+        for (i, c) in pool.counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "index {i} ran once");
+        }
+        let payload = pool.panicked.lock().unwrap().take();
+        if fail {
+            let id = payload.expect("a failing job re-raises exactly one payload");
+            assert!(id < WORKERS, "payload is the first failing worker's");
+        } else {
+            assert!(payload.is_none(), "clean jobs re-raise nothing");
+        }
+
+        // Shutdown epoch (model-only): wake workers with job == None.
+        {
+            let mut st = pool.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = None;
+            pool.work.notify_all();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn handoff_runs_each_index_exactly_once() {
+    run_model(false);
+}
+
+#[test]
+fn first_failure_payload_wins_and_reaches_the_caller() {
+    run_model(true);
+}

@@ -1,0 +1,64 @@
+//! Loom model of the `PriceSurface` memo protocol
+//! (rust/src/costmodel/surface.rs, DESIGN.md §17).
+//!
+//! Production protocol: a hit takes the read lock only; a miss
+//! computes OUTSIDE any lock, then takes the write lock to insert.
+//! Two threads missing the same key both compute — the priced
+//! function is pure, so the stored value is bit-identical whichever
+//! insert wins.  The model checks the protocol's published claims:
+//! every caller returns the pure value, the memo ends up holding it,
+//! and `hits + misses` equals the call count (only the split is
+//! schedule-dependent).
+
+use loom::sync::atomic::{AtomicU64, Ordering};
+use loom::sync::{Arc, RwLock};
+use loom::thread;
+
+/// The pure pricing function both threads evaluate on a miss.
+const PURE_VALUE: u64 = 42;
+
+struct Surface {
+    /// One-key stand-in for `DenseMemo`.
+    memo: RwLock<Option<u64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// `PriceSurface::cost` / `kernel_seconds`, shrunk to one key.
+fn price(s: &Surface) -> u64 {
+    if let Some(v) = *s.memo.read().unwrap() {
+        s.hits.fetch_add(1, Ordering::Relaxed);
+        return v;
+    }
+    s.misses.fetch_add(1, Ordering::Relaxed);
+    let v = PURE_VALUE; // computed outside any lock
+    let mut memo = s.memo.write().unwrap();
+    *memo = Some(v);
+    v
+}
+
+#[test]
+fn concurrent_misses_agree_and_the_split_accounts_for_every_call() {
+    loom::model(|| {
+        let s = Arc::new(Surface {
+            memo: RwLock::new(None),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        });
+        let a = {
+            let s = Arc::clone(&s);
+            thread::spawn(move || price(&s))
+        };
+        let got_main = price(&s);
+        let got_a = a.join().unwrap();
+
+        // Values are deterministic regardless of which insert won.
+        assert_eq!(got_main, PURE_VALUE);
+        assert_eq!(got_a, PURE_VALUE);
+        assert_eq!(*s.memo.read().unwrap(), Some(PURE_VALUE));
+        // Only the hit/miss split varies; the total never does.
+        let (h, m) = (s.hits.load(Ordering::Relaxed), s.misses.load(Ordering::Relaxed));
+        assert_eq!(h + m, 2, "hits {h} + misses {m} must cover both calls");
+        assert!(m >= 1, "a cold memo always records at least one miss");
+    });
+}
